@@ -1,0 +1,94 @@
+//! A realistic multi-request workload through the coordinator: a sensor
+//! analytics pipeline composing several of the paper's patterns, with the
+//! reconfiguration-aware batcher amortizing PR downloads.
+//!
+//! ```bash
+//! cargo run --release --example pattern_pipeline
+//! ```
+//!
+//! Scenario (the kind of streaming workload the paper's intro motivates):
+//! for each sensor frame,
+//!   * energy    = Σ x·x               (vmul_reduce on x,x)
+//!   * loudness  = abs → sqrt → log    (map chain; needs both large tiles)
+//!   * events    = Σ x where x > θ     (filter → reduce)
+//!   * compand   = x>1 ? sqrt : square (speculative branch; needs a large
+//!                                      tile — contends with `loudness`)
+//! Frames arrive interleaved; `loudness` and `compand` cannot co-reside
+//! (two large PR regions total), so naive serving thrashes the fabric while
+//! the batcher regroups frames per accelerator.
+
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::coordinator::{Coordinator, Request};
+use jit_overlay::patterns::Composition;
+use jit_overlay::report::Table;
+use jit_overlay::{workload, OverlayConfig};
+
+fn main() -> anyhow::Result<()> {
+    let n = 1024;
+    let frames = 12;
+
+    // interleaved request stream: energy, loudness, events, compand, ...
+    let mut reqs = Vec::new();
+    for f in 0..frames {
+        let x = workload::vector(n, 100 + f as u64, 0.1, 3.0);
+        match f % 4 {
+            0 => reqs.push(Request::dynamic(
+                Composition::vmul_reduce(n),
+                vec![x.clone(), x],
+            )),
+            1 => reqs.push(Request::dynamic(
+                Composition::chain(&[OperatorKind::Abs, OperatorKind::Sqrt, OperatorKind::Log], n)?,
+                vec![x],
+            )),
+            2 => reqs.push(Request::dynamic(
+                Composition::filter_reduce(1.5, n),
+                vec![x],
+            )),
+            _ => reqs.push(Request::dynamic(
+                Composition::branch(1.0, OperatorKind::Sqrt, OperatorKind::Square, n),
+                vec![x],
+            )),
+        }
+    }
+
+    // naive serving: reconfigure on every accelerator switch
+    let mut naive = Coordinator::new(OverlayConfig::default())?;
+    for r in &reqs {
+        naive.submit(r)?;
+    }
+
+    // batched serving: group by composition, reconfigure once per group
+    let mut batched = Coordinator::new(OverlayConfig::default())?;
+    let responses = batched.submit_batch(&reqs)?;
+
+    let mut t = Table::new(
+        "reconfiguration-aware batching",
+        &["policy", "PR downloads", "PR time (ms)", "jit compiles", "cache hit rate"],
+    );
+    for (name, m) in [("naive (arrival order)", &naive.metrics), ("batched (grouped)", &batched.metrics)] {
+        t.row(&[
+            name.into(),
+            m.pr_downloads.to_string(),
+            format!("{:.4}", m.pr_seconds * 1e3),
+            m.jit_compiles.to_string(),
+            format!("{:.0}%", m.hit_rate() * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    assert!(batched.metrics.pr_downloads < naive.metrics.pr_downloads);
+    assert_eq!(responses.len(), frames);
+
+    // spot-check one energy result
+    let x0 = workload::vector(n, 100, 0.1, 3.0);
+    let want: f64 = x0.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+    let got = responses[0].run.output.as_scalar().unwrap() as f64;
+    assert!(((got - want) / want).abs() < 1e-4, "{got} vs {want}");
+    println!(
+        "energy(frame0) = {got:.3} (reference {want:.3}); \
+         batched saved {} PR downloads",
+        naive.metrics.pr_downloads - batched.metrics.pr_downloads
+    );
+    println!("pattern_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: JIT-assemble the paper's VMUL&Reduce accelerator and run it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole public API surface once: build a pattern composition,
+//! JIT it onto the overlay, inspect placement, download bitstreams, execute,
+//! and read the result + timing back.
+
+use jit_overlay::exec::Engine;
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. a 3×3 dynamic overlay with the paper's PR sizing mix
+    let cfg = OverlayConfig::default();
+    println!(
+        "fabric: {}×{} tiles ({} large PR regions), full reconfig ≈ {:.3} ms",
+        cfg.rows,
+        cfg.cols,
+        cfg.large_tiles(),
+        cfg.full_reconfig_seconds() * 1e3
+    );
+    let mut engine = Engine::new(cfg)?;
+
+    // 2. the composition: sum = Σ A⃗ × B⃗ over 16 KB of data
+    let n = 4096;
+    let comp = Composition::vmul_reduce(n);
+
+    // 3. JIT: compilation instead of synthesis
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
+    println!(
+        "jit: {} stages, {} pass-through hops, {}-instr program, chunk {}",
+        acc.stages.len(),
+        acc.total_hops(),
+        acc.program.len(),
+        acc.chunk
+    );
+    for (s, a) in acc.stages.iter().zip(&acc.placement.assignments) {
+        println!("  {:8} -> tile {} ({:?})", s.op.name(), a.tile, a.class);
+    }
+
+    // 4. execute on the dynamic overlay
+    let (a, b) = workload::paper_16kb(7);
+    let want = workload::dot_f64(&a, &b);
+    let run = engine.run(&acc, &[a, b], Target::DynamicOverlay)?;
+    let got = run.output.as_scalar().expect("scalar result");
+
+    println!("result: {got} (reference {want:.3})");
+    println!(
+        "time: {:.4} ms total ({:.4} ms transfer), PR download {:.4} ms (amortized)",
+        run.timing.total() * 1e3,
+        run.timing.transfer_s * 1e3,
+        run.reconfig.map_or(0.0, |r| r.seconds) * 1e3,
+    );
+    assert!(((got as f64 - want) / want).abs() < 1e-4);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+"""AOT lowering: every pattern variant → HLO *text* + a manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--outdir`` (default ``../artifacts``):
+
+  <variant>.hlo.txt   one per entry in model.VARIANTS
+  model.hlo.txt       alias of the headline variant (Makefile sentinel)
+  manifest.json       machine-readable catalogue the Rust runtime loads
+
+Run as ``python -m compile.aot`` from the ``python/`` directory. Runs once at
+build time; Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import shutil
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(v: model.Variant) -> str:
+    return to_hlo_text(jax.jit(v.fn).lower(*v.specs))
+
+
+_DTYPE_SHORT = {"float32": "f32", "int32": "i32", "bfloat16": "bf16", "float64": "f64"}
+
+
+def _short_dtype(name: str) -> str:
+    return _DTYPE_SHORT.get(name, name)
+
+
+def manifest_entry(v: model.Variant, filename: str, hlo_text: str) -> dict:
+    return {
+        "name": v.name,
+        "pattern": v.pattern,
+        "params": v.params,
+        "inputs": [
+            {"shape": list(s.shape), "dtype": _short_dtype(s.dtype.name)}
+            for s in v.specs
+        ],
+        "outputs": [
+            {"shape": list(shape), "dtype": dtype} for shape, dtype in v.outputs
+        ],
+        "file": filename,
+        "sha256": hashlib.sha256(hlo_text.encode()).hexdigest(),
+        "return_tuple": True,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="also write the headline variant's HLO to this exact path",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated variant names to (re)build; default: all",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    names = set(args.only.split(",")) if args.only else None
+
+    entries = []
+    for name, v in model.VARIANTS.items():
+        if names is not None and name not in names:
+            continue
+        filename = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, filename)
+        text = lower_variant(v)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(manifest_entry(v, filename, text))
+        print(f"  {name:40s} {len(text):>9d} chars")
+
+    manifest = {
+        "schema": 1,
+        "headline": model.HEADLINE,
+        "paper_n": model.PAPER_N,
+        "variants": entries,
+    }
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # TSV twin of the manifest — the Rust runtime parses this one (it builds
+    # offline without a JSON dependency). Keep the two in lockstep.
+    def spec_list(specs):
+        return ";".join(
+            "x".join(str(d) for d in s["shape"]) + ":" + s["dtype"] for s in specs
+        )
+
+    with open(os.path.join(args.outdir, "manifest.tsv"), "w") as f:
+        f.write("# jit-overlay artifact manifest v1\n")
+        f.write(f"headline\t{model.HEADLINE}\n")
+        f.write(f"paper_n\t{model.PAPER_N}\n")
+        for e in entries:
+            f.write(
+                "variant\t{name}\t{pattern}\t{file}\t{ins}\t{outs}\t{sha}\n".format(
+                    name=e["name"],
+                    pattern=e["pattern"],
+                    file=e["file"],
+                    ins=spec_list(e["inputs"]),
+                    outs=spec_list(e["outputs"]),
+                    sha=e["sha256"],
+                )
+            )
+
+    headline_src = os.path.join(args.outdir, f"{model.HEADLINE}.hlo.txt")
+    alias = args.out or os.path.join(args.outdir, "model.hlo.txt")
+    if os.path.exists(headline_src):
+        shutil.copyfile(headline_src, alias)
+    print(f"wrote {len(entries)} variants + manifest to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""L1: Pallas kernels for the overlay's parallel-pattern library.
+
+Each kernel is the TPU-idiom rethinking of one pre-synthesized overlay
+pattern (see DESIGN.md §Hardware-Adaptation): BlockSpec chunks stand in for
+tile BRAMs, the grid for the chunk stream, and kernel fusion for contiguous
+tile pipelines. All kernels are interpret-mode (CPU PJRT substrate) and are
+verified against the pure-jnp oracle in :mod:`ref`.
+"""
+
+from . import ref  # noqa: F401
+from .axpy import axpy  # noqa: F401
+from .common import DEFAULT_BLOCK, pick_block  # noqa: F401
+from .filter import filter_mask, filter_reduce  # noqa: F401
+from .map_ops import branch_map, map_chain, map_unary, zip_binary  # noqa: F401
+from .reduce import reduce_sum  # noqa: F401
+from .vmul_reduce import vmul_reduce  # noqa: F401
+
+__all__ = [
+    "axpy",
+    "branch_map",
+    "filter_mask",
+    "filter_reduce",
+    "map_chain",
+    "map_unary",
+    "reduce_sum",
+    "vmul_reduce",
+    "zip_binary",
+    "ref",
+    "DEFAULT_BLOCK",
+    "pick_block",
+]

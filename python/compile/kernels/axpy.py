@@ -1,0 +1,38 @@
+"""Pallas kernel for the Foreach pattern: ``y ← α·x + y`` (AXPY).
+
+Foreach updates each element in place; the overlay realizes it as a
+multiplier tile (α from a controller register) feeding an adder tile that
+also consumes the y stream — two contiguous tiles, fully pipelined. The
+kernel fuses both stages over each VMEM-resident chunk.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block, scalar_spec, stream_spec
+
+
+def _kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(
+    alpha: jax.Array, x: jax.Array, y: jax.Array, *, block: int | None = None
+) -> jax.Array:
+    """Element-wise ``alpha * x + y`` over equal-length rank-1 arrays."""
+    alpha = jnp.asarray(alpha).reshape((1,))
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"expected equal rank-1 shapes, got {x.shape} vs {y.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // blk,),
+        in_specs=[scalar_spec(), stream_spec(blk), stream_spec(blk)],
+        out_specs=stream_spec(blk),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(alpha.astype(x.dtype), x, y)

@@ -1,0 +1,101 @@
+"""Shared plumbing for the Pallas kernels.
+
+Blocking discipline
+-------------------
+Every kernel streams its operands in fixed-size blocks, mirroring the
+overlay's execution model: a tile's two data BRAMs hold one chunk of each
+operand while the PR operator streams through it. The Pallas analogue is a
+1-D grid over chunks with BlockSpec-managed HBM→VMEM movement.
+
+The paper's tile BRAMs are 18/36 Kb; our default block of 1024 f32 lanes
+(4 KiB per operand) keeps the per-tile working set inside a 36 Kb BRAM pair
+exactly as the hardware would. Callers may widen blocks for throughput —
+`pick_block` clamps to the vector length and enforces divisibility (model.py
+pads to a block multiple before calling in).
+
+All kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and correctness — not wallclock — is what the Python
+layer certifies. TPU efficiency is *estimated* in DESIGN.md §Perf from the
+VMEM footprint these BlockSpecs imply.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: default elements per block: 1024 f32 = 4 KiB/operand, one BRAM-sized chunk.
+DEFAULT_BLOCK = 1024
+
+#: pallas interpret mode is mandatory on this (CPU PJRT) substrate.
+INTERPRET = True
+
+
+def pick_block(n: int, block: int | None = None) -> int:
+    """Choose a block size for a length-``n`` vector.
+
+    ``n`` must be a positive multiple of the chosen block; model.py pads
+    inputs so this always holds for AOT variants, and tests exercise the
+    error path.
+    """
+    b = min(block or DEFAULT_BLOCK, n)
+    if n <= 0:
+        raise ValueError(f"vector length must be positive, got {n}")
+    if n % b != 0:
+        raise ValueError(f"length {n} is not a multiple of block {b}")
+    return b
+
+
+def stream_spec(block: int):
+    """BlockSpec for a streamed 1-D operand: grid step i reads chunk i."""
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def scalar_spec():
+    """BlockSpec for a (1,)-shaped broadcast scalar pinned to chunk 0."""
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def accum_spec():
+    """BlockSpec for a (1,)-shaped accumulator written by every grid step."""
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+@functools.cache
+def unary_fn(op: str):
+    """jnp implementation of a tile unary operator (shared with ref.py)."""
+    from . import ref
+
+    return ref._UNARY[op]
+
+
+@functools.cache
+def binary_fn(op: str):
+    """jnp implementation of a tile binary operator (shared with ref.py)."""
+    from . import ref
+
+    return ref._BINARY[op]
+
+
+def f32(x):
+    """Cast to the accumulator dtype (DSP48-style wide accumulation)."""
+    return x.astype(jnp.float32)
+
+
+__all__ = [
+    "DEFAULT_BLOCK",
+    "INTERPRET",
+    "pick_block",
+    "stream_spec",
+    "scalar_spec",
+    "accum_spec",
+    "unary_fn",
+    "binary_fn",
+    "f32",
+    "jax",
+    "jnp",
+    "pl",
+]

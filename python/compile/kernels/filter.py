@@ -1,0 +1,86 @@
+"""Pallas kernels for the Filter pattern (static-shape streaming filter).
+
+A hardware filter tile forwards only passing elements downstream. Static
+tensor shapes force a mask encoding instead: failing lanes are zeroed and a
+survivor count is accumulated, so a downstream Reduce observes identical
+semantics to the hardware stream (zeros are additive identity).
+
+``filter_reduce`` fuses Filter→Reduce into one pass — the contiguous-tile
+composition the dynamic overlay assembles for "sum of elements above t".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, accum_spec, f32, pick_block, scalar_spec, stream_spec
+
+
+def _filter_kernel(t_ref, x_ref, kept_ref, count_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    x = x_ref[...]
+    mask = x > t_ref[0]
+    kept_ref[...] = jnp.where(mask, x, jnp.zeros_like(x))
+    count_ref[...] += jnp.sum(mask.astype(jnp.int32)).reshape(count_ref.shape)
+
+
+def filter_mask(
+    x: jax.Array, threshold: jax.Array, *, block: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Mask-encoded filter: returns (kept values with zeros, survivor count)."""
+    threshold = jnp.asarray(threshold).reshape((1,))
+    if x.ndim != 1:
+        raise ValueError(f"expected rank-1 input, got shape {x.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    kept, count = pl.pallas_call(
+        _filter_kernel,
+        grid=(n // blk,),
+        in_specs=[scalar_spec(), stream_spec(blk)],
+        out_specs=[stream_spec(blk), accum_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(threshold.astype(x.dtype), x)
+    return kept, count[0]
+
+
+def _filter_reduce_kernel(t_ref, x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    kept = jnp.where(x > t_ref[0], f32(x), jnp.zeros((), jnp.float32))
+    o_ref[...] += jnp.sum(kept).reshape(o_ref.shape)
+
+
+def filter_reduce(
+    x: jax.Array, threshold: jax.Array, *, block: int | None = None
+) -> jax.Array:
+    """Fused Filter→Reduce: float32 sum of elements above ``threshold``."""
+    threshold = jnp.asarray(threshold).reshape((1,))
+    if x.ndim != 1:
+        raise ValueError(f"expected rank-1 input, got shape {x.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    out = pl.pallas_call(
+        _filter_reduce_kernel,
+        grid=(n // blk,),
+        in_specs=[scalar_spec(), stream_spec(blk)],
+        out_specs=accum_spec(),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=INTERPRET,
+    )(threshold.astype(x.dtype), x)
+    return out[0]

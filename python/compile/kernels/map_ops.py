@@ -1,0 +1,131 @@
+"""Pallas kernels for the Map / ZipWith patterns.
+
+``map_unary``  — one operator tile streaming a vector (paper: sqrtf, sin,
+                 cos, log live in the large PR regions; neg/abs/... in small).
+``map_chain``  — a pipeline of unary tiles in *contiguous* overlay positions:
+                 all stages fuse into one pass over each VMEM-resident chunk,
+                 exactly the dynamic overlay's pipelined dataflow.
+``zip_binary`` — one binary operator tile consuming two streams (VMUL is
+                 ``zip_binary("mul", ...)``).
+``branch_map`` — if-then-else with speculation: both branch operators execute
+                 (they occupy contiguous tiles) and the interconnect selects
+                 per element. This is the dynamic overlay's answer to the
+                 original design's "cannot compose simple conditionals"
+                 limitation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    INTERPRET,
+    binary_fn,
+    pick_block,
+    scalar_spec,
+    stream_spec,
+    unary_fn,
+)
+
+
+def _unary_kernel(op, x_ref, o_ref):
+    o_ref[...] = unary_fn(op)(x_ref[...])
+
+
+def map_unary(op: str, x: jax.Array, *, block: int | None = None) -> jax.Array:
+    """Element-wise unary operator over a rank-1 array, streamed in blocks."""
+    if x.ndim != 1:
+        raise ValueError(f"expected rank-1 input, got shape {x.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    return pl.pallas_call(
+        functools.partial(_unary_kernel, op),
+        grid=(n // blk,),
+        in_specs=[stream_spec(blk)],
+        out_specs=stream_spec(blk),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _chain_kernel(ops, x_ref, o_ref):
+    v = x_ref[...]
+    for op in ops:
+        v = unary_fn(op)(v)
+    o_ref[...] = v
+
+
+def map_chain(ops: tuple[str, ...], x: jax.Array, *, block: int | None = None) -> jax.Array:
+    """A fused pipeline of unary operators (contiguous tiles, one pass)."""
+    if not ops:
+        raise ValueError("map_chain requires at least one operator")
+    if x.ndim != 1:
+        raise ValueError(f"expected rank-1 input, got shape {x.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, tuple(ops)),
+        grid=(n // blk,),
+        in_specs=[stream_spec(blk)],
+        out_specs=stream_spec(blk),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _binary_kernel(op, a_ref, b_ref, o_ref):
+    o_ref[...] = binary_fn(op)(a_ref[...], b_ref[...])
+
+
+def zip_binary(op: str, a: jax.Array, b: jax.Array, *, block: int | None = None) -> jax.Array:
+    """Element-wise binary operator over two equal-shape rank-1 arrays."""
+    if a.shape != b.shape or a.ndim != 1:
+        raise ValueError(f"expected equal rank-1 shapes, got {a.shape} vs {b.shape}")
+    n = a.shape[0]
+    blk = pick_block(n, block)
+    return pl.pallas_call(
+        functools.partial(_binary_kernel, op),
+        grid=(n // blk,),
+        in_specs=[stream_spec(blk), stream_spec(blk)],
+        out_specs=stream_spec(blk),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _branch_kernel(then_op, else_op, t_ref, x_ref, o_ref):
+    x = x_ref[...]
+    taken = unary_fn(then_op)(x)       # speculated THEN tile
+    not_taken = unary_fn(else_op)(x)   # speculated ELSE tile
+    o_ref[...] = jnp.where(x > t_ref[0], taken, not_taken)
+
+
+def branch_map(
+    threshold: jax.Array,
+    x: jax.Array,
+    then_op: str,
+    else_op: str,
+    *,
+    block: int | None = None,
+) -> jax.Array:
+    """Speculative if-then-else map: ``x > t ? then_op(x) : else_op(x)``.
+
+    ``threshold`` is a (1,)-shaped array (a controller register in hardware).
+    """
+    threshold = jnp.asarray(threshold).reshape((1,))
+    if x.ndim != 1:
+        raise ValueError(f"expected rank-1 input, got shape {x.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    return pl.pallas_call(
+        functools.partial(_branch_kernel, then_op, else_op),
+        grid=(n // blk,),
+        in_specs=[scalar_spec(), stream_spec(blk)],
+        out_specs=stream_spec(blk),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(threshold.astype(x.dtype), x)

@@ -1,0 +1,41 @@
+"""Pallas kernel for the Reduce pattern alone: ``sum(x)``.
+
+One adder tile with a feedback accumulator register; chunks stream from the
+data BRAM and fold into the running sum. Used by the JIT when a composition
+ends in a bare reduce (e.g. filter → reduce with the filter fused upstream).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, accum_spec, f32, pick_block, stream_spec
+
+
+def _kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(f32(x_ref[...])).reshape(o_ref.shape)
+
+
+def reduce_sum(x: jax.Array, *, block: int | None = None) -> jax.Array:
+    """Scalar float32 sum of a rank-1 array, streamed in blocks."""
+    if x.ndim != 1:
+        raise ValueError(f"expected rank-1 input, got shape {x.shape}")
+    n = x.shape[0]
+    blk = pick_block(n, block)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n // blk,),
+        in_specs=[stream_spec(blk)],
+        out_specs=accum_spec(),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+    return out[0]

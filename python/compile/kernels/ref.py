@@ -1,0 +1,134 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the corresponding Pallas
+kernel is tested against (pytest + hypothesis in python/tests/). They are
+also used by model.py when a composition is lowered in "reference" mode for
+A/B HLO artifacts.
+
+The ops mirror the paper's pre-synthesized operator library: the parallel
+patterns (map / reduce / foreach / filter) and the operator set the overlay's
+large and small PR tiles host (mul, add, sub, div, sqrtf, sin, cos, log, ...).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Operator library (what a single PR tile computes on a streamed element)
+# ---------------------------------------------------------------------------
+
+#: unary operators that fit the paper's *large* PR regions (8 DSP / 964 FF /
+#: 1228 LUT): transcendental / iterative datapaths.
+UNARY_LARGE = ("sqrt", "sin", "cos", "log", "exp", "tanh")
+
+#: unary operators that fit the *small* PR regions (4 DSP / 156 FF / 270 LUT).
+UNARY_SMALL = ("neg", "abs", "recip", "square", "relu")
+
+#: binary operators (all fit small regions except div).
+BINARY_OPS = ("add", "sub", "mul", "div", "max", "min")
+
+_UNARY = {
+    "sqrt": jnp.sqrt,
+    "sin": jnp.sin,
+    "cos": jnp.cos,
+    "log": jnp.log,
+    "exp": jnp.exp,
+    "tanh": jnp.tanh,
+    "neg": lambda x: -x,
+    "abs": jnp.abs,
+    "recip": lambda x: 1.0 / x,
+    "square": lambda x: x * x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+_BINARY = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def unary(op: str, x):
+    """Apply one unary operator from the tile library element-wise."""
+    return _UNARY[op](x)
+
+
+def binary(op: str, a, b):
+    """Apply one binary operator from the tile library element-wise."""
+    return _BINARY[op](a, b)
+
+
+# ---------------------------------------------------------------------------
+# Parallel patterns (what the JIT composes out of tiles)
+# ---------------------------------------------------------------------------
+
+def vmul_reduce(a, b):
+    """The paper's headline pattern: ``sum = Σ A⃗ × B⃗`` (VMUL then Reduce).
+
+    Accumulation is performed in float32 regardless of input dtype, matching
+    the kernel (and a DSP48 accumulator, which is wider than its operands).
+    """
+    prod = a.astype(jnp.float32) * b.astype(jnp.float32)
+    return jnp.sum(prod, dtype=jnp.float32)
+
+
+def reduce_sum(x):
+    """Reduce pattern alone: sum of a vector (float32 accumulation)."""
+    return jnp.sum(x.astype(jnp.float32), dtype=jnp.float32)
+
+
+def map_unary(op: str, x):
+    """Map pattern: one unary operator over a vector."""
+    return unary(op, x)
+
+
+def map_chain(ops, x):
+    """A pipeline of map stages — operators in contiguous tiles."""
+    for op in ops:
+        x = unary(op, x)
+    return x
+
+
+def zip_binary(op: str, a, b):
+    """ZipWith pattern (the paper's VMUL is ``zip_binary("mul", ...)``)."""
+    return binary(op, a, b)
+
+
+def axpy(alpha, x, y):
+    """Foreach pattern: ``y[i] = alpha * x[i] + y[i]`` (scaled update)."""
+    return alpha * x + y
+
+
+def filter_mask(x, threshold):
+    """Filter pattern with static shapes.
+
+    FPGAs stream; a filter tile forwards only passing elements. With static
+    tensor shapes we express filter as (masked values, survivor count):
+    values failing ``x > threshold`` are zeroed and the count of survivors is
+    returned so downstream reduce stages see identical semantics.
+    """
+    mask = x > threshold
+    kept = jnp.where(mask, x, jnp.zeros_like(x))
+    count = jnp.sum(mask.astype(jnp.int32))
+    return kept, count
+
+
+def filter_reduce(x, threshold):
+    """Filter → Reduce composition: sum of elements above threshold."""
+    kept, _ = filter_mask(x, threshold)
+    return jnp.sum(kept.astype(jnp.float32), dtype=jnp.float32)
+
+
+def branch_map(pred_threshold, x, then_op: str, else_op: str):
+    """Conditional map — the dynamic overlay's if-then-else with speculation.
+
+    Both branch operators run (speculatively, as in contiguous overlay tiles)
+    and the interconnect selects per element: ``x > t ? then(x) : else(x)``.
+    """
+    t = unary(then_op, x)
+    e = unary(else_op, x)
+    return jnp.where(x > pred_threshold, t, e)

@@ -1,0 +1,55 @@
+"""Pallas kernel for the paper's headline pattern: ``sum = Σ A⃗ × B⃗``.
+
+This is the fused VMUL→Reduce pipeline of the *dynamic* overlay: the
+multiplier tile and the adder (reduce) tile are contiguous, so products are
+consumed the cycle they are produced and never materialized. The kernel
+mirrors that: each grid step streams one BRAM-sized chunk of A and B into
+VMEM, multiplies, and folds the partial sum into a single f32 accumulator —
+no intermediate product vector ever hits HBM.
+
+Compare ``ref.vmul_reduce`` (the oracle) which materializes the product —
+that is the *static-overlay scenario-3* dataflow, where the product must
+transit pass-through tiles before reaching the adder.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, accum_spec, f32, pick_block, stream_spec
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    """One grid step: fold chunk i's product-sum into the accumulator."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    partial = jnp.sum(f32(a_ref[...]) * f32(b_ref[...]))
+    o_ref[...] += partial.reshape(o_ref.shape)
+
+
+def vmul_reduce(a: jax.Array, b: jax.Array, *, block: int | None = None) -> jax.Array:
+    """Fused multiply-reduce: returns scalar ``sum(a * b)`` in float32.
+
+    Args:
+      a, b: rank-1 arrays of equal length (length must be a block multiple).
+      block: elements per streamed chunk; defaults to one BRAM-sized chunk.
+    """
+    if a.shape != b.shape or a.ndim != 1:
+        raise ValueError(f"expected equal rank-1 shapes, got {a.shape} vs {b.shape}")
+    n = a.shape[0]
+    blk = pick_block(n, block)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n // blk,),
+        in_specs=[stream_spec(blk), stream_spec(blk)],
+        out_specs=accum_spec(),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+    return out[0]

@@ -1,0 +1,217 @@
+"""L2: JAX compute-graph definitions for every AOT-compiled pattern variant.
+
+Each entry in :data:`VARIANTS` is one accelerator "bitstream" the Rust
+runtime can load: a jittable function plus its example input specs. The JIT
+coordinator composes *which* variant to run and the overlay simulator prices
+it; the HLO artifact supplies the values.
+
+Scalar results are shaped ``(1,)`` — the controller reads them out of a
+result register; rank-0 would complicate the Rust literal plumbing for no
+benefit.
+
+Variant naming is load-bearing: ``<pattern>[_<op...>]_n<N>`` — the Rust
+``runtime::manifest`` module parses it back into a typed key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    axpy,
+    branch_map,
+    filter_reduce,
+    map_chain,
+    map_unary,
+    reduce_sum,
+    vmul_reduce,
+    zip_binary,
+)
+from .kernels import ref
+
+#: vector lengths we AOT (elements of f32). 4096 = the paper's 16 KB
+#: experiment (16 KB per operand vector at 4 B/element). The sweep sizes
+#: feed the PR-overhead-amortization bench (T-PR).
+SIZES = (1024, 4096, 16384, 65536, 262144)
+
+#: the paper's experiment size: 16 KB of f32.
+PAPER_N = 4096
+
+_f32 = lambda n: jax.ShapeDtypeStruct((n,), jnp.float32)  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT compilation unit."""
+
+    name: str
+    pattern: str                      # pattern family (vmul_reduce, map, ...)
+    fn: Callable                      # jittable; returns a tuple of arrays
+    specs: tuple                      # example ShapeDtypeStructs
+    params: dict                      # pattern parameters for the manifest
+    outputs: tuple                    # (shape, dtype-name) pairs
+
+
+def _v(name, pattern, fn, specs, params, outputs):
+    return Variant(name, pattern, fn, tuple(specs), dict(params), tuple(outputs))
+
+
+def _scalar_out(f):
+    """Wrap a scalar-returning pattern to emit a (1,) array in a 1-tuple."""
+
+    def wrapped(*args):
+        return (f(*args).reshape((1,)),)
+
+    return wrapped
+
+
+def _vec_out(f):
+    def wrapped(*args):
+        return (f(*args),)
+
+    return wrapped
+
+
+def build_variants() -> list[Variant]:
+    """The full AOT variant catalogue."""
+    out: list[Variant] = []
+
+    # --- headline pattern: VMUL & Reduce, fused (dynamic-overlay dataflow) --
+    for n in SIZES:
+        out.append(
+            _v(
+                f"vmul_reduce_n{n}",
+                "vmul_reduce",
+                _scalar_out(vmul_reduce),
+                [_f32(n), _f32(n)],
+                {"n": n},
+                [((1,), "f32")],
+            )
+        )
+
+    # Unfused reference dataflow (static-overlay scenario: product vector is
+    # materialized and transits pass-through tiles before the reduce).
+    out.append(
+        _v(
+            f"vmul_reduce_unfused_n{PAPER_N}",
+            "vmul_reduce_unfused",
+            _scalar_out(ref.vmul_reduce),
+            [_f32(PAPER_N), _f32(PAPER_N)],
+            {"n": PAPER_N},
+            [((1,), "f32")],
+        )
+    )
+
+    # --- bare reduce ------------------------------------------------------
+    for n in (PAPER_N, 65536):
+        out.append(
+            _v(
+                f"reduce_sum_n{n}",
+                "reduce",
+                _scalar_out(reduce_sum),
+                [_f32(n)],
+                {"n": n},
+                [((1,), "f32")],
+            )
+        )
+
+    # --- map: one unary operator tile ------------------------------------
+    for op in ("sqrt", "sin", "cos", "log", "exp", "abs", "neg", "square", "relu"):
+        out.append(
+            _v(
+                f"map_{op}_n{PAPER_N}",
+                "map",
+                _vec_out(lambda x, _op=op: map_unary(_op, x)),
+                [_f32(PAPER_N)],
+                {"op": op, "n": PAPER_N},
+                [((PAPER_N,), "f32")],
+            )
+        )
+
+    # --- map chains: contiguous unary pipelines --------------------------
+    for ops in (("square", "neg"), ("abs", "sqrt", "log"), ("square", "exp", "recip")):
+        tag = "_".join(ops)
+        out.append(
+            _v(
+                f"chain_{tag}_n{PAPER_N}",
+                "chain",
+                _vec_out(lambda x, _ops=ops: map_chain(_ops, x)),
+                [_f32(PAPER_N)],
+                {"ops": list(ops), "n": PAPER_N},
+                [((PAPER_N,), "f32")],
+            )
+        )
+
+    # --- zip: one binary operator tile ------------------------------------
+    for op in ("add", "sub", "mul", "div", "max", "min"):
+        out.append(
+            _v(
+                f"zip_{op}_n{PAPER_N}",
+                "zip",
+                _vec_out(lambda a, b, _op=op: zip_binary(_op, a, b)),
+                [_f32(PAPER_N), _f32(PAPER_N)],
+                {"op": op, "n": PAPER_N},
+                [((PAPER_N,), "f32")],
+            )
+        )
+
+    # --- foreach (AXPY) ----------------------------------------------------
+    out.append(
+        _v(
+            f"axpy_n{PAPER_N}",
+            "foreach",
+            _vec_out(axpy),
+            [_f32(1), _f32(PAPER_N), _f32(PAPER_N)],
+            {"n": PAPER_N},
+            [((PAPER_N,), "f32")],
+        )
+    )
+
+    # --- filter → reduce ----------------------------------------------------
+    for n in (PAPER_N, 65536):
+        out.append(
+            _v(
+                f"filter_reduce_n{n}",
+                "filter_reduce",
+                _scalar_out(lambda x, t: filter_reduce(x, t)),
+                [_f32(n), _f32(1)],
+                {"n": n},
+                [((1,), "f32")],
+            )
+        )
+
+    # --- speculative branch map --------------------------------------------
+    for then_op, else_op in (("sqrt", "square"), ("log", "neg")):
+        out.append(
+            _v(
+                f"branch_{then_op}_{else_op}_n{PAPER_N}",
+                "branch",
+                _vec_out(
+                    lambda t, x, _t=then_op, _e=else_op: branch_map(t, x, _t, _e)
+                ),
+                [_f32(1), _f32(PAPER_N)],
+                {"then": then_op, "else": else_op, "n": PAPER_N},
+                [((PAPER_N,), "f32")],
+            )
+        )
+
+    return out
+
+
+VARIANTS: dict[str, Variant] = {v.name: v for v in build_variants()}
+
+#: the artifact `make artifacts`' sentinel target points at (the headline).
+HEADLINE = f"vmul_reduce_n{PAPER_N}"
+
+
+def pad_to_block(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Zero-pad a rank-1 array up to a block multiple (sum-safe padding)."""
+    n = x.shape[0]
+    rem = n % block
+    if rem == 0:
+        return x
+    return jnp.pad(x, (0, block - rem))

@@ -1,0 +1,216 @@
+"""Kernel vs. pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, block sizes, and operator choices; every
+kernel must match ref.py to float tolerance under all of them.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import kernels as K
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+# Interpret-mode pallas is slow; keep vectors modest but varied.
+sizes = st.sampled_from([8, 64, 128, 256, 1024, 2048])
+blocks = st.sampled_from([None, 8, 64, 256])
+dtypes = st.sampled_from([np.float32])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _vec(n, seed, dtype=np.float32, positive=False):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal(n).astype(dtype)
+    if positive:
+        v = np.abs(v) + 0.1
+    return v
+
+
+def _blk_ok(n, block):
+    return block is None or (n % block == 0 and block <= n)
+
+
+# ---------------------------------------------------------------------------
+# vmul_reduce — the headline
+# ---------------------------------------------------------------------------
+
+@given(n=sizes, block=blocks, seed=seeds)
+def test_vmul_reduce_matches_ref(n, block, seed):
+    hypothesis.assume(_blk_ok(n, block))
+    a, b = _vec(n, seed), _vec(n, seed + 1)
+    got = K.vmul_reduce(jnp.array(a), jnp.array(b), block=block)
+    want = ref.vmul_reduce(jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-4)
+
+
+def test_vmul_reduce_paper_shape():
+    """The paper's 16 KB workload: 4096 f32 per operand."""
+    a, b = _vec(4096, 7), _vec(4096, 11)
+    got = K.vmul_reduce(jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(
+        float(got), float(np.sum(a.astype(np.float64) * b)), rtol=1e-4
+    )
+
+
+def test_vmul_reduce_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        K.vmul_reduce(jnp.zeros(8), jnp.zeros(16))
+
+
+def test_vmul_reduce_rejects_nondivisible_block():
+    with pytest.raises(ValueError):
+        K.vmul_reduce(jnp.zeros(10), jnp.zeros(10), block=4)
+
+
+def test_vmul_reduce_zero_vectors():
+    assert float(K.vmul_reduce(jnp.zeros(64), jnp.zeros(64))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# reduce_sum
+# ---------------------------------------------------------------------------
+
+@given(n=sizes, block=blocks, seed=seeds)
+def test_reduce_sum_matches_ref(n, block, seed):
+    hypothesis.assume(_blk_ok(n, block))
+    x = _vec(n, seed)
+    got = K.reduce_sum(jnp.array(x), block=block)
+    np.testing.assert_allclose(float(got), float(np.sum(x)), rtol=1e-5, atol=1e-4)
+
+
+def test_reduce_sum_single_block_equals_multi_block():
+    x = _vec(1024, 3)
+    one = K.reduce_sum(jnp.array(x), block=1024)
+    many = K.reduce_sum(jnp.array(x), block=64)
+    np.testing.assert_allclose(float(one), float(many), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# map_unary / map_chain
+# ---------------------------------------------------------------------------
+
+@given(op=st.sampled_from(ref.UNARY_SMALL + ref.UNARY_LARGE), n=sizes, seed=seeds)
+def test_map_unary_matches_ref(op, n, seed):
+    x = _vec(n, seed, positive=op in ("sqrt", "log"))
+    got = K.map_unary(op, jnp.array(x))
+    want = ref.map_unary(op, jnp.array(x))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    ops=st.lists(st.sampled_from(("neg", "abs", "square", "relu")), min_size=1, max_size=4),
+    n=sizes,
+    block=blocks,
+    seed=seeds,
+)
+def test_map_chain_matches_ref(ops, n, block, seed):
+    hypothesis.assume(_blk_ok(n, block))
+    x = _vec(n, seed)
+    got = K.map_chain(tuple(ops), jnp.array(x), block=block)
+    want = ref.map_chain(ops, jnp.array(x))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_map_chain_empty_rejected():
+    with pytest.raises(ValueError):
+        K.map_chain((), jnp.zeros(8))
+
+
+def test_map_chain_fusion_equals_staged():
+    """One fused chain kernel == separate map_unary launches (contiguity)."""
+    x = _vec(512, 9, positive=True)
+    fused = K.map_chain(("sqrt", "log", "neg"), jnp.array(x))
+    staged = K.map_unary("neg", K.map_unary("log", K.map_unary("sqrt", jnp.array(x))))
+    np.testing.assert_allclose(np.array(fused), np.array(staged), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# zip_binary
+# ---------------------------------------------------------------------------
+
+@given(op=st.sampled_from(ref.BINARY_OPS), n=sizes, seed=seeds)
+def test_zip_binary_matches_ref(op, n, seed):
+    a = _vec(n, seed)
+    b = _vec(n, seed + 1, positive=op == "div")
+    got = K.zip_binary(op, jnp.array(a), jnp.array(b))
+    want = ref.zip_binary(op, jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# axpy (foreach)
+# ---------------------------------------------------------------------------
+
+@given(n=sizes, block=blocks, seed=seeds, alpha=st.floats(-8, 8, allow_nan=False))
+def test_axpy_matches_ref(n, block, seed, alpha):
+    hypothesis.assume(_blk_ok(n, block))
+    x, y = _vec(n, seed), _vec(n, seed + 1)
+    got = K.axpy(jnp.float32(alpha), jnp.array(x), jnp.array(y), block=block)
+    want = ref.axpy(np.float32(alpha), x, y)
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# filter
+# ---------------------------------------------------------------------------
+
+@given(n=sizes, seed=seeds, t=st.floats(-2, 2, allow_nan=False))
+def test_filter_mask_matches_ref(n, seed, t):
+    x = _vec(n, seed)
+    kept, count = K.filter_mask(jnp.array(x), jnp.float32(t))
+    rkept, rcount = ref.filter_mask(jnp.array(x), jnp.float32(t))
+    np.testing.assert_allclose(np.array(kept), np.array(rkept), rtol=1e-6)
+    assert int(count) == int(rcount)
+
+
+@given(n=sizes, block=blocks, seed=seeds, t=st.floats(-2, 2, allow_nan=False))
+def test_filter_reduce_matches_ref(n, block, seed, t):
+    hypothesis.assume(_blk_ok(n, block))
+    x = _vec(n, seed)
+    got = K.filter_reduce(jnp.array(x), jnp.float32(t), block=block)
+    want = ref.filter_reduce(jnp.array(x), jnp.float32(t))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-4)
+
+
+def test_filter_reduce_all_pass_equals_sum():
+    x = np.abs(_vec(256, 5)) + 1.0
+    got = K.filter_reduce(jnp.array(x), jnp.float32(0.0))
+    np.testing.assert_allclose(float(got), float(np.sum(x)), rtol=1e-5)
+
+
+def test_filter_reduce_none_pass_is_zero():
+    x = -np.abs(_vec(256, 5)) - 1.0
+    assert float(K.filter_reduce(jnp.array(x), jnp.float32(0.0))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# branch_map (speculative if-then-else)
+# ---------------------------------------------------------------------------
+
+@given(
+    n=sizes,
+    seed=seeds,
+    t=st.floats(-1, 1, allow_nan=False),
+    then_op=st.sampled_from(("neg", "square", "relu")),
+    else_op=st.sampled_from(("abs", "neg", "square")),
+)
+def test_branch_map_matches_ref(n, seed, t, then_op, else_op):
+    x = _vec(n, seed)
+    got = K.branch_map(jnp.float32(t), jnp.array(x), then_op, else_op)
+    want = ref.branch_map(jnp.float32(t), jnp.array(x), then_op, else_op)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_branch_map_degenerate_same_op():
+    """then == else must equal a plain map regardless of the predicate."""
+    x = _vec(128, 2)
+    got = K.branch_map(jnp.float32(0.0), jnp.array(x), "square", "square")
+    np.testing.assert_allclose(np.array(got), x * x, rtol=1e-6)

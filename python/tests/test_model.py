@@ -1,0 +1,87 @@
+"""L2 model/variant catalogue checks: shapes, naming, and AOT lowering."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_catalogue_nonempty_and_unique():
+    names = [v.name for v in model.VARIANTS.values()]
+    assert len(names) == len(set(names))
+    assert len(names) >= 25
+
+
+def test_headline_present():
+    assert model.HEADLINE in model.VARIANTS
+    v = model.VARIANTS[model.HEADLINE]
+    assert v.pattern == "vmul_reduce"
+    assert v.params["n"] == model.PAPER_N
+
+
+def test_paper_workload_is_16kb():
+    """16 KB per operand at f32 = 4096 elements — the Fig. 3 data size."""
+    assert model.PAPER_N * 4 == 16 * 1024
+
+
+@pytest.mark.parametrize("name", sorted(model.VARIANTS))
+def test_variant_traces_with_declared_specs(name):
+    """Every variant must trace (abstract-eval) at its declared input specs
+    and produce exactly its declared outputs."""
+    v = model.VARIANTS[name]
+    out = jax.eval_shape(v.fn, *v.specs)
+    assert isinstance(out, tuple) and len(out) == len(v.outputs)
+    for got, (shape, dtype) in zip(out, v.outputs):
+        assert tuple(got.shape) == tuple(shape)
+        assert {"f32": jnp.float32, "i32": jnp.int32}[dtype] == got.dtype
+
+
+def test_variant_names_parseable():
+    for v in model.VARIANTS.values():
+        assert v.name.split("_n")[-1].isdigit(), v.name
+
+
+@pytest.mark.parametrize(
+    "name",
+    [model.HEADLINE, f"map_sqrt_n{model.PAPER_N}", f"axpy_n{model.PAPER_N}"],
+)
+def test_lowering_produces_hlo_text(name):
+    v = model.VARIANTS[name]
+    text = aot.lower_variant(v)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_headline_lowered_numerics_roundtrip():
+    """Execute the jitted headline function and compare against numpy."""
+    v = model.VARIANTS[model.HEADLINE]
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(model.PAPER_N).astype(np.float32)
+    b = rng.standard_normal(model.PAPER_N).astype(np.float32)
+    (out,) = jax.jit(v.fn)(jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(
+        float(out[0]), float(np.sum(a.astype(np.float64) * b)), rtol=1e-4
+    )
+
+
+def test_manifest_entry_schema():
+    v = model.VARIANTS[model.HEADLINE]
+    e = aot.manifest_entry(v, "x.hlo.txt", "HloModule fake")
+    for key in ("name", "pattern", "params", "inputs", "outputs", "file", "sha256"):
+        assert key in e
+    assert e["inputs"][0]["shape"] == [model.PAPER_N]
+    assert e["outputs"][0]["dtype"] == "f32"
+    json.dumps(e)  # must be JSON-serializable
+
+
+def test_pad_to_block():
+    x = jnp.arange(10, dtype=jnp.float32)
+    padded = model.pad_to_block(x, 8)
+    assert padded.shape == (16,)
+    assert float(padded.sum()) == float(x.sum())  # zero padding is sum-safe
+    same = model.pad_to_block(x, 5)
+    assert same.shape == (10,)

@@ -1,0 +1,62 @@
+//! Bench T-BITS: bitstream-count reduction — the paper's first static-flow
+//! limitation ("all variants of programming patterns must be synthesized").
+//!
+//! Dynamic overlay: one bitstream per (operator × region class).
+//! Static flow: one per (operator × tile position), because PR bitstreams
+//! are location-specific. The table quantifies the reduction for the
+//! pattern library; the bench times library construction + counting.
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::bitstream::{BitstreamLibrary, OperatorKind};
+use jit_overlay::patterns::Composition;
+use jit_overlay::report::Table;
+use jit_overlay::OverlayConfig;
+
+fn pattern_suite(n: usize) -> Vec<(&'static str, Composition)> {
+    use OperatorKind::*;
+    vec![
+        ("vmul_reduce", Composition::vmul_reduce(n)),
+        ("axpy", Composition::axpy(2.0, n)),
+        ("filter_reduce", Composition::filter_reduce(0.5, n)),
+        ("norm_chain", Composition::chain(&[Abs, Sqrt, Log], n).unwrap()),
+        ("branch", Composition::branch(0.0, Sqrt, Square, n)),
+    ]
+}
+
+fn main() {
+    let cfg = OverlayConfig::default();
+    let lib = BitstreamLibrary::standard(&cfg);
+    let positions = cfg.tiles();
+    let mut t = Table::new(
+        "T-BITS — bitstreams required: dynamic vs static flow",
+        &["pattern", "dynamic", "static (×9 positions)", "reduction"],
+    );
+    let mut static_total = 0usize;
+    for (name, comp) in pattern_suite(1024) {
+        let ops = comp.ops();
+        let d = lib.dynamic_variants_for(&ops);
+        let s = lib.static_variants_for(&ops, positions);
+        static_total += s;
+        t.row(&[
+            name.into(),
+            d.to_string(),
+            s.to_string(),
+            format!("{:.1}x", s as f64 / d.max(1) as f64),
+        ]);
+    }
+    t.row(&[
+        "WHOLE LIBRARY".into(),
+        lib.len().to_string(),
+        static_total.to_string(),
+        format!("{:.1}x", static_total as f64 / lib.len() as f64),
+    ]);
+    println!("{}", t.render());
+
+    let mut bench = Bench::new("bitstream_count");
+    bench.bench("library_build", || BitstreamLibrary::standard(&cfg).len());
+    let ops = Composition::branch(0.0, OperatorKind::Sqrt, OperatorKind::Square, 1024).ops();
+    bench.bench("variant_counting", || {
+        (lib.dynamic_variants_for(&ops), lib.static_variants_for(&ops, 9))
+    });
+    bench.finish();
+}

@@ -1,0 +1,63 @@
+//! Bench T-BR: conditional branching with speculation.
+//!
+//! Compares the dynamic overlay's speculative diamond (both arms resident
+//! in contiguous tiles, per-element select) against (a) an unconditional
+//! map lower bound and (b) the ARM software branch loop, over several
+//! taken-probabilities (speculation cost is data-independent — that is the
+//! point of the measurement).
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::exec::Engine;
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::report::{ms, Table};
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn main() {
+    let n = 2048;
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let branch = Composition::branch(0.5, OperatorKind::Sqrt, OperatorKind::Square, n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &branch).unwrap();
+
+    // modeled table across taken-rates (values change; time must not)
+    let mut t = Table::new(
+        "T-BR — speculative branch, modeled time vs taken-rate",
+        &["taken-rate", "overlay (ms)", "arm (ms)"],
+    );
+    for rate in [0.1f32, 0.5, 0.9] {
+        let x = workload::vector(n, (rate * 100.0) as u64, 0.5 - rate, 1.5 - rate);
+        let ov = engine.run(&acc, &[x.clone()], Target::DynamicOverlay).unwrap();
+        let arm = engine.run(&acc, &[x], Target::ArmSoftware).unwrap();
+        t.row(&[format!("{rate:.1}"), ms(ov.timing.total()), ms(arm.timing.total())]);
+    }
+    println!("{}", t.render());
+
+    let x = workload::vector(n, 7, 0.0, 1.0);
+    let mut bench = Bench::new("branching");
+    bench.bench("speculative_diamond", || {
+        engine
+            .run(&acc, &[x.clone()], Target::DynamicOverlay)
+            .unwrap()
+            .timing
+            .total()
+    });
+    let map_only = Composition::map(OperatorKind::Sqrt, n);
+    let acc2 = Jit.compile(&engine.fabric, &engine.lib, &map_only).unwrap();
+    bench.bench("unconditional_map", || {
+        engine
+            .run(&acc2, &[x.clone()], Target::DynamicOverlay)
+            .unwrap()
+            .timing
+            .total()
+    });
+    bench.bench("arm_software", || {
+        engine
+            .run(&acc, &[x.clone()], Target::ArmSoftware)
+            .unwrap()
+            .timing
+            .total()
+    });
+    bench.finish();
+}

@@ -1,0 +1,51 @@
+//! Bench FIG2: VMUL&Reduce on the static overlay, three scheduling
+//! scenarios (paper Fig. 2).
+//!
+//! Times the *actual* end-to-end engine execution (JIT output running on
+//! the fabric simulator); the modeled Fig. 2 table (the paper's
+//! milliseconds) is printed first so the bench output regenerates the
+//! figure's series.
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::exec::Engine;
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::place::StaticScenario;
+use jit_overlay::report::{ms, Table};
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn main() {
+    let n = 4096;
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let comp = Composition::vmul_reduce(n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+    let a = workload::vector(n, 1, -2.0, 2.0);
+    let b = workload::vector(n, 2, -2.0, 2.0);
+
+    // --- regenerated figure series (modeled milliseconds) -----------------
+    let mut t = Table::new(
+        &format!("FIG2 model series (n={n})"),
+        &["scenario", "pass-throughs", "total (ms)"],
+    );
+    for s in StaticScenario::ALL {
+        let r = engine
+            .run(&acc, &[a.clone(), b.clone()], Target::StaticOverlay(s))
+            .unwrap();
+        t.row(&[s.name().into(), s.pass_throughs().to_string(), ms(r.timing.total())]);
+    }
+    println!("{}", t.render());
+
+    // --- harness wall-time of the real execution path ---------------------
+    let mut bench = Bench::new("fig2_static_scenarios");
+    for s in StaticScenario::ALL {
+        bench.bench(s.name(), || {
+            engine
+                .run(&acc, &[a.clone(), b.clone()], Target::StaticOverlay(s))
+                .unwrap()
+                .timing
+                .total()
+        });
+    }
+    bench.finish();
+}

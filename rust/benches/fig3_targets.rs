@@ -1,0 +1,54 @@
+//! Bench FIG3: total execution time across the paper's evaluation targets
+//! (static S1–S3, dynamic overlay, custom HLS; ARM software reference).
+//!
+//! Prints the modeled figure series, then times the real engine execution
+//! per target.
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::exec::Engine;
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::report::{ms, speedup, Table};
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn main() {
+    let n = 4096; // the paper's 16 KB
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let comp = Composition::vmul_reduce(n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+    let a = workload::vector(n, 1, -2.0, 2.0);
+    let b = workload::vector(n, 2, -2.0, 2.0);
+
+    // modeled series (the regenerated figure)
+    let mut t = Table::new(
+        &format!("FIG3 model series (n={n}, {} KB)", n * 4 / 1024),
+        &["target", "total (ms)", "vs dynamic"],
+    );
+    let dyn_total = engine
+        .run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay)
+        .unwrap()
+        .timing
+        .total();
+    for tgt in Target::ALL {
+        let r = engine.run(&acc, &[a.clone(), b.clone()], tgt).unwrap();
+        t.row(&[tgt.name(), ms(r.timing.total()), speedup(r.timing.total(), dyn_total)]);
+    }
+    println!("{}", t.render());
+    println!(
+        "PR overhead (startup): {:.3} ms\n",
+        engine.fabric.cfg.full_reconfig_seconds() * 1e3
+    );
+
+    let mut bench = Bench::new("fig3_targets");
+    for tgt in Target::ALL {
+        bench.bench(&tgt.name(), || {
+            engine
+                .run(&acc, &[a.clone(), b.clone()], tgt)
+                .unwrap()
+                .timing
+                .total()
+        });
+    }
+    bench.finish();
+}

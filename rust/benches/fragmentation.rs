@@ -1,0 +1,108 @@
+//! Bench T-FRAG: internal fragmentation of the paper's non-uniform PR
+//! sizing (1/4 large, 3/4 small) versus a uniform all-large fabric.
+//!
+//! Prints the fragmentation study table for representative operator mixes,
+//! then times the placer+fragmentation accounting hot path.
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::bitstream::{BitstreamLibrary, OperatorKind};
+use jit_overlay::overlay::Fabric;
+use jit_overlay::place::{frag, DynamicPlacer};
+use jit_overlay::report::Table;
+use jit_overlay::OverlayConfig;
+
+fn mixes() -> Vec<(&'static str, Vec<OperatorKind>)> {
+    use OperatorKind::*;
+    vec![
+        ("vmul_reduce (all small)", vec![Mul, AccSum]),
+        ("axpy (all small)", vec![Mul, Add]),
+        ("norm chain (mixed)", vec![Abs, Sqrt, AccSum]),
+        ("transcendental (large)", vec![Sqrt, Log]),
+        ("5-stage mixed", vec![Abs, Square, Mul, Sqrt, AccSum]),
+    ]
+}
+
+/// The paper's trade-off study: non-uniform sizing (1/4 large) cuts
+/// fragmentation but costs *mapping flexibility* — pipelines with many
+/// large-region operators stop fitting. Sample random pipelines on both
+/// fabrics and report placeability vs mean fragmentation.
+fn mappability_study() {
+    use jit_overlay::workload::Rng;
+    use OperatorKind::*;
+    let small_pool = [Add, Sub, Mul, Max, Min, Neg, Abs, Square, Relu, AccSum];
+    let large_pool = [Sqrt, Sin, Cos, Log, Exp, Tanh];
+
+    let mut uniform_cfg = OverlayConfig::default();
+    uniform_cfg.sizing.large_every = 1; // every tile large
+    let configs = [
+        ("non-uniform (paper, 1/4 large)", OverlayConfig::default()),
+        ("uniform all-large", uniform_cfg),
+    ];
+
+    let mut t = Table::new(
+        "T-FRAG ablation — mapping flexibility vs fragmentation (500 random pipelines)",
+        &["fabric sizing", "placeable", "mean frag (placed)"],
+    );
+    for (name, cfg) in configs {
+        let lib = BitstreamLibrary::standard(&cfg);
+        let fabric = Fabric::new(cfg).unwrap();
+        let mut rng = Rng::new(0xF2A6);
+        let (mut placed, mut total, mut frag_sum) = (0usize, 0usize, 0.0f64);
+        for _ in 0..500 {
+            let len = 1 + rng.below(6);
+            let ops: Vec<OperatorKind> = (0..len)
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        large_pool[rng.below(large_pool.len())]
+                    } else {
+                        small_pool[rng.below(small_pool.len())]
+                    }
+                })
+                .collect();
+            total += 1;
+            if let Ok(p) = DynamicPlacer.place(&fabric, &lib, &ops) {
+                placed += 1;
+                frag_sum += frag::fragmentation(&p).mean_internal;
+            }
+        }
+        t.row(&[
+            name.into(),
+            format!("{:.0}%", 100.0 * placed as f64 / total as f64),
+            format!("{:.3}", frag_sum / placed.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    let cfg = OverlayConfig::default();
+    let lib = BitstreamLibrary::standard(&cfg);
+    let fabric = Fabric::new(cfg).unwrap();
+    mappability_study();
+
+    let mut t = Table::new(
+        "T-FRAG — internal fragmentation: non-uniform vs uniform-large sizing",
+        &["operator mix", "non-uniform frag", "uniform-large frag", "oversized tiles"],
+    );
+    for (name, ops) in mixes() {
+        let p = DynamicPlacer.place(&fabric, &lib, &ops).unwrap();
+        let (nu, u) = frag::vs_uniform_large(&p);
+        let r = frag::fragmentation(&p);
+        t.row(&[
+            name.into(),
+            format!("{nu:.3}"),
+            format!("{u:.3}"),
+            r.oversized_tiles.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut bench = Bench::new("fragmentation");
+    for (name, ops) in mixes() {
+        bench.bench(name, || {
+            let p = DynamicPlacer.place(&fabric, &lib, &ops).unwrap();
+            frag::fragmentation(&p).mean_internal
+        });
+    }
+    bench.finish();
+}

@@ -1,0 +1,70 @@
+//! Bench T-ISA: controller interpreter throughput — the L3 hot loop.
+//!
+//! The whole request path funnels through `Controller::run`; this bench
+//! isolates it: (a) control-only scalar loops (branch/cmp/inc pressure),
+//! (b) the full VMUL&Reduce program at the paper's 16 KB, and (c) codec
+//! round-trips (encode/decode of instruction BRAM images).
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::exec::Engine;
+use jit_overlay::isa::{encode, Instr, Opcode, Program};
+use jit_overlay::jit::Jit;
+use jit_overlay::overlay::{Controller, ExternalIo, Fabric};
+use jit_overlay::patterns::Composition;
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn scalar_loop_program(cfg: &OverlayConfig, iters: i16) -> Program {
+    Program::new(
+        vec![
+            Instr::ldi(0, 0, 0),
+            Instr::ldi(0, 1, iters),
+            Instr::op_a(Opcode::IncR, 0, 0),
+            Instr { op: Opcode::CmpR, tile: 0, a: 0, b: 1, imm: 0 },
+            Instr { op: Opcode::Bne, tile: 0, a: 0, b: 0, imm: -3 },
+            Instr::halt(),
+        ],
+        cfg,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let cfg = OverlayConfig::default();
+    let mut bench = Bench::new("isa_interpret");
+
+    // (a) control-only interpreter loop
+    let prog = scalar_loop_program(&cfg, 500);
+    let mut fabric = Fabric::new(cfg.clone()).unwrap();
+    let ctl = Controller::default();
+    bench.bench("scalar_loop_500", || {
+        fabric.reset_data();
+        let mut io = ExternalIo::default();
+        ctl.run(&mut fabric, &prog, &mut io).unwrap().instrs
+    });
+
+    // (b) full 16 KB VMUL&Reduce end to end
+    let n = 4096;
+    let mut engine = Engine::new(cfg.clone()).unwrap();
+    let acc = Jit
+        .compile(&engine.fabric, &engine.lib, &Composition::vmul_reduce(n))
+        .unwrap();
+    let a = workload::vector(n, 1, -1.0, 1.0);
+    let b2 = workload::vector(n, 2, -1.0, 1.0);
+    bench.bench("vmul_reduce_16kb", || {
+        engine
+            .run(&acc, &[a.clone(), b2.clone()], Target::DynamicOverlay)
+            .unwrap()
+            .stats
+            .unwrap()
+            .instrs
+    });
+
+    // (c) codec round-trip of the compiled program image
+    let words = acc.program.to_words();
+    bench.bench("decode_program", || encode::decode_all(&words).unwrap().len());
+    bench.bench("encode_program", || {
+        encode::encode_all(acc.program.instrs()).unwrap().len()
+    });
+    bench.finish();
+}

@@ -1,0 +1,48 @@
+//! Bench T-JIT: JIT assembly latency — "assemble gates through compilation
+//! instead of synthesis".
+//!
+//! The paper's pitch is removing synthesis/place/route (minutes to hours)
+//! from the programmer's path. This bench measures what replaces it: the
+//! full JIT pipeline (linearize → select → place → route → codegen) per
+//! composition, plus the coordinator's cache-hit path.
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::bitstream::{BitstreamLibrary, OperatorKind};
+use jit_overlay::coordinator::{Coordinator, Request};
+use jit_overlay::jit::Jit;
+use jit_overlay::overlay::Fabric;
+use jit_overlay::patterns::Composition;
+use jit_overlay::OverlayConfig;
+
+fn suite(n: usize) -> Vec<(&'static str, Composition)> {
+    use OperatorKind::*;
+    vec![
+        ("vmul_reduce", Composition::vmul_reduce(n)),
+        ("chain3", Composition::chain(&[Abs, Sqrt, Log], n).unwrap()),
+        ("filter_reduce", Composition::filter_reduce(0.5, n)),
+        ("branch_diamond", Composition::branch(0.0, Sqrt, Square, n)),
+        ("axpy", Composition::axpy(2.0, n)),
+    ]
+}
+
+fn main() {
+    let cfg = OverlayConfig::default();
+    let lib = BitstreamLibrary::standard(&cfg);
+    let fabric = Fabric::new(cfg.clone()).unwrap();
+
+    let mut bench = Bench::new("jit_compile");
+    for (name, comp) in suite(4096) {
+        bench.bench(name, || Jit.compile(&fabric, &lib, &comp).unwrap().program.len());
+    }
+
+    // coordinator cache-hit path (what repeat requests pay)
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let n = 1024;
+    let req = Request::dynamic(
+        Composition::vmul_reduce(n),
+        vec![vec![1.0; n], vec![2.0; n]],
+    );
+    coord.submit(&req).unwrap(); // warm
+    bench.bench("cache_hit_lookup", || coord.accelerator(&req.comp).unwrap().2);
+    bench.finish();
+}

@@ -1,0 +1,80 @@
+//! Bench T-PR: partial-reconfiguration overhead and its amortization.
+//!
+//! The paper: PR ≈ 1.250 ms, "only incurred at startup or initial
+//! configuration". This bench (a) validates the modeled full-fabric
+//! download time, (b) sweeps data sizes to find where dynamic-including-PR
+//! beats the static overlay, and (c) times the PR manager's hot path
+//! (apply with cold vs warm residency cache).
+
+use jit_overlay::benchkit::Bench;
+use jit_overlay::exec::Engine;
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::place::StaticScenario;
+use jit_overlay::report::{ms, Table};
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn print_sweep() {
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let mut t = Table::new(
+        "T-PR amortization sweep (VMUL&Reduce)",
+        &["bytes/op", "dynamic (ms)", "dynamic+PR (ms)", "static-s3 (ms)", "crossover"],
+    );
+    for &bytes in &workload::SWEEP_SIZES {
+        let n = bytes / 4;
+        let comp = Composition::vmul_reduce(n);
+        let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+        let a = workload::vector(n, 3, -1.0, 1.0);
+        let b = workload::vector(n, 4, -1.0, 1.0);
+        engine.fabric.reset_full();
+        let d = engine
+            .run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay)
+            .unwrap();
+        let s3 = engine
+            .run(&acc, &[a, b], Target::StaticOverlay(StaticScenario::S3))
+            .unwrap();
+        t.row(&[
+            bytes.to_string(),
+            ms(d.timing.total()),
+            ms(d.total_with_reconfig()),
+            ms(s3.timing.total()),
+            (d.total_with_reconfig() < s3.timing.total()).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "full-fabric reconfig (model): {:.4} ms (paper: ~1.250 ms)\n",
+        OverlayConfig::default().full_reconfig_seconds() * 1e3
+    );
+}
+
+fn main() {
+    print_sweep();
+
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let comp = Composition::vmul_reduce(1024);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+
+    let mut bench = Bench::new("pr_overhead");
+    bench.bench("apply_cold", || {
+        engine.fabric.reset_full();
+        engine
+            .pr
+            .apply(&mut engine.fabric, &engine.lib, &acc.placement)
+            .unwrap()
+            .downloads
+    });
+    engine
+        .pr
+        .apply(&mut engine.fabric, &engine.lib, &acc.placement)
+        .unwrap();
+    bench.bench("apply_warm", || {
+        engine
+            .pr
+            .apply(&mut engine.fabric, &engine.lib, &acc.placement)
+            .unwrap()
+            .cache_hits
+    });
+    bench.finish();
+}

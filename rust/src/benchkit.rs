@@ -1,0 +1,152 @@
+//! In-tree micro-benchmark harness (criterion-style, offline build).
+//!
+//! Usage mirrors criterion closely enough that the bench sources read the
+//! same way:
+//!
+//! ```no_run
+//! use jit_overlay::benchkit::Bench;
+//! let mut b = Bench::new("my_bench");
+//! b.bench("fast_path", || 2 + 2);
+//! b.finish();
+//! ```
+//!
+//! Method: warm up for `warmup_iters`, then run batches until
+//! `measure_time` elapses (≥ `min_samples` samples), reporting mean, p50,
+//! p95 and throughput-friendly ns/iter. `black_box` prevents the optimizer
+//! from deleting measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+/// A group of related benchmarks, printed as one table.
+pub struct Bench {
+    group: String,
+    warmup_iters: u32,
+    measure_time: Duration,
+    min_samples: usize,
+    results: Vec<(String, Stats)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // honor `--quick` on the command line (cargo bench -- --quick)
+        let quick = std::env::args().any(|a| a == "--quick");
+        Bench {
+            group: group.to_string(),
+            warmup_iters: if quick { 3 } else { 20 },
+            measure_time: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_millis(1500)
+            },
+            min_samples: if quick { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record the result under `name`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.min_samples * 2);
+        let t_start = Instant::now();
+        while t_start.elapsed() < self.measure_time || samples_ns.len() < self.min_samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let stats = Stats {
+            samples: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p50_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+            min_ns: samples_ns[0],
+        };
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Print the group's results table. Call once per group.
+    pub fn finish(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<42} {:>10} {:>12} {:>12} {:>12}",
+            "benchmark", "samples", "mean", "p50", "p95"
+        );
+        for (name, s) in &self.results {
+            println!(
+                "{:<42} {:>10} {:>12} {:>12} {:>12}",
+                format!("{}/{}", self.group, name),
+                s.samples,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+            );
+        }
+    }
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bench::new("test");
+        b.measure_time = Duration::from_millis(20);
+        b.min_samples = 5;
+        b.warmup_iters = 1;
+        let s = b.bench("noop", || 1 + 1);
+        assert!(s.samples >= 5);
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.p95_ns.max(s.p50_ns));
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn black_box_passes_through() {
+        assert_eq!(black_box(42), 42);
+    }
+}

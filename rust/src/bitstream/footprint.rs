@@ -1,0 +1,165 @@
+//! Resource footprints and PR-region classes.
+//!
+//! The paper sizes 1/4 of PR regions at **8 DSP / 964 FF / 1228 LUT** (for
+//! sqrtf, sin, cos, log, ...) and the rest at **4 DSP / 156 FF / 270 LUT**.
+//! A bitstream fits a region iff its footprint fits the region's budget;
+//! the slack is *internal fragmentation* — the T-FRAG study quantifies it.
+
+
+use super::OperatorKind;
+
+/// FPGA resource triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Footprint {
+    pub dsp: u32,
+    pub ff: u32,
+    pub lut: u32,
+}
+
+impl Footprint {
+    pub const fn new(dsp: u32, ff: u32, lut: u32) -> Footprint {
+        Footprint { dsp, ff, lut }
+    }
+
+    /// Component-wise `self ≤ other`.
+    pub fn fits(&self, budget: &Footprint) -> bool {
+        self.dsp <= budget.dsp && self.ff <= budget.ff && self.lut <= budget.lut
+    }
+
+    /// Fraction of the budget left unused, averaged over the three resource
+    /// kinds — the internal-fragmentation metric of the T-FRAG study.
+    pub fn fragmentation_in(&self, budget: &Footprint) -> f64 {
+        fn slack(used: u32, cap: u32) -> f64 {
+            if cap == 0 {
+                0.0
+            } else {
+                1.0 - (used.min(cap) as f64 / cap as f64)
+            }
+        }
+        (slack(self.dsp, budget.dsp) + slack(self.ff, budget.ff) + slack(self.lut, budget.lut))
+            / 3.0
+    }
+
+    /// Per-operator footprint, from Xilinx floating-point operator LogiCORE
+    /// resource tables (Virtex-7 speedgrade-2 orders of magnitude).
+    pub fn for_operator(op: OperatorKind) -> Footprint {
+        use OperatorKind::*;
+        match op {
+            // small-region residents
+            Add | Sub => Footprint::new(2, 120, 200),
+            Mul => Footprint::new(3, 140, 130),
+            Max | Min | Relu => Footprint::new(0, 60, 110),
+            Neg | Abs => Footprint::new(0, 30, 40),
+            Square => Footprint::new(3, 140, 130),
+            FilterGt => Footprint::new(0, 90, 160),
+            Select => Footprint::new(0, 70, 120),
+            AccSum => Footprint::new(2, 130, 210),
+            Route => Footprint::new(0, 8, 12),
+            // large-region residents (iterative / polynomial datapaths)
+            Div | Recip => Footprint::new(4, 520, 800),
+            Sqrt => Footprint::new(4, 540, 760),
+            Sin | Cos => Footprint::new(8, 900, 1100),
+            Log | Exp | Tanh => Footprint::new(7, 930, 1180),
+        }
+    }
+}
+
+/// The two PR-region provisioning classes of the paper's overlay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegionClass {
+    /// 4 DSP / 156 FF / 270 LUT.
+    Small,
+    /// 8 DSP / 964 FF / 1228 LUT.
+    Large,
+}
+
+impl RegionClass {
+    /// The paper's published budget for this class.
+    pub fn budget(self) -> Footprint {
+        match self {
+            RegionClass::Small => Footprint::new(4, 156, 270),
+            RegionClass::Large => Footprint::new(8, 964, 1228),
+        }
+    }
+
+    /// The smallest class whose budget holds `fp`, if any.
+    pub fn smallest_fitting(fp: &Footprint) -> Option<RegionClass> {
+        if fp.fits(&RegionClass::Small.budget()) {
+            Some(RegionClass::Small)
+        } else if fp.fits(&RegionClass::Large.budget()) {
+            Some(RegionClass::Large)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_budgets() {
+        assert_eq!(RegionClass::Small.budget(), Footprint::new(4, 156, 270));
+        assert_eq!(RegionClass::Large.budget(), Footprint::new(8, 964, 1228));
+    }
+
+    #[test]
+    fn transcendentals_need_large_regions() {
+        for op in [
+            OperatorKind::Sqrt,
+            OperatorKind::Sin,
+            OperatorKind::Cos,
+            OperatorKind::Log,
+        ] {
+            let fp = Footprint::for_operator(op);
+            assert_eq!(RegionClass::smallest_fitting(&fp), Some(RegionClass::Large), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn arithmetic_fits_small_regions() {
+        for op in [
+            OperatorKind::Add,
+            OperatorKind::Mul,
+            OperatorKind::AccSum,
+            OperatorKind::Route,
+        ] {
+            let fp = Footprint::for_operator(op);
+            assert_eq!(RegionClass::smallest_fitting(&fp), Some(RegionClass::Small), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn every_operator_fits_somewhere() {
+        for op in OperatorKind::ALL {
+            assert!(
+                RegionClass::smallest_fitting(&Footprint::for_operator(op)).is_some(),
+                "{op:?} fits no region class"
+            );
+        }
+    }
+
+    #[test]
+    fn fragmentation_bounds() {
+        let b = RegionClass::Large.budget();
+        assert_eq!(Footprint::new(8, 964, 1228).fragmentation_in(&b), 0.0);
+        let tiny = Footprint::new(0, 0, 0).fragmentation_in(&b);
+        assert!((tiny - 1.0).abs() < 1e-12);
+        // small op in a large region wastes most of it — the paper's
+        // motivation for non-uniform sizing.
+        let abs_in_large = Footprint::for_operator(OperatorKind::Abs).fragmentation_in(&b);
+        let abs_in_small =
+            Footprint::for_operator(OperatorKind::Abs).fragmentation_in(&RegionClass::Small.budget());
+        assert!(abs_in_large > abs_in_small);
+    }
+
+    #[test]
+    fn fits_is_componentwise() {
+        let budget = Footprint::new(4, 156, 270);
+        assert!(!Footprint::new(5, 1, 1).fits(&budget)); // dsp over
+        assert!(!Footprint::new(1, 200, 1).fits(&budget)); // ff over
+        assert!(!Footprint::new(1, 1, 300).fits(&budget)); // lut over
+        assert!(Footprint::new(4, 156, 270).fits(&budget)); // exact
+    }
+}

@@ -1,0 +1,187 @@
+//! The bitstream library: every operator pre-synthesized for every region
+//! class it fits, plus the variant-counting study (T-BITS).
+//!
+//! The paper's first limitation of the *static* approach is that "all
+//! variants of programming patterns must be synthesized": a static overlay
+//! needs one bitstream per (pattern × placement) because operator positions
+//! are frozen, while the dynamic overlay needs only one bitstream per
+//! (operator × region class) and composes placements at run time.
+//! [`BitstreamLibrary::static_variants_for`] vs
+//! [`BitstreamLibrary::dynamic_variants_for`] quantify that reduction.
+
+use std::collections::HashMap;
+
+
+use super::{Bitstream, Footprint, OperatorKind, RegionClass};
+use crate::config::OverlayConfig;
+use crate::error::{Error, Result};
+
+/// Immutable registry of pre-synthesized bitstreams.
+#[derive(Debug, Clone)]
+pub struct BitstreamLibrary {
+    by_key: HashMap<(OperatorKind, RegionClass), Bitstream>,
+}
+
+impl BitstreamLibrary {
+    /// "Synthesize" the full catalogue: each operator in each class whose
+    /// budget holds it. (Large regions can host small operators too — that
+    /// flexibility is exactly what the fragmentation study prices.)
+    pub fn standard(cfg: &OverlayConfig) -> BitstreamLibrary {
+        let mut by_key = HashMap::new();
+        for op in OperatorKind::ALL {
+            let fp = Footprint::for_operator(op);
+            for class in [RegionClass::Small, RegionClass::Large] {
+                if fp.fits(&class.budget()) {
+                    by_key.insert((op, class), Bitstream::synthesize(op, class, cfg));
+                }
+            }
+        }
+        BitstreamLibrary { by_key }
+    }
+
+    /// Number of distinct bitstreams in the library.
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Exact lookup.
+    pub fn get(&self, op: OperatorKind, class: RegionClass) -> Option<&Bitstream> {
+        self.by_key.get(&(op, class))
+    }
+
+    /// The bitstream for `op` in the *smallest* class available, or in
+    /// `class` exactly when `exact` is set.
+    pub fn select(&self, op: OperatorKind, class: RegionClass) -> Result<&Bitstream> {
+        self.get(op, class).ok_or_else(|| Error::NoBitstream {
+            op: op.name().to_string(),
+            class,
+        })
+    }
+
+    /// Smallest region class that can host `op` (library-backed).
+    pub fn preferred_class(&self, op: OperatorKind) -> Result<RegionClass> {
+        for class in [RegionClass::Small, RegionClass::Large] {
+            if self.by_key.contains_key(&(op, class)) {
+                return Ok(class);
+            }
+        }
+        Err(Error::NoBitstream { op: op.name().to_string(), class: RegionClass::Large })
+    }
+
+    /// Operators hosted only by large regions.
+    pub fn large_only_ops(&self) -> Vec<OperatorKind> {
+        OperatorKind::ALL
+            .iter()
+            .copied()
+            .filter(|&op| {
+                !self.by_key.contains_key(&(op, RegionClass::Small))
+                    && self.by_key.contains_key(&(op, RegionClass::Large))
+            })
+            .collect()
+    }
+
+    // ---- T-BITS: bitstream-count study ------------------------------------
+
+    /// Bitstreams a **dynamic** overlay needs for a pattern using `ops`:
+    /// one per distinct (operator, preferred class) — placement is decided
+    /// at run time, so position does not multiply the count.
+    pub fn dynamic_variants_for(&self, ops: &[OperatorKind]) -> usize {
+        let mut distinct = std::collections::HashSet::new();
+        for &op in ops {
+            if let Ok(class) = self.preferred_class(op) {
+                distinct.insert((op, class));
+            }
+        }
+        distinct.len()
+    }
+
+    /// Bitstreams a **static** flow needs: every operator pre-placed at
+    /// every tile position it might occupy — `|ops| × positions` (one
+    /// partial bitstream per PR region per operator, since PR bitstreams
+    /// are location-specific in the Xilinx flow).
+    pub fn static_variants_for(&self, ops: &[OperatorKind], positions: usize) -> usize {
+        let mut distinct = std::collections::HashSet::new();
+        for &op in ops {
+            if self.preferred_class(op).is_ok() {
+                distinct.insert(op);
+            }
+        }
+        distinct.len() * positions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib() -> BitstreamLibrary {
+        BitstreamLibrary::standard(&OverlayConfig::default())
+    }
+
+    #[test]
+    fn standard_library_covers_all_ops() {
+        let l = lib();
+        for op in OperatorKind::ALL {
+            assert!(l.preferred_class(op).is_ok(), "{op:?} missing");
+        }
+    }
+
+    #[test]
+    fn small_ops_present_in_both_classes() {
+        let l = lib();
+        assert!(l.get(OperatorKind::Mul, RegionClass::Small).is_some());
+        assert!(l.get(OperatorKind::Mul, RegionClass::Large).is_some());
+    }
+
+    #[test]
+    fn transcendentals_are_large_only() {
+        let l = lib();
+        let large_only = l.large_only_ops();
+        for op in [OperatorKind::Sqrt, OperatorKind::Sin, OperatorKind::Log] {
+            assert!(large_only.contains(&op), "{op:?}");
+            assert!(l.get(op, RegionClass::Small).is_none());
+        }
+    }
+
+    #[test]
+    fn select_reports_structured_error() {
+        let l = lib();
+        let err = l.select(OperatorKind::Sin, RegionClass::Small).unwrap_err();
+        assert!(err.is_capacity());
+    }
+
+    #[test]
+    fn dynamic_beats_static_variant_count() {
+        let l = lib();
+        let ops = [OperatorKind::Mul, OperatorKind::AccSum];
+        let dynamic = l.dynamic_variants_for(&ops);
+        let static_ = l.static_variants_for(&ops, 9); // 3×3 overlay positions
+        assert_eq!(dynamic, 2);
+        assert_eq!(static_, 18);
+        assert!(dynamic < static_);
+    }
+
+    #[test]
+    fn duplicate_ops_counted_once() {
+        let l = lib();
+        let ops = [OperatorKind::Mul, OperatorKind::Mul, OperatorKind::Mul];
+        assert_eq!(l.dynamic_variants_for(&ops), 1);
+        assert_eq!(l.static_variants_for(&ops, 4), 4);
+    }
+
+    #[test]
+    fn library_size_is_ops_plus_small_duplicates() {
+        let l = lib();
+        // every op fits Large; small ops additionally fit Small.
+        let large_count = OperatorKind::ALL.len();
+        let small_count = OperatorKind::ALL
+            .iter()
+            .filter(|&&op| Footprint::for_operator(op).fits(&RegionClass::Small.budget()))
+            .count();
+        assert_eq!(l.len(), large_count + small_count);
+    }
+}

@@ -1,0 +1,291 @@
+//! Pre-synthesized operator bitstreams and the library that manages them.
+//!
+//! In the paper, operators (mul, add, sqrtf, sin, ...) are synthesized once
+//! per PR-region class and stored as partial bitstreams; the runtime
+//! downloads them into tiles. Here a [`Bitstream`] is a descriptor carrying
+//! the operator semantics, its resource [`Footprint`], its latency/II
+//! pipeline characteristics, and a deterministic pseudo-payload standing in
+//! for the configuration frames (its length drives the ICAP timing model).
+
+pub mod footprint;
+pub mod library;
+
+pub use footprint::{Footprint, RegionClass};
+pub use library::BitstreamLibrary;
+
+
+/// Operator semantics a PR tile can host.
+///
+/// `Route` is the "empty" configuration: the tile only forwards data
+/// (a pass-through tile in Fig. 2's static scenarios).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatorKind {
+    // binary stream operators
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    // unary stream operators
+    Neg,
+    Abs,
+    Recip,
+    Square,
+    Relu,
+    Sqrt,
+    Sin,
+    Cos,
+    Log,
+    Exp,
+    Tanh,
+    // stateful stream operators
+    /// Running-sum accumulator (the Reduce pattern's adder with feedback).
+    AccSum,
+    /// Threshold filter: forwards x (or 0) based on `x > t`.
+    FilterGt,
+    /// Two-input select driven by a predicate stream (branch commit).
+    Select,
+    /// Pure routing / pass-through (no operator resident).
+    Route,
+}
+
+impl OperatorKind {
+    /// All real operators (everything but `Route`).
+    pub const ALL: [OperatorKind; 21] = [
+        OperatorKind::Add,
+        OperatorKind::Sub,
+        OperatorKind::Mul,
+        OperatorKind::Div,
+        OperatorKind::Max,
+        OperatorKind::Min,
+        OperatorKind::Neg,
+        OperatorKind::Abs,
+        OperatorKind::Recip,
+        OperatorKind::Square,
+        OperatorKind::Relu,
+        OperatorKind::Sqrt,
+        OperatorKind::Sin,
+        OperatorKind::Cos,
+        OperatorKind::Log,
+        OperatorKind::Exp,
+        OperatorKind::Tanh,
+        OperatorKind::AccSum,
+        OperatorKind::FilterGt,
+        OperatorKind::Select,
+        OperatorKind::Route,
+    ];
+
+    /// Number of data inputs the operator consumes per element.
+    pub fn arity(self) -> usize {
+        use OperatorKind::*;
+        match self {
+            Add | Sub | Mul | Div | Max | Min => 2,
+            FilterGt => 2, // value stream + (usually broadcast) threshold
+            Select => 3,   // predicate + two speculated streams
+            AccSum => 1,
+            Route => 1,
+            _ => 1,
+        }
+    }
+
+    /// Does the operator carry state across elements (reduce-style)?
+    pub fn is_stateful(self) -> bool {
+        matches!(self, OperatorKind::AccSum)
+    }
+
+    /// Library name (matches the Python kernel op names where applicable).
+    pub fn name(self) -> &'static str {
+        use OperatorKind::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Div => "div",
+            Max => "max",
+            Min => "min",
+            Neg => "neg",
+            Abs => "abs",
+            Recip => "recip",
+            Square => "square",
+            Relu => "relu",
+            Sqrt => "sqrt",
+            Sin => "sin",
+            Cos => "cos",
+            Log => "log",
+            Exp => "exp",
+            Tanh => "tanh",
+            AccSum => "acc_sum",
+            FilterGt => "filter_gt",
+            Select => "select",
+            Route => "route",
+        }
+    }
+
+    /// Parse a library name back into an operator.
+    pub fn from_name(s: &str) -> Option<OperatorKind> {
+        OperatorKind::ALL.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// Apply the operator to one streamed element (simulation semantics).
+    ///
+    /// `state` is the tile accumulator for stateful ops. Binary ops take
+    /// `(a, b)`; unary ops ignore `b`; `Select` is handled by the
+    /// interconnect (it needs three streams) and must not be applied here.
+    pub fn apply(self, a: f32, b: f32, state: &mut f32) -> f32 {
+        use OperatorKind::*;
+        match self {
+            Add => a + b,
+            Sub => a - b,
+            Mul => a * b,
+            Div => a / b,
+            Max => a.max(b),
+            Min => a.min(b),
+            Neg => -a,
+            Abs => a.abs(),
+            Recip => 1.0 / a,
+            Square => a * a,
+            Relu => a.max(0.0),
+            Sqrt => a.sqrt(),
+            Sin => a.sin(),
+            Cos => a.cos(),
+            Log => a.ln(),
+            Exp => a.exp(),
+            Tanh => a.tanh(),
+            AccSum => {
+                *state += a;
+                *state
+            }
+            FilterGt => {
+                if a > b {
+                    a
+                } else {
+                    0.0
+                }
+            }
+            Select | Route => a,
+        }
+    }
+
+    /// Pipeline latency in fabric cycles (fill cost of the tile stage).
+    ///
+    /// Small arithmetic closes in a few stages; the iterative/CORDIC-style
+    /// transcendentals the large regions host are deep pipelines. Values
+    /// follow Xilinx LogiCORE floating-point operator datasheet orders.
+    pub fn latency_cycles(self) -> u64 {
+        use OperatorKind::*;
+        match self {
+            Add | Sub | Max | Min => 3,
+            Mul => 4,
+            Div | Recip => 14,
+            Neg | Abs | Relu | Route => 1,
+            Square => 4,
+            Sqrt => 16,
+            Sin | Cos => 20,
+            Log | Exp | Tanh => 22,
+            AccSum => 3,
+            FilterGt => 2,
+            Select => 1,
+        }
+    }
+
+    /// Initiation interval (elements accepted per cycle is 1/II).
+    /// All library operators are fully pipelined (II=1).
+    pub fn initiation_interval(self) -> u64 {
+        1
+    }
+}
+
+/// A pre-synthesized partial bitstream for one operator in one region class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bitstream {
+    pub op: OperatorKind,
+    pub class: RegionClass,
+    pub footprint: Footprint,
+    /// Configuration-frame byte count (drives ICAP download time).
+    pub frame_bytes: usize,
+    /// Stable content hash (identity for the residency cache).
+    pub id: u64,
+}
+
+impl Bitstream {
+    /// Deterministically derive the descriptor for (op, class).
+    pub fn synthesize(op: OperatorKind, class: RegionClass, cfg: &crate::config::OverlayConfig) -> Bitstream {
+        let footprint = Footprint::for_operator(op);
+        let frame_bytes = match class {
+            RegionClass::Small => cfg.small_bitstream_bytes,
+            RegionClass::Large => cfg.large_bitstream_bytes,
+        };
+        // FNV-1a over (op, class) — stable across runs, collision-free for
+        // our 21×2 catalogue.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in op
+            .name()
+            .bytes()
+            .chain(std::iter::once(match class {
+                RegionClass::Small => b's',
+                RegionClass::Large => b'l',
+            }))
+        {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Bitstream { op, class, footprint, frame_bytes, id: h }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverlayConfig;
+
+    #[test]
+    fn names_roundtrip() {
+        for op in OperatorKind::ALL {
+            assert_eq!(OperatorKind::from_name(op.name()), Some(op));
+        }
+        assert_eq!(OperatorKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn apply_matches_float_semantics() {
+        let mut s = 0.0;
+        assert_eq!(OperatorKind::Mul.apply(3.0, 4.0, &mut s), 12.0);
+        assert_eq!(OperatorKind::Relu.apply(-2.0, 0.0, &mut s), 0.0);
+        assert_eq!(OperatorKind::FilterGt.apply(5.0, 3.0, &mut s), 5.0);
+        assert_eq!(OperatorKind::FilterGt.apply(2.0, 3.0, &mut s), 0.0);
+    }
+
+    #[test]
+    fn acc_sum_accumulates_across_elements() {
+        let mut s = 0.0;
+        for v in [1.0, 2.0, 3.0] {
+            OperatorKind::AccSum.apply(v, 0.0, &mut s);
+        }
+        assert_eq!(s, 6.0);
+    }
+
+    #[test]
+    fn transcendentals_are_deep_pipelines() {
+        assert!(OperatorKind::Sqrt.latency_cycles() > OperatorKind::Mul.latency_cycles());
+        assert!(OperatorKind::Log.latency_cycles() >= OperatorKind::Sin.latency_cycles());
+    }
+
+    #[test]
+    fn all_operators_fully_pipelined() {
+        for op in OperatorKind::ALL {
+            assert_eq!(op.initiation_interval(), 1);
+        }
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_and_distinct() {
+        let cfg = OverlayConfig::default();
+        let a = Bitstream::synthesize(OperatorKind::Mul, RegionClass::Small, &cfg);
+        let b = Bitstream::synthesize(OperatorKind::Mul, RegionClass::Small, &cfg);
+        let c = Bitstream::synthesize(OperatorKind::Mul, RegionClass::Large, &cfg);
+        assert_eq!(a, b);
+        assert_ne!(a.id, c.id);
+        assert!(c.frame_bytes > a.frame_bytes);
+    }
+}

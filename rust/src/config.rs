@@ -1,0 +1,217 @@
+//! System configuration: fabric geometry, tile sizing mix, clocks, and the
+//! reconfiguration-cost model.
+//!
+//! Defaults reproduce the paper's testbed: a 3×3 overlay on a Virtex-7,
+//! 1/4 of PR regions "large" (8 DSP / 964 FF / 1228 LUT), the rest "small"
+//! (4 DSP / 156 FF / 270 LUT), ~1.250 ms full-overlay PR time, and a 660 MHz
+//! ARM software reference (Zedboard).
+
+
+use crate::error::{Error, Result};
+
+/// Clock and bandwidth parameters of the modeled platform.
+#[derive(Debug, Clone)]
+pub struct ClockConfig {
+    /// Overlay fabric clock (Hz). Virtex-7 overlays of this style close
+    /// timing in the 100–250 MHz range; the paper's graphs are consistent
+    /// with ~100 MHz, which we take as default.
+    pub fabric_hz: f64,
+    /// ARM software reference clock (Hz) — the paper's 660 MHz Zedboard.
+    pub arm_hz: f64,
+    /// DMA / AXI streaming bandwidth between DDR and the overlay (bytes/s).
+    /// 32-bit AXI at fabric clock ⇒ 4 B/cycle.
+    pub dma_bytes_per_sec: f64,
+    /// ICAP configuration bandwidth (bytes/s). Virtex-7 ICAP: 32 bit @
+    /// 100 MHz = 400 MB/s theoretical; real controllers reach ~380 MB/s.
+    pub icap_bytes_per_sec: f64,
+}
+
+impl Default for ClockConfig {
+    fn default() -> Self {
+        Self {
+            fabric_hz: 100.0e6,
+            arm_hz: 660.0e6,
+            dma_bytes_per_sec: 400.0e6,
+            icap_bytes_per_sec: 380.0e6,
+        }
+    }
+}
+
+/// Fraction and shape of the two PR-region classes within the fabric.
+#[derive(Debug, Clone)]
+pub struct TileSizing {
+    /// Every `large_every`-th tile is provisioned as a large region
+    /// (the paper: 1/4 of regions). `large_every == 0` disables large tiles.
+    pub large_every: usize,
+}
+
+impl Default for TileSizing {
+    fn default() -> Self {
+        Self { large_every: 4 }
+    }
+}
+
+/// Complete overlay configuration.
+#[derive(Debug, Clone)]
+pub struct OverlayConfig {
+    /// Mesh rows (paper experiment: 3).
+    pub rows: usize,
+    /// Mesh columns (paper experiment: 3).
+    pub cols: usize,
+    /// Large/small PR sizing mix.
+    pub sizing: TileSizing,
+    /// Per-tile data BRAM capacity in bytes (two data BRAMs per tile; this
+    /// is the capacity of each). 18 Kb BRAM ⇒ 2304 B; we default to a
+    /// 36 Kb pair half, 4 KiB, matching the kernels' 1024-f32 chunks.
+    pub data_bram_bytes: usize,
+    /// Per-tile instruction BRAM capacity in *instructions* (32-bit words).
+    pub instr_bram_words: usize,
+    /// Number of controller-visible scalar registers per tile.
+    pub regs_per_tile: usize,
+    /// Clocks and bandwidths.
+    pub clocks: ClockConfig,
+    /// Approximate partial bitstream size for a small region (bytes). On a
+    /// Virtex-7, a region of ~300 LUT + 4 DSP is on the order of 100–200 KB
+    /// of frames; chosen so a full 3×3 reconfig ≈ the paper's 1.250 ms.
+    pub small_bitstream_bytes: usize,
+    /// Partial bitstream size for a large region (bytes).
+    pub large_bitstream_bytes: usize,
+}
+
+impl Default for OverlayConfig {
+    fn default() -> Self {
+        Self {
+            rows: 3,
+            cols: 3,
+            sizing: TileSizing::default(),
+            data_bram_bytes: 4096,
+            instr_bram_words: 256,
+            regs_per_tile: 16,
+            clocks: ClockConfig::default(),
+            // 9 tiles: 7 small + 2 large ⇒ 7*48640 + 2*67456 ≈ 475 KB
+            // ⇒ 475 KB / 380 MB/s ≈ 1.250 ms — the paper's PR overhead.
+            small_bitstream_bytes: 48_640,
+            large_bitstream_bytes: 67_456,
+        }
+    }
+}
+
+impl OverlayConfig {
+    /// Total number of tiles in the mesh.
+    pub fn tiles(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Whether tile `idx` (row-major) is provisioned as a large PR region.
+    ///
+    /// With the default `large_every = 4` on a 3×3 mesh, tiles 0, 4 and 8
+    /// would be large — slightly more than the paper's 1/4; we instead mark
+    /// every 4th tile *starting at 3* (tiles 3, 7) so a 3×3 mesh gets 2/9 ≈
+    /// 1/4 large regions, placed off the border as the PR flow prefers.
+    pub fn is_large_tile(&self, idx: usize) -> bool {
+        let e = self.sizing.large_every;
+        e != 0 && idx % e == e - 1
+    }
+
+    /// Number of large tiles in the mesh.
+    pub fn large_tiles(&self) -> usize {
+        (0..self.tiles()).filter(|&i| self.is_large_tile(i)).count()
+    }
+
+    /// Seconds to reconfigure every PR region in the fabric once — the
+    /// "PR overhead" of Fig. 3 (paper: ≈1.250 ms for the 3×3 overlay).
+    pub fn full_reconfig_seconds(&self) -> f64 {
+        let large = self.large_tiles();
+        let small = self.tiles() - large;
+        let bytes = large * self.large_bitstream_bytes + small * self.small_bitstream_bytes;
+        bytes as f64 / self.clocks.icap_bytes_per_sec
+    }
+
+    /// Validate invariants. Call after deserializing user-supplied configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err(Error::Config("mesh must have at least one tile".into()));
+        }
+        if self.data_bram_bytes < 16 || self.data_bram_bytes % 4 != 0 {
+            return Err(Error::Config(
+                "data BRAM must hold at least 4 words and be word-aligned".into(),
+            ));
+        }
+        if self.instr_bram_words < 8 {
+            return Err(Error::Config("instruction BRAM too small".into()));
+        }
+        if self.regs_per_tile < 4 {
+            return Err(Error::Config("need at least 4 registers per tile".into()));
+        }
+        let c = &self.clocks;
+        for (name, v) in [
+            ("fabric_hz", c.fabric_hz),
+            ("arm_hz", c.arm_hz),
+            ("dma_bytes_per_sec", c.dma_bytes_per_sec),
+            ("icap_bytes_per_sec", c.icap_bytes_per_sec),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::Config(format!("{name} must be positive, got {v}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Words of f32 a single data BRAM holds.
+    pub fn bram_words(&self) -> usize {
+        self.data_bram_bytes / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        OverlayConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn default_mesh_is_paper_3x3() {
+        let c = OverlayConfig::default();
+        assert_eq!(c.tiles(), 9);
+        assert_eq!((c.rows, c.cols), (3, 3));
+    }
+
+    #[test]
+    fn quarter_of_tiles_are_large() {
+        let c = OverlayConfig::default();
+        // 2 of 9 ≈ the paper's "1/4 of the PR regions".
+        assert_eq!(c.large_tiles(), 2);
+        assert!(c.is_large_tile(3));
+        assert!(c.is_large_tile(7));
+        assert!(!c.is_large_tile(0));
+    }
+
+    #[test]
+    fn full_reconfig_matches_paper_pr_overhead() {
+        let s = OverlayConfig::default().full_reconfig_seconds();
+        // paper: "around 1.250 ms"
+        assert!((s - 1.25e-3).abs() < 0.05e-3, "got {s}");
+    }
+
+    #[test]
+    fn zero_rows_rejected() {
+        let mut c = OverlayConfig::default();
+        c.rows = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bad_clock_rejected() {
+        let mut c = OverlayConfig::default();
+        c.clocks.fabric_hz = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bram_words_default_matches_kernel_block() {
+        assert_eq!(OverlayConfig::default().bram_words(), 1024);
+    }
+}

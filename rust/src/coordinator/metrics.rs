@@ -1,0 +1,71 @@
+//! Coordinator metrics: the counters a deployment would scrape.
+
+
+/// Cumulative service counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Metrics {
+    /// Requests served.
+    pub requests: u64,
+    /// JIT compilations performed (accelerator-cache misses).
+    pub jit_compiles: u64,
+    /// Accelerator-cache hits.
+    pub cache_hits: u64,
+    /// Wall-clock seconds spent in the JIT.
+    pub jit_seconds: f64,
+    /// PR bitstream downloads issued.
+    pub pr_downloads: u64,
+    /// Modeled seconds spent reconfiguring.
+    pub pr_seconds: f64,
+    /// Modeled fabric-busy seconds across all requests.
+    pub busy_seconds: f64,
+    /// Whole-fabric evictions forced by placement capacity misses.
+    pub evictions: u64,
+}
+
+impl Metrics {
+    /// Accelerator-cache hit rate in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.jit_compiles + self.cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} jit={} hits={} ({:.0}%) pr_downloads={} pr={:.3}ms busy={:.3}ms",
+            self.requests,
+            self.jit_compiles,
+            self.cache_hits,
+            self.hit_rate() * 100.0,
+            self.pr_downloads,
+            self.pr_seconds * 1e3,
+            self.busy_seconds * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_zero() {
+        assert_eq!(Metrics::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn hit_rate_computes() {
+        let m = Metrics { jit_compiles: 1, cache_hits: 3, ..Default::default() };
+        assert!((m.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let m = Metrics { requests: 5, ..Default::default() };
+        assert!(m.summary().contains("requests=5"));
+    }
+}

@@ -1,0 +1,342 @@
+//! The run-time coordinator: the paper's "run time interpreter" as a
+//! service.
+//!
+//! Responsibilities:
+//! * **accelerator cache** — compiled accelerators keyed by composition
+//!   hash; a repeat request skips the JIT entirely;
+//! * **reconfiguration-aware batching** — the scheduler reorders a batch to
+//!   group requests that use the same accelerator, so the fabric is
+//!   reconfigured once per *group* instead of once per request (the
+//!   PR overhead is the dynamic overlay's only penalty — amortizing it is
+//!   the whole game);
+//! * **metrics** — counters a deployment would alarm on.
+//!
+//! [`Coordinator`] is the synchronous core; [`serve`]/[`spawn_service`]
+//! wrap it in an mpsc request loop on a dedicated thread (used by
+//! `repro serve`).
+
+pub mod metrics;
+
+pub use metrics::Metrics;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::OverlayConfig;
+use crate::error::Result;
+use crate::exec::{Engine, RunResult};
+use crate::jit::{CompiledAccelerator, Jit};
+use crate::patterns::Composition;
+use crate::timing::Target;
+
+/// One unit of work.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub comp: Composition,
+    pub inputs: Vec<Vec<f32>>,
+    pub target: Target,
+}
+
+impl Request {
+    pub fn dynamic(comp: Composition, inputs: Vec<Vec<f32>>) -> Request {
+        Request { comp, inputs, target: Target::DynamicOverlay }
+    }
+}
+
+/// A served response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub run: RunResult,
+    /// JIT compile time for this request (0 on accelerator-cache hits).
+    pub jit_seconds: f64,
+    /// Did the accelerator cache hit?
+    pub cached: bool,
+}
+
+/// The coordinator service core.
+pub struct Coordinator {
+    pub engine: Engine,
+    jit: Jit,
+    cache: HashMap<u64, Arc<CompiledAccelerator>>,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    pub fn new(cfg: OverlayConfig) -> Result<Coordinator> {
+        Ok(Coordinator {
+            engine: Engine::new(cfg)?,
+            jit: Jit::default(),
+            cache: HashMap::new(),
+            metrics: Metrics::default(),
+        })
+    }
+
+    /// Compile (or fetch) the accelerator for a composition.
+    ///
+    /// Compilation sees the fabric's *current* occupancy, so co-residency
+    /// is exploited when capacity allows (different accelerators land on
+    /// disjoint tiles and never evict each other). When the placer runs out
+    /// of tiles, the coordinator evicts all residents and recompiles against
+    /// the empty fabric — the PR manager will re-download on demand (this is
+    /// the thrash the batcher exists to amortize).
+    pub fn accelerator(&mut self, comp: &Composition) -> Result<(Arc<CompiledAccelerator>, f64, bool)> {
+        let key = comp.cache_key();
+        if let Some(acc) = self.cache.get(&key) {
+            self.metrics.cache_hits += 1;
+            return Ok((acc.clone(), 0.0, true));
+        }
+        let t0 = Instant::now();
+        let compiled = match self.jit.compile(&self.engine.fabric, &self.engine.lib, comp) {
+            Ok(acc) => acc,
+            Err(e) if e.is_capacity() => {
+                self.metrics.evictions += 1;
+                self.engine.fabric.reset_full();
+                self.jit.compile(&self.engine.fabric, &self.engine.lib, comp)?
+            }
+            Err(e) => return Err(e),
+        };
+        let acc = Arc::new(compiled);
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.jit_compiles += 1;
+        self.metrics.jit_seconds += dt;
+        self.cache.insert(key, acc.clone());
+        Ok((acc, dt, false))
+    }
+
+    /// Serve one request.
+    pub fn submit(&mut self, req: &Request) -> Result<Response> {
+        let (acc, jit_seconds, cached) = self.accelerator(&req.comp)?;
+        let run = self.engine.run(&acc, &req.inputs, req.target)?;
+        self.metrics.requests += 1;
+        if let Some(r) = run.reconfig {
+            self.metrics.pr_downloads += r.downloads as u64;
+            self.metrics.pr_seconds += r.seconds;
+        }
+        self.metrics.busy_seconds += run.timing.total();
+        Ok(Response { run, jit_seconds, cached })
+    }
+
+    /// Reconfiguration-aware batch schedule: stable-group requests by
+    /// composition key. Returns the execution order (indices into `reqs`).
+    pub fn schedule(reqs: &[Request]) -> Vec<usize> {
+        let mut first_seen: HashMap<u64, usize> = HashMap::new();
+        let mut order: Vec<(usize, usize)> = Vec::with_capacity(reqs.len()); // (group, idx)
+        for (i, r) in reqs.iter().enumerate() {
+            let key = r.comp.cache_key();
+            let next_group = first_seen.len();
+            let g = *first_seen.entry(key).or_insert(next_group);
+            order.push((g, i));
+        }
+        order.sort(); // stable by (group, arrival)
+        order.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Serve a batch in reconfiguration-minimizing order; returns responses
+    /// in the *original* request order.
+    pub fn submit_batch(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        let order = Self::schedule(reqs);
+        let mut out: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
+        for i in order {
+            out[i] = Some(self.submit(&reqs[i])?);
+        }
+        Ok(out.into_iter().map(|r| r.expect("all served")).collect())
+    }
+
+    /// Number of cached accelerators.
+    pub fn cached_accelerators(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// A request plus its reply channel.
+pub struct Job {
+    pub request: Request,
+    pub reply: std::sync::mpsc::Sender<Result<Response>>,
+}
+
+/// Request loop: drain jobs from `rx`, serve them on this thread, return
+/// the final metrics when all senders hang up.
+///
+/// The coordinator is deliberately single-threaded (it owns one fabric, as
+/// the controller owns one FPGA); concurrency lives in the callers — spawn
+/// this on a dedicated thread and clone the job sender freely.
+pub fn serve(mut coord: Coordinator, rx: std::sync::mpsc::Receiver<Job>) -> Metrics {
+    while let Ok(job) = rx.recv() {
+        let resp = coord.submit(&job.request);
+        let _ = job.reply.send(resp);
+    }
+    coord.metrics
+}
+
+/// Spawn [`serve`] on a new thread; returns the job sender and the join
+/// handle yielding final metrics.
+pub fn spawn_service(
+    coord: Coordinator,
+) -> (std::sync::mpsc::Sender<Job>, std::thread::JoinHandle<Metrics>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || serve(coord, rx));
+    (tx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::OperatorKind;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(OverlayConfig::default()).unwrap()
+    }
+
+    fn vmul_req(n: usize, seed: f32) -> Request {
+        Request::dynamic(
+            Composition::vmul_reduce(n),
+            vec![vec![seed; n], vec![2.0; n]],
+        )
+    }
+
+    fn map_req(n: usize) -> Request {
+        Request::dynamic(Composition::map(OperatorKind::Abs, n), vec![vec![-1.0; n]])
+    }
+
+    #[test]
+    fn repeat_requests_hit_accelerator_cache() {
+        let mut c = coord();
+        let r1 = c.submit(&vmul_req(1024, 1.0)).unwrap();
+        let r2 = c.submit(&vmul_req(1024, 3.0)).unwrap();
+        assert!(!r1.cached);
+        assert!(r2.cached);
+        assert_eq!(r2.jit_seconds, 0.0);
+        assert_eq!(c.cached_accelerators(), 1);
+        assert_eq!(r2.run.output.as_scalar(), Some(3.0 * 2.0 * 1024.0));
+    }
+
+    #[test]
+    fn schedule_groups_same_composition() {
+        let reqs = vec![
+            vmul_req(512, 1.0), // A
+            map_req(512),       // B
+            vmul_req(512, 2.0), // A
+            map_req(512),       // B
+            vmul_req(512, 3.0), // A
+        ];
+        let order = Coordinator::schedule(&reqs);
+        assert_eq!(order, vec![0, 2, 4, 1, 3]);
+    }
+
+    /// Two 5-stage chains cannot co-reside on a 9-tile fabric with the
+    /// first one resident (only 4 tiles stay free), so switching between
+    /// them forces whole-fabric eviction + re-download — the contention the
+    /// batcher amortizes.
+    fn chain_a_req(n: usize) -> Request {
+        use OperatorKind::*;
+        Request::dynamic(
+            Composition::chain(&[Neg, Abs, Square, Relu, Neg], n).unwrap(),
+            vec![vec![1.5; n]],
+        )
+    }
+
+    fn chain_b_req(n: usize) -> Request {
+        use OperatorKind::*;
+        Request::dynamic(
+            Composition::chain(&[Abs, Neg, Relu, Square, Abs], n).unwrap(),
+            vec![vec![-2.0; n]],
+        )
+    }
+
+    #[test]
+    fn small_accelerators_co_reside_without_thrash() {
+        // vmul (2 tiles) and map (1 tile) fit together: after warmup no
+        // further downloads, no evictions.
+        let mut c = coord();
+        for _ in 0..3 {
+            c.submit(&vmul_req(512, 1.0)).unwrap();
+            c.submit(&map_req(512)).unwrap();
+        }
+        assert_eq!(c.metrics.evictions, 0);
+        assert_eq!(c.metrics.pr_downloads, 3); // 2 (vmul) + 1 (map), once
+    }
+
+    #[test]
+    fn batched_order_reduces_pr_downloads() {
+        // interleaved A,B,A,B,A with conflicting 5-stage chains: naive
+        // serving re-downloads on every switch; scheduled serving
+        // reconfigures once per group.
+        let reqs: Vec<Request> = vec![
+            chain_a_req(512),
+            chain_b_req(512),
+            chain_a_req(512),
+            chain_b_req(512),
+            chain_a_req(512),
+        ];
+
+        let mut naive = coord();
+        for r in &reqs {
+            naive.submit(r).unwrap();
+        }
+
+        let mut batched = coord();
+        batched.submit_batch(&reqs).unwrap();
+
+        assert!(
+            batched.metrics.pr_downloads < naive.metrics.pr_downloads,
+            "batched {} !< naive {}",
+            batched.metrics.pr_downloads,
+            naive.metrics.pr_downloads
+        );
+        assert!(naive.metrics.evictions >= 1);
+    }
+
+    #[test]
+    fn batch_responses_in_original_order() {
+        let mut c = coord();
+        let reqs = vec![vmul_req(512, 1.0), map_req(512), vmul_req(512, 2.0)];
+        let resps = c.submit_batch(&reqs).unwrap();
+        assert_eq!(resps.len(), 3);
+        assert_eq!(resps[0].run.output.as_scalar(), Some(1024.0));
+        assert!(resps[1].run.output.as_vector().is_some());
+        assert_eq!(resps[2].run.output.as_scalar(), Some(2048.0));
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut c = coord();
+        c.submit(&vmul_req(512, 1.0)).unwrap();
+        c.submit(&vmul_req(512, 1.0)).unwrap();
+        assert_eq!(c.metrics.requests, 2);
+        assert_eq!(c.metrics.jit_compiles, 1);
+        assert_eq!(c.metrics.cache_hits, 1);
+        assert!(c.metrics.busy_seconds > 0.0);
+    }
+
+    #[test]
+    fn threaded_serve_loop_round_trips() {
+        let (tx, handle) = spawn_service(coord());
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(Job { request: vmul_req(256, 1.0), reply: rtx }).unwrap();
+        let resp = rrx.recv().unwrap().unwrap();
+        assert_eq!(resp.run.output.as_scalar(), Some(512.0));
+        drop(tx);
+        let metrics = handle.join().unwrap();
+        assert_eq!(metrics.requests, 1);
+    }
+
+    #[test]
+    fn service_survives_request_errors() {
+        let (tx, handle) = spawn_service(coord());
+        // bad request: wrong channel count
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(Job {
+            request: Request::dynamic(Composition::vmul_reduce(64), vec![vec![0.0; 64]]),
+            reply: rtx,
+        })
+        .unwrap();
+        assert!(rrx.recv().unwrap().is_err());
+        // service still alive for a good request
+        let (rtx2, rrx2) = std::sync::mpsc::channel();
+        tx.send(Job { request: vmul_req(64, 1.0), reply: rtx2 }).unwrap();
+        assert!(rrx2.recv().unwrap().is_ok());
+        drop(tx);
+        handle.join().unwrap();
+    }
+}

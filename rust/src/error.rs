@@ -1,0 +1,73 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the library returns [`Result<T>`]. Errors are
+//! structured (not stringly-typed) so callers — the coordinator in
+//! particular — can distinguish recoverable conditions (e.g. a pattern that
+//! does not fit the fabric) from hard faults (a corrupt artifact).
+
+use thiserror::Error;
+
+/// Library-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// All error conditions surfaced by the JIT overlay runtime.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A pattern expression failed shape/type checking.
+    #[error("pattern error: {0}")]
+    Pattern(String),
+
+    /// The JIT could not select an operator implementation.
+    #[error("no bitstream for operator `{op}` fitting region class {class:?}")]
+    NoBitstream { op: String, class: crate::bitstream::RegionClass },
+
+    /// Placement failed: not enough free tiles (or no contiguous run).
+    #[error("placement failed: {0}")]
+    Placement(String),
+
+    /// Routing failed between two placed tiles.
+    #[error("routing failed: no path from tile {from} to tile {to}")]
+    Routing { from: usize, to: usize },
+
+    /// A controller program is malformed (bad operands, missing halt, ...).
+    #[error("program error: {0}")]
+    Program(String),
+
+    /// The controller trapped at runtime (bad address, div-by-zero, ...).
+    #[error("controller trap at pc={pc}: {reason}")]
+    Trap { pc: usize, reason: String },
+
+    /// Reconfiguration error (bitstream does not fit the PR region, ...).
+    #[error("reconfiguration error: {0}")]
+    Reconfig(String),
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The PJRT runtime rejected or failed an operation.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration rejected at validation time.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Manifest / program-text parse failure.
+    #[error("parse error: {0}")]
+    Parse(String),
+}
+
+impl Error {
+    /// True when retrying with a different placement/fabric may succeed.
+    pub fn is_capacity(&self) -> bool {
+        matches!(
+            self,
+            Error::Placement(_) | Error::Routing { .. } | Error::NoBitstream { .. }
+        )
+    }
+}

@@ -1,0 +1,195 @@
+//! Scalar CPU evaluation of pattern compositions.
+//!
+//! Two roles: (1) the *values* behind the ARM-software Fig. 3 series, and
+//! (2) an independent reference the integration tests triangulate against —
+//! overlay-interpreter result == PJRT artifact result == this evaluator.
+
+use crate::bitstream::OperatorKind;
+use crate::error::{Error, Result};
+use crate::patterns::{Composition, Expr};
+
+/// Result of evaluating a composition.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Scalar(f32),
+    Vector(Vec<f32>),
+}
+
+impl Value {
+    pub fn as_scalar(&self) -> Option<f32> {
+        match self {
+            Value::Scalar(s) => Some(*s),
+            Value::Vector(v) if v.len() == 1 => Some(v[0]),
+            _ => None,
+        }
+    }
+    pub fn as_vector(&self) -> Option<&[f32]> {
+        match self {
+            Value::Vector(v) => Some(v),
+            Value::Scalar(_) => None,
+        }
+    }
+}
+
+/// Evaluate `comp` over `inputs` (one vector per external channel).
+pub fn eval(comp: &Composition, inputs: &[Vec<f32>]) -> Result<Value> {
+    if inputs.len() < comp.inputs as usize {
+        return Err(Error::Pattern(format!(
+            "composition reads {} channels, got {}",
+            comp.inputs,
+            inputs.len()
+        )));
+    }
+    for (k, v) in inputs.iter().enumerate().take(comp.inputs as usize) {
+        if v.len() != comp.n {
+            return Err(Error::Pattern(format!(
+                "channel {k}: expected {} elements, got {}",
+                comp.n,
+                v.len()
+            )));
+        }
+    }
+    match eval_expr(&comp.expr, inputs, comp.n)? {
+        EV::Vec(v) => Ok(Value::Vector(v)),
+        EV::Scalar(s) => Ok(Value::Scalar(s)),
+    }
+}
+
+enum EV {
+    Vec(Vec<f32>),
+    Scalar(f32),
+}
+
+fn unary(op: OperatorKind, v: &mut [f32]) {
+    let mut state = 0.0;
+    for x in v.iter_mut() {
+        *x = op.apply(*x, 0.0, &mut state);
+    }
+}
+
+fn eval_expr(e: &Expr, inputs: &[Vec<f32>], n: usize) -> Result<EV> {
+    Ok(match e {
+        Expr::Input(c) => EV::Vec(inputs[*c as usize].clone()),
+        Expr::Scalar(v) => EV::Vec(vec![*v; n]),
+        Expr::Map { op, x } => {
+            let EV::Vec(mut v) = eval_expr(x, inputs, n)? else {
+                return Err(Error::Pattern("map over scalar".into()));
+            };
+            unary(*op, &mut v);
+            EV::Vec(v)
+        }
+        Expr::Zip { op, x, y } => {
+            let EV::Vec(a) = eval_expr(x, inputs, n)? else {
+                return Err(Error::Pattern("zip over scalar".into()));
+            };
+            let EV::Vec(b) = eval_expr(y, inputs, n)? else {
+                return Err(Error::Pattern("zip over scalar".into()));
+            };
+            let mut state = 0.0;
+            EV::Vec(
+                a.iter()
+                    .zip(&b)
+                    .map(|(&p, &q)| op.apply(p, q, &mut state))
+                    .collect(),
+            )
+        }
+        Expr::Reduce { x } => {
+            let EV::Vec(v) = eval_expr(x, inputs, n)? else {
+                return Err(Error::Pattern("reduce over scalar".into()));
+            };
+            EV::Scalar(v.iter().sum())
+        }
+        Expr::FilterGt { t, x } => {
+            let EV::Vec(v) = eval_expr(x, inputs, n)? else {
+                return Err(Error::Pattern("filter over scalar".into()));
+            };
+            EV::Vec(v.into_iter().map(|x| if x > *t { x } else { 0.0 }).collect())
+        }
+        Expr::Branch { t, then_op, else_op, x } => {
+            let EV::Vec(v) = eval_expr(x, inputs, n)? else {
+                return Err(Error::Pattern("branch over scalar".into()));
+            };
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            EV::Vec(
+                v.into_iter()
+                    .map(|x| {
+                        if x > *t {
+                            then_op.apply(x, 0.0, &mut s1)
+                        } else {
+                            else_op.apply(x, 0.0, &mut s2)
+                        }
+                    })
+                    .collect(),
+            )
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32 / 8.0 - 4.0).collect()
+    }
+
+    #[test]
+    fn vmul_reduce_matches_dot() {
+        let n = 64;
+        let a = ramp(n);
+        let b: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got = eval(&Composition::vmul_reduce(n), &[a, b]).unwrap();
+        assert_eq!(got.as_scalar(), Some(want));
+    }
+
+    #[test]
+    fn axpy_matches_formula() {
+        let n = 32;
+        let x = ramp(n);
+        let y: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let got = eval(&Composition::axpy(2.0, n), &[x.clone(), y.clone()]).unwrap();
+        let v = got.as_vector().unwrap();
+        for i in 0..n {
+            assert_eq!(v[i], 2.0 * x[i] + y[i]);
+        }
+    }
+
+    #[test]
+    fn filter_reduce_sums_survivors() {
+        let n = 16;
+        let x = ramp(n);
+        let want: f32 = x.iter().filter(|&&v| v > 0.0).sum();
+        let got = eval(&Composition::filter_reduce(0.0, n), &[x]).unwrap();
+        assert_eq!(got.as_scalar(), Some(want));
+    }
+
+    #[test]
+    fn branch_selects_per_element() {
+        let n = 16;
+        let x = ramp(n);
+        let got = eval(
+            &Composition::branch(0.0, OperatorKind::Square, OperatorKind::Neg, n),
+            &[x.clone()],
+        )
+        .unwrap();
+        let v = got.as_vector().unwrap();
+        for i in 0..n {
+            let want = if x[i] > 0.0 { x[i] * x[i] } else { -x[i] };
+            assert_eq!(v[i], want);
+        }
+    }
+
+    #[test]
+    fn wrong_channel_length_rejected() {
+        let c = Composition::vmul_reduce(64);
+        assert!(eval(&c, &[vec![0.0; 64], vec![0.0; 32]]).is_err());
+    }
+
+    #[test]
+    fn missing_channel_rejected() {
+        let c = Composition::vmul_reduce(64);
+        assert!(eval(&c, &[vec![0.0; 64]]).is_err());
+    }
+}

@@ -1,0 +1,382 @@
+//! The execution engine: one compiled accelerator, five evaluation targets.
+//!
+//! For the **dynamic overlay** the engine is fully mechanistic: download
+//! bitstreams (PR manager), run the controller program on the fabric
+//! simulator (semantic values + measured cycles). For the other Fig. 3
+//! targets the values come from the same semantics (scalar CPU evaluation
+//! or PJRT artifacts) and the time from the analytic models in
+//! [`crate::timing`] — the static overlay costs store-and-forward hops, the
+//! HLS module a fused II≈1.4 pipeline, the ARM a scalar loop at 660 MHz.
+
+pub mod cpu;
+
+pub use cpu::Value;
+
+
+use crate::bitstream::BitstreamLibrary;
+use crate::config::OverlayConfig;
+use crate::error::{Error, Result};
+use crate::jit::CompiledAccelerator;
+use crate::overlay::{Controller, ExecStats, ExternalIo, Fabric};
+use crate::place::StaticScenario;
+use crate::reconfig::{PrManager, ReconfigStats};
+use crate::timing::{arm::ArmModel, hls::HlsModel, overlay as otiming, Target, TimingBreakdown};
+
+/// Everything one run produces.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub target: Target,
+    pub output: Value,
+    pub timing: TimingBreakdown,
+    /// PR download cost (dynamic overlay only; the Fig. 3 "only penalty").
+    pub reconfig: Option<ReconfigStats>,
+    /// Raw interpreter stats (overlay targets only).
+    pub stats: Option<ExecStats>,
+}
+
+impl RunResult {
+    /// Total time including amortizable reconfiguration.
+    pub fn total_with_reconfig(&self) -> f64 {
+        self.timing.total() + self.reconfig.map_or(0.0, |r| r.seconds)
+    }
+}
+
+/// The engine: owns the fabric + PR manager, borrows library and config.
+#[derive(Debug)]
+pub struct Engine {
+    pub fabric: Fabric,
+    pub lib: BitstreamLibrary,
+    pub pr: PrManager,
+    pub controller: Controller,
+    pub arm: ArmModel,
+    pub hls: HlsModel,
+}
+
+impl Engine {
+    pub fn new(cfg: OverlayConfig) -> Result<Engine> {
+        let lib = BitstreamLibrary::standard(&cfg);
+        Ok(Engine {
+            fabric: Fabric::new(cfg)?,
+            lib,
+            pr: PrManager::default(),
+            controller: Controller::default(),
+            arm: ArmModel::default(),
+            hls: HlsModel::default(),
+        })
+    }
+
+    /// Run `acc` on `target` with the user's input channels.
+    pub fn run(
+        &mut self,
+        acc: &CompiledAccelerator,
+        inputs: &[Vec<f32>],
+        target: Target,
+    ) -> Result<RunResult> {
+        match target {
+            Target::DynamicOverlay => self.run_dynamic(acc, inputs),
+            Target::StaticOverlay(s) => self.run_static(acc, inputs, s),
+            Target::ArmSoftware => self.run_arm(acc, inputs),
+            Target::HlsCustom => self.run_hls(acc, inputs),
+        }
+    }
+
+    /// Assemble + execute on the dynamic overlay (the paper's system).
+    ///
+    /// Values and event counts come from the controller interpreter; the
+    /// reported *time* comes from the pipelined analytic model. The
+    /// interpreter executes chunk-serially (stage i+1 runs after stage i),
+    /// but the hardware overlaps stages — contiguous tiles stream
+    /// element-by-element — so the analytic `pipeline_time` (fill = Σ stage
+    /// latencies, steady state = one element per cycle) is the faithful
+    /// price. `stats` carries the raw interpreter cycle counts for anyone
+    /// who wants the unpipelined view.
+    fn run_dynamic(
+        &mut self,
+        acc: &CompiledAccelerator,
+        inputs: &[Vec<f32>],
+    ) -> Result<RunResult> {
+        let reconfig = self.pr.apply(&mut self.fabric, &self.lib, &acc.placement)?;
+        self.fabric.reset_data();
+        self.fabric.reset_switches(); // stale routes must not leak between accelerators
+
+        // Borrow user channels directly; only the (1-word) broadcast-scalar
+        // channels are materialized (perf §Perf-2: no operand copies).
+        self.validate_inputs(acc, inputs)?;
+        let scalar_bufs: Vec<Vec<f32>> =
+            acc.scalar_channels.iter().map(|&s| vec![s]).collect();
+        let mut io = ExternalIo::from_slices(
+            inputs
+                .iter()
+                .map(|v| v.as_slice())
+                .chain(scalar_bufs.iter().map(|v| v.as_slice()))
+                .collect(),
+        );
+        let stats = self
+            .controller
+            .run(&mut self.fabric, &acc.program, &mut io)?;
+
+        let timing = otiming::pipeline_time(
+            &self.fabric.cfg,
+            &acc.composition.ops(),
+            acc.composition.n,
+            acc.total_hops(),
+            acc.program.len(),
+            acc.composition.inputs as usize,
+            otiming::ForwardingMode::Pipelined,
+        );
+        let output = self.take_output(acc, io)?;
+        Ok(RunResult {
+            target: Target::DynamicOverlay,
+            output,
+            timing,
+            reconfig: Some(reconfig),
+            stats: Some(stats),
+        })
+    }
+
+    /// Static overlay: same semantics, fixed placement with `scenario`'s
+    /// pass-through count, store-and-forward forwarding.
+    fn run_static(
+        &mut self,
+        acc: &CompiledAccelerator,
+        inputs: &[Vec<f32>],
+        scenario: StaticScenario,
+    ) -> Result<RunResult> {
+        // Values: execute the same program on the simulator (the dataflow
+        // semantics of the static overlay are identical; only timing and
+        // placement freedom differ).
+        let mut run = self.run_dynamic(acc, inputs)?;
+        let ops = acc.composition.ops();
+        let timing = otiming::pipeline_time(
+            &self.fabric.cfg,
+            &ops,
+            acc.composition.n,
+            scenario.pass_throughs() + acc.total_hops(),
+            acc.program.len(),
+            acc.composition.inputs as usize,
+            otiming::ForwardingMode::StoreAndForward,
+        );
+        run.target = Target::StaticOverlay(scenario);
+        run.timing = timing;
+        // the static overlay is synthesized once: no PR at run time,
+        // but also no run-time flexibility (the paper's trade-off).
+        run.reconfig = None;
+        Ok(run)
+    }
+
+    fn run_arm(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<RunResult> {
+        let output = cpu::eval(&acc.composition, inputs)?;
+        let stages = acc.stages.len();
+        let timing = self
+            .arm
+            .pattern_time(&self.fabric.cfg.clocks, stages, acc.composition.n);
+        Ok(RunResult { target: Target::ArmSoftware, output, timing, reconfig: None, stats: None })
+    }
+
+    fn run_hls(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<RunResult> {
+        let output = cpu::eval(&acc.composition, inputs)?;
+        let timing = self.hls.pattern_time(
+            &self.fabric.cfg,
+            acc.composition.inputs as usize,
+            acc.composition.n,
+        );
+        Ok(RunResult { target: Target::HlsCustom, output, timing, reconfig: None, stats: None })
+    }
+
+    /// Validate user channel count/lengths against the composition.
+    fn validate_inputs(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<()> {
+        let want = acc.composition.inputs as usize;
+        if inputs.len() != want {
+            return Err(Error::Pattern(format!(
+                "composition reads {want} channels, got {}",
+                inputs.len()
+            )));
+        }
+        for (k, v) in inputs.iter().enumerate() {
+            if v.len() != acc.composition.n {
+                return Err(Error::Pattern(format!(
+                    "channel {k}: expected {} elements, got {}",
+                    acc.composition.n,
+                    v.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn take_output(&self, acc: &CompiledAccelerator, io: ExternalIo) -> Result<Value> {
+        let out = io
+            .outputs
+            .first()
+            .cloned()
+            .ok_or_else(|| Error::Runtime("accelerator produced no output".into()))?;
+        Ok(if acc.composition.scalar_result() {
+            Value::Scalar(*out.first().ok_or_else(|| {
+                Error::Runtime("empty scalar output channel".into())
+            })?)
+        } else {
+            Value::Vector(out)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::OperatorKind;
+    use crate::jit::Jit;
+    use crate::patterns::Composition;
+
+    fn engine() -> Engine {
+        Engine::new(OverlayConfig::default()).unwrap()
+    }
+
+    fn compile(e: &Engine, comp: &Composition) -> CompiledAccelerator {
+        Jit.compile(&e.fabric, &e.lib, comp).unwrap()
+    }
+
+    fn ramp(n: usize, seed: u32) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 / 250.0 - 2.0)
+            .collect()
+    }
+
+    #[test]
+    fn dynamic_overlay_matches_cpu_reference_vmul_reduce() {
+        let mut e = engine();
+        let n = 4096; // the paper's 16 KB
+        let comp = Composition::vmul_reduce(n);
+        let acc = compile(&e, &comp);
+        let a = ramp(n, 1);
+        let b = ramp(n, 2);
+        let dyn_ = e.run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay).unwrap();
+        let arm = e.run(&acc, &[a, b], Target::ArmSoftware).unwrap();
+        let (d, r) = (dyn_.output.as_scalar().unwrap(), arm.output.as_scalar().unwrap());
+        assert!((d - r).abs() <= 1e-2_f32.max(r.abs() * 1e-4), "{d} vs {r}");
+        assert!(dyn_.reconfig.unwrap().downloads > 0);
+    }
+
+    #[test]
+    fn chunked_execution_covers_large_vectors() {
+        let mut e = engine();
+        let n = 8192; // 8 chunks of 1024
+        let comp = Composition::vmul_reduce(n);
+        let acc = compile(&e, &comp);
+        let a = vec![0.5f32; n];
+        let b = vec![2.0f32; n];
+        let out = e.run(&acc, &[a, b], Target::DynamicOverlay).unwrap();
+        assert_eq!(out.output.as_scalar(), Some(n as f32));
+    }
+
+    #[test]
+    fn map_pipeline_produces_vector() {
+        let mut e = engine();
+        let n = 2048;
+        let comp = Composition::chain(&[OperatorKind::Abs, OperatorKind::Square], n).unwrap();
+        let acc = compile(&e, &comp);
+        let x = ramp(n, 3);
+        let run = e.run(&acc, &[x.clone()], Target::DynamicOverlay).unwrap();
+        let v = run.output.as_vector().unwrap();
+        assert_eq!(v.len(), n);
+        for i in 0..n {
+            assert!((v[i] - x[i] * x[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn filter_reduce_on_overlay() {
+        let mut e = engine();
+        let n = 1024;
+        let comp = Composition::filter_reduce(0.5, n);
+        let acc = compile(&e, &comp);
+        let x = ramp(n, 7);
+        let want: f32 = x.iter().filter(|&&v| v > 0.5).sum();
+        let run = e.run(&acc, &[x], Target::DynamicOverlay).unwrap();
+        let got = run.output.as_scalar().unwrap();
+        assert!((got - want).abs() < want.abs().max(1.0) * 1e-4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn branch_diamond_on_overlay() {
+        let mut e = engine();
+        let n = 512;
+        let comp = Composition::branch(0.0, OperatorKind::Relu, OperatorKind::Neg, n);
+        let acc = compile(&e, &comp);
+        let x = ramp(n, 11);
+        let run = e.run(&acc, &[x.clone()], Target::DynamicOverlay).unwrap();
+        let v = run.output.as_vector().unwrap();
+        for i in 0..n {
+            let want = if x[i] > 0.0 { x[i].max(0.0) } else { -x[i] };
+            assert!((v[i] - want).abs() < 1e-5, "i={i}: {} vs {want}", v[i]);
+        }
+    }
+
+    #[test]
+    fn axpy_on_overlay() {
+        let mut e = engine();
+        let n = 1024;
+        let comp = Composition::axpy(3.0, n);
+        let acc = compile(&e, &comp);
+        let x = ramp(n, 13);
+        let y = ramp(n, 17);
+        let run = e.run(&acc, &[x.clone(), y.clone()], Target::DynamicOverlay).unwrap();
+        let v = run.output.as_vector().unwrap();
+        for i in 0..n {
+            assert!((v[i] - (3.0 * x[i] + y[i])).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn fig3_ordering_dynamic_beats_static_monotonically() {
+        let mut e = engine();
+        let n = 4096;
+        let comp = Composition::vmul_reduce(n);
+        let acc = compile(&e, &comp);
+        let a = ramp(n, 1);
+        let b = ramp(n, 2);
+
+        let t_dyn = e
+            .run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay)
+            .unwrap()
+            .timing
+            .total();
+        let mut statics = Vec::new();
+        for s in StaticScenario::ALL {
+            let t = e
+                .run(&acc, &[a.clone(), b.clone()], Target::StaticOverlay(s))
+                .unwrap()
+                .timing
+                .total();
+            statics.push(t);
+        }
+        let t_arm = e.run(&acc, &[a.clone(), b.clone()], Target::ArmSoftware).unwrap().timing.total();
+
+        // dynamic ≤ static-s1 < static-s2 < static-s3 (pass-through penalty)
+        assert!(t_dyn <= statics[0] * 1.05, "dyn {t_dyn} vs s1 {}", statics[0]);
+        assert!(statics[0] < statics[1] && statics[1] < statics[2]);
+        // ARM slowest (the paper's software reference)
+        assert!(t_arm > statics[2], "arm {t_arm} vs s3 {}", statics[2]);
+    }
+
+    #[test]
+    fn second_run_amortizes_reconfig() {
+        let mut e = engine();
+        let n = 1024;
+        let comp = Composition::vmul_reduce(n);
+        let acc = compile(&e, &comp);
+        let a = vec![1.0f32; n];
+        let b = vec![1.0f32; n];
+        let first = e.run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay).unwrap();
+        let second = e.run(&acc, &[a, b], Target::DynamicOverlay).unwrap();
+        assert!(first.reconfig.unwrap().seconds > 0.0);
+        assert_eq!(second.reconfig.unwrap().seconds, 0.0); // residency cache
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let mut e = engine();
+        let comp = Composition::vmul_reduce(64);
+        let acc = compile(&e, &comp);
+        assert!(e.run(&acc, &[vec![0.0; 64]], Target::DynamicOverlay).is_err());
+    }
+}

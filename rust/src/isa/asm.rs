@@ -1,0 +1,148 @@
+//! Two-way text assembler for controller programs.
+//!
+//! Format, one instruction per line:
+//!
+//! ```text
+//!   <mnemonic> t<tile> [r<a>] [r<b>] [#<imm>]   ; comment
+//! ```
+//!
+//! e.g. `ldi t0 r1 #4096`, `vec.acc t4 r1`, `bypass.we t1`. Operands may be
+//! omitted when zero. `;` starts a comment; blank lines are ignored. Used by
+//! the CLI `inspect` subcommand and by tests to write programs legibly.
+
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use super::{Instr, Opcode};
+use crate::error::{Error, Result};
+
+/// Render one instruction.
+pub fn format_instr(i: &Instr) -> String {
+    let mut s = format!("{} t{}", i.op.mnemonic(), i.tile);
+    if i.a != 0 || i.b != 0 {
+        s.push_str(&format!(" r{}", i.a));
+    }
+    if i.b != 0 {
+        s.push_str(&format!(" r{}", i.b));
+    }
+    if i.imm != 0 {
+        s.push_str(&format!(" #{}", i.imm));
+    }
+    s
+}
+
+/// Render a whole program.
+pub fn format_program(instrs: &[Instr]) -> String {
+    let mut out = String::new();
+    for (pc, i) in instrs.iter().enumerate() {
+        out.push_str(&format!("{pc:4}:  {}\n", format_instr(i)));
+    }
+    out
+}
+
+fn mnemonic_table() -> &'static HashMap<&'static str, Opcode> {
+    static TABLE: OnceLock<HashMap<&'static str, Opcode>> = OnceLock::new();
+    TABLE.get_or_init(|| Opcode::all().map(|o| (o.mnemonic(), o)).collect())
+}
+
+/// Parse one line (without comments) into an instruction.
+pub fn parse_instr(line: &str) -> Result<Instr> {
+    let mut parts = line.split_whitespace();
+    let mn = parts
+        .next()
+        .ok_or_else(|| Error::Program("empty instruction".into()))?;
+    let op = *mnemonic_table()
+        .get(mn)
+        .ok_or_else(|| Error::Program(format!("unknown mnemonic `{mn}`")))?;
+    let mut instr = Instr::op(op, 0);
+    let mut regs_seen = 0u8;
+    for tok in parts {
+        if let Some(t) = tok.strip_prefix('t') {
+            instr.tile = t
+                .parse()
+                .map_err(|_| Error::Program(format!("bad tile `{tok}`")))?;
+        } else if let Some(r) = tok.strip_prefix('r') {
+            let v: u8 = r
+                .parse()
+                .map_err(|_| Error::Program(format!("bad register `{tok}`")))?;
+            match regs_seen {
+                0 => instr.a = v,
+                1 => instr.b = v,
+                _ => return Err(Error::Program(format!("too many registers at `{tok}`"))),
+            }
+            regs_seen += 1;
+        } else if let Some(m) = tok.strip_prefix('#') {
+            instr.imm = m
+                .parse()
+                .map_err(|_| Error::Program(format!("bad immediate `{tok}`")))?;
+        } else {
+            return Err(Error::Program(format!("unrecognized token `{tok}`")));
+        }
+    }
+    Ok(instr)
+}
+
+/// Parse a whole program text (strips comments / pc prefixes / blank lines).
+pub fn parse_program(text: &str) -> Result<Vec<Instr>> {
+    let mut out = Vec::new();
+    for raw in text.lines() {
+        let line = raw.split(';').next().unwrap_or("");
+        // tolerate the `  12:  ` pc prefix emitted by format_program
+        let line = match line.split_once(':') {
+            Some((pc, rest)) if pc.trim().chars().all(|c| c.is_ascii_digit()) => rest,
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(parse_instr(line)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Opcode;
+
+    #[test]
+    fn format_parse_roundtrip_every_opcode() {
+        for op in Opcode::all() {
+            let i = Instr { op, tile: 3, a: 2, b: 1, imm: -7 };
+            let text = format_instr(&i);
+            assert_eq!(parse_instr(&text).unwrap(), i, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_tolerates_comments_and_pc() {
+        let text = "  0:  ldi t0 r1 #4096 ; vector length\n\n  1:  halt t0\n";
+        let prog = parse_program(text).unwrap();
+        assert_eq!(prog.len(), 2);
+        assert_eq!(prog[0], Instr::ldi(0, 1, 4096));
+        assert_eq!(prog[1].op, Opcode::Halt);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_mnemonic() {
+        assert!(parse_instr("frobnicate t0").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage_operand() {
+        assert!(parse_instr("ldi t0 q9").is_err());
+    }
+
+    #[test]
+    fn program_roundtrip() {
+        let prog = vec![
+            Instr::ldi(0, 1, 256),
+            Instr { op: Opcode::DmaIn, tile: 0, a: 1, b: 0, imm: 0 },
+            Instr { op: Opcode::VecAcc, tile: 4, a: 1, b: 2, imm: 0 },
+            Instr::halt(),
+        ];
+        let text = format_program(&prog);
+        assert_eq!(parse_program(&text).unwrap(), prog);
+    }
+}

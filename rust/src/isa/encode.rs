@@ -1,0 +1,139 @@
+//! Dense 32-bit binary encoding of controller instructions.
+//!
+//! Word layout (msb → lsb):
+//!
+//! ```text
+//!   [31:26] opcode   (6 bits, 0..42)
+//!   [25:20] tile     (6 bits, 0..64)
+//!   [19:15] a        (5 bits, register 0..32)
+//!   [14:10] b        (5 bits, register 0..32)
+//!   [ 9: 0] imm      (10 bits, two's-complement, -512..=511)
+//! ```
+//!
+//! This is what a tile's instruction BRAM holds; `instr_bram_words` in the
+//! config is denominated in these words.
+
+use super::{Instr, Opcode};
+use crate::error::{Error, Result};
+
+const IMM_MIN: i16 = -512;
+const IMM_MAX: i16 = 511;
+
+/// Encode one instruction to its 32-bit word.
+///
+/// Fails if any field is out of range for the layout.
+pub fn encode(i: &Instr) -> Result<u32> {
+    if i.tile >= 64 {
+        return Err(Error::Program(format!("tile {} out of range (<64)", i.tile)));
+    }
+    if i.a >= 32 || i.b >= 32 {
+        return Err(Error::Program(format!(
+            "register operand out of range (<32): a={} b={}",
+            i.a, i.b
+        )));
+    }
+    if i.imm < IMM_MIN || i.imm > IMM_MAX {
+        return Err(Error::Program(format!(
+            "immediate {} out of range ({IMM_MIN}..={IMM_MAX})",
+            i.imm
+        )));
+    }
+    let imm10 = (i.imm as u32) & 0x3ff;
+    Ok(((i.op as u32) << 26)
+        | ((i.tile as u32) << 20)
+        | ((i.a as u32) << 15)
+        | ((i.b as u32) << 10)
+        | imm10)
+}
+
+/// Decode one 32-bit word back into an instruction.
+pub fn decode(w: u32) -> Result<Instr> {
+    let opv = (w >> 26) as u8;
+    let op = Opcode::from_u8(opv)
+        .ok_or_else(|| Error::Program(format!("bad opcode {opv:#x} in word {w:#010x}")))?;
+    // sign-extend the 10-bit immediate
+    let raw = (w & 0x3ff) as i16;
+    let imm = if raw & 0x200 != 0 { raw | !0x3ff } else { raw };
+    Ok(Instr {
+        op,
+        tile: ((w >> 20) & 0x3f) as u8,
+        a: ((w >> 15) & 0x1f) as u8,
+        b: ((w >> 10) & 0x1f) as u8,
+        imm,
+    })
+}
+
+/// Encode a whole instruction sequence.
+pub fn encode_all(instrs: &[Instr]) -> Result<Vec<u32>> {
+    instrs.iter().map(encode).collect()
+}
+
+/// Decode a whole word sequence.
+pub fn decode_all(words: &[u32]) -> Result<Vec<Instr>> {
+    words.iter().copied().map(decode).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Opcode;
+
+    fn roundtrip(i: Instr) {
+        let w = encode(&i).unwrap();
+        assert_eq!(decode(w).unwrap(), i, "word {w:#010x}");
+    }
+
+    #[test]
+    fn roundtrip_every_opcode() {
+        for op in Opcode::all() {
+            roundtrip(Instr { op, tile: 5, a: 3, b: 7, imm: -3 });
+        }
+    }
+
+    #[test]
+    fn roundtrip_imm_extremes() {
+        for imm in [IMM_MIN, -1, 0, 1, IMM_MAX] {
+            roundtrip(Instr { op: Opcode::Jmp, tile: 0, a: 0, b: 0, imm });
+        }
+    }
+
+    #[test]
+    fn roundtrip_field_extremes() {
+        roundtrip(Instr { op: Opcode::Ldi, tile: 63, a: 31, b: 31, imm: 0 });
+    }
+
+    #[test]
+    fn rejects_out_of_range_tile() {
+        let i = Instr { op: Opcode::Halt, tile: 64, a: 0, b: 0, imm: 0 };
+        assert!(encode(&i).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_reg() {
+        let i = Instr { op: Opcode::Mov, tile: 0, a: 32, b: 0, imm: 0 };
+        assert!(encode(&i).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_imm() {
+        for imm in [IMM_MIN - 1, IMM_MAX + 1] {
+            let i = Instr { op: Opcode::Jmp, tile: 0, a: 0, b: 0, imm };
+            assert!(encode(&i).is_err());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_opcode_word() {
+        assert!(decode(0xffff_ffff).is_err());
+    }
+
+    #[test]
+    fn encode_all_decode_all_roundtrip() {
+        let prog: Vec<Instr> = Opcode::all()
+            .enumerate()
+            .map(|(k, op)| Instr { op, tile: (k % 9) as u8, a: 1, b: 2, imm: k as i16 - 21 })
+            .collect();
+        let words = encode_all(&prog).unwrap();
+        assert_eq!(decode_all(&words).unwrap(), prog);
+    }
+}

@@ -1,0 +1,386 @@
+//! The overlay controller's instruction set.
+//!
+//! The paper: *"The new controller currently interprets 42 different
+//! instructions (interconnect: 22 instructions, branching: 6 instructions,
+//! vector operations: 2 instructions, Memory & Register operations: 12
+//! instructions)."* This module defines exactly those 42 opcodes, grouped into
+//! the same four categories, with a dense 32-bit encoding ([`encode`]), a
+//! two-way text assembler ([`asm`]) and program container ([`program`]).
+//!
+//! Instruction model: the controller is centralized (one program counter,
+//! one flag register) but every instruction names a *target tile*; register
+//! and BRAM operands resolve against that tile's local state. This mirrors
+//! the paper's design where the controller writes each tile's instruction
+//! BRAM and sequences the fabric.
+
+pub mod asm;
+pub mod encode;
+pub mod program;
+
+pub use program::Program;
+
+
+/// Mesh port direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    N,
+    E,
+    S,
+    W,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::N, Dir::E, Dir::S, Dir::W];
+
+    /// The opposite port (data leaving `E` arrives on the neighbour's `W`).
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::N => Dir::S,
+            Dir::S => Dir::N,
+            Dir::E => Dir::W,
+            Dir::W => Dir::E,
+        }
+    }
+}
+
+/// Instruction category, with the paper's per-category opcode budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Interconnect configuration (22 opcodes).
+    Interconnect,
+    /// Branching (6 opcodes).
+    Branch,
+    /// Vector operations (2 opcodes).
+    Vector,
+    /// Memory & register operations (12 opcodes).
+    MemReg,
+}
+
+impl Category {
+    /// The paper's opcode budget for this category.
+    pub fn budget(self) -> usize {
+        match self {
+            Category::Interconnect => 22,
+            Category::Branch => 6,
+            Category::Vector => 2,
+            Category::MemReg => 12,
+        }
+    }
+}
+
+/// The 42 controller opcodes.
+///
+/// Discriminants are the binary opcode values (stable — artifacts embed
+/// them); the order groups the categories contiguously:
+/// `0..22` interconnect, `22..28` branch, `28..30` vector, `30..42` mem/reg.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    // ---- interconnect (22) ------------------------------------------------
+    /// Operator input port ⇐ North.
+    SetInN = 0,
+    SetInE = 1,
+    SetInS = 2,
+    SetInW = 3,
+    /// Operator output port ⇒ North.
+    SetOutN = 4,
+    SetOutE = 5,
+    SetOutS = 6,
+    SetOutW = 7,
+    /// Pass-through: forward N→S without consuming (branch bypass).
+    BypassNS = 8,
+    BypassSN = 9,
+    BypassEW = 10,
+    BypassWE = 11,
+    BypassNE = 12,
+    BypassEN = 13,
+    BypassNW = 14,
+    BypassWN = 15,
+    BypassSE = 16,
+    BypassES = 17,
+    BypassSW = 18,
+    BypassWS = 19,
+    /// Tap the resident PR operator into the configured stream.
+    ConnectPr = 20,
+    /// Detach the PR operator (tile becomes pure routing).
+    DisconnectPr = 21,
+
+    // ---- branching (6) -----------------------------------------------------
+    /// Branch if flags.eq (pc-relative imm).
+    Beq = 22,
+    Bne = 23,
+    /// Branch if flags.lt.
+    Blt = 24,
+    Bge = 25,
+    /// Unconditional jump (pc-relative imm).
+    Jmp = 26,
+    /// Speculative select: commit one of two speculated tile streams based
+    /// on the flag register — the dynamic overlay's if-then-else support.
+    SpecSel = 27,
+
+    // ---- vector operations (2) ---------------------------------------------
+    /// Stream `len = R[a]` elements through the tile's resident operator.
+    VecRun = 28,
+    /// As `VecRun`, folding the stream into the tile accumulator (reduce).
+    VecAcc = 29,
+
+    // ---- memory & register operations (12) ----------------------------------
+    /// R[a] ⇐ sign-extended imm.
+    Ldi = 30,
+    /// R[a] ⇐ R[b].
+    Mov = 31,
+    /// R[a] ⇐ dataBRAM[imm&1][ R[b] ].
+    Ld = 32,
+    /// dataBRAM[imm&1][ R[b] ] ⇐ R[a].
+    St = 33,
+    /// R[a] ⇐ R[a] + R[b].
+    AddR = 34,
+    /// R[a] ⇐ R[a] − R[b].
+    SubR = 35,
+    /// R[a] ⇐ R[a] + 1.
+    IncR = 36,
+    /// R[a] ⇐ R[a] − 1.
+    DecR = 37,
+    /// Compare R[a] ? R[b] → controller flags.
+    CmpR = 38,
+    /// DMA `len = R[a]` words from external channel `imm>>1` into
+    /// dataBRAM[imm&1] of the target tile.
+    DmaIn = 39,
+    /// DMA out of dataBRAM[imm&1] to external channel `imm>>1`.
+    DmaOut = 40,
+    /// Stop the controller.
+    Halt = 41,
+}
+
+impl Opcode {
+    /// Total number of opcodes — the paper's 42.
+    pub const COUNT: usize = 42;
+
+    /// All opcodes in discriminant order.
+    pub fn all() -> impl Iterator<Item = Opcode> {
+        (0..Self::COUNT as u8).map(|v| Opcode::from_u8(v).unwrap())
+    }
+
+    /// Decode a raw opcode byte.
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        if (v as usize) < Self::COUNT {
+            // SAFETY: repr(u8) with dense discriminants 0..42, checked above.
+            Some(unsafe { std::mem::transmute::<u8, Opcode>(v) })
+        } else {
+            None
+        }
+    }
+
+    /// The category this opcode belongs to.
+    pub fn category(self) -> Category {
+        match self as u8 {
+            0..=21 => Category::Interconnect,
+            22..=27 => Category::Branch,
+            28..=29 => Category::Vector,
+            _ => Category::MemReg,
+        }
+    }
+
+    /// Lower-case mnemonic used by the assembler/disassembler.
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            SetInN => "set.in.n",
+            SetInE => "set.in.e",
+            SetInS => "set.in.s",
+            SetInW => "set.in.w",
+            SetOutN => "set.out.n",
+            SetOutE => "set.out.e",
+            SetOutS => "set.out.s",
+            SetOutW => "set.out.w",
+            BypassNS => "bypass.ns",
+            BypassSN => "bypass.sn",
+            BypassEW => "bypass.ew",
+            BypassWE => "bypass.we",
+            BypassNE => "bypass.ne",
+            BypassEN => "bypass.en",
+            BypassNW => "bypass.nw",
+            BypassWN => "bypass.wn",
+            BypassSE => "bypass.se",
+            BypassES => "bypass.es",
+            BypassSW => "bypass.sw",
+            BypassWS => "bypass.ws",
+            ConnectPr => "pr.connect",
+            DisconnectPr => "pr.disconnect",
+            Beq => "beq",
+            Bne => "bne",
+            Blt => "blt",
+            Bge => "bge",
+            Jmp => "jmp",
+            SpecSel => "spec.sel",
+            VecRun => "vec.run",
+            VecAcc => "vec.acc",
+            Ldi => "ldi",
+            Mov => "mov",
+            Ld => "ld",
+            St => "st",
+            AddR => "add",
+            SubR => "sub",
+            IncR => "inc",
+            DecR => "dec",
+            CmpR => "cmp",
+            DmaIn => "dma.in",
+            DmaOut => "dma.out",
+            Halt => "halt",
+        }
+    }
+
+    /// `set.in.*` / `set.out.*` direction, if this is a port-set opcode.
+    pub fn port_dir(self) -> Option<(bool, Dir)> {
+        use Opcode::*;
+        Some(match self {
+            SetInN => (true, Dir::N),
+            SetInE => (true, Dir::E),
+            SetInS => (true, Dir::S),
+            SetInW => (true, Dir::W),
+            SetOutN => (false, Dir::N),
+            SetOutE => (false, Dir::E),
+            SetOutS => (false, Dir::S),
+            SetOutW => (false, Dir::W),
+            _ => return None,
+        })
+    }
+
+    /// `(from, to)` ports for a bypass opcode.
+    pub fn bypass_dirs(self) -> Option<(Dir, Dir)> {
+        use Opcode::*;
+        Some(match self {
+            BypassNS => (Dir::N, Dir::S),
+            BypassSN => (Dir::S, Dir::N),
+            BypassEW => (Dir::E, Dir::W),
+            BypassWE => (Dir::W, Dir::E),
+            BypassNE => (Dir::N, Dir::E),
+            BypassEN => (Dir::E, Dir::N),
+            BypassNW => (Dir::N, Dir::W),
+            BypassWN => (Dir::W, Dir::N),
+            BypassSE => (Dir::S, Dir::E),
+            BypassES => (Dir::E, Dir::S),
+            BypassSW => (Dir::S, Dir::W),
+            BypassWS => (Dir::W, Dir::S),
+            _ => return None,
+        })
+    }
+
+    /// Bypass opcode for a `(from, to)` port pair, if one exists (from≠to).
+    pub fn bypass_for(from: Dir, to: Dir) -> Option<Opcode> {
+        Opcode::all().find(|o| o.bypass_dirs() == Some((from, to)))
+    }
+}
+
+/// One decoded controller instruction.
+///
+/// Fields not used by an opcode must be zero (enforced by
+/// [`program::Program::validate`], preserved by the codec).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Instr {
+    pub op: Opcode,
+    /// Target tile (row-major index), `< 64`.
+    pub tile: u8,
+    /// First register operand, `< 32`.
+    pub a: u8,
+    /// Second register operand, `< 32`.
+    pub b: u8,
+    /// Signed immediate, `-512..=511` (branch offsets, BRAM selects, ...).
+    pub imm: i16,
+}
+
+impl Instr {
+    /// A fully-zero-operand instruction for `op` on `tile`.
+    pub fn op(op: Opcode, tile: u8) -> Instr {
+        Instr { op, tile, a: 0, b: 0, imm: 0 }
+    }
+
+    /// Convenience constructors used throughout the JIT code generator.
+    pub fn ldi(tile: u8, r: u8, imm: i16) -> Instr {
+        Instr { op: Opcode::Ldi, tile, a: r, b: 0, imm }
+    }
+    /// `op` on `tile` with a single register operand `a`.
+    pub fn op_a(op: Opcode, tile: u8, a: u8) -> Instr {
+        Instr { op, tile, a, b: 0, imm: 0 }
+    }
+    pub fn halt() -> Instr {
+        Instr::op(Opcode::Halt, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn exactly_42_opcodes() {
+        assert_eq!(Opcode::all().count(), 42);
+        assert_eq!(Opcode::COUNT, 42);
+    }
+
+    #[test]
+    fn category_budgets_match_paper() {
+        // paper: interconnect 22, branching 6, vector 2, mem/reg 12.
+        let mut counts: HashMap<Category, usize> = HashMap::new();
+        for op in Opcode::all() {
+            *counts.entry(op.category()).or_default() += 1;
+        }
+        for cat in [
+            Category::Interconnect,
+            Category::Branch,
+            Category::Vector,
+            Category::MemReg,
+        ] {
+            assert_eq!(counts[&cat], cat.budget(), "{cat:?}");
+        }
+        assert_eq!(counts.values().sum::<usize>(), 42);
+    }
+
+    #[test]
+    fn from_u8_roundtrips_all() {
+        for op in Opcode::all() {
+            assert_eq!(Opcode::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(Opcode::from_u8(42), None);
+        assert_eq!(Opcode::from_u8(255), None);
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for op in Opcode::all() {
+            assert!(seen.insert(op.mnemonic()), "dup mnemonic {}", op.mnemonic());
+        }
+    }
+
+    #[test]
+    fn bypass_table_complete_and_consistent() {
+        // 12 ordered (from, to) pairs with from != to on 4 ports.
+        let mut n = 0;
+        for from in Dir::ALL {
+            for to in Dir::ALL {
+                if from == to {
+                    assert_eq!(Opcode::bypass_for(from, to), None);
+                } else {
+                    let op = Opcode::bypass_for(from, to).unwrap();
+                    assert_eq!(op.bypass_dirs(), Some((from, to)));
+                    n += 1;
+                }
+            }
+        }
+        assert_eq!(n, 12);
+    }
+
+    #[test]
+    fn dir_opposite_is_involution() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+    }
+
+    #[test]
+    fn port_dir_covers_exactly_eight() {
+        assert_eq!(Opcode::all().filter(|o| o.port_dir().is_some()).count(), 8);
+    }
+}

@@ -1,0 +1,234 @@
+//! Controller program container: validation, category statistics, and the
+//! per-tile instruction-BRAM footprint check.
+
+use std::collections::HashMap;
+
+
+use super::{encode, Category, Instr, Opcode};
+use crate::config::OverlayConfig;
+use crate::error::{Error, Result};
+
+/// A validated controller program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    instrs: Vec<Instr>,
+}
+
+/// Per-category instruction counts of one program (T-ISA reporting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CategoryMix {
+    pub interconnect: usize,
+    pub branch: usize,
+    pub vector: usize,
+    pub mem_reg: usize,
+}
+
+impl CategoryMix {
+    pub fn total(&self) -> usize {
+        self.interconnect + self.branch + self.vector + self.mem_reg
+    }
+}
+
+impl Program {
+    /// Wrap and validate an instruction sequence.
+    ///
+    /// Rules:
+    /// * non-empty, ends with `halt`;
+    /// * every instruction encodes (field ranges);
+    /// * every branch target lands inside the program;
+    /// * tile indices fit the given fabric.
+    pub fn new(instrs: Vec<Instr>, cfg: &OverlayConfig) -> Result<Program> {
+        if instrs.is_empty() {
+            return Err(Error::Program("empty program".into()));
+        }
+        if instrs.last().map(|i| i.op) != Some(Opcode::Halt) {
+            return Err(Error::Program("program must end with halt".into()));
+        }
+        let len = instrs.len() as i64;
+        for (pc, i) in instrs.iter().enumerate() {
+            encode::encode(i)?; // field range check
+            if (i.tile as usize) >= cfg.tiles() {
+                return Err(Error::Program(format!(
+                    "pc={pc}: tile {} outside {}x{} fabric",
+                    i.tile, cfg.rows, cfg.cols
+                )));
+            }
+            if matches!(
+                i.op,
+                Opcode::Beq | Opcode::Bne | Opcode::Blt | Opcode::Bge | Opcode::Jmp
+            ) {
+                let tgt = pc as i64 + 1 + i.imm as i64;
+                if tgt < 0 || tgt >= len {
+                    return Err(Error::Program(format!(
+                        "pc={pc}: branch target {tgt} outside program (len {len})"
+                    )));
+                }
+            }
+            if i.a as usize >= cfg.regs_per_tile || i.b as usize >= cfg.regs_per_tile {
+                return Err(Error::Program(format!(
+                    "pc={pc}: register operand exceeds {} regs/tile",
+                    cfg.regs_per_tile
+                )));
+            }
+        }
+        Ok(Program { instrs })
+    }
+
+    pub fn instrs(&self) -> &[Instr] {
+        &self.instrs
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Per-category counts — how the program spends the 42-opcode ISA.
+    pub fn category_mix(&self) -> CategoryMix {
+        let mut mix = CategoryMix::default();
+        for i in &self.instrs {
+            match i.op.category() {
+                Category::Interconnect => mix.interconnect += 1,
+                Category::Branch => mix.branch += 1,
+                Category::Vector => mix.vector += 1,
+                Category::MemReg => mix.mem_reg += 1,
+            }
+        }
+        mix
+    }
+
+    /// Number of distinct opcodes used (≤ 42).
+    pub fn distinct_opcodes(&self) -> usize {
+        self.instrs
+            .iter()
+            .map(|i| i.op as u8)
+            .collect::<std::collections::HashSet<_>>()
+            .len()
+    }
+
+    /// Instructions destined for each tile — must fit its instruction BRAM.
+    pub fn per_tile_footprint(&self) -> HashMap<u8, usize> {
+        let mut m: HashMap<u8, usize> = HashMap::new();
+        for i in &self.instrs {
+            *m.entry(i.tile).or_default() += 1;
+        }
+        m
+    }
+
+    /// Check the program fits the fabric's per-tile instruction BRAMs.
+    pub fn check_bram_fit(&self, cfg: &OverlayConfig) -> Result<()> {
+        for (tile, n) in self.per_tile_footprint() {
+            if n > cfg.instr_bram_words {
+                return Err(Error::Program(format!(
+                    "tile {tile}: {n} instructions exceed instruction BRAM of {} words",
+                    cfg.instr_bram_words
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Binary image (what the controller writes into instruction BRAMs).
+    pub fn to_words(&self) -> Vec<u32> {
+        encode::encode_all(&self.instrs).expect("validated at construction")
+    }
+
+    /// Reconstruct from a binary image (re-validates).
+    pub fn from_words(words: &[u32], cfg: &OverlayConfig) -> Result<Program> {
+        Program::new(encode::decode_all(words)?, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    fn cfg() -> OverlayConfig {
+        OverlayConfig::default()
+    }
+
+    fn valid_prog() -> Vec<Instr> {
+        vec![
+            Instr::ldi(0, 1, 256),
+            Instr { op: Opcode::DmaIn, tile: 0, a: 1, b: 0, imm: 0 },
+            Instr { op: Opcode::SetOutE, tile: 0, a: 0, b: 0, imm: 0 },
+            Instr { op: Opcode::VecRun, tile: 0, a: 1, b: 0, imm: 0 },
+            Instr::halt(),
+        ]
+    }
+
+    #[test]
+    fn accepts_valid_program() {
+        let p = Program::new(valid_prog(), &cfg()).unwrap();
+        assert_eq!(p.len(), 5);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Program::new(vec![], &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_halt() {
+        let mut p = valid_prog();
+        p.pop();
+        assert!(Program::new(p, &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_tile_outside_fabric() {
+        let mut p = valid_prog();
+        p[0].tile = 9; // 3x3 fabric has tiles 0..9
+        assert!(Program::new(p, &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_branch_out_of_range() {
+        let p = vec![
+            Instr { op: Opcode::Jmp, tile: 0, a: 0, b: 0, imm: 10 },
+            Instr::halt(),
+        ];
+        assert!(Program::new(p, &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_register_beyond_config() {
+        let mut c = cfg();
+        c.regs_per_tile = 4;
+        let p = vec![Instr::ldi(0, 7, 1), Instr::halt()];
+        assert!(Program::new(p, &c).is_err());
+    }
+
+    #[test]
+    fn category_mix_counts() {
+        let p = Program::new(valid_prog(), &cfg()).unwrap();
+        let mix = p.category_mix();
+        assert_eq!(mix.interconnect, 1);
+        assert_eq!(mix.vector, 1);
+        assert_eq!(mix.mem_reg, 3); // ldi, dma.in, halt
+        assert_eq!(mix.total(), p.len());
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let p = Program::new(valid_prog(), &cfg()).unwrap();
+        let q = Program::from_words(&p.to_words(), &cfg()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn bram_fit_enforced() {
+        let mut c = cfg();
+        c.instr_bram_words = 8;
+        let mut instrs: Vec<Instr> = (0..20).map(|_| Instr::op(Opcode::IncR, 0)).collect();
+        instrs.push(Instr::halt());
+        // Program itself is valid (halt tile 0 also counts toward tile 0)…
+        let p = Program::new(instrs, &c).unwrap();
+        // …but it cannot be loaded into an 8-word instruction BRAM.
+        assert!(p.check_bram_fit(&c).is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! Controller-program generation for a placed, routed stage pipeline.
+//!
+//! Emitted program shape (the paper's "series of interpreter instructions"):
+//!
+//! ```text
+//!   ; prologue — one-time fabric assembly
+//!   <route interconnect: set.out / bypass.* / set.in>
+//!   <pr.connect on every operator tile>
+//!   <per-tile constants: chunk size, loop bound>
+//!   ; chunked streaming loop (vectors larger than a tile BRAM stream
+//!   ; through in BRAM-sized chunks; reduce accumulators carry across)
+//! loop:
+//!   <dma.in per external/scalar source>
+//!   <vec.run / vec.acc per stage, slot-tagged deliveries>
+//!   <dma.out of vector results at the current offset>
+//!   <advance offsets; cmp; blt loop>
+//!   ; epilogue — drain scalar result, halt
+//! ```
+//!
+//! Register conventions (per tile): r0 ≡ 0, r1 = current chunk length,
+//! r2 = reduce result, r3 = DDR word offset, r4 = loop bound (stage-0 tile),
+//! r5 = chunk constant, r6 = scratch.
+
+use crate::config::OverlayConfig;
+use crate::error::{Error, Result};
+use crate::isa::{Instr, Opcode, Program};
+use crate::patterns::{Composition, Source, Stage};
+use crate::place::Placement;
+use crate::route::Route;
+
+const R_ZERO: u8 = 0;
+const R_LEN: u8 = 1;
+const R_ACC: u8 = 2;
+const R_OFF: u8 = 3;
+const R_BOUND: u8 = 4;
+const R_CHUNK: u8 = 5;
+const R_SCRATCH: u8 = 6;
+
+/// Generate the controller program.
+///
+/// Returns `(program, scalar_channel_values, chunk)`.
+pub fn generate(
+    cfg: &OverlayConfig,
+    comp: &Composition,
+    stages: &[Stage],
+    placement: &Placement,
+    routes: &[Route],
+) -> Result<(Program, Vec<f32>, usize)> {
+    let n = comp.n;
+    let chunk = n.min(cfg.bram_words());
+    if n % chunk != 0 {
+        return Err(Error::Pattern(format!(
+            "workload length {n} is not a multiple of the {chunk}-word tile BRAM chunk; \
+             pad the input (zero padding is sum-safe for reduce patterns)"
+        )));
+    }
+    if cfg.regs_per_tile <= R_SCRATCH as usize {
+        return Err(Error::Config(format!(
+            "codegen needs ≥{} registers per tile",
+            R_SCRATCH + 1
+        )));
+    }
+
+    // assign synthetic channels to broadcast scalars (after user inputs)
+    let mut scalar_channels: Vec<f32> = Vec::new();
+    let mut chan_of_scalar = |v: f32| -> u8 {
+        if let Some(k) = scalar_channels.iter().position(|&x| x.to_bits() == v.to_bits()) {
+            comp.inputs + k as u8
+        } else {
+            scalar_channels.push(v);
+            comp.inputs + (scalar_channels.len() - 1) as u8
+        }
+    };
+
+    let tile_of = |stage: usize| -> u8 { placement.assignments[stage].tile as u8 };
+    // consumer slot for each producing stage (None = result parked in BRAM)
+    let slot_for = |producer: usize| -> Option<u8> {
+        for s in stages {
+            for src in &s.sources {
+                if let Source::Stage { index, slot } = src {
+                    if *index == producer {
+                        return Some(*slot);
+                    }
+                }
+            }
+        }
+        None
+    };
+
+    let mut p: Vec<Instr> = Vec::with_capacity(64);
+
+    // ---- prologue: interconnect --------------------------------------------
+    let mesh = crate::overlay::Mesh::new(cfg.rows, cfg.cols);
+    for r in routes {
+        p.extend(r.interconnect_instrs(&mesh)?);
+    }
+    for (i, _) in stages.iter().enumerate() {
+        p.push(Instr::op(Opcode::ConnectPr, tile_of(i)));
+    }
+
+    // ---- prologue: constants ------------------------------------------------
+    let used_tiles: Vec<u8> = {
+        let mut v: Vec<u8> = (0..stages.len()).map(&tile_of).collect();
+        v.dedup();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for &t in &used_tiles {
+        emit_const(&mut p, t, R_CHUNK, chunk as i64);
+        p.push(Instr { op: Opcode::Mov, tile: t, a: R_LEN, b: R_CHUNK, imm: 0 });
+    }
+    let t0 = tile_of(0);
+    emit_const(&mut p, t0, R_BOUND, n as i64);
+
+    // ---- loop body ------------------------------------------------------------
+    let loop_start = p.len();
+    for (i, s) in stages.iter().enumerate() {
+        let t = tile_of(i);
+        // DMA non-stage sources into BRAM0/BRAM1 in source order
+        let mut bram_idx: i16 = 0;
+        for src in &s.sources {
+            match src {
+                Source::Stage { .. } => {} // arrives on-fabric
+                Source::External { chan } => {
+                    p.push(Instr {
+                        op: Opcode::DmaIn,
+                        tile: t,
+                        a: R_LEN,
+                        b: R_OFF,
+                        imm: ((*chan as i16) << 1) | (bram_idx & 1),
+                    });
+                    bram_idx += 1;
+                }
+                Source::Scalar { value_bits } => {
+                    let chan = chan_of_scalar(f32::from_bits(*value_bits));
+                    p.push(Instr::ldi(t, R_SCRATCH, 1));
+                    p.push(Instr {
+                        op: Opcode::DmaIn,
+                        tile: t,
+                        a: R_SCRATCH,
+                        b: R_ZERO,
+                        imm: ((chan as i16) << 1) | (bram_idx & 1),
+                    });
+                    bram_idx += 1;
+                }
+            }
+        }
+        // the vector op
+        if s.is_reduce {
+            p.push(Instr { op: Opcode::VecAcc, tile: t, a: R_LEN, b: R_ACC, imm: 0 });
+        } else {
+            let slot = slot_for(i).unwrap_or(0) as i16;
+            p.push(Instr { op: Opcode::VecRun, tile: t, a: R_LEN, b: 0, imm: slot << 1 });
+        }
+    }
+
+    // drain vector result of the final stage at the current offset
+    let last = stages.len() - 1;
+    let scalar_result = stages[last].is_reduce;
+    if !scalar_result {
+        p.push(Instr {
+            op: Opcode::DmaOut,
+            tile: tile_of(last),
+            a: R_LEN,
+            b: R_OFF,
+            imm: 0, // channel 0, BRAM0
+        });
+    }
+
+    // advance offsets on every used tile; loop control on stage-0's tile
+    for &t in &used_tiles {
+        p.push(Instr { op: Opcode::AddR, tile: t, a: R_OFF, b: R_CHUNK, imm: 0 });
+    }
+    p.push(Instr { op: Opcode::CmpR, tile: t0, a: R_OFF, b: R_BOUND, imm: 0 });
+    let here = p.len();
+    let delta = loop_start as i64 - here as i64 - 1;
+    if delta < -512 {
+        return Err(Error::Program(format!(
+            "loop body too large for a 10-bit branch offset ({delta})"
+        )));
+    }
+    p.push(Instr { op: Opcode::Blt, tile: t0, a: 0, b: 0, imm: delta as i16 });
+
+    // ---- epilogue: drain the scalar (reduce) result ---------------------------
+    if scalar_result {
+        let t = tile_of(last);
+        p.push(Instr::ldi(t, R_SCRATCH, 1));
+        p.push(Instr {
+            op: Opcode::DmaOut,
+            tile: t,
+            a: R_SCRATCH,
+            b: R_ZERO,
+            imm: 0,
+        });
+    }
+    p.push(Instr::halt());
+
+    let program = Program::new(p, cfg)?;
+    Ok((program, scalar_channels, chunk))
+}
+
+/// Materialize an arbitrary non-negative constant into `reg` using only
+/// 10-bit immediates: binary decomposition with doubling (`ldi` + `add` +
+/// `inc`), O(log v) instructions.
+fn emit_const(p: &mut Vec<Instr>, tile: u8, reg: u8, v: i64) {
+    assert!(v >= 0, "constants are unsigned lengths");
+    if v <= 511 {
+        p.push(Instr::ldi(tile, reg, v as i16));
+        return;
+    }
+    emit_const(p, tile, reg, v / 2);
+    p.push(Instr { op: Opcode::AddR, tile, a: reg, b: reg, imm: 0 }); // reg *= 2
+    if v % 2 == 1 {
+        p.push(Instr::op_a(Opcode::IncR, tile, reg));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::BitstreamLibrary;
+    use crate::config::OverlayConfig;
+    use crate::jit::Jit;
+    use crate::overlay::Fabric;
+
+    fn compile(comp: &Composition) -> crate::jit::CompiledAccelerator {
+        let cfg = OverlayConfig::default();
+        let lib = BitstreamLibrary::standard(&cfg);
+        let f = Fabric::new(cfg).unwrap();
+        Jit.compile(&f, &lib, comp).unwrap()
+    }
+
+    #[test]
+    fn emit_const_exact_values() {
+        // verify by symbolic execution of the emitted sequence
+        for v in [0i64, 1, 511, 512, 1000, 1024, 4096, 65536, 262144, 1_000_000] {
+            let mut p = Vec::new();
+            emit_const(&mut p, 0, 5, v);
+            let mut reg = 0i64;
+            for i in &p {
+                match i.op {
+                    Opcode::Ldi => reg = i.imm as i64,
+                    Opcode::AddR => reg *= 2,
+                    Opcode::IncR => reg += 1,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert_eq!(reg, v, "emit_const({v})");
+            assert!(p.len() <= 2 * 64, "too long for {v}");
+        }
+    }
+
+    #[test]
+    fn vmul_reduce_program_structure() {
+        let acc = compile(&Composition::vmul_reduce(4096));
+        let mix = acc.program.category_mix();
+        // all four ISA categories are exercised
+        assert!(mix.interconnect >= 3, "{mix:?}"); // set.out + set.in + 2×pr.connect
+        assert!(mix.vector == 2, "{mix:?}");       // vec.run + vec.acc
+        assert!(mix.branch >= 1, "{mix:?}");       // chunk loop
+        assert!(mix.mem_reg >= 8, "{mix:?}");
+        assert_eq!(acc.chunk, 1024);
+    }
+
+    #[test]
+    fn small_workload_single_chunk_no_loop_iterations() {
+        let acc = compile(&Composition::vmul_reduce(256));
+        assert_eq!(acc.chunk, 256);
+    }
+
+    #[test]
+    fn non_multiple_length_rejected() {
+        let cfg = OverlayConfig::default();
+        let lib = BitstreamLibrary::standard(&cfg);
+        let f = Fabric::new(cfg).unwrap();
+        let comp = Composition::vmul_reduce(1500); // 1500 % 1024 != 0
+        assert!(Jit.compile(&f, &lib, &comp).is_err());
+    }
+
+    #[test]
+    fn scalar_channels_deduplicated() {
+        // axpy uses one scalar; filter_reduce one; branch one
+        let acc = compile(&Composition::axpy(3.5, 512));
+        assert_eq!(acc.scalar_channels, vec![3.5]);
+    }
+
+    #[test]
+    fn branch_program_has_three_producers_and_select() {
+        let acc = compile(&Composition::branch(
+            0.0,
+            crate::bitstream::OperatorKind::Relu,
+            crate::bitstream::OperatorKind::Neg,
+            256,
+        ));
+        let vec_instrs = acc
+            .program
+            .instrs()
+            .iter()
+            .filter(|i| i.op == Opcode::VecRun)
+            .count();
+        assert_eq!(vec_instrs, 4); // pred, then, else, select
+    }
+
+    #[test]
+    fn programs_fit_instruction_bram() {
+        for comp in [
+            Composition::vmul_reduce(262144),
+            Composition::filter_reduce(0.1, 65536),
+            Composition::map(crate::bitstream::OperatorKind::Sqrt, 4096),
+        ] {
+            let acc = compile(&comp);
+            acc.program.check_bram_fit(&OverlayConfig::default()).unwrap();
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! The JIT: pattern composition → placed, routed, executable accelerator.
+//!
+//! This is the paper's run-time flow: *"The source code, with symbolic
+//! links, is compiled into a series of interpreter instructions executed by
+//! the run time system on how to assemble custom bitstream versions of the
+//! programming patterns into the PR regions and set the programmable
+//! connections of the communication overlay."*
+//!
+//! [`Jit::compile`] performs, in order:
+//!  1. **linearize** the [`Composition`] into pipeline stages;
+//!  2. **select** a bitstream for each stage from the library;
+//!  3. **place** stages onto free class-compatible tiles (contiguous via
+//!     the dynamic placer; the branch diamond gets a hub placement);
+//!  4. **route** every on-fabric stream between stages;
+//!  5. **codegen** the controller program (interconnect setup, chunked DMA
+//!     loop, vector ops, result drain).
+//!
+//! The output [`CompiledAccelerator`] carries everything the execution
+//! engine and the reconfiguration manager need.
+
+pub mod codegen;
+
+
+use crate::bitstream::{BitstreamLibrary, OperatorKind, RegionClass};
+
+use crate::error::{Error, Result};
+use crate::isa::Program;
+use crate::overlay::Fabric;
+use crate::patterns::{Composition, Source, Stage};
+use crate::place::{Assignment, DynamicPlacer, Placement};
+use crate::route::{shortest_route, Route};
+
+/// A fully compiled accelerator, ready to download + run.
+#[derive(Debug, Clone)]
+pub struct CompiledAccelerator {
+    pub composition: Composition,
+    pub stages: Vec<Stage>,
+    pub placement: Placement,
+    pub routes: Vec<Route>,
+    pub program: Program,
+    /// Broadcast scalars, in the synthetic-channel order codegen assigned
+    /// (appended to the user's input channels at execution time).
+    pub scalar_channels: Vec<f32>,
+    /// Elements per chunk (bounded by the tile data-BRAM capacity).
+    pub chunk: usize,
+}
+
+impl CompiledAccelerator {
+    /// Total pass-through hops across all routes (0 for dynamic placements
+    /// of linear pipelines — the paper's contiguity invariant).
+    pub fn total_hops(&self) -> usize {
+        self.routes.iter().map(|r| r.hops()).sum()
+    }
+}
+
+/// The JIT compiler.
+#[derive(Debug, Clone, Default)]
+pub struct Jit;
+
+impl Jit {
+    /// Compile `comp` against the current fabric occupancy.
+    pub fn compile(
+        &self,
+        fabric: &Fabric,
+        lib: &BitstreamLibrary,
+        comp: &Composition,
+    ) -> Result<CompiledAccelerator> {
+        let stages = comp.stages();
+        if stages.is_empty() {
+            return Err(Error::Pattern("composition produced no stages".into()));
+        }
+        // bitstream selection feasibility (fail fast with a structured error)
+        for s in &stages {
+            lib.preferred_class(s.op)?;
+        }
+
+        let placement = place_stages(fabric, lib, &stages)?;
+        let routes = route_stages(fabric, &stages, &placement)?;
+        let (program, scalar_channels, chunk) =
+            codegen::generate(&fabric.cfg, comp, &stages, &placement, &routes)?;
+        program.check_bram_fit(&fabric.cfg)?;
+
+        Ok(CompiledAccelerator {
+            composition: comp.clone(),
+            stages,
+            placement,
+            routes,
+            program,
+            scalar_channels,
+            chunk,
+        })
+    }
+}
+
+/// Place stages: linear pipelines go through the dynamic placer; the branch
+/// diamond (a Select consuming three streams) gets a hub-and-spokes
+/// placement around a tile with three free neighbours.
+fn place_stages(
+    fabric: &Fabric,
+    lib: &BitstreamLibrary,
+    stages: &[Stage],
+) -> Result<Placement> {
+    let select_idx = stages.iter().position(|s| s.op == OperatorKind::Select);
+    match select_idx {
+        None => {
+            let ops: Vec<OperatorKind> = stages.iter().map(|s| s.op).collect();
+            DynamicPlacer.place(fabric, lib, &ops)
+        }
+        Some(sel) => place_diamond(fabric, lib, stages, sel),
+    }
+}
+
+fn place_diamond(
+    fabric: &Fabric,
+    lib: &BitstreamLibrary,
+    stages: &[Stage],
+    sel: usize,
+) -> Result<Placement> {
+    // producers feeding the select, in slot order
+    let producers: Vec<usize> = stages[sel]
+        .sources
+        .iter()
+        .map(|s| match s {
+            Source::Stage { index, .. } => Ok(*index),
+            _ => Err(Error::Pattern("select sources must be stages".into())),
+        })
+        .collect::<Result<_>>()?;
+
+    let free = |t: usize| fabric.tiles[t].resident.is_none();
+    let class_ok = |t: usize, op: OperatorKind| -> bool {
+        match lib.preferred_class(op) {
+            Ok(RegionClass::Large) => fabric.tiles[t].class == RegionClass::Large,
+            Ok(RegionClass::Small) => true,
+            Err(_) => false,
+        }
+    };
+
+    // hub: a free, select-compatible tile with enough free neighbours to
+    // host every producer (greedy matching, producers with large-region
+    // needs assigned first).
+    for hub in 0..fabric.tiles.len() {
+        if !free(hub) || !class_ok(hub, OperatorKind::Select) {
+            continue;
+        }
+        let mut neigh: Vec<usize> = crate::isa::Dir::ALL
+            .into_iter()
+            .filter_map(|d| fabric.mesh.neighbor(hub, d))
+            .filter(|&t| free(t))
+            .collect();
+        if neigh.len() < producers.len() {
+            continue;
+        }
+        // assign large-needing producers first
+        let mut order: Vec<usize> = producers.clone();
+        order.sort_by_key(|&p| {
+            std::cmp::Reverse(matches!(
+                lib.preferred_class(stages[p].op),
+                Ok(RegionClass::Large)
+            ))
+        });
+        let mut chosen: std::collections::HashMap<usize, usize> = Default::default();
+        let mut ok = true;
+        for p in order {
+            let pos = neigh.iter().position(|&t| class_ok(t, stages[p].op));
+            match pos {
+                Some(k) => {
+                    chosen.insert(p, neigh.remove(k));
+                }
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        // build assignments in stage order
+        let mut assignments = Vec::with_capacity(stages.len());
+        for (i, s) in stages.iter().enumerate() {
+            let tile = if i == sel {
+                hub
+            } else if let Some(&t) = chosen.get(&i) {
+                t
+            } else {
+                return Err(Error::Placement(
+                    "diamond placement only supports pred/then/else/select stages".into(),
+                ));
+            };
+            assignments.push(Assignment { op: s.op, tile, class: fabric.tiles[tile].class });
+        }
+        return Ok(Placement { assignments });
+    }
+    Err(Error::Placement(
+        "no hub tile with enough free class-compatible neighbours for the branch diamond".into(),
+    ))
+}
+
+/// Route every `Source::Stage` edge of the pipeline.
+fn route_stages(
+    fabric: &Fabric,
+    stages: &[Stage],
+    placement: &Placement,
+) -> Result<Vec<Route>> {
+    // tiles that consume (host operators) block pass-through routing
+    let mut blocked = vec![false; fabric.tiles.len()];
+    for a in &placement.assignments {
+        blocked[a.tile] = true;
+    }
+    // previously-occupied tiles block too
+    for (t, tile) in fabric.tiles.iter().enumerate() {
+        if tile.resident.is_some() {
+            blocked[t] = true;
+        }
+    }
+
+    let mut routes = Vec::new();
+    for (i, s) in stages.iter().enumerate() {
+        for src in &s.sources {
+            if let Source::Stage { index, .. } = src {
+                let from = placement.tile_of(*index).ok_or_else(|| {
+                    Error::Placement(format!("stage {index} missing from placement"))
+                })?;
+                let to = placement
+                    .tile_of(i)
+                    .ok_or_else(|| Error::Placement(format!("stage {i} missing")))?;
+                routes.push(shortest_route(&fabric.mesh, from, to, &blocked)?);
+            }
+        }
+    }
+    Ok(routes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverlayConfig;
+
+    fn setup() -> (Fabric, BitstreamLibrary) {
+        let cfg = OverlayConfig::default();
+        let lib = BitstreamLibrary::standard(&cfg);
+        (Fabric::new(cfg).unwrap(), lib)
+    }
+
+    #[test]
+    fn vmul_reduce_compiles_contiguous() {
+        let (f, lib) = setup();
+        let acc = Jit.compile(&f, &lib, &Composition::vmul_reduce(4096)).unwrap();
+        assert_eq!(acc.stages.len(), 2);
+        assert_eq!(acc.total_hops(), 0, "dynamic overlay must be contiguous");
+        assert!(acc.placement.is_injective());
+        assert!(acc.program.len() > 5);
+    }
+
+    #[test]
+    fn chain_compiles() {
+        let (f, lib) = setup();
+        let comp = Composition::chain(
+            &[OperatorKind::Abs, OperatorKind::Sqrt, OperatorKind::Log],
+            1024,
+        )
+        .unwrap();
+        let acc = Jit.compile(&f, &lib, &comp).unwrap();
+        assert_eq!(acc.stages.len(), 3);
+        // sqrt & log need the two large tiles; abs can sit anywhere —
+        // at most one skipped tile between stages.
+        assert!(acc.total_hops() <= 2, "hops: {}", acc.total_hops());
+    }
+
+    #[test]
+    fn branch_places_as_diamond() {
+        let (f, lib) = setup();
+        let comp = Composition::branch(0.0, OperatorKind::Relu, OperatorKind::Neg, 512);
+        let acc = Jit.compile(&f, &lib, &comp).unwrap();
+        assert_eq!(acc.stages.len(), 4);
+        // all three producers adjacent to the select hub
+        assert_eq!(acc.total_hops(), 0);
+        let sel_tile = acc.placement.assignments[3].tile;
+        for a in &acc.placement.assignments[..3] {
+            assert_eq!(f.mesh.manhattan(a.tile, sel_tile), 1);
+        }
+    }
+
+    #[test]
+    fn branch_with_large_arms_places() {
+        let (f, lib) = setup();
+        let comp = Composition::branch(0.5, OperatorKind::Sqrt, OperatorKind::Square, 256);
+        let acc = Jit.compile(&f, &lib, &comp).unwrap();
+        let sqrt_stage = acc
+            .placement
+            .assignments
+            .iter()
+            .find(|a| a.op == OperatorKind::Sqrt)
+            .unwrap();
+        assert_eq!(sqrt_stage.class, RegionClass::Large);
+    }
+
+    #[test]
+    fn occupied_fabric_reduces_capacity() {
+        let (mut f, lib) = setup();
+        // occupy 8 of 9 tiles
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        let bl = lib.get(OperatorKind::Add, RegionClass::Large).unwrap().clone();
+        for t in 0..8 {
+            let b = if f.cfg.is_large_tile(t) { &bl } else { &bs };
+            f.load_bitstream(t, b).unwrap();
+        }
+        let err = Jit.compile(&f, &lib, &Composition::vmul_reduce(64)).unwrap_err();
+        assert!(err.is_capacity());
+    }
+
+    #[test]
+    fn scalar_channels_surface_in_accelerator() {
+        let (f, lib) = setup();
+        let acc = Jit.compile(&f, &lib, &Composition::filter_reduce(0.75, 512)).unwrap();
+        assert_eq!(acc.scalar_channels, vec![0.75]);
+    }
+}

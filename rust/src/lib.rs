@@ -1,0 +1,54 @@
+//! # jit-overlay
+//!
+//! A full-system reproduction of **“A Dynamic Overlay Supporting Just-In-Time
+//! Assembly to Construct Customized Hardware Accelerators”** (Aklah, Ma,
+//! Andrews — 2016).
+//!
+//! The paper replaces the FPGA CAD path (synthesis, place & route) with
+//! run-time composition: pre-synthesized operator bitstreams are downloaded
+//! into partially-reconfigurable tiles embedded in a programmable mesh
+//! overlay, and a 42-instruction controller assembles them into custom
+//! accelerators *just in time*. This crate implements that system end to
+//! end:
+//!
+//! * [`isa`] — the 42-instruction controller ISA (22 interconnect, 6
+//!   branch, 2 vector, 12 mem/reg), with binary codec and assembler;
+//! * [`overlay`] — the cycle-approximate fabric simulator (tiles, BRAMs,
+//!   N-E-S-W interconnect, controller interpreter);
+//! * [`bitstream`] — the pre-synthesized operator library with the paper's
+//!   published large/small PR-region footprints;
+//! * [`place`] / [`route`] — dynamic contiguous placement vs. the static
+//!   scenarios of Fig. 2, and mesh stream routing;
+//! * [`reconfig`] — the PR download model (ICAP bandwidth, residency cache)
+//!   reproducing the ~1.25 ms overhead of Fig. 3;
+//! * [`patterns`] / [`jit`] — the programmer-facing parallel-pattern API
+//!   and the JIT compiler that turns compositions into controller programs;
+//! * [`timing`] — analytic models for the four evaluation targets (dynamic
+//!   overlay, static overlay, custom HLS, ARM software);
+//! * [`exec`] — the execution engine joining simulator timing with PJRT
+//!   numerics;
+//! * [`runtime`] — the PJRT/XLA artifact loader (AOT-compiled JAX/Pallas
+//!   kernels; Python never runs at request time);
+//! * [`coordinator`] — the run-time service: request queue, accelerator
+//!   cache, batching, metrics.
+
+pub mod benchkit;
+pub mod bitstream;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod exec;
+pub mod isa;
+pub mod jit;
+pub mod overlay;
+pub mod patterns;
+pub mod place;
+pub mod reconfig;
+pub mod report;
+pub mod route;
+pub mod runtime;
+pub mod timing;
+pub mod workload;
+
+pub use config::OverlayConfig;
+pub use error::{Error, Result};

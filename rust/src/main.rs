@@ -1,0 +1,376 @@
+//! `repro` — the JIT-overlay leader binary.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (see DESIGN.md
+//! §Experiment-index) plus operational utilities:
+//!
+//! ```text
+//!   repro fig2 [--n N]          reproduce Fig. 2 (static scenarios)
+//!   repro fig3 [--n N]          reproduce Fig. 3 (five targets + ARM)
+//!   repro sweep                 PR-overhead amortization sweep (T-PR)
+//!   repro run --pattern P ...   JIT + run one composition
+//!   repro verify [--n N]        three-way value agreement (overlay/CPU/PJRT)
+//!   repro isa                   print the 42-instruction opcode table
+//!   repro inspect --pattern P   show placement + disassembled program
+//!   repro serve --requests K    coordinator service demo (threaded loop)
+//! ```
+//!
+//! Arg parsing is hand-rolled (`--flag value` pairs) — the workspace builds
+//! offline without clap.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::coordinator::{spawn_service, Coordinator, Job, Request};
+use jit_overlay::exec::Engine;
+use jit_overlay::isa::{asm, Category, Opcode};
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::place::StaticScenario;
+use jit_overlay::report::{ms, speedup, Table};
+use jit_overlay::runtime::{default_artifacts_dir, Runtime};
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+/// Minimal `--key value` argument map.
+struct Args {
+    map: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut map = std::collections::HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            map.insert(key.to_string(), val.clone());
+        }
+        Ok(Args { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+fn parse_pattern(s: &str, n: usize) -> Result<Composition> {
+    let parse_op = |name: &str| -> Result<OperatorKind> {
+        OperatorKind::from_name(name).ok_or_else(|| anyhow!("unknown operator `{name}`"))
+    };
+    if s == "vmul-reduce" {
+        return Ok(Composition::vmul_reduce(n));
+    }
+    if let Some(op) = s.strip_prefix("map:") {
+        return Ok(Composition::map(parse_op(op)?, n));
+    }
+    if let Some(ops) = s.strip_prefix("chain:") {
+        let ops: Vec<OperatorKind> = ops.split(',').map(parse_op).collect::<Result<_>>()?;
+        return Ok(Composition::chain(&ops, n)?);
+    }
+    if let Some(t) = s.strip_prefix("filter-reduce:") {
+        return Ok(Composition::filter_reduce(t.parse()?, n));
+    }
+    if let Some(a) = s.strip_prefix("axpy:") {
+        return Ok(Composition::axpy(a.parse()?, n));
+    }
+    if let Some(rest) = s.strip_prefix("branch:") {
+        let parts: Vec<&str> = rest.split(',').collect();
+        if parts.len() != 3 {
+            bail!("branch needs <t>,<then>,<else>");
+        }
+        return Ok(Composition::branch(
+            parts[0].parse()?,
+            parse_op(parts[1])?,
+            parse_op(parts[2])?,
+            n,
+        ));
+    }
+    bail!("unknown pattern `{s}` (try vmul-reduce, map:sqrt, chain:abs,sqrt, filter-reduce:0.5, axpy:2.0, branch:0.0,sqrt,square)")
+}
+
+fn parse_target(s: &str) -> Result<Target> {
+    Ok(match s {
+        "dynamic" => Target::DynamicOverlay,
+        "static-s1" => Target::StaticOverlay(StaticScenario::S1),
+        "static-s2" => Target::StaticOverlay(StaticScenario::S2),
+        "static-s3" => Target::StaticOverlay(StaticScenario::S3),
+        "arm" => Target::ArmSoftware,
+        "hls" => Target::HlsCustom,
+        other => bail!("unknown target `{other}`"),
+    })
+}
+
+fn cmd_fig2(n: usize) -> Result<()> {
+    let mut engine = Engine::new(OverlayConfig::default())?;
+    let comp = Composition::vmul_reduce(n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
+    let a = workload::vector(n, 1, -2.0, 2.0);
+    let b = workload::vector(n, 2, -2.0, 2.0);
+    let mut t = Table::new(
+        "Fig. 2 — static-overlay scheduling scenarios (VMUL&Reduce)",
+        &["scenario", "pass-through tiles", "total (ms)", "hop cost (ms)"],
+    );
+    for s in StaticScenario::ALL {
+        let r = engine.run(&acc, &[a.clone(), b.clone()], Target::StaticOverlay(s))?;
+        t.row(&[
+            s.name().into(),
+            s.pass_throughs().to_string(),
+            ms(r.timing.total()),
+            ms(r.timing.hop_s),
+        ]);
+    }
+    let rd = engine.run(&acc, &[a, b], Target::DynamicOverlay)?;
+    t.row(&[
+        "dynamic (ref)".into(),
+        acc.total_hops().to_string(),
+        ms(rd.timing.total()),
+        ms(rd.timing.hop_s),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fig3(n: usize) -> Result<()> {
+    let mut engine = Engine::new(OverlayConfig::default())?;
+    let comp = Composition::vmul_reduce(n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
+    let a = workload::vector(n, 1, -2.0, 2.0);
+    let b = workload::vector(n, 2, -2.0, 2.0);
+
+    let mut table = Table::new(
+        &format!("Fig. 3 — VMUL&Reduce total execution time, {} KB", n * 4 / 1024),
+        &["target", "total (ms)", "transfer (ms)", "compute (ms)", "vs dynamic"],
+    );
+    let mut dyn_total = 0.0;
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for t in Target::ALL {
+        let r = engine.run(&acc, &[a.clone(), b.clone()], t)?;
+        let total = r.timing.total();
+        if t == Target::DynamicOverlay {
+            dyn_total = total;
+        }
+        rows.push((t.name(), total, r.timing.transfer_s));
+    }
+    for (name, total, tx) in rows {
+        table.row(&[name, ms(total), ms(tx), ms(total - tx), speedup(total, dyn_total)]);
+    }
+    print!("{}", table.render());
+    println!(
+        "PR overhead (startup, amortized): {:.3} ms",
+        OverlayConfig::default().full_reconfig_seconds() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    let mut engine = Engine::new(OverlayConfig::default())?;
+    let mut t = Table::new(
+        "T-PR — PR overhead amortization vs data size",
+        &["bytes/operand", "dynamic (ms)", "dynamic+PR (ms)", "static-s3 (ms)", "PR amortized?"],
+    );
+    for &bytes in &workload::SWEEP_SIZES {
+        let n = bytes / 4;
+        let comp = Composition::vmul_reduce(n);
+        let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
+        let a = workload::vector(n, 3, -1.0, 1.0);
+        let b = workload::vector(n, 4, -1.0, 1.0);
+        engine.fabric.reset_full(); // force fresh PR download
+        let dyn_run = engine.run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay)?;
+        let st3 = engine.run(&acc, &[a, b], Target::StaticOverlay(StaticScenario::S3))?;
+        let d = dyn_run.timing.total();
+        let dpr = dyn_run.total_with_reconfig();
+        t.row(&[
+            bytes.to_string(),
+            ms(d),
+            ms(dpr),
+            ms(st3.timing.total()),
+            (dpr < st3.timing.total()).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let n = args.usize("n", 4096)?;
+    let comp = parse_pattern(&args.str("pattern", "vmul-reduce"), n)?;
+    let target = parse_target(&args.str("target", "dynamic"))?;
+    let seed = args.u64("seed", 42)?;
+    let mut coord = Coordinator::new(OverlayConfig::default())?;
+    let inputs: Vec<Vec<f32>> = (0..comp.inputs)
+        .map(|k| workload::vector(n, seed + k as u64, -2.0, 2.0))
+        .collect();
+    let resp = coord.submit(&Request { comp, inputs, target })?;
+    match resp.run.output {
+        jit_overlay::exec::Value::Scalar(s) => println!("result: {s}"),
+        jit_overlay::exec::Value::Vector(ref v) => println!(
+            "result: vector[{}] = [{:.4}, {:.4}, ... , {:.4}]",
+            v.len(),
+            v[0],
+            v.get(1).copied().unwrap_or(0.0),
+            v[v.len() - 1]
+        ),
+    }
+    println!(
+        "time: {} ms ({}); jit: {:.3} ms; {}",
+        ms(resp.run.timing.total()),
+        resp.run.target.name(),
+        resp.jit_seconds * 1e3,
+        coord.metrics.summary()
+    );
+    Ok(())
+}
+
+fn cmd_verify(n: usize) -> Result<()> {
+    let mut engine = Engine::new(OverlayConfig::default())?;
+    let comp = Composition::vmul_reduce(n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
+    let (a, b) = (workload::vector(n, 9, -2.0, 2.0), workload::vector(n, 10, -2.0, 2.0));
+    let overlay = engine
+        .run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay)?
+        .output
+        .as_scalar()
+        .ok_or_else(|| anyhow!("no scalar"))?;
+    let cpu = jit_overlay::exec::cpu::eval(&comp, &[a.clone(), b.clone()])?
+        .as_scalar()
+        .ok_or_else(|| anyhow!("no scalar"))?;
+    println!("overlay interpreter : {overlay}");
+    println!("cpu reference       : {cpu}");
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        let rt = Runtime::new(&dir).context("loading artifacts")?;
+        let name = format!("vmul_reduce_n{n}");
+        match rt.execute_scalar(&name, &[a, b]) {
+            Ok(p) => {
+                println!("pjrt ({name:>18}): {p}");
+                let worst = (overlay - p).abs().max((cpu - p).abs());
+                println!("max abs deviation   : {worst:e}");
+                if worst > (p.abs() * 1e-4).max(1e-2) {
+                    bail!("three-way agreement FAILED");
+                }
+                println!("three-way agreement : OK");
+            }
+            Err(e) => println!("pjrt: skipped ({e})"),
+        }
+    } else {
+        println!("pjrt: skipped (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_isa() {
+    let mut t = Table::new(
+        "controller ISA — 42 instructions",
+        &["opcode", "mnemonic", "category"],
+    );
+    for op in Opcode::all() {
+        t.row(&[
+            format!("{:#04x}", op as u8),
+            op.mnemonic().into(),
+            format!("{:?}", op.category()),
+        ]);
+    }
+    print!("{}", t.render());
+    for c in [Category::Interconnect, Category::Branch, Category::Vector, Category::MemReg] {
+        println!("{c:?}: {} opcodes", c.budget());
+    }
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let n = args.usize("n", 2048)?;
+    let engine = Engine::new(OverlayConfig::default())?;
+    let comp = parse_pattern(&args.str("pattern", "vmul-reduce"), n)?;
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
+    println!("stages: {}", acc.stages.len());
+    for (i, (s, a)) in acc.stages.iter().zip(&acc.placement.assignments).enumerate() {
+        println!("  stage {i}: {:10} -> tile {} ({:?})", s.op.name(), a.tile, a.class);
+    }
+    for r in &acc.routes {
+        println!("  route: {} -> {} via {:?} ({} hops)", r.from, r.to, r.via, r.hops());
+    }
+    println!("chunk: {} words; scalar channels: {:?}", acc.chunk, acc.scalar_channels);
+    println!("\nprogram ({} instrs):", acc.program.len());
+    print!("{}", asm::format_program(acc.program.instrs()));
+    println!("category mix: {:?}", acc.program.category_mix());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.usize("requests", 64)?;
+    let n = args.usize("n", 1024)?;
+    let coord = Coordinator::new(OverlayConfig::default())?;
+    let (tx, handle) = spawn_service(coord);
+    let patterns = [
+        Composition::vmul_reduce(n),
+        Composition::map(OperatorKind::Sqrt, n),
+        Composition::filter_reduce(0.25, n),
+        Composition::axpy(1.5, n),
+    ];
+    let t0 = std::time::Instant::now();
+    for k in 0..requests {
+        let comp = patterns[k % patterns.len()].clone();
+        let inputs: Vec<Vec<f32>> = (0..comp.inputs)
+            .map(|c| workload::vector(n, (k * 4 + c as usize) as u64, 0.1, 2.0))
+            .collect();
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(Job { request: Request::dynamic(comp, inputs), reply: rtx })
+            .map_err(|_| anyhow!("service thread died"))?;
+        rrx.recv()??;
+    }
+    drop(tx);
+    let metrics = handle.join().map_err(|_| anyhow!("service panicked"))?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", metrics.summary());
+    println!(
+        "served {requests} requests in {:.1} ms ({:.0} req/s wall)",
+        dt * 1e3,
+        requests as f64 / dt
+    );
+    Ok(())
+}
+
+const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve> [--flag value ...]
+  see crate docs / README for per-command flags";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "fig2" => cmd_fig2(args.usize("n", 4096)?)?,
+        "fig3" => cmd_fig3(args.usize("n", 4096)?)?,
+        "sweep" => cmd_sweep()?,
+        "run" => cmd_run(&args)?,
+        "verify" => cmd_verify(args.usize("n", 4096)?)?,
+        "isa" => cmd_isa(),
+        "inspect" => cmd_inspect(&args)?,
+        "serve" => cmd_serve(&args)?,
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,784 @@
+//! The overlay controller: the run-time interpreter of the 42-instruction
+//! ISA.
+//!
+//! The controller executes a validated [`Program`] against a [`Fabric`],
+//! moving real `f32` data (semantic plane) while accounting every fabric
+//! cycle (temporal plane):
+//!
+//! * control instructions cost 1 cycle (taken branches 2);
+//! * DMA moves cost `ceil(words × 4 B / DMA-bytes-per-cycle)` cycles;
+//! * vector operations cost `stage latency + len·II` cycles;
+//! * stream deliveries record both *hop fills* (pipelined forwarding: 1
+//!   cycle per pass-through tile) and *hop elements* (store-and-forward
+//!   re-staging: `len` cycles per hop) so the two overlay generations can
+//!   be priced from one execution (see `timing::overlay`).
+//!
+//! Chunk-at-a-time streaming: a `vec.run` processes its whole chunk and
+//! parks the result on the consumer's port. This is steady-state-equivalent
+//! to element streaming for feed-forward pipelines, which is exactly the
+//! class of dataflow the JIT emits.
+
+
+use super::tile::Fabric;
+use crate::bitstream::OperatorKind;
+use crate::error::{Error, Result};
+use crate::isa::{Instr, Opcode, Program};
+
+/// External stream channels (DDR-side buffers the DMA engine touches).
+///
+/// Input channels are *borrowed* — the DMA engine only reads DDR, so the
+/// request path never copies operand vectors into the IO block (perf pass
+/// §Perf-2: saves one full operand copy per request).
+#[derive(Debug, Clone, Default)]
+pub struct ExternalIo<'a> {
+    /// `dma.in` sources, by channel id.
+    pub inputs: Vec<&'a [f32]>,
+    /// `dma.out` destinations, by channel id (filled by execution).
+    pub outputs: Vec<Vec<f32>>,
+}
+
+impl<'a> ExternalIo<'a> {
+    /// Borrow each vector in `inputs` as one input channel.
+    pub fn with_inputs(inputs: &'a [Vec<f32>]) -> ExternalIo<'a> {
+        ExternalIo {
+            inputs: inputs.iter().map(|v| v.as_slice()).collect(),
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Build from explicit channel slices.
+    pub fn from_slices(inputs: Vec<&'a [f32]>) -> ExternalIo<'a> {
+        ExternalIo { inputs, outputs: Vec::new() }
+    }
+}
+
+/// Cycle/event accounting of one program execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExecStats {
+    /// Instructions retired.
+    pub instrs: u64,
+    /// Cycles spent on control (non-vector, non-DMA) instructions.
+    pub control_cycles: u64,
+    /// Cycles spent in vector operations (fill + streaming).
+    pub vector_cycles: u64,
+    /// Cycles spent in DMA transfers.
+    pub dma_cycles: u64,
+    /// Words moved by DMA.
+    pub dma_words: u64,
+    /// Elements that passed through any operator.
+    pub elements: u64,
+    /// Pass-through tiles traversed by deliveries (fills — pipelined cost).
+    pub hop_fills: u64,
+    /// Σ (hops × chunk length) — store-and-forward re-staging cost.
+    pub hop_elements: u64,
+    /// Taken branches.
+    pub branches_taken: u64,
+}
+
+impl ExecStats {
+    /// Total cycles under the **dynamic** (pipelined) overlay model:
+    /// pass-through tiles only add fill cycles.
+    pub fn cycles_pipelined(&self) -> u64 {
+        self.control_cycles + self.vector_cycles + self.dma_cycles + self.hop_fills
+    }
+
+    /// Total cycles under the **static store-and-forward** model: every hop
+    /// re-stages the whole chunk (the original overlay's non-contiguous
+    /// penalty — Fig. 2/3).
+    pub fn cycles_store_forward(&self) -> u64 {
+        self.control_cycles + self.vector_cycles + self.dma_cycles + self.hop_elements
+    }
+
+    /// Seconds at a fabric clock.
+    pub fn seconds(&self, fabric_hz: f64, pipelined: bool) -> f64 {
+        let c = if pipelined { self.cycles_pipelined() } else { self.cycles_store_forward() };
+        c as f64 / fabric_hz
+    }
+}
+
+/// Controller flag register.
+#[derive(Debug, Clone, Copy, Default)]
+struct Flags {
+    eq: bool,
+    lt: bool,
+}
+
+/// The controller itself. Stateless between runs except for fuel limits.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    /// Instruction budget per run (infinite loops trap instead of hanging).
+    pub max_instrs: u64,
+}
+
+impl Default for Controller {
+    fn default() -> Self {
+        Controller { max_instrs: 1_000_000 }
+    }
+}
+
+impl Controller {
+    /// Execute `program` on `fabric` with external channels `io`.
+    pub fn run(
+        &self,
+        fabric: &mut Fabric,
+        program: &Program,
+        io: &mut ExternalIo<'_>,
+    ) -> Result<ExecStats> {
+        let mut stats = ExecStats::default();
+        let mut flags = Flags::default();
+        let mut pc: usize = 0;
+        let instrs = program.instrs();
+
+        let dma_cycles_per_word = {
+            let c = &fabric.cfg.clocks;
+            (4.0 * c.fabric_hz / c.dma_bytes_per_sec).max(f64::MIN_POSITIVE)
+        };
+
+        while pc < instrs.len() {
+            if stats.instrs >= self.max_instrs {
+                return Err(Error::Trap { pc, reason: "instruction budget exhausted".into() });
+            }
+            let i = instrs[pc];
+            stats.instrs += 1;
+            let mut next = pc + 1;
+
+            match i.op {
+                // ---- interconnect -------------------------------------------------
+                op if op.port_dir().is_some() => {
+                    let (is_in, d) = op.port_dir().unwrap();
+                    let sw = &mut fabric.tiles[i.tile as usize].switch;
+                    if is_in {
+                        sw.set_in(d);
+                    } else {
+                        sw.out_port = Some(d);
+                    }
+                    stats.control_cycles += 1;
+                }
+                op if op.bypass_dirs().is_some() => {
+                    let (from, to) = op.bypass_dirs().unwrap();
+                    fabric.tiles[i.tile as usize].switch.set_bypass(from, to);
+                    stats.control_cycles += 1;
+                }
+                Opcode::ConnectPr => {
+                    fabric.tiles[i.tile as usize].switch.pr_connected = true;
+                    stats.control_cycles += 1;
+                }
+                Opcode::DisconnectPr => {
+                    fabric.tiles[i.tile as usize].switch.pr_connected = false;
+                    stats.control_cycles += 1;
+                }
+
+                // ---- branching ----------------------------------------------------
+                Opcode::Beq | Opcode::Bne | Opcode::Blt | Opcode::Bge | Opcode::Jmp => {
+                    let take = match i.op {
+                        Opcode::Beq => flags.eq,
+                        Opcode::Bne => !flags.eq,
+                        Opcode::Blt => flags.lt,
+                        Opcode::Bge => !flags.lt,
+                        _ => true,
+                    };
+                    stats.control_cycles += 1;
+                    if take {
+                        stats.control_cycles += 1; // pipeline bubble
+                        stats.branches_taken += 1;
+                        next = (pc as i64 + 1 + i.imm as i64) as usize;
+                    }
+                }
+                Opcode::SpecSel => {
+                    // Commit control-level speculation: keep the parked
+                    // stream tagged slot `a` if flags.eq else slot `b`;
+                    // retag the survivor to slot 0, drop the loser.
+                    let tile = &mut fabric.tiles[i.tile as usize];
+                    let (keep, drop_) = if flags.eq { (i.a, i.b) } else { (i.b, i.a) };
+                    tile.take_slot(drop_);
+                    if let Some(mut s) = tile.take_slot(keep) {
+                        s.slot = 0;
+                        let from = s.from;
+                        tile.park(from, 0, s.data);
+                    }
+                    stats.control_cycles += 1;
+                }
+
+                // ---- vector operations --------------------------------------------
+                Opcode::VecRun | Opcode::VecAcc => {
+                    self.vec_op(fabric, &i, &mut stats)?;
+                }
+
+                // ---- memory & register --------------------------------------------
+                Opcode::Ldi => {
+                    fabric.tiles[i.tile as usize].regs[i.a as usize] = i.imm as f64;
+                    stats.control_cycles += 1;
+                }
+                Opcode::Mov => {
+                    let t = &mut fabric.tiles[i.tile as usize];
+                    t.regs[i.a as usize] = t.regs[i.b as usize];
+                    stats.control_cycles += 1;
+                }
+                Opcode::Ld => {
+                    let t = &mut fabric.tiles[i.tile as usize];
+                    let addr = t.regs[i.b as usize] as usize;
+                    let bram = &t.bram[(i.imm & 1) as usize];
+                    let v = *bram.get(addr).ok_or_else(|| Error::Trap {
+                        pc,
+                        reason: format!("ld: address {addr} beyond BRAM ({} words)", bram.len()),
+                    })?;
+                    t.regs[i.a as usize] = v as f64;
+                    stats.control_cycles += 1;
+                }
+                Opcode::St => {
+                    let words = fabric.cfg.bram_words();
+                    let t = &mut fabric.tiles[i.tile as usize];
+                    let addr = t.regs[i.b as usize] as usize;
+                    if addr >= words {
+                        return Err(Error::Trap {
+                            pc,
+                            reason: format!("st: address {addr} beyond BRAM capacity {words}"),
+                        });
+                    }
+                    let bram = &mut t.bram[(i.imm & 1) as usize];
+                    if bram.len() <= addr {
+                        bram.resize(addr + 1, 0.0);
+                    }
+                    bram[addr] = t.regs[i.a as usize] as f32;
+                    stats.control_cycles += 1;
+                }
+                Opcode::AddR | Opcode::SubR => {
+                    let t = &mut fabric.tiles[i.tile as usize];
+                    let b = t.regs[i.b as usize];
+                    if i.op == Opcode::AddR {
+                        t.regs[i.a as usize] += b;
+                    } else {
+                        t.regs[i.a as usize] -= b;
+                    }
+                    stats.control_cycles += 1;
+                }
+                Opcode::IncR | Opcode::DecR => {
+                    let t = &mut fabric.tiles[i.tile as usize];
+                    t.regs[i.a as usize] += if i.op == Opcode::IncR { 1.0 } else { -1.0 };
+                    stats.control_cycles += 1;
+                }
+                Opcode::CmpR => {
+                    let t = &fabric.tiles[i.tile as usize];
+                    let (a, b) = (t.regs[i.a as usize], t.regs[i.b as usize]);
+                    flags.eq = a == b;
+                    flags.lt = a < b;
+                    stats.control_cycles += 1;
+                }
+                Opcode::DmaIn => {
+                    // len = R[a]; DDR word offset = R[b]; imm: bit0 = BRAM
+                    // select, bits[15:1] = channel id.
+                    let t = &fabric.tiles[i.tile as usize];
+                    let len = t.regs[i.a as usize] as usize;
+                    let off = t.regs[i.b as usize] as usize;
+                    let chan = (i.imm >> 1) as usize;
+                    let bram_sel = (i.imm & 1) as usize;
+                    let src = io.inputs.get(chan).ok_or_else(|| Error::Trap {
+                        pc,
+                        reason: format!("dma.in: no input channel {chan}"),
+                    })?;
+                    if src.len() < off + len {
+                        return Err(Error::Trap {
+                            pc,
+                            reason: format!(
+                                "dma.in: channel {chan} holds {} < {off}+{len} words",
+                                src.len()
+                            ),
+                        });
+                    }
+                    if len > fabric.cfg.bram_words() {
+                        return Err(Error::Trap {
+                            pc,
+                            reason: format!(
+                                "dma.in: {len} words exceed data BRAM capacity {}",
+                                fabric.cfg.bram_words()
+                            ),
+                        });
+                    }
+                    {
+                        // reuse the BRAM buffer's capacity (perf §Perf-3)
+                        let src = &src[off..off + len];
+                        let bram = &mut fabric.tiles[i.tile as usize].bram[bram_sel];
+                        bram.clear();
+                        bram.extend_from_slice(src);
+                    }
+                    stats.dma_words += len as u64;
+                    stats.dma_cycles += (len as f64 * dma_cycles_per_word).ceil() as u64;
+                    stats.control_cycles += 1; // descriptor issue
+                }
+                Opcode::DmaOut => {
+                    // len = R[a]; DDR word offset = R[b]; imm as dma.in.
+                    let t = &fabric.tiles[i.tile as usize];
+                    let len = t.regs[i.a as usize] as usize;
+                    let off = t.regs[i.b as usize] as usize;
+                    let bram_sel = (i.imm & 1) as usize;
+                    let chan = (i.imm >> 1) as usize;
+                    let bram = &t.bram[bram_sel];
+                    if bram.len() < len {
+                        return Err(Error::Trap {
+                            pc,
+                            reason: format!(
+                                "dma.out: BRAM{bram_sel} holds {} < {len} words",
+                                bram.len()
+                            ),
+                        });
+                    }
+                    let data = bram[..len].to_vec();
+                    if io.outputs.len() <= chan {
+                        io.outputs.resize(chan + 1, Vec::new());
+                    }
+                    let out = &mut io.outputs[chan];
+                    if out.len() < off + len {
+                        out.resize(off + len, 0.0);
+                    }
+                    out[off..off + len].copy_from_slice(&data);
+                    stats.dma_words += len as u64;
+                    stats.dma_cycles += (len as f64 * dma_cycles_per_word).ceil() as u64;
+                    stats.control_cycles += 1;
+                }
+                Opcode::Halt => break,
+                other => {
+                    return Err(Error::Trap {
+                        pc,
+                        reason: format!("unhandled opcode {other:?}"),
+                    })
+                }
+            }
+            pc = next;
+        }
+        Ok(stats)
+    }
+
+    /// Execute `vec.run` / `vec.acc` on one tile.
+    fn vec_op(&self, fabric: &mut Fabric, i: &Instr, stats: &mut ExecStats) -> Result<()> {
+        let idx = i.tile as usize;
+        let len = fabric.tiles[idx].regs[i.a as usize] as usize;
+        let op = fabric.tiles[idx].resident.ok_or_else(|| Error::Trap {
+            pc: 0,
+            reason: format!("vec op on tile {idx} with no resident operator"),
+        })?;
+
+        // ---- gather operand streams: parked inboxes by slot, then BRAMs --
+        let parked = fabric.tiles[idx].drain_inbox_by_slot();
+        let mut operands: Vec<Vec<f32>> = parked.into_iter().map(|p| p.data).collect();
+        let arity = if i.op == Opcode::VecAcc { 1 } else { op.arity() };
+        // remember which operand came out of which BRAM so buffers can be
+        // handed back afterwards, preserving their capacity across the
+        // chunk loop (perf §Perf-3: no per-chunk reallocation).
+        let mut bram_src: Vec<Option<usize>> = vec![None; operands.len()];
+        let mut bram_i = 0;
+        while operands.len() < arity && bram_i < 2 {
+            let b = std::mem::take(&mut fabric.tiles[idx].bram[bram_i]);
+            if !b.is_empty() {
+                operands.push(b);
+                bram_src.push(Some(bram_i));
+            }
+            bram_i += 1;
+        }
+        if operands.len() < arity {
+            return Err(Error::Trap {
+                pc: 0,
+                reason: format!(
+                    "tile {idx} op {} needs {arity} operand streams, found {}",
+                    op.name(),
+                    operands.len()
+                ),
+            });
+        }
+        operands.truncate(arity);
+
+        // ---- broadcast scalars, validate lengths ---------------------------
+        for o in operands.iter_mut() {
+            if o.len() == 1 && len > 1 {
+                o.resize(len, o[0]); // hardware: register-held scalar operand
+            } else if o.len() < len {
+                return Err(Error::Trap {
+                    pc: 0,
+                    reason: format!(
+                        "tile {idx}: operand stream of {} < vector length {len}",
+                        o.len()
+                    ),
+                });
+            }
+        }
+
+        // ---- cycle accounting -------------------------------------------------
+        stats.elements += len as u64;
+        stats.vector_cycles += op.latency_cycles() + (len as u64) * op.initiation_interval();
+
+        let mut state = fabric.tiles[idx].acc;
+
+        // ---- reduce: vec.acc folds without materializing a result vector
+        // (perf §Perf-1) and leaves the scalar in R[b] and BRAM[imm&1][0] ----
+        if i.op == Opcode::VecAcc {
+            let mut fold = 0.0f32;
+            if op == OperatorKind::AccSum {
+                // hot reduce path: plain sequential accumulate (same
+                // association as the generic path — bit-identical)
+                for &v in &operands[0][..len] {
+                    state += v;
+                }
+            } else {
+                for k in 0..len {
+                    let a = operands[0][k];
+                    let b = operands.get(1).map_or(0.0, |o| o[k]);
+                    fold += op.apply(a, b, &mut state);
+                }
+            }
+            let scalar = if op.is_stateful() {
+                // stateful ops (AccSum) carry the fold in their feedback reg
+                state
+            } else {
+                // stateless op output folded by the adder feedback
+                fold
+            };
+            fabric.tiles[idx].acc = state;
+            // hand consumed BRAM buffers back (capacity reuse)
+            for (o, src) in operands.iter_mut().zip(&bram_src) {
+                if let Some(j) = src {
+                    o.clear();
+                    fabric.tiles[idx].bram[*j] = std::mem::take(o);
+                }
+            }
+            let t = &mut fabric.tiles[idx];
+            t.regs[i.b as usize] = scalar as f64;
+            let out = &mut t.bram[(i.imm & 1) as usize];
+            out.clear();
+            out.push(scalar);
+            return Ok(());
+        }
+
+        // ---- apply, in place over operand 0's buffer (perf §Perf-1) ---------
+        let mut result = std::mem::take(&mut operands[0]);
+        result.truncate(len);
+        if op == OperatorKind::Select {
+            let (a, b) = (&operands[1], &operands[2]);
+            for k in 0..len {
+                // result[k] still holds pred[k] at this point
+                result[k] = if result[k] > 0.0 { a[k] } else { b[k] };
+            }
+        } else if let Some(b) = operands.get(1) {
+            // binary: hoist the opcode match out of the element loop so the
+            // common tile datapaths autovectorize (perf §Perf-4).
+            let b = &b[..len];
+            match op {
+                OperatorKind::Mul => {
+                    for (r, &bv) in result.iter_mut().zip(b) {
+                        *r *= bv;
+                    }
+                }
+                OperatorKind::Add => {
+                    for (r, &bv) in result.iter_mut().zip(b) {
+                        *r += bv;
+                    }
+                }
+                OperatorKind::Sub => {
+                    for (r, &bv) in result.iter_mut().zip(b) {
+                        *r -= bv;
+                    }
+                }
+                _ => {
+                    for (r, &bv) in result.iter_mut().zip(b) {
+                        *r = op.apply(*r, bv, &mut state);
+                    }
+                }
+            }
+        } else {
+            for r in result.iter_mut().take(len) {
+                *r = op.apply(*r, 0.0, &mut state);
+            }
+        }
+        fabric.tiles[idx].acc = state;
+
+        // hand non-result BRAM buffers back (capacity reuse, perf §Perf-3);
+        // operand 0's buffer travels onward as the result stream.
+        for (k, src) in bram_src.iter().enumerate().skip(1) {
+            if let Some(j) = src {
+                if let Some(o) = operands.get_mut(k) {
+                    o.clear();
+                    fabric.tiles[idx].bram[*j] = std::mem::take(o);
+                }
+            }
+        }
+
+        // ---- deliver: follow out_port through bypass tiles to a consumer ----
+        let out = fabric.tiles[idx].switch.out_port;
+        match out {
+            None => {
+                // park the result in BRAM[imm&1]
+                fabric.tiles[idx].bram[(i.imm & 1) as usize] = result;
+            }
+            Some(mut dir) => {
+                let slot = ((i.imm >> 1) & 0x3) as u8;
+                let mut cur = idx;
+                let mut hops = 0u64;
+                loop {
+                    let nxt = fabric.mesh.neighbor(cur, dir).ok_or(Error::Routing {
+                        from: idx,
+                        to: cur,
+                    })?;
+                    let arrival = dir.opposite();
+                    let t = &fabric.tiles[nxt];
+                    if t.switch.consumes(arrival) {
+                        fabric.tiles[nxt].park(arrival, slot, result);
+                        break;
+                    }
+                    if let Some(fwd) = t.switch.bypass_to(arrival) {
+                        hops += 1;
+                        cur = nxt;
+                        dir = fwd;
+                        if hops as usize > fabric.mesh.tiles() {
+                            return Err(Error::Routing { from: idx, to: nxt });
+                        }
+                        continue;
+                    }
+                    return Err(Error::Routing { from: idx, to: nxt });
+                }
+                stats.hop_fills += hops;
+                stats.hop_elements += hops * len as u64;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::{BitstreamLibrary, RegionClass};
+    use crate::isa::Dir;
+    use crate::config::OverlayConfig;
+    use crate::isa::Instr;
+
+    fn setup(ops: &[(usize, OperatorKind)]) -> Fabric {
+        let mut f = Fabric::new(OverlayConfig::default()).unwrap();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        for &(idx, op) in ops {
+            let class = f.tiles[idx].class;
+            let bs = lib
+                .get(op, class)
+                .or_else(|| lib.get(op, RegionClass::Large))
+                .unwrap()
+                .clone();
+            f.load_bitstream(idx, &bs).unwrap();
+        }
+        f
+    }
+
+    fn prog(cfg: &OverlayConfig, instrs: Vec<Instr>) -> Program {
+        Program::new(instrs, cfg).unwrap()
+    }
+
+    /// The paper's headline accelerator, hand-assembled: tile0 multiplies two
+    /// DMA'd vectors, streams the product east into tile1's accumulator.
+    fn vmul_reduce_program(cfg: &OverlayConfig, n: i16) -> Program {
+        use Opcode::*;
+        prog(
+            cfg,
+            vec![
+                Instr::ldi(0, 1, n),
+                Instr::ldi(1, 1, n),
+                // interconnect: t0 → E, t1 consumes on W
+                Instr::op(SetOutE, 0),
+                Instr::op(SetInW, 1),
+                Instr::op(ConnectPr, 0),
+                Instr::op(ConnectPr, 1),
+                // data in
+                Instr { op: DmaIn, tile: 0, a: 1, b: 0, imm: 0 },      // chan0 → bram0
+                Instr { op: DmaIn, tile: 0, a: 1, b: 0, imm: 0b11 },   // chan1 → bram1
+                // compute
+                Instr { op: VecRun, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr { op: VecAcc, tile: 1, a: 1, b: 2, imm: 0 },
+                // result out: 1 word from t1.bram0 → chan0
+                Instr::ldi(1, 3, 1),
+                Instr { op: DmaOut, tile: 1, a: 3, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        )
+    }
+
+    #[test]
+    fn vmul_reduce_end_to_end() {
+        let mut f = setup(&[(0, OperatorKind::Mul), (1, OperatorKind::AccSum)]);
+        let n = 256;
+        let a: Vec<f32> = (0..n).map(|i| i as f32 / 16.0).collect();
+        let b: Vec<f32> = (0..n).map(|i| 0.5 + (i % 7) as f32).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+
+        let p = vmul_reduce_program(&f.cfg, n as i16);
+        let chans = vec![a, b];
+        let mut io = ExternalIo::with_inputs(&chans);
+        let stats = Controller::default().run(&mut f, &p, &mut io).unwrap();
+
+        let got = io.outputs[0][0];
+        assert!((got - want).abs() / want.abs() < 1e-5, "got {got}, want {want}");
+        assert_eq!(stats.elements, 2 * n as u64); // mul stream + acc stream
+        assert!(stats.dma_words >= 2 * n as u64);
+        assert!(stats.cycles_pipelined() > 0);
+    }
+
+    #[test]
+    fn pass_through_tiles_add_hop_cost() {
+        // t0 (mul) → E, t1 bypasses W→E, t2 consumes on W (acc).
+        let mut f = setup(&[
+            (0, OperatorKind::Mul),
+            (1, OperatorKind::Route),
+            (2, OperatorKind::AccSum),
+        ]);
+        use Opcode::*;
+        let n = 128;
+        let p = prog(
+            &f.cfg,
+            vec![
+                Instr::ldi(0, 1, n),
+                Instr::ldi(2, 1, n),
+                Instr::op(SetOutE, 0),
+                Instr::op(BypassWE, 1),
+                Instr::op(SetInW, 2),
+                Instr::op(ConnectPr, 0),
+                Instr::op(ConnectPr, 2),
+                Instr { op: DmaIn, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr { op: DmaIn, tile: 0, a: 1, b: 0, imm: 0b11 },
+                Instr { op: VecRun, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr { op: VecAcc, tile: 2, a: 1, b: 2, imm: 0 },
+                Instr::ldi(2, 3, 1),
+                Instr { op: DmaOut, tile: 2, a: 3, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        let a = vec![1.0f32; n as usize];
+        let b = vec![2.0f32; n as usize];
+        let chans = vec![a, b];
+        let mut io = ExternalIo::with_inputs(&chans);
+        let stats = Controller::default().run(&mut f, &p, &mut io).unwrap();
+        assert_eq!(io.outputs[0][0], 256.0);
+        assert_eq!(stats.hop_fills, 1);
+        assert_eq!(stats.hop_elements, n as u64);
+        // store-and-forward prices the hop per element; pipelined per fill.
+        assert_eq!(
+            stats.cycles_store_forward() - stats.cycles_pipelined(),
+            (n - 1) as u64
+        );
+    }
+
+    #[test]
+    fn scalar_loop_with_branches() {
+        use Opcode::*;
+        let f_cfg = OverlayConfig::default();
+        let mut f = setup(&[]);
+        // r0 = 0; r1 = 10; loop: inc r0; cmp r0,r1; bne loop; halt
+        let p = prog(
+            &f_cfg,
+            vec![
+                Instr::ldi(0, 0, 0),
+                Instr::ldi(0, 1, 10),
+                Instr::op_a(IncR, 0, 0),
+                Instr { op: CmpR, tile: 0, a: 0, b: 1, imm: 0 },
+                Instr { op: Bne, tile: 0, a: 0, b: 0, imm: -3 },
+                Instr::halt(),
+            ],
+        );
+        let mut io = ExternalIo::default();
+        let stats = Controller::default().run(&mut f, &p, &mut io).unwrap();
+        assert_eq!(f.tiles[0].regs[0], 10.0);
+        assert_eq!(stats.branches_taken, 9);
+    }
+
+    #[test]
+    fn infinite_loop_traps_on_fuel() {
+        let cfg = OverlayConfig::default();
+        let mut f = setup(&[]);
+        let p = prog(
+            &cfg,
+            vec![
+                Instr { op: Opcode::Jmp, tile: 0, a: 0, b: 0, imm: -1 },
+                Instr::halt(),
+            ],
+        );
+        let ctl = Controller { max_instrs: 1000 };
+        let err = ctl.run(&mut f, &p, &mut ExternalIo::default()).unwrap_err();
+        assert!(matches!(err, Error::Trap { .. }));
+    }
+
+    #[test]
+    fn vec_on_empty_tile_traps() {
+        let cfg = OverlayConfig::default();
+        let mut f = setup(&[]);
+        let p = prog(
+            &cfg,
+            vec![
+                Instr::ldi(0, 1, 4),
+                Instr { op: Opcode::VecRun, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        assert!(Controller::default()
+            .run(&mut f, &p, &mut ExternalIo::default())
+            .is_err());
+    }
+
+    #[test]
+    fn dma_overflow_traps() {
+        let cfg = OverlayConfig::default();
+        let mut f = setup(&[]);
+        // ask for more words than the channel holds
+        let p = prog(
+            &cfg,
+            vec![
+                Instr::ldi(0, 1, 100),
+                Instr { op: Opcode::DmaIn, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        let chans = vec![vec![0.0; 10]];
+        let mut io = ExternalIo::with_inputs(&chans);
+        assert!(Controller::default().run(&mut f, &p, &mut io).is_err());
+    }
+
+    #[test]
+    fn broadcast_scalar_operand() {
+        // filter_gt with a broadcast threshold in bram1
+        let cfg = OverlayConfig::default();
+        let mut f = setup(&[(0, OperatorKind::FilterGt)]);
+        use Opcode::*;
+        let n = 8;
+        let p = prog(
+            &cfg,
+            vec![
+                Instr::ldi(0, 1, n),
+                Instr { op: DmaIn, tile: 0, a: 1, b: 0, imm: 0 },      // values
+                Instr::ldi(0, 2, 1),
+                Instr { op: DmaIn, tile: 0, a: 2, b: 0, imm: 0b11 },   // threshold (1 word)
+                Instr { op: VecRun, tile: 0, a: 1, b: 0, imm: 0 },     // result → bram0
+                Instr { op: DmaOut, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        let vals = vec![-1.0, 2.0, 0.5, 3.0, -2.0, 4.0, 1.0, 0.0];
+        let chans = vec![vals, vec![0.9]];
+        let mut io = ExternalIo::with_inputs(&chans);
+        Controller::default().run(&mut f, &p, &mut io).unwrap();
+        assert_eq!(io.outputs[0], vec![0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn spec_sel_commits_by_flags() {
+        let cfg = OverlayConfig::default();
+        let mut f = setup(&[]);
+        f.tiles[4].park(Dir::W, 1, vec![1.0, 1.0]);
+        f.tiles[4].park(Dir::N, 2, vec![2.0, 2.0]);
+        use Opcode::*;
+        // cmp r0,r0 sets eq → keep slot a=1, drop slot b=2
+        let p = prog(
+            &cfg,
+            vec![
+                Instr { op: CmpR, tile: 4, a: 0, b: 0, imm: 0 },
+                Instr { op: SpecSel, tile: 4, a: 1, b: 2, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        Controller::default().run(&mut f, &p, &mut ExternalIo::default()).unwrap();
+        assert_eq!(f.tiles[4].inbox.len(), 1);
+        assert_eq!(f.tiles[4].inbox[0].data, vec![1.0, 1.0]);
+        assert_eq!(f.tiles[4].inbox[0].slot, 0);
+    }
+}

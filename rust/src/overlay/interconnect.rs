@@ -1,0 +1,137 @@
+//! Per-tile interconnect switch state.
+//!
+//! Each tile's switch decides, per port, whether arriving data is
+//! **consumed** by the resident operator (`set.in.*` marks a port as
+//! consuming — cumulative, so a Select tile can consume on three ports),
+//! forwarded onward without consumption (**bypass** — how Fig. 2's
+//! pass-through tiles work), or dropped. The operator's result leaves on
+//! the single `out_port`. All of this is configured by the controller's 22
+//! interconnect instructions.
+
+
+use crate::isa::Dir;
+
+/// Switch configuration of one tile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SwitchState {
+    /// Ports whose arrivals feed the resident operator (N,E,S,W mask).
+    in_ports: [bool; 4],
+    /// Port the operator's output stream leaves on.
+    pub out_port: Option<Dir>,
+    /// `bypass[from] = Some(to)`: arrivals on `from` are forwarded to `to`
+    /// without consumption. Indexed by `Dir as usize` (N,E,S,W → 0..4).
+    bypass: [Option<Dir>; 4],
+    /// Is the PR operator tapped into the stream? (`pr.connect`)
+    pub pr_connected: bool,
+}
+
+fn di(d: Dir) -> usize {
+    match d {
+        Dir::N => 0,
+        Dir::E => 1,
+        Dir::S => 2,
+        Dir::W => 3,
+    }
+}
+
+impl SwitchState {
+    /// Mark port `d` as consuming (cumulative — `set.in.*`).
+    pub fn set_in(&mut self, d: Dir) {
+        self.in_ports[di(d)] = true;
+    }
+
+    /// Is port `d` marked consuming (regardless of PR connection)?
+    pub fn in_port_set(&self, d: Dir) -> bool {
+        self.in_ports[di(d)]
+    }
+
+    /// Configure a bypass lane `from → to`.
+    pub fn set_bypass(&mut self, from: Dir, to: Dir) {
+        self.bypass[di(from)] = Some(to);
+    }
+
+    /// Remove a bypass lane.
+    pub fn clear_bypass(&mut self, from: Dir) {
+        self.bypass[di(from)] = None;
+    }
+
+    /// Where arrivals on `from` are forwarded, if bypassed.
+    pub fn bypass_to(&self, from: Dir) -> Option<Dir> {
+        self.bypass[di(from)]
+    }
+
+    /// Does the tile consume arrivals on `d` into its operator?
+    pub fn consumes(&self, d: Dir) -> bool {
+        self.pr_connected && self.in_ports[di(d)]
+    }
+
+    /// Number of configured bypass lanes (resource/penalty metric).
+    pub fn bypass_count(&self) -> usize {
+        self.bypass.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Reset to the power-on state.
+    pub fn clear(&mut self) {
+        *self = SwitchState::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_switch_is_inert() {
+        let s = SwitchState::default();
+        for d in Dir::ALL {
+            assert!(!s.consumes(d));
+            assert_eq!(s.bypass_to(d), None);
+        }
+        assert_eq!(s.bypass_count(), 0);
+    }
+
+    #[test]
+    fn consume_requires_pr_connected() {
+        let mut s = SwitchState::default();
+        s.set_in(Dir::W);
+        assert!(!s.consumes(Dir::W), "not connected yet");
+        s.pr_connected = true;
+        assert!(s.consumes(Dir::W));
+        assert!(!s.consumes(Dir::E));
+    }
+
+    #[test]
+    fn set_in_is_cumulative_for_multi_port_consumers() {
+        // a Select tile consumes predicate + two speculated streams
+        let mut s = SwitchState::default();
+        s.pr_connected = true;
+        s.set_in(Dir::N);
+        s.set_in(Dir::W);
+        s.set_in(Dir::E);
+        assert!(s.consumes(Dir::N) && s.consumes(Dir::W) && s.consumes(Dir::E));
+        assert!(!s.consumes(Dir::S));
+    }
+
+    #[test]
+    fn bypass_set_clear() {
+        let mut s = SwitchState::default();
+        s.set_bypass(Dir::W, Dir::E);
+        s.set_bypass(Dir::N, Dir::S);
+        assert_eq!(s.bypass_to(Dir::W), Some(Dir::E));
+        assert_eq!(s.bypass_count(), 2);
+        s.clear_bypass(Dir::W);
+        assert_eq!(s.bypass_to(Dir::W), None);
+        assert_eq!(s.bypass_count(), 1);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut s = SwitchState::default();
+        s.set_in(Dir::N);
+        s.out_port = Some(Dir::S);
+        s.pr_connected = true;
+        s.set_bypass(Dir::E, Dir::W);
+        s.clear();
+        assert_eq!(s, SwitchState::default());
+    }
+}

@@ -1,0 +1,145 @@
+//! Mesh geometry: row-major tile indexing and N-E-S-W neighbourhood.
+
+
+use crate::isa::Dir;
+
+/// A rows×cols 2-D mesh (pure geometry; no state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Mesh {
+    pub fn new(rows: usize, cols: usize) -> Mesh {
+        Mesh { rows, cols }
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// (row, col) of a row-major tile index.
+    pub fn coords(&self, idx: usize) -> (usize, usize) {
+        (idx / self.cols, idx % self.cols)
+    }
+
+    /// Row-major index of (row, col).
+    pub fn index(&self, row: usize, col: usize) -> usize {
+        row * self.cols + col
+    }
+
+    /// Neighbour of `idx` in direction `d`, if inside the mesh.
+    pub fn neighbor(&self, idx: usize, d: Dir) -> Option<usize> {
+        let (r, c) = self.coords(idx);
+        let (nr, nc) = match d {
+            Dir::N => (r.checked_sub(1)?, c),
+            Dir::S => (r + 1, c),
+            Dir::W => (r, c.checked_sub(1)?),
+            Dir::E => (r, c + 1),
+        };
+        (nr < self.rows && nc < self.cols).then(|| self.index(nr, nc))
+    }
+
+    /// Direction from tile `a` to an adjacent tile `b`, if adjacent.
+    pub fn direction(&self, a: usize, b: usize) -> Option<Dir> {
+        Dir::ALL.into_iter().find(|&d| self.neighbor(a, d) == Some(b))
+    }
+
+    /// Manhattan distance between two tiles.
+    pub fn manhattan(&self, a: usize, b: usize) -> usize {
+        let (ar, ac) = self.coords(a);
+        let (br, bc) = self.coords(b);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+
+    /// Is the tile on the mesh border (the original overlay put data BRAMs
+    /// only on border tiles)?
+    pub fn is_border(&self, idx: usize) -> bool {
+        let (r, c) = self.coords(idx);
+        r == 0 || c == 0 || r + 1 == self.rows || c + 1 == self.cols
+    }
+
+    /// Snake (boustrophedon) order: a Hamiltonian path where consecutive
+    /// tiles are always mesh-adjacent — the dynamic placer's canvas for
+    /// contiguous pipelines.
+    pub fn snake_order(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.tiles());
+        for r in 0..self.rows {
+            if r % 2 == 0 {
+                for c in 0..self.cols {
+                    out.push(self.index(r, c));
+                }
+            } else {
+                for c in (0..self.cols).rev() {
+                    out.push(self.index(r, c));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_3x3() {
+        let m = Mesh::new(3, 3);
+        // center tile 4 has all four neighbors
+        assert_eq!(m.neighbor(4, Dir::N), Some(1));
+        assert_eq!(m.neighbor(4, Dir::S), Some(7));
+        assert_eq!(m.neighbor(4, Dir::E), Some(5));
+        assert_eq!(m.neighbor(4, Dir::W), Some(3));
+        // corner tile 0
+        assert_eq!(m.neighbor(0, Dir::N), None);
+        assert_eq!(m.neighbor(0, Dir::W), None);
+        assert_eq!(m.neighbor(0, Dir::E), Some(1));
+        assert_eq!(m.neighbor(0, Dir::S), Some(3));
+    }
+
+    #[test]
+    fn direction_inverse_of_neighbor() {
+        let m = Mesh::new(3, 4);
+        for idx in 0..m.tiles() {
+            for d in Dir::ALL {
+                if let Some(n) = m.neighbor(idx, d) {
+                    assert_eq!(m.direction(idx, n), Some(d));
+                    assert_eq!(m.direction(n, idx), Some(d.opposite()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let m = Mesh::new(3, 3);
+        assert_eq!(m.manhattan(0, 8), 4);
+        assert_eq!(m.manhattan(4, 4), 0);
+        assert_eq!(m.manhattan(0, 2), 2);
+    }
+
+    #[test]
+    fn snake_order_is_contiguous_hamiltonian() {
+        for (r, c) in [(3, 3), (2, 5), (4, 4), (1, 7)] {
+            let m = Mesh::new(r, c);
+            let order = m.snake_order();
+            assert_eq!(order.len(), m.tiles());
+            let mut seen = std::collections::HashSet::new();
+            for w in order.windows(2) {
+                assert_eq!(m.manhattan(w[0], w[1]), 1, "{r}x{c}: {w:?} not adjacent");
+                seen.insert(w[0]);
+            }
+            seen.insert(*order.last().unwrap());
+            assert_eq!(seen.len(), m.tiles());
+        }
+    }
+
+    #[test]
+    fn border_detection_3x3() {
+        let m = Mesh::new(3, 3);
+        let borders: Vec<usize> = (0..9).filter(|&i| m.is_border(i)).collect();
+        assert_eq!(borders, vec![0, 1, 2, 3, 5, 6, 7, 8]); // all but center
+    }
+}

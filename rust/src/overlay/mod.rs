@@ -1,0 +1,24 @@
+//! The overlay fabric simulator.
+//!
+//! A cycle-approximate model of the paper's dynamic overlay: a 2-D mesh of
+//! tiles ([`mesh`]), each with a PR-region slot, a register file, two data
+//! BRAMs and an instruction BRAM ([`tile`]), joined by a programmable
+//! N-E-S-W interconnect that can *consume* or *bypass* streams
+//! ([`interconnect`]), all sequenced by a centralized controller that
+//! interprets the 42-instruction ISA ([`controller`]).
+//!
+//! The simulator executes controller programs **semantically** (real f32
+//! data moves through BRAMs and streams — this is what the integration
+//! tests cross-check against the PJRT artifacts and the scalar reference)
+//! and **temporally** (every instruction, DMA beat, stream element, stage
+//! fill and pass-through hop is priced in fabric cycles).
+
+pub mod controller;
+pub mod interconnect;
+pub mod mesh;
+pub mod tile;
+
+pub use controller::{Controller, ExecStats, ExternalIo};
+pub use interconnect::SwitchState;
+pub use mesh::Mesh;
+pub use tile::{Fabric, Tile};

@@ -1,0 +1,286 @@
+//! Tile and fabric state.
+//!
+//! A [`Tile`] is the paper's unit of composition: one PR-region slot (which
+//! class depends on its mesh position), a small scalar register file, two
+//! data BRAMs, an accumulator, the interconnect switch, and per-direction
+//! inboxes modelling streams parked on input ports. The instruction BRAM is
+//! held by the controller (it sequences all tiles from one image).
+
+
+use super::interconnect::SwitchState;
+use super::mesh::Mesh;
+use crate::bitstream::{Bitstream, OperatorKind, RegionClass};
+use crate::config::OverlayConfig;
+use crate::error::{Error, Result};
+use crate::isa::Dir;
+
+/// A stream parked on a tile's input port, tagged with the operand slot the
+/// producer addressed it to (VecRun's imm bits — the hardware equivalent is
+/// the stream header the interconnect carries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParkedStream {
+    pub slot: u8,
+    pub from: Dir,
+    pub data: Vec<f32>,
+}
+
+/// One overlay tile.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    /// Which PR-region class this position is provisioned as.
+    pub class: RegionClass,
+    /// The operator currently resident in the PR region, if any.
+    pub resident: Option<OperatorKind>,
+    /// Scalar register file (controller-visible; f64 so it can carry both
+    /// loop counters and operand scalars like filter thresholds).
+    pub regs: Vec<f64>,
+    /// Two data BRAMs of `bram_words` f32 each.
+    pub bram: [Vec<f32>; 2],
+    /// Reduce accumulator (the AccSum feedback register).
+    pub acc: f32,
+    /// Interconnect switch.
+    pub switch: SwitchState,
+    /// Streams parked on input ports (at most one per port).
+    pub inbox: Vec<ParkedStream>,
+}
+
+impl Tile {
+    fn new(class: RegionClass, cfg: &OverlayConfig) -> Tile {
+        Tile {
+            class,
+            resident: None,
+            regs: vec![0.0; cfg.regs_per_tile],
+            bram: [Vec::new(), Vec::new()],
+            acc: 0.0,
+            switch: SwitchState::default(),
+            inbox: Vec::new(),
+        }
+    }
+
+    /// Take the stream parked on port `d`, if any.
+    pub fn take_inbox(&mut self, d: Dir) -> Option<Vec<f32>> {
+        let pos = self.inbox.iter().position(|p| p.from == d)?;
+        Some(self.inbox.remove(pos).data)
+    }
+
+    /// Take the parked stream addressed to operand slot `slot`, if any.
+    pub fn take_slot(&mut self, slot: u8) -> Option<ParkedStream> {
+        let pos = self.inbox.iter().position(|p| p.slot == slot)?;
+        Some(self.inbox.remove(pos))
+    }
+
+    /// Park a stream on port `d` (replacing any previous one on that port).
+    pub fn park(&mut self, d: Dir, slot: u8, data: Vec<f32>) {
+        self.inbox.retain(|p| p.from != d);
+        self.inbox.push(ParkedStream { slot, from: d, data });
+    }
+
+    /// Parked streams sorted by operand slot (the VecRun gather order).
+    pub fn drain_inbox_by_slot(&mut self) -> Vec<ParkedStream> {
+        let mut all = std::mem::take(&mut self.inbox);
+        all.sort_by_key(|p| p.slot);
+        all
+    }
+
+    /// Clear all volatile state (registers, BRAMs, streams, accumulator)
+    /// but keep the resident operator and switch config.
+    pub fn reset_data(&mut self) {
+        for r in &mut self.regs {
+            *r = 0.0;
+        }
+        self.bram = [Vec::new(), Vec::new()];
+        self.acc = 0.0;
+        self.inbox.clear();
+    }
+}
+
+/// The whole fabric: mesh geometry + tile state + config.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub mesh: Mesh,
+    pub cfg: OverlayConfig,
+    pub tiles: Vec<Tile>,
+}
+
+impl Fabric {
+    /// Build a powered-on, empty fabric from a config.
+    pub fn new(cfg: OverlayConfig) -> Result<Fabric> {
+        cfg.validate()?;
+        let mesh = Mesh::new(cfg.rows, cfg.cols);
+        let tiles = (0..mesh.tiles())
+            .map(|i| {
+                let class = if cfg.is_large_tile(i) {
+                    RegionClass::Large
+                } else {
+                    RegionClass::Small
+                };
+                Tile::new(class, &cfg)
+            })
+            .collect();
+        Ok(Fabric { mesh, cfg, tiles })
+    }
+
+    /// Load a bitstream into tile `idx`'s PR region.
+    ///
+    /// Fails if the bitstream was synthesized for a different region class —
+    /// partial bitstreams are region-specific in the PR flow.
+    pub fn load_bitstream(&mut self, idx: usize, bs: &Bitstream) -> Result<()> {
+        let tile = self
+            .tiles
+            .get_mut(idx)
+            .ok_or_else(|| Error::Reconfig(format!("tile {idx} out of range")))?;
+        if bs.class != tile.class {
+            return Err(Error::Reconfig(format!(
+                "bitstream for {:?} region cannot load into {:?} tile {idx}",
+                bs.class, tile.class
+            )));
+        }
+        if !bs.footprint.fits(&tile.class.budget()) {
+            return Err(Error::Reconfig(format!(
+                "operator {} overflows {:?} region budget",
+                bs.op.name(),
+                tile.class
+            )));
+        }
+        tile.resident = Some(bs.op);
+        tile.acc = 0.0;
+        Ok(())
+    }
+
+    /// Clear a tile's PR region (resident operator removed).
+    pub fn clear_region(&mut self, idx: usize) -> Result<()> {
+        let tile = self
+            .tiles
+            .get_mut(idx)
+            .ok_or_else(|| Error::Reconfig(format!("tile {idx} out of range")))?;
+        tile.resident = None;
+        Ok(())
+    }
+
+    /// Reset all volatile data state (between requests; residents persist —
+    /// that is the point of the residency cache).
+    pub fn reset_data(&mut self) {
+        for t in &mut self.tiles {
+            t.reset_data();
+        }
+    }
+
+    /// Clear every tile's interconnect switch (between accelerators: the
+    /// next program reconfigures routing from scratch in its prologue).
+    pub fn reset_switches(&mut self) {
+        for t in &mut self.tiles {
+            t.switch.clear();
+        }
+    }
+
+    /// Full reset including switches and residents (power cycle).
+    pub fn reset_full(&mut self) {
+        for t in &mut self.tiles {
+            t.reset_data();
+            t.switch.clear();
+            t.resident = None;
+        }
+    }
+
+    /// Indices of currently-empty tiles.
+    pub fn free_tiles(&self) -> Vec<usize> {
+        (0..self.tiles.len())
+            .filter(|&i| self.tiles[i].resident.is_none())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::BitstreamLibrary;
+
+    fn fabric() -> Fabric {
+        Fabric::new(OverlayConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn new_fabric_has_paper_class_mix() {
+        let f = fabric();
+        let large = f.tiles.iter().filter(|t| t.class == RegionClass::Large).count();
+        assert_eq!(large, 2); // ≈1/4 of 9
+        assert_eq!(f.tiles.len(), 9);
+    }
+
+    #[test]
+    fn load_bitstream_into_matching_class() {
+        let mut f = fabric();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let bs = lib.get(OperatorKind::Mul, RegionClass::Small).unwrap().clone();
+        f.load_bitstream(0, &bs).unwrap();
+        assert_eq!(f.tiles[0].resident, Some(OperatorKind::Mul));
+    }
+
+    #[test]
+    fn class_mismatch_rejected() {
+        let mut f = fabric();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let large_bs = lib.get(OperatorKind::Sin, RegionClass::Large).unwrap().clone();
+        // tile 0 is small; sin's bitstream targets large regions.
+        assert!(f.load_bitstream(0, &large_bs).is_err());
+        // tile 3 is large.
+        f.load_bitstream(3, &large_bs).unwrap();
+        assert_eq!(f.tiles[3].resident, Some(OperatorKind::Sin));
+    }
+
+    #[test]
+    fn out_of_range_tile_rejected() {
+        let mut f = fabric();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        assert!(f.load_bitstream(99, &bs).is_err());
+    }
+
+    #[test]
+    fn reset_data_keeps_residents() {
+        let mut f = fabric();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        f.load_bitstream(1, &bs).unwrap();
+        f.tiles[1].regs[0] = 42.0;
+        f.tiles[1].bram[0] = vec![1.0; 8];
+        f.reset_data();
+        assert_eq!(f.tiles[1].resident, Some(OperatorKind::Add));
+        assert_eq!(f.tiles[1].regs[0], 0.0);
+        assert!(f.tiles[1].bram[0].is_empty());
+    }
+
+    #[test]
+    fn free_tiles_tracks_residency() {
+        let mut f = fabric();
+        assert_eq!(f.free_tiles().len(), 9);
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        f.load_bitstream(2, &bs).unwrap();
+        assert_eq!(f.free_tiles().len(), 8);
+        f.clear_region(2).unwrap();
+        assert_eq!(f.free_tiles().len(), 9);
+    }
+
+    #[test]
+    fn inbox_take_and_park() {
+        let mut f = fabric();
+        f.tiles[4].park(Dir::W, 0, vec![1.0, 2.0]);
+        assert_eq!(f.tiles[4].take_inbox(Dir::W), Some(vec![1.0, 2.0]));
+        assert_eq!(f.tiles[4].take_inbox(Dir::W), None);
+    }
+
+    #[test]
+    fn park_replaces_same_port_and_drain_sorts_by_slot() {
+        let mut f = fabric();
+        f.tiles[4].park(Dir::W, 1, vec![1.0]);
+        f.tiles[4].park(Dir::W, 2, vec![2.0]); // replaces slot-1 stream on W
+        f.tiles[4].park(Dir::N, 0, vec![3.0]);
+        let drained = f.tiles[4].drain_inbox_by_slot();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].slot, 0);
+        assert_eq!(drained[0].data, vec![3.0]);
+        assert_eq!(drained[1].slot, 2);
+        assert!(f.tiles[4].inbox.is_empty());
+    }
+}

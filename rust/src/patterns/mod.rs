@@ -1,0 +1,476 @@
+//! The programmer-facing parallel-pattern API.
+//!
+//! This is the paper's programming model: *"Programmers access libraries of
+//! pre-synthesized parallel patterns such as map, reduce, foreach, and
+//! filter"* and compose them symbolically; the JIT turns the composition
+//! into controller instructions — compilation instead of synthesis.
+//!
+//! A [`Composition`] is a small dataflow expression over external input
+//! vectors. [`Composition::stages`] linearizes it into the stage pipeline
+//! the JIT places onto tiles; [`Composition::cache_key`] is the identity
+//! the coordinator's accelerator cache uses.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+
+use crate::bitstream::OperatorKind;
+use crate::error::{Error, Result};
+
+/// A pattern expression (linear pipelines + the branch diamond).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// External input vector, by channel index.
+    Input(u8),
+    /// Map one unary operator over the upstream stream.
+    Map { op: OperatorKind, x: Box<Expr> },
+    /// Element-wise binary operator; `y` must be `Input` or `Scalar`-like
+    /// (linear pipelines: one flowing operand).
+    Zip { op: OperatorKind, x: Box<Expr>, y: Box<Expr> },
+    /// Broadcast scalar (thresholds, α) — materialized as a 1-word channel.
+    Scalar(f32),
+    /// Reduce the upstream stream to a scalar sum.
+    Reduce { x: Box<Expr> },
+    /// Mask-filter: forward x where `x > t`, else 0.
+    FilterGt { t: f32, x: Box<Expr> },
+    /// Speculative if-then-else map: `x > t ? then_op(x) : else_op(x)`.
+    Branch { t: f32, then_op: OperatorKind, else_op: OperatorKind, x: Box<Expr> },
+}
+
+/// One linearized pipeline stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub op: OperatorKind,
+    pub sources: Vec<Source>,
+    /// True for the reduce stage (VecAcc instead of VecRun).
+    pub is_reduce: bool,
+}
+
+/// Where a stage operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Source {
+    /// DMA from external channel `chan`.
+    External { chan: u8 },
+    /// The output stream of a previous stage, delivered on-fabric.
+    Stage { index: usize, slot: u8 },
+    /// A broadcast scalar (materialized as a synthetic 1-word channel).
+    Scalar { value_bits: u32 },
+}
+
+impl Source {
+    pub fn scalar(v: f32) -> Source {
+        Source::Scalar { value_bits: v.to_bits() }
+    }
+    pub fn scalar_value(&self) -> Option<f32> {
+        match self {
+            Source::Scalar { value_bits } => Some(f32::from_bits(*value_bits)),
+            _ => None,
+        }
+    }
+}
+
+/// A validated composition: expression + workload length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Composition {
+    pub expr: Expr,
+    /// Elements per input vector.
+    pub n: usize,
+    /// Number of external input channels the expression references.
+    pub inputs: u8,
+}
+
+impl Composition {
+    /// Validate and wrap an expression for vectors of length `n`.
+    pub fn new(expr: Expr, n: usize) -> Result<Composition> {
+        if n == 0 {
+            return Err(Error::Pattern("workload length must be positive".into()));
+        }
+        let mut max_input: i32 = -1;
+        check(&expr, &mut max_input, false)?;
+        Ok(Composition { expr, n, inputs: (max_input + 1) as u8 })
+    }
+
+    /// Does the composition end in a scalar (reduce) result?
+    pub fn scalar_result(&self) -> bool {
+        matches!(self.expr, Expr::Reduce { .. })
+    }
+
+    /// Linearize into the stage pipeline the placer/codegen consume.
+    ///
+    /// Stages are emitted leaves-first; stage *i*'s flowing operand is
+    /// stage *i−1* (delivered on-fabric at slot 0) unless it reads directly
+    /// from an external channel. The branch diamond expands to
+    /// `[pred(Sub), then, else, Select]` with slot-tagged deliveries.
+    pub fn stages(&self) -> Vec<Stage> {
+        let mut out = Vec::new();
+        linearize(&self.expr, &mut out);
+        out
+    }
+
+    /// Operator multiset (for bitstream counting and placement).
+    pub fn ops(&self) -> Vec<OperatorKind> {
+        self.stages().iter().map(|s| s.op).collect()
+    }
+
+    /// Stable identity for the coordinator's accelerator cache.
+    pub fn cache_key(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        format!("{:?}|{}", self.expr, self.n).hash(&mut h);
+        h.finish()
+    }
+
+    // ---- convenience constructors (the "symbolic links" of the paper) ----
+
+    /// `sum(Σ a[i] * b[i])` — the headline VMUL&Reduce.
+    pub fn vmul_reduce(n: usize) -> Composition {
+        Composition::new(
+            Expr::Reduce {
+                x: Box::new(Expr::Zip {
+                    op: OperatorKind::Mul,
+                    x: Box::new(Expr::Input(0)),
+                    y: Box::new(Expr::Input(1)),
+                }),
+            },
+            n,
+        )
+        .expect("static expr")
+    }
+
+    /// `map(op, x)`.
+    pub fn map(op: OperatorKind, n: usize) -> Composition {
+        Composition::new(Expr::Map { op, x: Box::new(Expr::Input(0)) }, n).expect("static expr")
+    }
+
+    /// A chain of unary maps.
+    pub fn chain(ops: &[OperatorKind], n: usize) -> Result<Composition> {
+        if ops.is_empty() {
+            return Err(Error::Pattern("empty chain".into()));
+        }
+        let mut e = Expr::Input(0);
+        for &op in ops {
+            e = Expr::Map { op, x: Box::new(e) };
+        }
+        Composition::new(e, n)
+    }
+
+    /// `sum(x[i] where x[i] > t)` — filter → reduce.
+    pub fn filter_reduce(t: f32, n: usize) -> Composition {
+        Composition::new(
+            Expr::Reduce { x: Box::new(Expr::FilterGt { t, x: Box::new(Expr::Input(0)) }) },
+            n,
+        )
+        .expect("static expr")
+    }
+
+    /// `α·x + y` — the foreach/AXPY pattern.
+    pub fn axpy(alpha: f32, n: usize) -> Composition {
+        Composition::new(
+            Expr::Zip {
+                op: OperatorKind::Add,
+                x: Box::new(Expr::Zip {
+                    op: OperatorKind::Mul,
+                    x: Box::new(Expr::Input(0)),
+                    y: Box::new(Expr::Scalar(alpha)),
+                }),
+                y: Box::new(Expr::Input(1)),
+            },
+            n,
+        )
+        .expect("static expr")
+    }
+
+    /// Speculative conditional map.
+    pub fn branch(t: f32, then_op: OperatorKind, else_op: OperatorKind, n: usize) -> Composition {
+        Composition::new(
+            Expr::Branch { t, then_op, else_op, x: Box::new(Expr::Input(0)) },
+            n,
+        )
+        .expect("static expr")
+    }
+}
+
+fn check(e: &Expr, max_input: &mut i32, scalar_pos: bool) -> Result<()> {
+    match e {
+        Expr::Input(c) => {
+            *max_input = (*max_input).max(*c as i32);
+            Ok(())
+        }
+        Expr::Scalar(_) => {
+            if scalar_pos {
+                Ok(())
+            } else {
+                Err(Error::Pattern("scalar only allowed as a zip operand".into()))
+            }
+        }
+        Expr::Map { op, x } => {
+            if op.arity() != 1 {
+                return Err(Error::Pattern(format!("map needs unary op, got {}", op.name())));
+            }
+            check(x, max_input, false)
+        }
+        Expr::Zip { op, x, y } => {
+            if op.arity() != 2 {
+                return Err(Error::Pattern(format!("zip needs binary op, got {}", op.name())));
+            }
+            // linear pipeline restriction: y must be a leaf
+            match **y {
+                Expr::Input(_) | Expr::Scalar(_) => {}
+                _ => {
+                    return Err(Error::Pattern(
+                        "zip's second operand must be an input or scalar (linear pipelines)"
+                            .into(),
+                    ))
+                }
+            }
+            check(x, max_input, false)?;
+            check(y, max_input, true)
+        }
+        Expr::Reduce { x } | Expr::FilterGt { x, .. } => check(x, max_input, false),
+        Expr::Branch { then_op, else_op, x, .. } => {
+            for op in [then_op, else_op] {
+                if op.arity() != 1 {
+                    return Err(Error::Pattern(format!(
+                        "branch arms must be unary, got {}",
+                        op.name()
+                    )));
+                }
+            }
+            // branch input must be a leaf: the diamond fans the raw channel out
+            match **x {
+                Expr::Input(_) => check(x, max_input, false),
+                _ => Err(Error::Pattern(
+                    "branch input must be an external channel (diamond fan-out)".into(),
+                )),
+            }
+        }
+    }
+}
+
+/// Returns the index of the stage producing `e`'s stream.
+fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
+    match e {
+        Expr::Input(c) => {
+            // a bare input flowing into stage k is expressed as that
+            // stage's External source; emit a pseudo Route stage only if the
+            // whole expression is just an input (not a useful accelerator).
+            out.push(Stage {
+                op: OperatorKind::Route,
+                sources: vec![Source::External { chan: *c }],
+                is_reduce: false,
+            });
+            out.len() - 1
+        }
+        Expr::Scalar(v) => {
+            out.push(Stage {
+                op: OperatorKind::Route,
+                sources: vec![Source::scalar(*v)],
+                is_reduce: false,
+            });
+            out.len() - 1
+        }
+        Expr::Map { op, x } => {
+            let src = flowing_source(x, out);
+            out.push(Stage { op: *op, sources: vec![src], is_reduce: false });
+            out.len() - 1
+        }
+        Expr::Zip { op, x, y } => {
+            let xs = flowing_source(x, out);
+            let ys = leaf_source(y);
+            out.push(Stage { op: *op, sources: vec![xs, ys], is_reduce: false });
+            out.len() - 1
+        }
+        Expr::Reduce { x } => {
+            let src = flowing_source(x, out);
+            out.push(Stage {
+                op: OperatorKind::AccSum,
+                sources: vec![src],
+                is_reduce: true,
+            });
+            out.len() - 1
+        }
+        Expr::FilterGt { t, x } => {
+            let src = flowing_source(x, out);
+            out.push(Stage {
+                op: OperatorKind::FilterGt,
+                sources: vec![src, Source::scalar(*t)],
+                is_reduce: false,
+            });
+            out.len() - 1
+        }
+        Expr::Branch { t, then_op, else_op, x } => {
+            let chan = match **x {
+                Expr::Input(c) => c,
+                _ => unreachable!("validated: branch input is a channel"),
+            };
+            // pred = x - t  (pred > 0 ⇔ x > t)
+            out.push(Stage {
+                op: OperatorKind::Sub,
+                sources: vec![Source::External { chan }, Source::scalar(*t)],
+                is_reduce: false,
+            });
+            let pred = out.len() - 1;
+            out.push(Stage {
+                op: *then_op,
+                sources: vec![Source::External { chan }],
+                is_reduce: false,
+            });
+            let then_i = out.len() - 1;
+            out.push(Stage {
+                op: *else_op,
+                sources: vec![Source::External { chan }],
+                is_reduce: false,
+            });
+            let else_i = out.len() - 1;
+            out.push(Stage {
+                op: OperatorKind::Select,
+                sources: vec![
+                    Source::Stage { index: pred, slot: 0 },
+                    Source::Stage { index: then_i, slot: 1 },
+                    Source::Stage { index: else_i, slot: 2 },
+                ],
+                is_reduce: false,
+            });
+            out.len() - 1
+        }
+    }
+}
+
+/// Source for a stage whose flowing operand is `e`: either a direct
+/// external/scalar leaf, or the on-fabric stream of the stage producing it.
+fn flowing_source(e: &Expr, out: &mut Vec<Stage>) -> Source {
+    match e {
+        Expr::Input(c) => Source::External { chan: *c },
+        Expr::Scalar(v) => Source::scalar(*v),
+        other => {
+            let idx = linearize(other, out);
+            Source::Stage { index: idx, slot: 0 }
+        }
+    }
+}
+
+fn leaf_source(e: &Expr) -> Source {
+    match e {
+        Expr::Input(c) => Source::External { chan: *c },
+        Expr::Scalar(v) => Source::scalar(*v),
+        _ => unreachable!("validated: zip second operand is a leaf"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vmul_reduce_is_two_stages() {
+        let c = Composition::vmul_reduce(4096);
+        let stages = c.stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].op, OperatorKind::Mul);
+        assert_eq!(
+            stages[0].sources,
+            vec![Source::External { chan: 0 }, Source::External { chan: 1 }]
+        );
+        assert_eq!(stages[1].op, OperatorKind::AccSum);
+        assert!(stages[1].is_reduce);
+        assert_eq!(stages[1].sources, vec![Source::Stage { index: 0, slot: 0 }]);
+        assert!(c.scalar_result());
+        assert_eq!(c.inputs, 2);
+    }
+
+    #[test]
+    fn chain_linearizes_in_order() {
+        let c = Composition::chain(
+            &[OperatorKind::Abs, OperatorKind::Sqrt, OperatorKind::Log],
+            1024,
+        )
+        .unwrap();
+        let ops: Vec<_> = c.stages().iter().map(|s| s.op).collect();
+        assert_eq!(ops, vec![OperatorKind::Abs, OperatorKind::Sqrt, OperatorKind::Log]);
+        assert!(!c.scalar_result());
+    }
+
+    #[test]
+    fn filter_reduce_stages() {
+        let c = Composition::filter_reduce(0.5, 2048);
+        let stages = c.stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].op, OperatorKind::FilterGt);
+        assert_eq!(stages[0].sources[1].scalar_value(), Some(0.5));
+        assert!(stages[1].is_reduce);
+    }
+
+    #[test]
+    fn axpy_stages() {
+        let c = Composition::axpy(2.5, 512);
+        let stages = c.stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].op, OperatorKind::Mul);
+        assert_eq!(stages[0].sources[1].scalar_value(), Some(2.5));
+        assert_eq!(stages[1].op, OperatorKind::Add);
+        assert_eq!(stages[1].sources[1], Source::External { chan: 1 });
+        assert_eq!(c.inputs, 2);
+    }
+
+    #[test]
+    fn branch_expands_to_diamond() {
+        let c = Composition::branch(0.0, OperatorKind::Sqrt, OperatorKind::Square, 256);
+        let stages = c.stages();
+        assert_eq!(stages.len(), 4);
+        assert_eq!(stages[0].op, OperatorKind::Sub); // predicate
+        assert_eq!(stages[3].op, OperatorKind::Select);
+        let slots: Vec<u8> = stages[3]
+            .sources
+            .iter()
+            .map(|s| match s {
+                Source::Stage { slot, .. } => *slot,
+                _ => panic!("select sources must be stages"),
+            })
+            .collect();
+        assert_eq!(slots, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nonlinear_zip_rejected() {
+        // zip whose second operand is itself a map — not a linear pipeline
+        let e = Expr::Zip {
+            op: OperatorKind::Add,
+            x: Box::new(Expr::Input(0)),
+            y: Box::new(Expr::Map { op: OperatorKind::Abs, x: Box::new(Expr::Input(1)) }),
+        };
+        assert!(Composition::new(e, 64).is_err());
+    }
+
+    #[test]
+    fn map_with_binary_op_rejected() {
+        let e = Expr::Map { op: OperatorKind::Add, x: Box::new(Expr::Input(0)) };
+        assert!(Composition::new(e, 64).is_err());
+    }
+
+    #[test]
+    fn zero_length_rejected() {
+        assert!(Composition::new(Expr::Input(0), 0).is_err());
+    }
+
+    #[test]
+    fn bare_scalar_rejected() {
+        assert!(Composition::new(Expr::Scalar(1.0), 64).is_err());
+    }
+
+    #[test]
+    fn cache_key_distinguishes_compositions() {
+        let a = Composition::vmul_reduce(4096);
+        let b = Composition::vmul_reduce(1024);
+        let c = Composition::filter_reduce(0.0, 4096);
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_eq!(a.cache_key(), Composition::vmul_reduce(4096).cache_key());
+    }
+
+    #[test]
+    fn input_count_tracks_max_channel() {
+        let c = Composition::axpy(1.0, 8);
+        assert_eq!(c.inputs, 2);
+        let m = Composition::map(OperatorKind::Abs, 8);
+        assert_eq!(m.inputs, 1);
+    }
+}

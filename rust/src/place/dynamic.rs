@@ -1,0 +1,221 @@
+//! The dynamic placer: contiguous placement via the mesh's snake path.
+//!
+//! Because bitstreams can be downloaded into any class-compatible PR region
+//! at run time, the placer walks the snake order (a Hamiltonian path whose
+//! consecutive tiles are always adjacent) and greedily assigns pipeline
+//! stages to consecutive *compatible* tiles. A stage needing a large region
+//! may have to skip small tiles — the skipped tiles become pass-through
+//! hops, which the placer minimizes by scoring all snake windows.
+
+use crate::bitstream::{BitstreamLibrary, OperatorKind, RegionClass};
+use crate::error::{Error, Result};
+use crate::overlay::{Fabric, Mesh};
+
+use super::{Assignment, Placement};
+
+/// Contiguity-first placer for the dynamic overlay.
+#[derive(Debug, Clone, Default)]
+pub struct DynamicPlacer;
+
+impl DynamicPlacer {
+    /// Place a stage pipeline `ops` onto free tiles of `fabric`.
+    ///
+    /// Strategy: slide a window along the snake order over *free* tiles;
+    /// within a window, stages take the next class-compatible tile (small
+    /// ops accept large tiles; large ops require large tiles). The window
+    /// with the fewest skipped tiles wins; ties prefer the earliest window
+    /// (deterministic).
+    pub fn place(
+        &self,
+        fabric: &Fabric,
+        lib: &BitstreamLibrary,
+        ops: &[OperatorKind],
+    ) -> Result<Placement> {
+        if ops.is_empty() {
+            return Err(Error::Placement("empty pipeline".into()));
+        }
+        let snake = fabric.mesh.snake_order();
+        let free: Vec<usize> = snake
+            .iter()
+            .copied()
+            .filter(|&t| fabric.tiles[t].resident.is_none())
+            .collect();
+        if free.len() < ops.len() {
+            return Err(Error::Placement(format!(
+                "{} stages but only {} free tiles",
+                ops.len(),
+                free.len()
+            )));
+        }
+
+        // required class per stage
+        let needs: Vec<RegionClass> = ops
+            .iter()
+            .map(|&op| lib.preferred_class(op))
+            .collect::<Result<_>>()?;
+
+        let mut best: Option<(usize, Vec<usize>)> = None; // (skips, tiles)
+        for start in 0..free.len() {
+            if let Some(tiles) = try_window(fabric, &free[start..], &needs) {
+                let skips = window_skips(&fabric.mesh, &tiles);
+                if best.as_ref().map_or(true, |(s, _)| skips < *s) {
+                    best = Some((skips, tiles));
+                    if skips == 0 {
+                        break; // cannot do better
+                    }
+                }
+            }
+        }
+
+        let (_, tiles) = best.ok_or_else(|| {
+            Error::Placement(format!(
+                "no feasible placement for {} stages (large-region stages may exceed the {} large tiles)",
+                ops.len(),
+                fabric.cfg.large_tiles()
+            ))
+        })?;
+
+        Ok(Placement {
+            assignments: ops
+                .iter()
+                .zip(&tiles)
+                .map(|(&op, &tile)| Assignment {
+                    op,
+                    tile,
+                    class: fabric.tiles[tile].class,
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Assign stages to the earliest class-compatible tiles of `window`,
+/// preserving order. Returns the chosen tiles or None if infeasible.
+fn try_window(fabric: &Fabric, window: &[usize], needs: &[RegionClass]) -> Option<Vec<usize>> {
+    let mut tiles = Vec::with_capacity(needs.len());
+    let mut w = window.iter().copied();
+    for &need in needs {
+        loop {
+            let t = w.next()?;
+            let class = fabric.tiles[t].class;
+            let ok = match need {
+                RegionClass::Small => true, // small ops run in either class
+                RegionClass::Large => class == RegionClass::Large,
+            };
+            if ok {
+                tiles.push(t);
+                break;
+            }
+        }
+    }
+    Some(tiles)
+}
+
+/// Total tiles skipped between consecutive chosen stages (pass-throughs).
+fn window_skips(mesh: &Mesh, tiles: &[usize]) -> usize {
+    tiles
+        .windows(2)
+        .map(|w| mesh.manhattan(w[0], w[1]).saturating_sub(1))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverlayConfig;
+
+    fn setup() -> (Fabric, BitstreamLibrary) {
+        let cfg = OverlayConfig::default();
+        let lib = BitstreamLibrary::standard(&cfg);
+        (Fabric::new(cfg).unwrap(), lib)
+    }
+
+    #[test]
+    fn vmul_reduce_places_contiguously() {
+        let (f, lib) = setup();
+        let p = DynamicPlacer
+            .place(&f, &lib, &[OperatorKind::Mul, OperatorKind::AccSum])
+            .unwrap();
+        assert!(p.is_contiguous(&f.mesh));
+        assert!(p.is_injective());
+    }
+
+    #[test]
+    fn long_pipeline_follows_snake() {
+        let (f, lib) = setup();
+        let ops = [
+            OperatorKind::Abs,
+            OperatorKind::Square,
+            OperatorKind::Add,
+            OperatorKind::Mul,
+            OperatorKind::AccSum,
+        ];
+        let p = DynamicPlacer.place(&f, &lib, &ops).unwrap();
+        assert!(p.is_contiguous(&f.mesh), "{:?}", p.assignments);
+        assert!(p.is_injective());
+    }
+
+    #[test]
+    fn large_op_lands_on_large_tile() {
+        let (f, lib) = setup();
+        let p = DynamicPlacer
+            .place(&f, &lib, &[OperatorKind::Sqrt])
+            .unwrap();
+        assert_eq!(p.assignments[0].class, RegionClass::Large);
+        assert!(f.cfg.is_large_tile(p.assignments[0].tile));
+    }
+
+    #[test]
+    fn mixed_pipeline_minimizes_skips() {
+        let (f, lib) = setup();
+        // sqrt requires a large tile (3 or 7 on the default fabric); the
+        // placer should pick a window around it with minimal gaps.
+        let p = DynamicPlacer
+            .place(&f, &lib, &[OperatorKind::Mul, OperatorKind::Sqrt, OperatorKind::AccSum])
+            .unwrap();
+        assert!(p.is_injective());
+        assert!(
+            p.max_stage_gap(&f.mesh) <= 1,
+            "gap too large: {:?}",
+            p.assignments
+        );
+    }
+
+    #[test]
+    fn too_many_stages_fail() {
+        let (f, lib) = setup();
+        let ops = vec![OperatorKind::Add; 10]; // 10 stages, 9 tiles
+        let err = DynamicPlacer.place(&f, &lib, &ops).unwrap_err();
+        assert!(err.is_capacity());
+    }
+
+    #[test]
+    fn too_many_large_stages_fail() {
+        let (f, lib) = setup();
+        let ops = vec![OperatorKind::Sin; 3]; // only 2 large tiles
+        assert!(DynamicPlacer.place(&f, &lib, &ops).is_err());
+    }
+
+    #[test]
+    fn occupied_tiles_are_skipped() {
+        let (mut f, lib) = setup();
+        // occupy the first three snake tiles
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        for t in [0usize, 1, 2] {
+            f.load_bitstream(t, &bs).unwrap();
+        }
+        let p = DynamicPlacer
+            .place(&f, &lib, &[OperatorKind::Mul, OperatorKind::AccSum])
+            .unwrap();
+        for a in &p.assignments {
+            assert!(![0, 1, 2].contains(&a.tile));
+        }
+        assert!(p.is_contiguous(&f.mesh));
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        let (f, lib) = setup();
+        assert!(DynamicPlacer.place(&f, &lib, &[]).is_err());
+    }
+}

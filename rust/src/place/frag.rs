@@ -1,0 +1,122 @@
+//! Internal-fragmentation accounting (the T-FRAG study).
+//!
+//! The paper: *"We are using this configuration to study how such
+//! non-uniform organizations can reduce the internal fragmentation within
+//! the PR regions versus flexibility of mapping and performance."* Given a
+//! placement, these metrics quantify how much of each PR region's resource
+//! budget its resident operator leaves idle, and compare sizing policies.
+
+
+use crate::bitstream::{Footprint, RegionClass};
+
+use super::Placement;
+
+/// Fragmentation summary of one placement.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FragReport {
+    /// Mean fraction of region budget left unused, over placed tiles.
+    pub mean_internal: f64,
+    /// Worst single-tile fragmentation.
+    pub worst_internal: f64,
+    /// Placed tiles whose operator would have fit a Small region but
+    /// occupies a Large one (flexibility cost of non-uniform sizing).
+    pub oversized_tiles: usize,
+    /// Number of placed tiles.
+    pub tiles: usize,
+}
+
+/// Compute fragmentation of `placement` under the paper's class budgets.
+pub fn fragmentation(placement: &Placement) -> FragReport {
+    let mut report = FragReport::default();
+    let mut total = 0.0;
+    for a in &placement.assignments {
+        let fp = Footprint::for_operator(a.op);
+        let budget = a.class.budget();
+        let f = fp.fragmentation_in(&budget);
+        total += f;
+        report.worst_internal = report.worst_internal.max(f);
+        if a.class == RegionClass::Large && fp.fits(&RegionClass::Small.budget()) {
+            report.oversized_tiles += 1;
+        }
+        report.tiles += 1;
+    }
+    if report.tiles > 0 {
+        report.mean_internal = total / report.tiles as f64;
+    }
+    report
+}
+
+/// Compare a placement's fragmentation under the paper's **non-uniform**
+/// sizing against a hypothetical **uniform all-large** fabric (the naïve
+/// alternative the paper argues against): returns `(non_uniform, uniform)`.
+pub fn vs_uniform_large(placement: &Placement) -> (f64, f64) {
+    let non_uniform = fragmentation(placement).mean_internal;
+    let uniform: f64 = if placement.assignments.is_empty() {
+        0.0
+    } else {
+        placement
+            .assignments
+            .iter()
+            .map(|a| {
+                Footprint::for_operator(a.op).fragmentation_in(&RegionClass::Large.budget())
+            })
+            .sum::<f64>()
+            / placement.assignments.len() as f64
+    };
+    (non_uniform, uniform)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::OperatorKind;
+    use crate::place::Assignment;
+
+    fn place(ops: &[(OperatorKind, RegionClass)]) -> Placement {
+        Placement {
+            assignments: ops
+                .iter()
+                .enumerate()
+                .map(|(i, &(op, class))| Assignment { op, tile: i, class })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn empty_placement_zero_frag() {
+        let r = fragmentation(&Placement::default());
+        assert_eq!(r.tiles, 0);
+        assert_eq!(r.mean_internal, 0.0);
+    }
+
+    #[test]
+    fn small_ops_in_small_regions_fragment_less_than_in_large() {
+        let tight = place(&[(OperatorKind::Mul, RegionClass::Small)]);
+        let loose = place(&[(OperatorKind::Mul, RegionClass::Large)]);
+        assert!(
+            fragmentation(&tight).mean_internal < fragmentation(&loose).mean_internal
+        );
+        assert_eq!(fragmentation(&loose).oversized_tiles, 1);
+        assert_eq!(fragmentation(&tight).oversized_tiles, 0);
+    }
+
+    #[test]
+    fn non_uniform_beats_uniform_for_mixed_pipelines() {
+        // the paper's configuration argument: mixed pipelines fragment less
+        // when small ops live in small regions.
+        let p = place(&[
+            (OperatorKind::Mul, RegionClass::Small),
+            (OperatorKind::AccSum, RegionClass::Small),
+            (OperatorKind::Sqrt, RegionClass::Large),
+        ]);
+        let (non_uniform, uniform) = vs_uniform_large(&p);
+        assert!(non_uniform < uniform, "{non_uniform} !< {uniform}");
+    }
+
+    #[test]
+    fn transcendental_in_large_region_is_snug() {
+        let p = place(&[(OperatorKind::Log, RegionClass::Large)]);
+        let r = fragmentation(&p);
+        assert!(r.mean_internal < 0.15, "log should nearly fill a large region");
+    }
+}

@@ -1,0 +1,62 @@
+//! Operator placement onto PR tiles.
+//!
+//! [`dynamic`] is the paper's contribution: because any bitstream can be
+//! downloaded into any (class-compatible) tile at run time, the placer can
+//! always choose **contiguous** tiles, keeping pipelines fused and
+//! pass-through penalties at zero. [`static_`] models the original/static
+//! overlay where operator positions are frozen at synthesis time — the
+//! three Fig. 2 scheduling scenarios differ precisely in how many
+//! pass-through tiles separate producer from consumer. [`frag`] measures
+//! the internal fragmentation of a placement (the T-FRAG study).
+
+pub mod dynamic;
+pub mod frag;
+pub mod static_;
+
+pub use dynamic::DynamicPlacer;
+pub use static_::{StaticScenario, StaticPlacer};
+
+
+use crate::bitstream::{OperatorKind, RegionClass};
+
+/// One operator assigned to one tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub op: OperatorKind,
+    pub tile: usize,
+    pub class: RegionClass,
+}
+
+/// A complete placement: assignments in dataflow (stage) order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Placement {
+    pub assignments: Vec<Assignment>,
+}
+
+impl Placement {
+    /// Tile of stage `i`.
+    pub fn tile_of(&self, stage: usize) -> Option<usize> {
+        self.assignments.get(stage).map(|a| a.tile)
+    }
+
+    /// Max pass-through distance between consecutive stages (0 = fully
+    /// contiguous, the dynamic overlay's invariant).
+    pub fn max_stage_gap(&self, mesh: &crate::overlay::Mesh) -> usize {
+        self.assignments
+            .windows(2)
+            .map(|w| mesh.manhattan(w[0].tile, w[1].tile).saturating_sub(1))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Are all consecutive stages mesh-adjacent?
+    pub fn is_contiguous(&self, mesh: &crate::overlay::Mesh) -> bool {
+        self.max_stage_gap(mesh) == 0
+    }
+
+    /// No two stages share a tile.
+    pub fn is_injective(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        self.assignments.iter().all(|a| seen.insert(a.tile))
+    }
+}

@@ -1,0 +1,144 @@
+//! Static-overlay placement: the Fig. 2 scheduling scenarios.
+//!
+//! In the original (static) overlay, operator positions are fixed when the
+//! overlay is synthesized; the scheduler can only choose *which* fixed
+//! instance to use. Figure 2 maps VMUL&Reduce onto a 3×3 static overlay in
+//! three scenarios that differ in the number of pass-through tiles between
+//! the multiplier and the adder:
+//!
+//! * **S1** — producer and consumer adjacent (0 pass-through): the lucky
+//!   schedule, equal in dataflow to the dynamic overlay's placement;
+//! * **S2** — one pass-through tile between them;
+//! * **S3** — two pass-through tiles (opposite corners of the mesh region).
+//!
+//! The static overlay also pays store-and-forward forwarding at each
+//! pass-through tile (only border tiles had stream BRAMs in the original
+//! design), which is what makes Fig. 3's static series degrade with hop
+//! count.
+
+
+use crate::bitstream::OperatorKind;
+use crate::error::{Error, Result};
+use crate::overlay::Mesh;
+
+use super::{Assignment, Placement};
+use crate::bitstream::RegionClass;
+
+/// The three Fig. 2 scheduling scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StaticScenario {
+    /// Adjacent producer/consumer — 0 pass-through tiles.
+    S1,
+    /// 1 pass-through tile.
+    S2,
+    /// 2 pass-through tiles.
+    S3,
+}
+
+impl StaticScenario {
+    pub const ALL: [StaticScenario; 3] = [StaticScenario::S1, StaticScenario::S2, StaticScenario::S3];
+
+    /// Pass-through tiles between producer and consumer in this scenario.
+    pub fn pass_throughs(self) -> usize {
+        match self {
+            StaticScenario::S1 => 0,
+            StaticScenario::S2 => 1,
+            StaticScenario::S3 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StaticScenario::S1 => "static-s1",
+            StaticScenario::S2 => "static-s2",
+            StaticScenario::S3 => "static-s3",
+        }
+    }
+}
+
+/// Placer for the static overlay: positions are frozen; the scenario picks
+/// which frozen instances serve a 2-stage producer→consumer pattern.
+#[derive(Debug, Clone)]
+pub struct StaticPlacer {
+    pub scenario: StaticScenario,
+}
+
+impl StaticPlacer {
+    pub fn new(scenario: StaticScenario) -> StaticPlacer {
+        StaticPlacer { scenario }
+    }
+
+    /// Fixed operator positions for a producer/consumer pair on a 3×3 (or
+    /// larger) mesh, reproducing Fig. 2's organization:
+    ///
+    /// * S1: tiles (0, 1) — adjacent;
+    /// * S2: tiles (0, 2) — tile 1 passes through;
+    /// * S3: tiles (0, 6) on the snake — tiles 1, 2 (S-corner) pass through
+    ///   via the east edge, i.e. two pass-through tiles on the route.
+    pub fn place_pair(
+        &self,
+        mesh: &Mesh,
+        producer: OperatorKind,
+        consumer: OperatorKind,
+    ) -> Result<Placement> {
+        if mesh.rows < 3 || mesh.cols < 3 {
+            return Err(Error::Placement(
+                "static scenarios are defined on ≥3×3 meshes".into(),
+            ));
+        }
+        let (p, c) = match self.scenario {
+            StaticScenario::S1 => (mesh.index(0, 0), mesh.index(0, 1)),
+            StaticScenario::S2 => (mesh.index(0, 0), mesh.index(0, 2)),
+            StaticScenario::S3 => (mesh.index(0, 0), mesh.index(1, 2)),
+        };
+        Ok(Placement {
+            assignments: vec![
+                Assignment { op: producer, tile: p, class: RegionClass::Small },
+                Assignment { op: consumer, tile: c, class: RegionClass::Small },
+            ],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh() -> Mesh {
+        Mesh::new(3, 3)
+    }
+
+    #[test]
+    fn scenario_pass_through_counts() {
+        assert_eq!(StaticScenario::S1.pass_throughs(), 0);
+        assert_eq!(StaticScenario::S2.pass_throughs(), 1);
+        assert_eq!(StaticScenario::S3.pass_throughs(), 2);
+    }
+
+    #[test]
+    fn placements_realize_declared_pass_throughs() {
+        for s in StaticScenario::ALL {
+            let p = StaticPlacer::new(s)
+                .place_pair(&mesh(), OperatorKind::Mul, OperatorKind::AccSum)
+                .unwrap();
+            let gap = mesh().manhattan(p.assignments[0].tile, p.assignments[1].tile) - 1;
+            assert_eq!(gap, s.pass_throughs(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn s1_matches_dynamic_contiguity() {
+        let p = StaticPlacer::new(StaticScenario::S1)
+            .place_pair(&mesh(), OperatorKind::Mul, OperatorKind::AccSum)
+            .unwrap();
+        assert!(p.is_contiguous(&mesh()));
+    }
+
+    #[test]
+    fn small_mesh_rejected() {
+        let m = Mesh::new(2, 2);
+        assert!(StaticPlacer::new(StaticScenario::S1)
+            .place_pair(&m, OperatorKind::Mul, OperatorKind::AccSum)
+            .is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Mesh stream routing: shortest N-E-S-W paths between placed operators.
+//!
+//! The JIT must connect producer tiles to consumer tiles. Adjacent tiles
+//! connect directly (the dynamic overlay's goal — zero pass-through);
+//! non-adjacent tiles route through intermediate tiles configured as
+//! **bypass** lanes. The router finds a shortest path that avoids tiles
+//! hosting *other* operators' consume ports, then emits the interconnect
+//! instructions that realize it.
+
+use std::collections::{HashMap, VecDeque};
+
+
+use crate::error::{Error, Result};
+use crate::isa::{Dir, Instr, Opcode};
+use crate::overlay::Mesh;
+
+/// A realized route: the producer's exit direction plus the bypass chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    pub from: usize,
+    pub to: usize,
+    /// Tiles strictly between `from` and `to`, in traversal order.
+    pub via: Vec<usize>,
+    /// Direction the stream leaves `from` on.
+    pub out_dir: Dir,
+    /// Direction the stream arrives at `to` on (the consumer's in-port).
+    pub in_dir: Dir,
+}
+
+impl Route {
+    /// Pass-through tile count — Fig. 2's penalty metric.
+    pub fn hops(&self) -> usize {
+        self.via.len()
+    }
+
+    /// Interconnect instructions realizing this route: one bypass per
+    /// intermediate tile, `set.out` at the producer, `set.in` at the
+    /// consumer. (`pr.connect` is the placer's job.)
+    pub fn interconnect_instrs(&self, mesh: &Mesh) -> Result<Vec<Instr>> {
+        let mut out = Vec::with_capacity(2 + self.via.len());
+        out.push(Instr::op(set_out_op(self.out_dir), self.from as u8));
+
+        let mut prev = self.from;
+        let mut dir = self.out_dir;
+        for &mid in &self.via {
+            let arrive = mesh
+                .direction(prev, mid)
+                .ok_or(Error::Routing { from: prev, to: mid })?
+                .opposite();
+            // leave toward the next tile in the chain
+            let next = self
+                .via
+                .iter()
+                .copied()
+                .skip_while(|&t| t != mid)
+                .nth(1)
+                .unwrap_or(self.to);
+            let leave = mesh
+                .direction(mid, next)
+                .ok_or(Error::Routing { from: mid, to: next })?;
+            let op = Opcode::bypass_for(arrive, leave).ok_or(Error::Routing {
+                from: mid,
+                to: next,
+            })?;
+            out.push(Instr::op(op, mid as u8));
+            prev = mid;
+            dir = leave;
+        }
+        let _ = dir;
+        out.push(Instr::op(set_in_op(self.in_dir), self.to as u8));
+        Ok(out)
+    }
+}
+
+fn set_out_op(d: Dir) -> Opcode {
+    match d {
+        Dir::N => Opcode::SetOutN,
+        Dir::E => Opcode::SetOutE,
+        Dir::S => Opcode::SetOutS,
+        Dir::W => Opcode::SetOutW,
+    }
+}
+
+fn set_in_op(d: Dir) -> Opcode {
+    match d {
+        Dir::N => Opcode::SetInN,
+        Dir::E => Opcode::SetInE,
+        Dir::S => Opcode::SetInS,
+        Dir::W => Opcode::SetInW,
+    }
+}
+
+/// BFS shortest path from `from` to `to` over the mesh, treating every tile
+/// in `blocked` as unusable for pass-through (they host consuming
+/// operators). `from`/`to` themselves are always usable.
+pub fn shortest_route(
+    mesh: &Mesh,
+    from: usize,
+    to: usize,
+    blocked: &[bool],
+) -> Result<Route> {
+    if from == to {
+        return Err(Error::Routing { from, to });
+    }
+    let mut prev: HashMap<usize, usize> = HashMap::new();
+    let mut q = VecDeque::from([from]);
+    while let Some(cur) = q.pop_front() {
+        if cur == to {
+            break;
+        }
+        for d in Dir::ALL {
+            if let Some(n) = mesh.neighbor(cur, d) {
+                if prev.contains_key(&n) || n == from {
+                    continue;
+                }
+                if n != to && blocked.get(n).copied().unwrap_or(false) {
+                    continue;
+                }
+                prev.insert(n, cur);
+                q.push_back(n);
+            }
+        }
+    }
+    if !prev.contains_key(&to) {
+        return Err(Error::Routing { from, to });
+    }
+    // reconstruct
+    let mut path = vec![to];
+    let mut cur = to;
+    while cur != from {
+        cur = prev[&cur];
+        path.push(cur);
+    }
+    path.reverse();
+
+    let out_dir = mesh.direction(path[0], path[1]).unwrap();
+    let in_dir = mesh
+        .direction(path[path.len() - 2], path[path.len() - 1])
+        .unwrap()
+        .opposite();
+    Ok(Route {
+        from,
+        to,
+        via: path[1..path.len() - 1].to_vec(),
+        out_dir,
+        in_dir,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh() -> Mesh {
+        Mesh::new(3, 3)
+    }
+
+    #[test]
+    fn adjacent_route_has_no_hops() {
+        let r = shortest_route(&mesh(), 0, 1, &[false; 9]).unwrap();
+        assert_eq!(r.hops(), 0);
+        assert_eq!(r.out_dir, Dir::E);
+        assert_eq!(r.in_dir, Dir::W);
+    }
+
+    #[test]
+    fn corner_to_corner_is_manhattan() {
+        let r = shortest_route(&mesh(), 0, 8, &[false; 9]).unwrap();
+        assert_eq!(r.hops(), 3); // manhattan 4 → 3 intermediate tiles
+    }
+
+    #[test]
+    fn blocked_tiles_are_avoided() {
+        let mut blocked = [false; 9];
+        blocked[1] = true; // block the straight path 0→1→2
+        blocked[4] = true;
+        let r = shortest_route(&mesh(), 0, 2, &blocked).unwrap();
+        assert!(!r.via.contains(&1));
+        assert!(!r.via.contains(&4));
+        // forced the long way round: 0→3→6→7→8→5→2 ⇒ 5 pass-through tiles
+        assert_eq!(r.hops(), 5);
+    }
+
+    #[test]
+    fn unroutable_when_fully_blocked() {
+        let mut blocked = [true; 9];
+        blocked[0] = false;
+        blocked[8] = false;
+        assert!(shortest_route(&mesh(), 0, 8, &blocked).is_err());
+    }
+
+    #[test]
+    fn self_route_rejected() {
+        assert!(shortest_route(&mesh(), 4, 4, &[false; 9]).is_err());
+    }
+
+    #[test]
+    fn route_instrs_adjacent() {
+        let m = mesh();
+        let r = shortest_route(&m, 0, 1, &[false; 9]).unwrap();
+        let instrs = r.interconnect_instrs(&m).unwrap();
+        assert_eq!(instrs.len(), 2);
+        assert_eq!(instrs[0].op, Opcode::SetOutE);
+        assert_eq!(instrs[0].tile, 0);
+        assert_eq!(instrs[1].op, Opcode::SetInW);
+        assert_eq!(instrs[1].tile, 1);
+    }
+
+    #[test]
+    fn route_instrs_with_passthrough() {
+        let m = mesh();
+        let r = shortest_route(&m, 0, 2, &[false; 9]).unwrap();
+        assert_eq!(r.via, vec![1]);
+        let instrs = r.interconnect_instrs(&m).unwrap();
+        assert_eq!(instrs.len(), 3);
+        assert_eq!(instrs[1].op, Opcode::BypassWE);
+        assert_eq!(instrs[1].tile, 1);
+    }
+
+    #[test]
+    fn bfs_path_is_shortest_and_legal() {
+        // property-style sweep over all pairs on a 4×4 mesh
+        let m = Mesh::new(4, 4);
+        let blocked = vec![false; 16];
+        for from in 0..16 {
+            for to in 0..16 {
+                if from == to {
+                    continue;
+                }
+                let r = shortest_route(&m, from, to, &blocked).unwrap();
+                assert_eq!(r.hops() + 1, m.manhattan(from, to), "{from}->{to}");
+                // every consecutive pair adjacent
+                let mut chain = vec![from];
+                chain.extend(&r.via);
+                chain.push(to);
+                for w in chain.windows(2) {
+                    assert_eq!(m.manhattan(w[0], w[1]), 1);
+                }
+            }
+        }
+    }
+}

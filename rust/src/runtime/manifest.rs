@@ -1,0 +1,201 @@
+//! The AOT artifact manifest (written by `python/compile/aot.py`).
+//!
+//! Two files are emitted at build time: `manifest.json` (human/tooling) and
+//! `manifest.tsv`, the line-oriented form this module parses — the runtime
+//! builds fully offline and carries no JSON dependency. Format:
+//!
+//! ```text
+//! # jit-overlay artifact manifest v1
+//! headline<TAB>vmul_reduce_n4096
+//! paper_n<TAB>4096
+//! variant<TAB><name>\t<pattern>\t<file>\t<in specs>\t<out specs>\t<sha256>
+//! ```
+//!
+//! where a spec list is `;`-separated `shape:dtype` entries, shapes being
+//! `x`-separated dims (`4096:f32`, `2x8:f32`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Tensor shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<TensorSpec> {
+        let (shape_s, dtype) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Parse(format!("bad tensor spec `{s}`")))?;
+        let shape = shape_s
+            .split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|_| Error::Parse(format!("bad dim `{d}` in `{s}`")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { shape, dtype: dtype.to_string() })
+    }
+
+    fn parse_list(s: &str) -> Result<Vec<TensorSpec>> {
+        if s.is_empty() {
+            return Ok(Vec::new());
+        }
+        s.split(';').map(TensorSpec::parse).collect()
+    }
+}
+
+/// One AOT-compiled variant.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub name: String,
+    pub pattern: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub file: String,
+    pub sha256: String,
+}
+
+/// The manifest document.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub headline: String,
+    pub paper_n: usize,
+    pub variants: Vec<VariantEntry>,
+}
+
+impl Manifest {
+    /// Parse the TSV manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut headline = String::new();
+        let mut paper_n = 0usize;
+        let mut variants = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            match fields[0] {
+                "headline" if fields.len() == 2 => headline = fields[1].to_string(),
+                "paper_n" if fields.len() == 2 => {
+                    paper_n = fields[1]
+                        .parse()
+                        .map_err(|_| Error::Parse(format!("line {}: bad paper_n", lineno + 1)))?
+                }
+                "variant" if fields.len() == 7 => variants.push(VariantEntry {
+                    name: fields[1].to_string(),
+                    pattern: fields[2].to_string(),
+                    file: fields[3].to_string(),
+                    inputs: TensorSpec::parse_list(fields[4])?,
+                    outputs: TensorSpec::parse_list(fields[5])?,
+                    sha256: fields[6].to_string(),
+                }),
+                other => {
+                    return Err(Error::Parse(format!(
+                        "line {}: unrecognized record `{other}` ({} fields)",
+                        lineno + 1,
+                        fields.len()
+                    )))
+                }
+            }
+        }
+        if headline.is_empty() || variants.is_empty() {
+            return Err(Error::Parse("manifest missing headline or variants".into()));
+        }
+        Ok(Manifest { headline, paper_n, variants })
+    }
+
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Index variants by name.
+    pub fn by_name(&self) -> HashMap<&str, &VariantEntry> {
+        self.variants.iter().map(|v| (v.name.as_str(), v)).collect()
+    }
+
+    /// Find a variant by name.
+    pub fn get(&self, name: &str) -> Result<&VariantEntry> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no variant `{name}` in manifest")))
+    }
+
+    /// Absolute path of a variant's HLO file.
+    pub fn hlo_path(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        Ok(dir.join(&self.get(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# jit-overlay artifact manifest v1
+headline\tvmul_reduce_n4096
+paper_n\t4096
+variant\tvmul_reduce_n4096\tvmul_reduce\tvmul_reduce_n4096.hlo.txt\t4096:f32;4096:f32\t1:f32\tdeadbeef
+variant\tmap_sqrt_n4096\tmap\tmap_sqrt_n4096.hlo.txt\t4096:f32\t4096:f32\tcafe
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.headline, "vmul_reduce_n4096");
+        assert_eq!(m.paper_n, 4096);
+        assert_eq!(m.variants.len(), 2);
+        let v = m.get("vmul_reduce_n4096").unwrap();
+        assert_eq!(v.inputs.len(), 2);
+        assert_eq!(v.inputs[0].elements(), 4096);
+        assert_eq!(v.outputs[0].elements(), 1);
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.by_name().len(), 2);
+    }
+
+    #[test]
+    fn multidim_spec() {
+        let t = TensorSpec::parse("2x8:f32").unwrap();
+        assert_eq!(t.shape, vec![2, 8]);
+        assert_eq!(t.elements(), 16);
+    }
+
+    #[test]
+    fn bad_records_rejected() {
+        assert!(Manifest::parse("headline\tx\nvariant\tonly\tthree\tfields\n").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("paper_n\tnotanumber\nheadline\tx\n").is_err());
+        assert!(TensorSpec::parse("nodtype").is_err());
+        assert!(TensorSpec::parse("ax2:f32").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration sanity: if artifacts/ exists, it must parse.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.variants.len() >= 10);
+            let headline = m.headline.clone();
+            assert!(m.get(&headline).is_ok());
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! The PJRT runtime: loads AOT-compiled HLO artifacts and executes them on
+//! the request path.
+//!
+//! Python (JAX + Pallas) runs **once** at build time (`make artifacts`);
+//! this module is the only thing that touches the results. HLO *text* is
+//! the interchange format (jax ≥ 0.5 emits 64-bit instruction ids in its
+//! protos, which xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids — see /opt/xla-example/README.md).
+//!
+//! Executables are compiled lazily and cached per variant name; the cache
+//! is the Rust analogue of the overlay's bitstream residency — compiling an
+//! HLO module is our "synthesis", running it is "execution", and the cache
+//! is what makes JIT assembly cheap on repeat requests.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, TensorSpec, VariantEntry};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+
+/// A loaded PJRT runtime bound to one artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest in `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(&self.dir, name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-UTF8 path {path:?}")))?,
+        )
+        .map_err(|e| Error::Artifact(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute variant `name` on f32 input vectors.
+    ///
+    /// Inputs must match the manifest's declared shapes (rank-1 f32).
+    /// Returns the artifact's outputs as f32 vectors.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.get(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (k, (spec, v)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if spec.elements() != v.len() {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {k} needs {} elements, got {}",
+                    spec.elements(),
+                    v.len()
+                )));
+            }
+            if spec.dtype != "f32" {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {k} dtype {} unsupported by the f32 host path",
+                    spec.dtype
+                )));
+            }
+        }
+
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| xla::Literal::vec1(v))
+            .collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("readback {name}: {e}")))?;
+
+        // artifacts are lowered with return_tuple=True
+        let parts: Vec<xla::Literal> = if entry.outputs.len() == 1 {
+            vec![lit
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?]
+        } else {
+            lit.to_tuple()
+                .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?
+        };
+        parts
+            .into_iter()
+            .map(|p| {
+                p.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("readback {name}: {e}")))
+            })
+            .collect()
+    }
+
+    /// Execute and return the single scalar a reduce-style variant yields.
+    pub fn execute_scalar(&self, name: &str, inputs: &[Vec<f32>]) -> Result<f32> {
+        let outs = self.execute(name, inputs)?;
+        outs.first()
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| Error::Runtime(format!("{name}: empty output")))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("variants", &self.manifest.variants.len())
+            .field("cached", &self.cached())
+            .finish()
+    }
+}
+
+/// Default artifacts directory (crate-root `artifacts/`, overridable with
+/// `$JIT_OVERLAY_ARTIFACTS`).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("JIT_OVERLAY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.tsv").exists() {
+            Some(Runtime::new(dir).unwrap())
+        } else {
+            None // artifacts not built in this environment
+        }
+    }
+
+    #[test]
+    fn headline_artifact_computes_dot_product() {
+        let Some(rt) = runtime() else { return };
+        let n = rt.manifest().paper_n;
+        let a: Vec<f32> = (0..n).map(|i| (i % 37) as f32 / 7.0).collect();
+        let b: Vec<f32> = (0..n).map(|i| 0.25 + (i % 11) as f32).collect();
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let name = rt.manifest().headline.clone();
+        let got = rt.execute_scalar(&name, &[a, b]).unwrap();
+        assert!(
+            ((got as f64 - want) / want).abs() < 1e-5,
+            "got {got}, want {want}"
+        );
+    }
+
+    #[test]
+    fn executable_cache_hits_on_second_call() {
+        let Some(rt) = runtime() else { return };
+        let name = rt.manifest().headline.clone();
+        let n = rt.manifest().paper_n;
+        let z = vec![0.0f32; n];
+        rt.execute_scalar(&name, &[z.clone(), z.clone()]).unwrap();
+        assert_eq!(rt.cached(), 1);
+        rt.execute_scalar(&name, &[z.clone(), z]).unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(rt) = runtime() else { return };
+        let name = rt.manifest().headline.clone();
+        assert!(rt.execute(&name, &[vec![0.0; 8]]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let Some(rt) = runtime() else { return };
+        let name = rt.manifest().headline.clone();
+        assert!(rt
+            .execute(&name, &[vec![0.0; 8], vec![0.0; 8]])
+            .is_err());
+    }
+
+    #[test]
+    fn map_variant_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        if rt.manifest().get("map_sqrt_n4096").is_err() {
+            return;
+        }
+        let x: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let out = rt.execute("map_sqrt_n4096", &[x.clone()]).unwrap();
+        assert_eq!(out[0].len(), 4096);
+        for (i, (got, want)) in out[0].iter().zip(x.iter().map(|v| v.sqrt())).enumerate() {
+            assert!((got - want).abs() < 1e-4, "i={i}: {got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! The 660 MHz ARM (Zedboard) software reference model.
+//!
+//! The paper runs the same VMUL&Reduce on the Zynq's ARM core as a software
+//! baseline. We model a scalar, non-vectorized loop — the paper's framing
+//! is software written by non-hardware-experts, compiled without NEON
+//! auto-vectorization (the common -O2 soft-FPU result on that era's
+//! toolchains): per element, two loads, a multiply-accumulate, and loop
+//! control, dominated by cache-line fills for streaming operands.
+//!
+//! Calibration: `cycles_per_element` defaults to 24 — consistent with
+//! ~27 µs/KB measured for scalar dot products on Zynq-7000 class cores.
+//! The workload's values are *computed for real* by [`crate::exec`]'s CPU
+//! backend; this module only prices the time.
+
+
+use crate::config::ClockConfig;
+
+use super::TimingBreakdown;
+
+/// ARM software cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmModel {
+    /// Amortized cycles per streamed element per operator stage.
+    pub cycles_per_element: f64,
+    /// Fixed call/setup overhead in cycles.
+    pub setup_cycles: f64,
+}
+
+impl Default for ArmModel {
+    fn default() -> Self {
+        ArmModel { cycles_per_element: 24.0, setup_cycles: 2_000.0 }
+    }
+}
+
+impl ArmModel {
+    /// Price a `stages`-deep pattern over `n` elements.
+    ///
+    /// Software touches DDR directly, so there is no fabric DMA term; the
+    /// memory traffic cost is folded into `cycles_per_element`.
+    pub fn pattern_time(&self, clocks: &ClockConfig, stages: usize, n: usize) -> TimingBreakdown {
+        let hz = clocks.arm_hz;
+        let compute = self.cycles_per_element * stages.max(1) as f64 * n as f64;
+        TimingBreakdown {
+            transfer_s: 0.0,
+            fill_s: self.setup_cycles / hz,
+            stream_s: compute / hz,
+            hop_s: 0.0,
+            control_s: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_16kb_is_sub_millisecond_but_slow() {
+        let m = ArmModel::default();
+        let t = m.pattern_time(&ClockConfig::default(), 1, 4096);
+        // ~150 µs — the slowest series of Fig. 3 at 16 KB
+        assert!(t.total() > 100e-6 && t.total() < 400e-6, "got {}", t.total());
+    }
+
+    #[test]
+    fn scales_linearly_in_n() {
+        let m = ArmModel::default();
+        let c = ClockConfig::default();
+        let t1 = m.pattern_time(&c, 1, 1024).stream_s;
+        let t4 = m.pattern_time(&c, 1, 4096).stream_s;
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deeper_patterns_cost_more() {
+        let m = ArmModel::default();
+        let c = ClockConfig::default();
+        assert!(m.pattern_time(&c, 3, 4096).total() > m.pattern_time(&c, 1, 4096).total());
+    }
+}

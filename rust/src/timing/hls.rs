@@ -1,0 +1,82 @@
+//! The fully-custom HLS module model.
+//!
+//! Fig. 3's fifth hardware target is a Vivado-HLS-generated custom
+//! accelerator for the same VMUL&Reduce. The paper notes it *"was not
+//! optimized, to reflect a closer performance to designs built with HLS by
+//! non hardware experts."* Model: a fused II=1 multiply-accumulate pipeline
+//! at the fabric clock with a short fill, paying the same DMA transfer as
+//! the overlays, derated by an efficiency factor for the un-optimized
+//! interface (no burst coalescing, conservative pipelining).
+
+
+use crate::config::OverlayConfig;
+
+use super::{transfer, TimingBreakdown};
+
+/// Custom-HLS cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct HlsModel {
+    /// Pipeline depth of the fused datapath (fill cycles).
+    pub fill_cycles: f64,
+    /// Achieved initiation interval (1.0 = perfect; un-optimized HLS
+    /// interfaces commonly stall to ~1.5–2 on AXI reads).
+    pub initiation_interval: f64,
+}
+
+impl Default for HlsModel {
+    fn default() -> Self {
+        HlsModel { fill_cycles: 12.0, initiation_interval: 1.4 }
+    }
+}
+
+impl HlsModel {
+    /// Price VMUL&Reduce-shaped patterns (`input_streams` operands, fused
+    /// single-pass datapath) over `n` elements.
+    pub fn pattern_time(
+        &self,
+        cfg: &OverlayConfig,
+        input_streams: usize,
+        n: usize,
+    ) -> TimingBreakdown {
+        let hz = cfg.clocks.fabric_hz;
+        TimingBreakdown {
+            transfer_s: transfer::pattern_transfer_seconds(&cfg.clocks, input_streams, n),
+            fill_s: self.fill_cycles / hz,
+            stream_s: n as f64 * self.initiation_interval / hz,
+            hop_s: 0.0,
+            control_s: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unoptimized_hls_close_to_dynamic_overlay() {
+        // Fig. 3: custom HLS and the dynamic overlay are the two fastest
+        // series, within ~2× of each other.
+        let cfg = OverlayConfig::default();
+        let hls = HlsModel::default().pattern_time(&cfg, 2, 4096).total();
+        let dyn_ = super::super::overlay::pipeline_time(
+            &cfg,
+            &super::super::overlay::vmul_reduce_ops(),
+            4096,
+            0,
+            16,
+            2,
+            super::super::overlay::ForwardingMode::Pipelined,
+        )
+        .total();
+        let ratio = hls / dyn_;
+        assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn transfer_dominates_compute_at_16kb() {
+        let cfg = OverlayConfig::default();
+        let t = HlsModel::default().pattern_time(&cfg, 2, 4096);
+        assert!(t.transfer_s > t.fill_s);
+    }
+}

@@ -1,0 +1,108 @@
+//! Analytic timing models for the paper's five evaluation targets.
+//!
+//! Fig. 3 plots *total execution time = data transfer + execution* for
+//! VMUL&Reduce over 16 KB on: the static overlay under three scheduling
+//! scenarios, the dynamic overlay, and a fully-custom HLS module, with a
+//! 660 MHz ARM software run as the software reference. These models price
+//! each target from first principles (clocks, bandwidths, pipeline fills,
+//! store-and-forward penalties) using the parameters in [`crate::config`].
+//!
+//! The controller interpreter produces *measured* cycle counts for the
+//! dynamic overlay; these analytic models must agree with it (cross-checked
+//! in tests) and extend the pricing to targets the interpreter does not
+//! execute (ARM, HLS, static store-and-forward).
+
+pub mod arm;
+pub mod hls;
+pub mod overlay;
+pub mod transfer;
+
+
+/// Seconds, decomposed the way the paper reports them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TimingBreakdown {
+    /// DDR ↔ fabric data movement.
+    pub transfer_s: f64,
+    /// Pipeline fill (stage latencies + hop fills).
+    pub fill_s: f64,
+    /// Steady-state streaming.
+    pub stream_s: f64,
+    /// Store-and-forward re-staging at pass-through tiles.
+    pub hop_s: f64,
+    /// Controller sequencing overhead.
+    pub control_s: f64,
+}
+
+impl TimingBreakdown {
+    /// Total "execution time" in the paper's sense (transfer + execution).
+    pub fn total(&self) -> f64 {
+        self.transfer_s + self.fill_s + self.stream_s + self.hop_s + self.control_s
+    }
+
+    /// Total in milliseconds (the Fig. 3 axis).
+    pub fn total_ms(&self) -> f64 {
+        self.total() * 1e3
+    }
+}
+
+/// An evaluation target of Fig. 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// The paper's contribution: contiguous, pipelined, JIT-assembled.
+    DynamicOverlay,
+    /// The original static overlay under a Fig. 2 scenario.
+    StaticOverlay(crate::place::StaticScenario),
+    /// Fully-custom Vivado-HLS-style module.
+    HlsCustom,
+    /// 660 MHz ARM (Zedboard) software.
+    ArmSoftware,
+}
+
+impl Target {
+    /// The series Fig. 3 plots (ARM is the software reference line).
+    pub const ALL: [Target; 6] = [
+        Target::ArmSoftware,
+        Target::StaticOverlay(crate::place::StaticScenario::S3),
+        Target::StaticOverlay(crate::place::StaticScenario::S2),
+        Target::StaticOverlay(crate::place::StaticScenario::S1),
+        Target::DynamicOverlay,
+        Target::HlsCustom,
+    ];
+
+    pub fn name(&self) -> String {
+        match self {
+            Target::DynamicOverlay => "dynamic-overlay".into(),
+            Target::StaticOverlay(s) => s.name().into(),
+            Target::HlsCustom => "hls-custom".into(),
+            Target::ArmSoftware => "arm-660mhz".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_sums_components() {
+        let b = TimingBreakdown {
+            transfer_s: 1.0,
+            fill_s: 2.0,
+            stream_s: 3.0,
+            hop_s: 4.0,
+            control_s: 5.0,
+        };
+        assert_eq!(b.total(), 15.0);
+        assert_eq!(b.total_ms(), 15_000.0);
+    }
+
+    #[test]
+    fn six_series_cover_paper_figure() {
+        assert_eq!(Target::ALL.len(), 6);
+        let names: Vec<String> = Target::ALL.iter().map(|t| t.name()).collect();
+        assert!(names.contains(&"dynamic-overlay".to_string()));
+        assert!(names.contains(&"static-s3".to_string()));
+        assert!(names.contains(&"hls-custom".to_string()));
+        assert!(names.contains(&"arm-660mhz".to_string()));
+    }
+}

@@ -1,0 +1,36 @@
+//! DMA / data-movement pricing shared by all fabric targets.
+
+use crate::config::ClockConfig;
+
+/// Seconds to move `words` f32 words between DDR and the fabric.
+pub fn dma_seconds(clocks: &ClockConfig, words: usize) -> f64 {
+    (words * 4) as f64 / clocks.dma_bytes_per_sec
+}
+
+/// Total transfer for the paper's workload shape: `inputs` vectors of `n`
+/// words in, one scalar out.
+pub fn pattern_transfer_seconds(clocks: &ClockConfig, inputs: usize, n: usize) -> f64 {
+    dma_seconds(clocks, inputs * n) + dma_seconds(clocks, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClockConfig;
+
+    #[test]
+    fn dma_scales_linearly() {
+        let c = ClockConfig::default();
+        let one = dma_seconds(&c, 1024);
+        let two = dma_seconds(&c, 2048);
+        assert!((two / one - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_16kb_transfer_order() {
+        // 2 × 4096 words at 400 MB/s ≈ 82 µs
+        let c = ClockConfig::default();
+        let s = pattern_transfer_seconds(&c, 2, 4096);
+        assert!(s > 70e-6 && s < 95e-6, "got {s}");
+    }
+}

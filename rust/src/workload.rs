@@ -1,0 +1,127 @@
+//! Deterministic workload generation for examples, benches and tests.
+//!
+//! Ships its own splitmix64-seeded xoshiro256++ generator so the crate
+//! builds offline without the `rand` family; the streams are stable across
+//! platforms and runs (required: EXPERIMENTS.md records exact values).
+
+/// xoshiro256++ PRNG (public-domain reference algorithm).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via splitmix64 so any u64 (including 0) yields a good state.
+    pub fn new(seed: u64) -> Rng {
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) / (1u32 << 24) as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// A reproducible random f32 vector in `[lo, hi)`.
+pub fn vector(n: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range(lo, hi)).collect()
+}
+
+/// The paper's Fig. 3 workload: two 16 KB operand vectors (4096 × f32).
+pub fn paper_16kb(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    (vector(4096, seed, -2.0, 2.0), vector(4096, seed + 1, -2.0, 2.0))
+}
+
+/// Data sizes for the PR-amortization sweep (bytes per operand).
+pub const SWEEP_SIZES: [usize; 5] = [1024, 4096, 16384, 65536, 262144];
+
+/// Double-precision reference dot product (ground truth for tolerances).
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vectors_are_deterministic() {
+        assert_eq!(vector(64, 7, 0.0, 1.0), vector(64, 7, 0.0, 1.0));
+        assert_ne!(vector(64, 7, 0.0, 1.0), vector(64, 8, 0.0, 1.0));
+    }
+
+    #[test]
+    fn ranges_respected() {
+        for v in vector(10_000, 1, -0.5, 0.5) {
+            assert!((-0.5..0.5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let v = vector(100_000, 3, 0.0, 1.0);
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        let below_half = v.iter().filter(|&&x| x < 0.5).count();
+        assert!((below_half as f64 / v.len() as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn zero_seed_is_fine() {
+        let mut r = Rng::new(0);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn paper_workload_is_16kb_per_operand() {
+        let (a, b) = paper_16kb(0);
+        assert_eq!(a.len() * 4, 16 * 1024);
+        assert_eq!(b.len() * 4, 16 * 1024);
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration across the language boundary: the L1/L2 artifacts (JAX +
+//! Pallas, AOT-lowered to HLO text) executed through the Rust PJRT runtime
+//! must agree with the overlay interpreter and the CPU reference.
+//!
+//! These tests skip silently when `artifacts/` has not been built — CI runs
+//! them after `make artifacts`.
+
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::exec::{cpu, Engine};
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::runtime::{default_artifacts_dir, Runtime};
+use jit_overlay::timing::Target;
+use jit_overlay::{workload, OverlayConfig};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.tsv").exists().then(|| Runtime::new(dir).unwrap())
+}
+
+#[test]
+fn manifest_covers_the_paper_workload() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest().paper_n, 4096); // 16 KB of f32
+    assert!(rt.manifest().get("vmul_reduce_n4096").is_ok());
+}
+
+#[test]
+fn three_way_agreement_vmul_reduce_all_sizes() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    for n in [1024usize, 4096, 16384] {
+        let name = format!("vmul_reduce_n{n}");
+        if rt.manifest().get(&name).is_err() {
+            continue;
+        }
+        let comp = Composition::vmul_reduce(n);
+        let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+        let a = workload::vector(n, 100 + n as u64, -2.0, 2.0);
+        let b = workload::vector(n, 200 + n as u64, -2.0, 2.0);
+
+        let overlay = engine
+            .run(&acc, &[a.clone(), b.clone()], Target::DynamicOverlay)
+            .unwrap()
+            .output
+            .as_scalar()
+            .unwrap();
+        let reference = cpu::eval(&comp, &[a.clone(), b.clone()])
+            .unwrap()
+            .as_scalar()
+            .unwrap();
+        let pjrt = rt.execute_scalar(&name, &[a, b]).unwrap();
+
+        let tol = 1e-2_f32.max(pjrt.abs() * 1e-4);
+        assert!((overlay - pjrt).abs() < tol, "n={n}: overlay {overlay} vs pjrt {pjrt}");
+        assert!((reference - pjrt).abs() < tol, "n={n}: cpu {reference} vs pjrt {pjrt}");
+        engine.fabric.reset_full();
+    }
+}
+
+#[test]
+fn pallas_map_kernels_match_overlay() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let n = 4096;
+    for op in [OperatorKind::Sqrt, OperatorKind::Exp, OperatorKind::Abs, OperatorKind::Neg] {
+        let name = format!("map_{}_n{n}", op.name());
+        if rt.manifest().get(&name).is_err() {
+            continue;
+        }
+        let x = workload::vector(n, 7, 0.1, 3.0);
+        let pjrt = rt.execute(&name, &[x.clone()]).unwrap();
+        let comp = Composition::map(op, n);
+        let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+        let overlay = engine
+            .run(&acc, &[x], Target::DynamicOverlay)
+            .unwrap()
+            .output;
+        let ov = overlay.as_vector().unwrap();
+        for i in 0..n {
+            assert!(
+                (ov[i] - pjrt[0][i]).abs() < 1e-3 * (1.0 + pjrt[0][i].abs()),
+                "{name} i={i}: {} vs {}",
+                ov[i],
+                pjrt[0][i]
+            );
+        }
+        engine.fabric.reset_full();
+    }
+}
+
+#[test]
+fn pallas_filter_reduce_matches_overlay() {
+    let Some(rt) = runtime() else { return };
+    let n = 4096;
+    let name = format!("filter_reduce_n{n}");
+    if rt.manifest().get(&name).is_err() {
+        return;
+    }
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let x = workload::vector(n, 31, -2.0, 2.0);
+    let t = 0.25f32;
+    let pjrt = rt.execute_scalar(&name, &[x.clone(), vec![t]]).unwrap();
+    let comp = Composition::filter_reduce(t, n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+    let overlay = engine
+        .run(&acc, &[x], Target::DynamicOverlay)
+        .unwrap()
+        .output
+        .as_scalar()
+        .unwrap();
+    assert!(
+        (overlay - pjrt).abs() < 1e-2 + pjrt.abs() * 1e-4,
+        "overlay {overlay} vs pjrt {pjrt}"
+    );
+}
+
+#[test]
+fn pallas_branch_kernel_matches_overlay() {
+    let Some(rt) = runtime() else { return };
+    let n = 4096;
+    let name = "branch_sqrt_square_n4096";
+    if rt.manifest().get(name).is_err() {
+        return;
+    }
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let x = workload::vector(n, 41, 0.05, 2.0);
+    let t = 0.8f32;
+    let pjrt = rt.execute(name, &[vec![t], x.clone()]).unwrap();
+    let comp = Composition::branch(t, OperatorKind::Sqrt, OperatorKind::Square, n);
+    let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+    let overlay = engine
+        .run(&acc, &[x], Target::DynamicOverlay)
+        .unwrap()
+        .output;
+    let ov = overlay.as_vector().unwrap();
+    for i in 0..n {
+        assert!(
+            (ov[i] - pjrt[0][i]).abs() < 1e-3 * (1.0 + pjrt[0][i].abs()),
+            "i={i}: {} vs {}",
+            ov[i],
+            pjrt[0][i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_amortizes_compilation() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().paper_n;
+    let name = rt.manifest().headline.clone();
+    let z = vec![0.5f32; n];
+
+    let t0 = std::time::Instant::now();
+    rt.execute_scalar(&name, &[z.clone(), z.clone()]).unwrap();
+    let cold = t0.elapsed();
+
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        rt.execute_scalar(&name, &[z.clone(), z.clone()]).unwrap();
+    }
+    let warm_each = t1.elapsed() / 5;
+    assert!(
+        warm_each < cold,
+        "warm path ({warm_each:?}) should beat cold compile ({cold:?})"
+    );
+}

@@ -1,0 +1,255 @@
+//! Property-style randomized tests over the coordinator-side invariants
+//! (placement, routing, codec, codegen), using the in-tree deterministic
+//! PRNG — the offline stand-in for proptest, with fixed seeds so failures
+//! reproduce exactly.
+
+use jit_overlay::bitstream::{BitstreamLibrary, OperatorKind};
+use jit_overlay::exec::{cpu, Engine};
+use jit_overlay::isa::{encode, Instr, Opcode};
+use jit_overlay::jit::Jit;
+use jit_overlay::overlay::{Fabric, Mesh};
+use jit_overlay::patterns::Composition;
+use jit_overlay::place::DynamicPlacer;
+use jit_overlay::route::shortest_route;
+use jit_overlay::timing::Target;
+use jit_overlay::workload::Rng;
+use jit_overlay::OverlayConfig;
+
+const CASES: usize = 200;
+
+// ---------------------------------------------------------------------------
+// ISA codec: encode∘decode = id for every valid field combination
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codec_roundtrip_random_instrs() {
+    let mut rng = Rng::new(0xC0DEC);
+    for _ in 0..CASES * 5 {
+        let i = Instr {
+            op: Opcode::from_u8(rng.below(42) as u8).unwrap(),
+            tile: rng.below(64) as u8,
+            a: rng.below(32) as u8,
+            b: rng.below(32) as u8,
+            imm: (rng.below(1024) as i16) - 512,
+        };
+        let w = encode::encode(&i).unwrap();
+        assert_eq!(encode::decode(w).unwrap(), i);
+    }
+}
+
+#[test]
+fn prop_codec_rejects_or_roundtrips_any_word() {
+    // decoding an arbitrary word either fails (bad opcode) or yields an
+    // instruction that re-encodes to the same word.
+    let mut rng = Rng::new(0xBAD5EED);
+    for _ in 0..CASES * 5 {
+        let w = rng.next_u64() as u32;
+        if let Ok(i) = encode::decode(w) {
+            assert_eq!(encode::encode(&i).unwrap(), w, "word {w:#010x}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router: legal shortest paths on random meshes with random blockages
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_routes_are_legal_and_minimal() {
+    let mut rng = Rng::new(0x7777);
+    for _ in 0..CASES {
+        let rows = 2 + rng.below(4);
+        let cols = 2 + rng.below(4);
+        let mesh = Mesh::new(rows, cols);
+        let tiles = mesh.tiles();
+        let from = rng.below(tiles);
+        let to = rng.below(tiles);
+        if from == to {
+            continue;
+        }
+        let mut blocked = vec![false; tiles];
+        for _ in 0..rng.below(tiles / 2 + 1) {
+            let t = rng.below(tiles);
+            if t != from && t != to {
+                blocked[t] = true;
+            }
+        }
+        match shortest_route(&mesh, from, to, &blocked) {
+            Err(_) => {} // disconnection is legal under blockage
+            Ok(r) => {
+                // chain is adjacent, avoids blocked tiles, no repeats
+                let mut chain = vec![from];
+                chain.extend(&r.via);
+                chain.push(to);
+                for w in chain.windows(2) {
+                    assert_eq!(mesh.manhattan(w[0], w[1]), 1, "{chain:?}");
+                }
+                for &v in &r.via {
+                    assert!(!blocked[v], "route through blocked tile {v}");
+                }
+                let distinct: std::collections::HashSet<_> = chain.iter().collect();
+                assert_eq!(distinct.len(), chain.len(), "cycle in {chain:?}");
+                // no blockage ⇒ manhattan-minimal
+                if blocked.iter().all(|&b| !b) {
+                    assert_eq!(r.hops() + 1, mesh.manhattan(from, to));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placer: injectivity, class-compatibility, contiguity on random pipelines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_placements_injective_and_class_compatible() {
+    use OperatorKind::*;
+    let small_ops = [Add, Sub, Mul, Max, Min, Neg, Abs, Square, Relu, AccSum, FilterGt];
+    let large_ops = [Sqrt, Sin, Cos, Log, Exp, Tanh, Div];
+    let cfg = OverlayConfig::default();
+    let lib = BitstreamLibrary::standard(&cfg);
+    let fabric = Fabric::new(cfg).unwrap();
+    let mut rng = Rng::new(0x91ACE);
+    for _ in 0..CASES {
+        let len = 1 + rng.below(6);
+        let mut ops = Vec::new();
+        let mut larges = 0;
+        for _ in 0..len {
+            if rng.below(4) == 0 && larges < 2 {
+                ops.push(large_ops[rng.below(large_ops.len())]);
+                larges += 1;
+            } else {
+                ops.push(small_ops[rng.below(small_ops.len())]);
+            }
+        }
+        let p = match DynamicPlacer.place(&fabric, &lib, &ops) {
+            Ok(p) => p,
+            Err(e) => {
+                assert!(e.is_capacity(), "unexpected error kind: {e}");
+                continue;
+            }
+        };
+        assert!(p.is_injective());
+        for (a, &op) in p.assignments.iter().zip(&ops) {
+            assert_eq!(a.op, op);
+            let fp = jit_overlay::bitstream::Footprint::for_operator(op);
+            assert!(fp.fits(&a.class.budget()), "{op:?} in {:?}", a.class);
+        }
+        // all-small pipelines must be perfectly contiguous
+        if ops.iter().all(|o| {
+            jit_overlay::bitstream::Footprint::for_operator(*o)
+                .fits(&jit_overlay::bitstream::RegionClass::Small.budget())
+        }) {
+            assert!(p.is_contiguous(&fabric.mesh), "{ops:?} -> {:?}", p.assignments);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codegen + controller vs CPU reference on random compositions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_chains_execute_correctly() {
+    use OperatorKind::*;
+    // domain-safe unary ops over positive inputs
+    let ops_pool = [Abs, Neg, Square, Relu, Sqrt, Exp, Tanh];
+    let mut rng = Rng::new(0xE2E);
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    for case in 0..40 {
+        let len = 1 + rng.below(4);
+        let ops: Vec<OperatorKind> = (0..len).map(|_| ops_pool[rng.below(ops_pool.len())]).collect();
+        // at most 2 large-region ops fit the fabric
+        let larges = ops
+            .iter()
+            .filter(|o| {
+                !jit_overlay::bitstream::Footprint::for_operator(**o)
+                    .fits(&jit_overlay::bitstream::RegionClass::Small.budget())
+            })
+            .count();
+        if larges > 2 {
+            continue;
+        }
+        let n = [64usize, 256, 1024, 2048][rng.below(4)];
+        let comp = Composition::chain(&ops, n).unwrap();
+        let acc = match Jit.compile(&engine.fabric, &engine.lib, &comp) {
+            Ok(a) => a,
+            Err(e) => {
+                assert!(e.is_capacity());
+                continue;
+            }
+        };
+        let x: Vec<f32> = (0..n).map(|_| rng.range(0.05, 1.5)).collect();
+        let got = engine
+            .run(&acc, &[x.clone()], Target::DynamicOverlay)
+            .unwrap()
+            .output;
+        let want = cpu::eval(&comp, &[x]).unwrap();
+        let (g, w) = (got.as_vector().unwrap(), want.as_vector().unwrap());
+        for i in 0..n {
+            // NaN on both sides counts as agreement (e.g. sqrt of a
+            // negative intermediate — both planes produce the same NaN).
+            let same_nan = g[i].is_nan() && w[i].is_nan();
+            assert!(
+                same_nan || (g[i] - w[i]).abs() <= 1e-4 * (1.0 + w[i].abs()),
+                "case {case} {ops:?} i={i}: {} vs {}",
+                g[i],
+                w[i]
+            );
+        }
+        engine.fabric.reset_full();
+    }
+}
+
+#[test]
+fn prop_random_scalar_patterns_execute_correctly() {
+    let mut rng = Rng::new(0x5CA1A7);
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    for _ in 0..30 {
+        let n = [128usize, 512, 1024][rng.below(3)];
+        let t = rng.range(-1.0, 1.0);
+        let comp = if rng.below(2) == 0 {
+            Composition::vmul_reduce(n)
+        } else {
+            Composition::filter_reduce(t, n)
+        };
+        let acc = Jit.compile(&engine.fabric, &engine.lib, &comp).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..comp.inputs)
+            .map(|_| (0..n).map(|_| rng.range(-2.0, 2.0)).collect())
+            .collect();
+        let got = engine
+            .run(&acc, &inputs, Target::DynamicOverlay)
+            .unwrap()
+            .output
+            .as_scalar()
+            .unwrap();
+        let want = cpu::eval(&comp, &inputs).unwrap().as_scalar().unwrap();
+        assert!(
+            (got - want).abs() <= 1e-3 + want.abs() * 1e-4,
+            "{got} vs {want}"
+        );
+        engine.fabric.reset_full();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composition cache keys: random equal compositions hash equal, mutants differ
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cache_key_stability() {
+    use OperatorKind::*;
+    let pool = [Abs, Neg, Square, Relu];
+    let mut rng = Rng::new(0xCACE);
+    for _ in 0..CASES {
+        let len = 1 + rng.below(3);
+        let ops: Vec<OperatorKind> = (0..len).map(|_| pool[rng.below(pool.len())]).collect();
+        let n = 64 << rng.below(4);
+        let a = Composition::chain(&ops, n).unwrap();
+        let b = Composition::chain(&ops, n).unwrap();
+        assert_eq!(a.cache_key(), b.cache_key());
+        let c = Composition::chain(&ops, n * 2).unwrap();
+        assert_ne!(a.cache_key(), c.cache_key());
+    }
+}
