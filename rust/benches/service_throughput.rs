@@ -1,0 +1,121 @@
+//! Bench: worker-pool service throughput and PR-download amortization.
+//!
+//! Drives the same mixed composition stream (80% hot / 20% cold,
+//! `workload::mixed_compositions`) through pools of 1/2/4/8 workers and
+//! reports wall-clock req/s, speedup over one worker, PR downloads per
+//! request, and the residency hit rate. The single-worker *batched*
+//! coordinator (reconfiguration-aware reordering) is printed as the
+//! PR-downloads baseline the pool has to beat without reordering.
+//!
+//! Acceptance targets (ISSUE 1): ≥ 2× req/s at 4 workers vs 1, and PR
+//! downloads per request no worse than the batched single-worker baseline.
+
+use jit_overlay::coordinator::{Coordinator, Metrics, Request, WorkerPool};
+use jit_overlay::report::Table;
+use jit_overlay::{workload, OverlayConfig, ServiceConfig};
+
+fn stream(requests: usize, n: usize) -> Vec<Request> {
+    workload::mixed_compositions(requests, n, 0xF00D)
+        .into_iter()
+        .enumerate()
+        .map(|(k, comp)| {
+            let inputs = workload::request_inputs(&comp, k as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect()
+}
+
+/// Serve the whole stream through a pool; returns wall seconds + metrics.
+fn run_pool(workers: usize, reqs: &[Request]) -> (f64, Metrics) {
+    let pool = WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(workers))
+        .expect("pool spawn");
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = reqs
+        .iter()
+        .map(|r| pool.submit(r.clone()).expect("submit"))
+        .collect();
+    for rx in pending {
+        rx.recv().expect("worker alive").expect("request served");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (dt, pool.shutdown().aggregate)
+}
+
+/// Single-worker reconfiguration-aware batching — the paper-style baseline
+/// for PR downloads per request.
+fn run_batched_baseline(reqs: &[Request]) -> (f64, Metrics) {
+    let mut coord = Coordinator::new(OverlayConfig::default()).expect("coordinator");
+    let t0 = std::time::Instant::now();
+    coord.submit_batch(reqs).expect("batch served");
+    (t0.elapsed().as_secs_f64(), coord.metrics)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let requests = if quick { 64 } else { 256 };
+    let n = 1024;
+    let reqs = stream(requests, n);
+    let distinct: std::collections::HashSet<u64> =
+        reqs.iter().map(|r| r.comp.cache_key()).collect();
+    println!(
+        "mixed stream: {requests} requests over {} distinct compositions (n={n})",
+        distinct.len()
+    );
+
+    let (base_dt, base_m) = run_batched_baseline(&reqs);
+    let base_dpr = base_m.pr_downloads as f64 / requests as f64;
+
+    let mut t = Table::new(
+        "service throughput — mixed stream, 1/2/4/8 workers",
+        &[
+            "workers",
+            "wall (ms)",
+            "req/s",
+            "speedup vs 1",
+            "PR dl/req",
+            "PR hit rate",
+            "jit compiles",
+        ],
+    );
+    t.row(&[
+        "1 (batched)".into(),
+        format!("{:.1}", base_dt * 1e3),
+        format!("{:.0}", requests as f64 / base_dt),
+        "-".into(),
+        format!("{base_dpr:.3}"),
+        format!("{:.0}%", base_m.pr_hit_rate() * 100.0),
+        base_m.jit_compiles.to_string(),
+    ]);
+
+    let mut single_rate = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let (dt, m) = run_pool(workers, &reqs);
+        let rate = requests as f64 / dt;
+        if workers == 1 {
+            single_rate = rate;
+        }
+        let dpr = m.pr_downloads as f64 / requests as f64;
+        t.row(&[
+            workers.to_string(),
+            format!("{:.1}", dt * 1e3),
+            format!("{rate:.0}"),
+            format!("{:.2}x", rate / single_rate),
+            format!("{dpr:.3}"),
+            format!("{:.0}%", m.pr_hit_rate() * 100.0),
+            m.jit_compiles.to_string(),
+        ]);
+        if workers == 4 {
+            let ok_speed = rate / single_rate >= 2.0;
+            let ok_dpr = dpr <= base_dpr + 1e-9;
+            println!(
+                "4-worker acceptance: speedup {:.2}x (target ≥2x: {}), PR dl/req {:.3} vs batched {:.3} (target ≤: {})",
+                rate / single_rate,
+                if ok_speed { "PASS" } else { "MISS" },
+                dpr,
+                base_dpr,
+                if ok_dpr { "PASS" } else { "MISS" },
+            );
+        }
+    }
+    print!("{}", t.render());
+}

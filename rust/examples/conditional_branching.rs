@@ -20,7 +20,7 @@ use jit_overlay::report::Table;
 use jit_overlay::timing::Target;
 use jit_overlay::{workload, OverlayConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 2048;
     let mut engine = Engine::new(OverlayConfig::default())?;
 

@@ -23,7 +23,7 @@ use jit_overlay::patterns::Composition;
 use jit_overlay::report::Table;
 use jit_overlay::{workload, OverlayConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 1024;
     let frames = 12;
 

@@ -14,7 +14,7 @@ use jit_overlay::patterns::Composition;
 use jit_overlay::timing::Target;
 use jit_overlay::{workload, OverlayConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. a 3×3 dynamic overlay with the paper's PR sizing mix
     let cfg = OverlayConfig::default();
     println!(

@@ -24,7 +24,7 @@ use jit_overlay::runtime::{default_artifacts_dir, Runtime};
 use jit_overlay::timing::Target;
 use jit_overlay::{workload, OverlayConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 4096; // 16 KB per operand — the paper's Fig. 3 data size
     let cfg = OverlayConfig::default();
     let mut engine = Engine::new(cfg.clone())?;

@@ -51,6 +51,47 @@ impl Default for TileSizing {
     }
 }
 
+/// Service-layer (worker pool) configuration.
+///
+/// Separate from [`OverlayConfig`] because it describes the *deployment*
+/// (how many fabrics, how requests are routed), not the modeled hardware.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Number of pool workers; each owns one overlay fabric.
+    pub workers: usize,
+    /// Lock shards of the pool-wide compiled-accelerator cache.
+    pub cache_shards: usize,
+    /// Affinity-scheduler spill threshold: a request leaves its home worker
+    /// for the least-loaded one when the home queue is more than this many
+    /// requests deeper. Low values favor load balance; high values favor
+    /// residency (fewer PR downloads).
+    pub max_queue_skew: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { workers: 1, cache_shards: 8, max_queue_skew: 4 }
+    }
+}
+
+impl ServiceConfig {
+    /// A default-tuned pool of `workers` fabrics.
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Self::default() }
+    }
+
+    /// Validate invariants. Call after deserializing user-supplied configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("pool needs at least one worker".into()));
+        }
+        if self.cache_shards == 0 {
+            return Err(Error::Config("cache needs at least one shard".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Complete overlay configuration.
 #[derive(Debug, Clone)]
 pub struct OverlayConfig {
@@ -213,5 +254,19 @@ mod tests {
     #[test]
     fn bram_words_default_matches_kernel_block() {
         assert_eq!(OverlayConfig::default().bram_words(), 1024);
+    }
+
+    #[test]
+    fn service_config_defaults_validate() {
+        ServiceConfig::default().validate().unwrap();
+        let s = ServiceConfig::with_workers(4);
+        assert_eq!(s.workers, 4);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn service_config_rejects_zero_workers_and_shards() {
+        assert!(ServiceConfig { workers: 0, ..Default::default() }.validate().is_err());
+        assert!(ServiceConfig { cache_shards: 0, ..Default::default() }.validate().is_err());
     }
 }

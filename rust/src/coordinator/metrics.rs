@@ -1,5 +1,12 @@
 //! Coordinator metrics: the counters a deployment would scrape.
+//!
+//! [`Metrics`] is the plain per-worker record (owned by one coordinator,
+//! no synchronization). [`AtomicMetrics`] is the pool-level aggregate:
+//! every worker folds its per-request deltas into one shared atomic
+//! snapshot, so `pool.metrics.snapshot()` is always consistent with the sum
+//! of the per-worker records without stopping the world.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Cumulative service counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -14,6 +21,10 @@ pub struct Metrics {
     pub jit_seconds: f64,
     /// PR bitstream downloads issued.
     pub pr_downloads: u64,
+    /// PR downloads skipped because the operator was already resident.
+    pub pr_region_hits: u64,
+    /// PR downloads that overwrote a different resident operator (thrash).
+    pub pr_replaced: u64,
     /// Modeled seconds spent reconfiguring.
     pub pr_seconds: f64,
     /// Modeled fabric-busy seconds across all requests.
@@ -33,18 +44,118 @@ impl Metrics {
         }
     }
 
+    /// PR-region residency hit rate in [0, 1]: how often a placed stage
+    /// found its operator already downloaded (Fig. 3 amortization working).
+    pub fn pr_hit_rate(&self) -> f64 {
+        let total = self.pr_downloads + self.pr_region_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.pr_region_hits as f64 / total as f64
+        }
+    }
+
+    /// Field-wise accumulate (used to sum per-worker records).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.jit_compiles += other.jit_compiles;
+        self.cache_hits += other.cache_hits;
+        self.jit_seconds += other.jit_seconds;
+        self.pr_downloads += other.pr_downloads;
+        self.pr_region_hits += other.pr_region_hits;
+        self.pr_replaced += other.pr_replaced;
+        self.pr_seconds += other.pr_seconds;
+        self.busy_seconds += other.busy_seconds;
+        self.evictions += other.evictions;
+    }
+
+    /// Field-wise difference vs an earlier snapshot of the same record
+    /// (counters are monotonic, so this is the per-request delta).
+    pub fn delta_since(&self, earlier: &Metrics) -> Metrics {
+        Metrics {
+            requests: self.requests - earlier.requests,
+            jit_compiles: self.jit_compiles - earlier.jit_compiles,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            jit_seconds: self.jit_seconds - earlier.jit_seconds,
+            pr_downloads: self.pr_downloads - earlier.pr_downloads,
+            pr_region_hits: self.pr_region_hits - earlier.pr_region_hits,
+            pr_replaced: self.pr_replaced - earlier.pr_replaced,
+            pr_seconds: self.pr_seconds - earlier.pr_seconds,
+            busy_seconds: self.busy_seconds - earlier.busy_seconds,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) pr_downloads={} pr={:.3}ms busy={:.3}ms",
+            "requests={} jit={} hits={} ({:.0}%) pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
             self.hit_rate() * 100.0,
             self.pr_downloads,
+            self.pr_region_hits,
+            self.pr_hit_rate() * 100.0,
+            self.pr_replaced,
             self.pr_seconds * 1e3,
             self.busy_seconds * 1e3,
         )
+    }
+}
+
+/// Pool-level metrics aggregate: lock-free folding of per-worker deltas.
+///
+/// Second-denominated fields are stored as integer nanoseconds so they can
+/// live in `AtomicU64`s; the rounding error (< 1 ns per fold) is far below
+/// the model's fidelity.
+#[derive(Debug, Default)]
+pub struct AtomicMetrics {
+    requests: AtomicU64,
+    jit_compiles: AtomicU64,
+    cache_hits: AtomicU64,
+    pr_downloads: AtomicU64,
+    pr_region_hits: AtomicU64,
+    pr_replaced: AtomicU64,
+    evictions: AtomicU64,
+    jit_nanos: AtomicU64,
+    pr_nanos: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+fn to_nanos(seconds: f64) -> u64 {
+    (seconds * 1e9).round() as u64
+}
+
+impl AtomicMetrics {
+    /// Fold one worker's per-request delta into the aggregate.
+    pub fn record(&self, d: &Metrics) {
+        self.requests.fetch_add(d.requests, Ordering::Relaxed);
+        self.jit_compiles.fetch_add(d.jit_compiles, Ordering::Relaxed);
+        self.cache_hits.fetch_add(d.cache_hits, Ordering::Relaxed);
+        self.pr_downloads.fetch_add(d.pr_downloads, Ordering::Relaxed);
+        self.pr_region_hits.fetch_add(d.pr_region_hits, Ordering::Relaxed);
+        self.pr_replaced.fetch_add(d.pr_replaced, Ordering::Relaxed);
+        self.evictions.fetch_add(d.evictions, Ordering::Relaxed);
+        self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
+        self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
+        self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
+    }
+
+    /// Current aggregate as a plain record.
+    pub fn snapshot(&self) -> Metrics {
+        Metrics {
+            requests: self.requests.load(Ordering::Relaxed),
+            jit_compiles: self.jit_compiles.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            jit_seconds: self.jit_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            pr_downloads: self.pr_downloads.load(Ordering::Relaxed),
+            pr_region_hits: self.pr_region_hits.load(Ordering::Relaxed),
+            pr_replaced: self.pr_replaced.load(Ordering::Relaxed),
+            pr_seconds: self.pr_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            busy_seconds: self.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -55,17 +166,75 @@ mod tests {
     #[test]
     fn hit_rate_handles_zero() {
         assert_eq!(Metrics::default().hit_rate(), 0.0);
+        assert_eq!(Metrics::default().pr_hit_rate(), 0.0);
     }
 
     #[test]
     fn hit_rate_computes() {
         let m = Metrics { jit_compiles: 1, cache_hits: 3, ..Default::default() };
         assert!((m.hit_rate() - 0.75).abs() < 1e-12);
+        let m = Metrics { pr_downloads: 1, pr_region_hits: 4, ..Default::default() };
+        assert!((m.pr_hit_rate() - 0.8).abs() < 1e-12);
     }
 
     #[test]
     fn summary_contains_key_fields() {
         let m = Metrics { requests: 5, ..Default::default() };
         assert!(m.summary().contains("requests=5"));
+    }
+
+    #[test]
+    fn merge_and_delta_are_inverse() {
+        let a = Metrics {
+            requests: 3,
+            jit_compiles: 1,
+            cache_hits: 2,
+            jit_seconds: 0.5,
+            pr_downloads: 4,
+            pr_region_hits: 6,
+            pr_replaced: 2,
+            pr_seconds: 0.25,
+            busy_seconds: 1.5,
+            evictions: 1,
+        };
+        let mut b = a;
+        b.merge(&a);
+        let d = b.delta_since(&a);
+        assert_eq!(d.requests, a.requests);
+        assert_eq!(d.pr_region_hits, a.pr_region_hits);
+        assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn atomic_record_snapshot_roundtrip() {
+        let agg = AtomicMetrics::default();
+        let d = Metrics {
+            requests: 2,
+            jit_compiles: 1,
+            cache_hits: 1,
+            jit_seconds: 0.001,
+            pr_downloads: 3,
+            pr_region_hits: 5,
+            pr_replaced: 1,
+            pr_seconds: 0.002,
+            busy_seconds: 0.003,
+            evictions: 0,
+        };
+        agg.record(&d);
+        agg.record(&d);
+        let s = agg.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.pr_downloads, 6);
+        assert_eq!(s.pr_region_hits, 10);
+        assert_eq!(s.pr_replaced, 2);
+        assert!((s.jit_seconds - 0.002).abs() < 1e-9);
+        assert!((s.busy_seconds - 0.006).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atomic_metrics_is_shareable() {
+        // compile-time: Sync + Send (threads fold deltas concurrently)
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<AtomicMetrics>();
     }
 }

@@ -12,23 +12,84 @@
 //! * **metrics** — counters a deployment would alarm on.
 //!
 //! [`Coordinator`] is the synchronous core; [`serve`]/[`spawn_service`]
-//! wrap it in an mpsc request loop on a dedicated thread (used by
-//! `repro serve`).
+//! wrap it in an mpsc request loop on a dedicated thread, and [`pool`]
+//! scales it out to N workers — each owning its own fabric — behind an
+//! affinity scheduler (used by `repro serve --workers N`).
 
 pub mod metrics;
+pub mod pool;
 
-pub use metrics::Metrics;
+pub use metrics::{AtomicMetrics, Metrics};
+pub use pool::{PoolReport, WorkerPool};
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
-use crate::config::OverlayConfig;
+use crate::config::{OverlayConfig, ServiceConfig};
 use crate::error::Result;
 use crate::exec::{Engine, RunResult};
 use crate::jit::{CompiledAccelerator, Jit};
 use crate::patterns::Composition;
 use crate::timing::Target;
+
+/// Sharded, read-mostly cache of compiled accelerators, keyed by
+/// [`Composition::cache_key`].
+///
+/// Shared across every worker of a [`WorkerPool`]: a composition JIT-ed on
+/// one fabric is immediately *usable* on all others — tile indices and
+/// region classes are identical across fabrics of one config, and the PR
+/// manager simply overwrites whatever is resident in the placement's
+/// tiles. Note the placement reflects the *compiling* fabric's occupancy
+/// at compile time: replayed on a different fabric it may overwrite
+/// residents even when free tiles exist there. Affinity routing keeps that
+/// rare (a composition normally stays on the fabric that compiled it);
+/// per-fabric placement specialization is a ROADMAP item. Sharding keeps
+/// writer stalls local to one key-slice while the hot path — repeat
+/// compositions — takes only a read lock.
+#[derive(Debug)]
+pub struct AcceleratorCache {
+    shards: Vec<RwLock<HashMap<u64, Arc<CompiledAccelerator>>>>,
+}
+
+impl AcceleratorCache {
+    /// Build a cache with `shards` independent lock domains (≥ 1).
+    pub fn new(shards: usize) -> AcceleratorCache {
+        let shards = shards.max(1);
+        AcceleratorCache {
+            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, Arc<CompiledAccelerator>>> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a compiled accelerator.
+    pub fn get(&self, key: u64) -> Option<Arc<CompiledAccelerator>> {
+        self.shard(key).read().expect("cache shard poisoned").get(&key).cloned()
+    }
+
+    /// Insert unless already present; returns the winning entry (first
+    /// writer wins, so concurrent compilers converge on one accelerator).
+    pub fn insert(&self, key: u64, acc: Arc<CompiledAccelerator>) -> Arc<CompiledAccelerator> {
+        let mut shard = self.shard(key).write().expect("cache shard poisoned");
+        shard.entry(key).or_insert(acc).clone()
+    }
+
+    /// Number of cached accelerators across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("cache shard poisoned").len())
+            .sum()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// One unit of work.
 #[derive(Debug, Clone)]
@@ -54,22 +115,27 @@ pub struct Response {
     pub cached: bool,
 }
 
-/// The coordinator service core.
+/// The coordinator service core: one fabric, one JIT, one metrics record.
+///
+/// The accelerator cache is always an [`AcceleratorCache`] behind an `Arc`;
+/// a standalone coordinator owns a private one, while pool workers share a
+/// single instance (see [`Coordinator::with_cache`]).
 pub struct Coordinator {
     pub engine: Engine,
     jit: Jit,
-    cache: HashMap<u64, Arc<CompiledAccelerator>>,
+    cache: Arc<AcceleratorCache>,
     pub metrics: Metrics,
 }
 
 impl Coordinator {
     pub fn new(cfg: OverlayConfig) -> Result<Coordinator> {
-        Ok(Coordinator {
-            engine: Engine::new(cfg)?,
-            jit: Jit::default(),
-            cache: HashMap::new(),
-            metrics: Metrics::default(),
-        })
+        let shards = ServiceConfig::default().cache_shards;
+        Self::with_cache(cfg, Arc::new(AcceleratorCache::new(shards)))
+    }
+
+    /// Build a coordinator serving from a shared (pool-wide) cache.
+    pub fn with_cache(cfg: OverlayConfig, cache: Arc<AcceleratorCache>) -> Result<Coordinator> {
+        Ok(Coordinator { engine: Engine::new(cfg)?, jit: Jit, cache, metrics: Metrics::default() })
     }
 
     /// Compile (or fetch) the accelerator for a composition.
@@ -80,11 +146,14 @@ impl Coordinator {
     /// of tiles, the coordinator evicts all residents and recompiles against
     /// the empty fabric — the PR manager will re-download on demand (this is
     /// the thrash the batcher exists to amortize).
-    pub fn accelerator(&mut self, comp: &Composition) -> Result<(Arc<CompiledAccelerator>, f64, bool)> {
+    pub fn accelerator(
+        &mut self,
+        comp: &Composition,
+    ) -> Result<(Arc<CompiledAccelerator>, f64, bool)> {
         let key = comp.cache_key();
-        if let Some(acc) = self.cache.get(&key) {
+        if let Some(acc) = self.cache.get(key) {
             self.metrics.cache_hits += 1;
-            return Ok((acc.clone(), 0.0, true));
+            return Ok((acc, 0.0, true));
         }
         let t0 = Instant::now();
         let compiled = match self.jit.compile(&self.engine.fabric, &self.engine.lib, comp) {
@@ -96,11 +165,11 @@ impl Coordinator {
             }
             Err(e) => return Err(e),
         };
-        let acc = Arc::new(compiled);
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.jit_compiles += 1;
         self.metrics.jit_seconds += dt;
-        self.cache.insert(key, acc.clone());
+        // first writer wins; a racing worker's duplicate compile converges
+        let acc = self.cache.insert(key, Arc::new(compiled));
         Ok((acc, dt, false))
     }
 
@@ -111,6 +180,8 @@ impl Coordinator {
         self.metrics.requests += 1;
         if let Some(r) = run.reconfig {
             self.metrics.pr_downloads += r.downloads as u64;
+            self.metrics.pr_region_hits += r.cache_hits as u64;
+            self.metrics.pr_replaced += r.replaced as u64;
             self.metrics.pr_seconds += r.seconds;
         }
         self.metrics.busy_seconds += run.timing.total();
@@ -338,5 +409,37 @@ mod tests {
         assert!(rrx2.recv().unwrap().is_ok());
         drop(tx);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn shared_cache_skips_jit_on_second_coordinator() {
+        let cache = Arc::new(AcceleratorCache::new(4));
+        let mut a = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+        let mut b = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+        let ra = a.submit(&vmul_req(512, 1.0)).unwrap();
+        let rb = b.submit(&vmul_req(512, 2.0)).unwrap();
+        assert!(!ra.cached);
+        assert!(rb.cached, "second fabric must reuse the shared compile");
+        assert_eq!(b.metrics.jit_compiles, 0);
+        // but b still pays its own PR downloads — residency is per fabric
+        assert_eq!(b.metrics.pr_downloads, 2);
+        assert_eq!(cache.len(), 1);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn sharded_cache_first_writer_wins() {
+        let cache = AcceleratorCache::new(2);
+        let e = Engine::new(OverlayConfig::default()).unwrap();
+        let comp = Composition::vmul_reduce(128);
+        let acc1 = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
+        let acc2 = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
+        let key = comp.cache_key();
+        let won = cache.insert(key, acc1.clone());
+        assert!(Arc::ptr_eq(&won, &acc1));
+        let lost = cache.insert(key, acc2);
+        assert!(Arc::ptr_eq(&lost, &acc1), "second insert must return the first entry");
+        assert!(cache.get(key).is_some());
+        assert!(cache.get(key ^ 1).is_none());
     }
 }

@@ -1,0 +1,414 @@
+//! Multi-fabric worker pool with affinity scheduling.
+//!
+//! The paper's run-time system owns **one** overlay fabric; this module
+//! scales it out the way a deployment would: N workers, each owning its own
+//! [`crate::exec::Engine`] (fabric + PR manager + residency state), fed
+//! through per-worker queues by an **affinity scheduler**:
+//!
+//! * **home routing** — each [`Request`]'s composition hashes to a home
+//!   worker (`cache_key % workers`), so repeated compositions land where
+//!   their accelerator is already compiled *and* its operators are already
+//!   resident in the PR regions — skipping both the JIT and the ICAP
+//!   download (the Fig. 3 amortization, multiplied across fabrics);
+//! * **sticky spill** — when the home queue runs deeper than the
+//!   least-loaded worker by more than `max_queue_skew`, the request spills
+//!   to the least-loaded worker and the routing table is updated so future
+//!   repeats follow it (residency migrates once, not per request);
+//! * **shared JIT cache** — compiled accelerators live in the pool-wide
+//!   sharded [`AcceleratorCache`], so a spill never recompiles, it only
+//!   re-downloads bitstreams on the new fabric;
+//! * **aggregate metrics** — workers fold per-request deltas into one
+//!   [`AtomicMetrics`] snapshot, so pool totals are observable while the
+//!   pool is live and provably equal to the sum of worker records.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use super::{AcceleratorCache, AtomicMetrics, Coordinator, Job, Metrics, Request, Response};
+use crate::config::{OverlayConfig, ServiceConfig};
+use crate::error::{Error, Result};
+
+/// What a worker thread leaves behind when the pool shuts down.
+struct WorkerExit {
+    metrics: Metrics,
+    resident_tiles: usize,
+    total_tiles: usize,
+}
+
+struct WorkerHandle {
+    /// `mpsc::Sender` is not `Sync` on older toolchains; the mutex is held
+    /// only for the enqueue itself.
+    tx: Mutex<mpsc::Sender<Job>>,
+    handle: JoinHandle<WorkerExit>,
+    /// Queued + in-flight requests on this worker (the scheduler's load
+    /// signal). Incremented at dispatch, decremented after serving.
+    load: Arc<AtomicUsize>,
+}
+
+/// Final pool accounting returned by [`WorkerPool::shutdown`].
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    /// The atomic aggregate's final snapshot.
+    pub aggregate: Metrics,
+    /// Each worker's own metrics record, in worker order.
+    pub per_worker: Vec<Metrics>,
+    /// Each worker's final fabric occupancy `(resident tiles, total tiles)`.
+    pub per_worker_residency: Vec<(usize, usize)>,
+    /// Compiled accelerators in the shared cache at shutdown.
+    pub cached_accelerators: usize,
+    /// Workers whose thread panicked (their per-worker record is zeroed, so
+    /// [`PoolReport::worker_sum`] undercounts the aggregate when nonempty).
+    pub panicked_workers: Vec<usize>,
+}
+
+impl PoolReport {
+    /// Sum of the per-worker records. Equals [`PoolReport::aggregate`] up
+    /// to nanosecond rounding on the seconds fields — provided
+    /// [`PoolReport::panicked_workers`] is empty (a panicked worker's
+    /// record is lost while its already-folded deltas stay in the
+    /// aggregate).
+    pub fn worker_sum(&self) -> Metrics {
+        let mut sum = Metrics::default();
+        for m in &self.per_worker {
+            sum.merge(m);
+        }
+        sum
+    }
+}
+
+/// A pool of N coordinator workers, each owning its own overlay fabric.
+pub struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+    /// Composition key → worker that last served it (sticky affinity).
+    route: RwLock<HashMap<u64, usize>>,
+    /// Live pool-level aggregate (see [`AtomicMetrics`]).
+    pub metrics: Arc<AtomicMetrics>,
+    cache: Arc<AcceleratorCache>,
+    max_queue_skew: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `service.workers` workers, each with a fabric built from `cfg`.
+    pub fn new(cfg: OverlayConfig, service: ServiceConfig) -> Result<WorkerPool> {
+        service.validate()?;
+        let cache = Arc::new(AcceleratorCache::new(service.cache_shards));
+        let metrics = Arc::new(AtomicMetrics::default());
+        let mut workers = Vec::with_capacity(service.workers);
+        for w in 0..service.workers {
+            let coord = Coordinator::with_cache(cfg.clone(), cache.clone())?;
+            let (tx, rx) = mpsc::channel::<Job>();
+            let load = Arc::new(AtomicUsize::new(0));
+            let worker_load = load.clone();
+            let agg = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("overlay-worker-{w}"))
+                .spawn(move || worker_loop(coord, rx, agg, worker_load))?;
+            workers.push(WorkerHandle { tx: Mutex::new(tx), handle, load });
+        }
+        Ok(WorkerPool {
+            workers,
+            route: RwLock::new(HashMap::new()),
+            metrics,
+            cache,
+            max_queue_skew: service.max_queue_skew,
+        })
+    }
+
+    /// Number of workers in the pool.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Compiled accelerators currently in the shared cache.
+    pub fn cached_accelerators(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Live aggregate metrics snapshot.
+    pub fn snapshot(&self) -> Metrics {
+        self.metrics.snapshot()
+    }
+
+    /// The worker the scheduler would pick for composition key `key` right
+    /// now: the sticky/home worker unless its queue is `max_queue_skew`
+    /// deeper than the least-loaded one.
+    ///
+    /// Read-only — the routing table is only updated by [`Self::submit`].
+    /// Two racing submitters of a brand-new key may both compute the same
+    /// home (deterministic hash), so the race at worst duplicates one JIT
+    /// compile, which the shared cache converges.
+    pub fn planned_worker(&self, key: u64) -> usize {
+        self.route_decision(key).0
+    }
+
+    /// One route-table read: returns the chosen worker and whether the
+    /// sticky entry must be updated to match it.
+    fn route_decision(&self, key: u64) -> (usize, bool) {
+        let n = self.workers.len();
+        let sticky =
+            self.route.read().expect("route table poisoned").get(&key).copied();
+        let home = sticky.unwrap_or((key % n as u64) as usize);
+        // single allocation-free pass over the load counters
+        let mut home_load = 0;
+        let mut least = home;
+        let mut least_load = usize::MAX;
+        for (i, w) in self.workers.iter().enumerate() {
+            let l = w.load.load(Ordering::SeqCst);
+            if i == home {
+                home_load = l;
+            }
+            if l < least_load {
+                least_load = l;
+                least = i;
+            }
+        }
+        let chosen = if home_load > least_load + self.max_queue_skew { least } else { home };
+        (chosen, sticky != Some(chosen))
+    }
+
+    /// Enqueue a request; returns the reply channel immediately.
+    ///
+    /// Submitting many requests before draining any replies is how callers
+    /// express pipelining. Each worker serves its queue in FIFO order, so
+    /// per-submitter, per-composition ordering holds while the route is
+    /// stable; a spill migrates the composition to another queue, so
+    /// requests already queued at the old worker may execute after newer
+    /// ones at the new worker. Today's compositions are stateless, so only
+    /// reply order per client matters (which submit/recv pairing preserves);
+    /// callers needing strict per-key FIFO should disable spilling via a
+    /// large [`ServiceConfig::max_queue_skew`].
+    pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        let key = request.comp.cache_key();
+        // the routing table is written only when the decision changed — the
+        // steady state (repeat composition, stable route) stays on the read
+        // path and never serializes submitters
+        let (w, stale) = self.route_decision(key);
+        if stale {
+            self.route.write().expect("route table poisoned").insert(key, w);
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let mut job = Job { request, reply: rtx };
+        match self.try_send(w, job) {
+            Ok(()) => return Ok(rrx),
+            Err(j) => job = j,
+        }
+        // worker `w` is dead (its receiver dropped, e.g. a panicked
+        // thread). Fail over to the other workers — lowest load first so a
+        // dead worker's frozen 0 counter can't keep attracting traffic —
+        // and repoint the sticky route at whoever accepted.
+        let mut candidates: Vec<usize> = (0..self.workers.len()).filter(|&i| i != w).collect();
+        candidates.sort_by_key(|&i| self.workers[i].load.load(Ordering::SeqCst));
+        for c in candidates {
+            match self.try_send(c, job) {
+                Ok(()) => {
+                    self.route.write().expect("route table poisoned").insert(key, c);
+                    return Ok(rrx);
+                }
+                Err(j) => job = j,
+            }
+        }
+        Err(Error::Runtime("every pool worker is gone".into()))
+    }
+
+    /// Enqueue on worker `w`, keeping the load counter consistent; returns
+    /// the job when the worker's receiver is gone.
+    fn try_send(&self, w: usize, job: Job) -> std::result::Result<(), Job> {
+        let worker = &self.workers[w];
+        worker.load.fetch_add(1, Ordering::SeqCst);
+        match worker.tx.lock().expect("worker sender poisoned").send(job) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(job)) => {
+                worker.load.fetch_sub(1, Ordering::SeqCst);
+                Err(job)
+            }
+        }
+    }
+
+    /// Enqueue a request and block for its response.
+    pub fn submit_wait(&self, request: Request) -> Result<Response> {
+        self.submit(request)?
+            .recv()
+            .map_err(|_| Error::Runtime("pool worker dropped the reply".into()))?
+    }
+
+    /// Drain all queues, stop every worker, and return the final report.
+    pub fn shutdown(self) -> PoolReport {
+        let WorkerPool { workers, metrics, cache, .. } = self;
+        let mut per_worker = Vec::with_capacity(workers.len());
+        let mut per_worker_residency = Vec::with_capacity(workers.len());
+        let mut panicked_workers = Vec::new();
+        for (w, WorkerHandle { tx, handle, .. }) in workers.into_iter().enumerate() {
+            // dropping the sender ends the worker's recv loop after it
+            // drains everything already queued
+            drop(tx);
+            let exit = handle.join().unwrap_or_else(|_| {
+                panicked_workers.push(w);
+                WorkerExit { metrics: Metrics::default(), resident_tiles: 0, total_tiles: 0 }
+            });
+            per_worker.push(exit.metrics);
+            per_worker_residency.push((exit.resident_tiles, exit.total_tiles));
+        }
+        PoolReport {
+            aggregate: metrics.snapshot(),
+            per_worker,
+            per_worker_residency,
+            cached_accelerators: cache.len(),
+            panicked_workers,
+        }
+    }
+
+    #[cfg(test)]
+    fn force_load(&self, worker: usize, load: usize) {
+        self.workers[worker].load.store(load, Ordering::SeqCst);
+    }
+}
+
+/// One worker's request loop: serve jobs FIFO, fold metric deltas into the
+/// pool aggregate, and report the final fabric occupancy on exit.
+fn worker_loop(
+    mut coord: Coordinator,
+    rx: mpsc::Receiver<Job>,
+    agg: Arc<AtomicMetrics>,
+    load: Arc<AtomicUsize>,
+) -> WorkerExit {
+    while let Ok(job) = rx.recv() {
+        let before = coord.metrics;
+        let resp = coord.submit(&job.request);
+        agg.record(&coord.metrics.delta_since(&before));
+        load.fetch_sub(1, Ordering::SeqCst);
+        // a hung-up client is not a worker error
+        let _ = job.reply.send(resp);
+    }
+    let (resident_tiles, total_tiles) = coord.engine.residency();
+    WorkerExit { metrics: coord.metrics, resident_tiles, total_tiles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::OperatorKind;
+    use crate::patterns::Composition;
+    use crate::workload;
+
+    fn pool(workers: usize) -> WorkerPool {
+        WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(workers)).unwrap()
+    }
+
+    fn vmul_req(n: usize, seed: u64) -> Request {
+        Request::dynamic(
+            Composition::vmul_reduce(n),
+            vec![workload::vector(n, seed, 0.1, 1.0), workload::vector(n, seed + 1, 0.1, 1.0)],
+        )
+    }
+
+    fn map_req(n: usize) -> Request {
+        Request::dynamic(Composition::map(OperatorKind::Abs, n), vec![vec![-1.0; n]])
+    }
+
+    #[test]
+    fn pool_round_trips_and_aggregates() {
+        let pool = pool(2);
+        let mut pending = Vec::new();
+        for k in 0..4 {
+            pending.push(pool.submit(vmul_req(256, k)).unwrap());
+            pending.push(pool.submit(map_req(256)).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(pool.snapshot().requests, 8);
+        let report = pool.shutdown();
+        assert_eq!(report.aggregate.requests, 8);
+        assert_eq!(report.per_worker.len(), 2);
+        assert_eq!(report.cached_accelerators, 2);
+        assert!(report.panicked_workers.is_empty());
+        // pool aggregate == sum of worker records
+        let sum = report.worker_sum();
+        assert_eq!(sum.requests, report.aggregate.requests);
+        assert_eq!(sum.jit_compiles, report.aggregate.jit_compiles);
+        assert_eq!(sum.cache_hits, report.aggregate.cache_hits);
+        assert_eq!(sum.pr_downloads, report.aggregate.pr_downloads);
+        assert_eq!(sum.pr_region_hits, report.aggregate.pr_region_hits);
+    }
+
+    #[test]
+    fn affinity_keeps_a_composition_on_one_worker() {
+        let pool = pool(4);
+        for k in 0..6 {
+            pool.submit_wait(vmul_req(512, k)).unwrap();
+        }
+        let report = pool.shutdown();
+        let serving: Vec<usize> = report
+            .per_worker
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.requests > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(serving.len(), 1, "one composition must stay on one worker");
+        // all repeats after the first hit the shared JIT cache
+        assert_eq!(report.aggregate.jit_compiles, 1);
+        assert_eq!(report.aggregate.cache_hits, 5);
+        // ... and the home fabric kept the operators resident
+        assert_eq!(report.aggregate.pr_downloads, 2);
+        assert_eq!(report.aggregate.pr_region_hits, 2 * 5);
+    }
+
+    #[test]
+    fn scheduler_spills_to_least_loaded_when_home_is_deep() {
+        let pool = pool(2);
+        let key = Composition::vmul_reduce(128).cache_key();
+        let home = (key % 2) as usize;
+        let other = 1 - home;
+        // same loads: stay home
+        assert_eq!(pool.planned_worker(key), home);
+        // overload home beyond the skew threshold: spill
+        pool.force_load(home, ServiceConfig::default().max_queue_skew + 1);
+        pool.force_load(other, 0);
+        assert_eq!(pool.planned_worker(key), other);
+        pool.force_load(home, 0);
+        let report = pool.shutdown();
+        assert_eq!(report.aggregate.requests, 0);
+    }
+
+    #[test]
+    fn sticky_routing_follows_a_spill() {
+        let pool = pool(2);
+        let req = vmul_req(128, 1);
+        let key = req.comp.cache_key();
+        let home = (key % 2) as usize;
+        let other = 1 - home;
+        pool.force_load(home, ServiceConfig::default().max_queue_skew + 1);
+        pool.submit_wait(req).unwrap();
+        pool.force_load(home, 0);
+        // home is idle again, but the composition now lives on `other`
+        assert_eq!(pool.planned_worker(key), other);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_surfaces_request_errors_and_pool_survives() {
+        let pool = pool(2);
+        // wrong channel count → structured error, worker stays alive
+        let bad = Request::dynamic(Composition::vmul_reduce(64), vec![vec![0.0; 64]]);
+        assert!(pool.submit_wait(bad).is_err());
+        pool.submit_wait(vmul_req(64, 3)).unwrap();
+        let report = pool.shutdown();
+        assert_eq!(report.aggregate.requests, 1); // failed request not counted
+    }
+
+    #[test]
+    fn residency_reported_per_fabric() {
+        let pool = pool(2);
+        pool.submit_wait(vmul_req(128, 1)).unwrap();
+        let report = pool.shutdown();
+        // exactly one fabric hosts the two vmul stages; the other is empty
+        let resident: usize = report.per_worker_residency.iter().map(|(r, _)| r).sum();
+        assert_eq!(resident, 2);
+        for (_, total) in report.per_worker_residency {
+            assert_eq!(total, 9);
+        }
+    }
+}

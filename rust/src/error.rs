@@ -5,61 +5,91 @@
 //! particular — can distinguish recoverable conditions (e.g. a pattern that
 //! does not fit the fabric) from hard faults (a corrupt artifact).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// All error conditions surfaced by the JIT overlay runtime.
-#[derive(Debug, Error)]
+///
+/// `Display`/`Error` are implemented by hand (not derived via `thiserror`)
+/// so the crate builds with zero dependencies, fully offline.
+#[derive(Debug)]
 pub enum Error {
     /// A pattern expression failed shape/type checking.
-    #[error("pattern error: {0}")]
     Pattern(String),
 
     /// The JIT could not select an operator implementation.
-    #[error("no bitstream for operator `{op}` fitting region class {class:?}")]
     NoBitstream { op: String, class: crate::bitstream::RegionClass },
 
     /// Placement failed: not enough free tiles (or no contiguous run).
-    #[error("placement failed: {0}")]
     Placement(String),
 
     /// Routing failed between two placed tiles.
-    #[error("routing failed: no path from tile {from} to tile {to}")]
     Routing { from: usize, to: usize },
 
     /// A controller program is malformed (bad operands, missing halt, ...).
-    #[error("program error: {0}")]
     Program(String),
 
     /// The controller trapped at runtime (bad address, div-by-zero, ...).
-    #[error("controller trap at pc={pc}: {reason}")]
     Trap { pc: usize, reason: String },
 
     /// Reconfiguration error (bitstream does not fit the PR region, ...).
-    #[error("reconfiguration error: {0}")]
     Reconfig(String),
 
     /// Artifact manifest / HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// The PJRT runtime rejected or failed an operation.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration rejected at validation time.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Manifest / program-text parse failure.
-    #[error("parse error: {0}")]
     Parse(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Pattern(m) => write!(f, "pattern error: {m}"),
+            Error::NoBitstream { op, class } => {
+                write!(f, "no bitstream for operator `{op}` fitting region class {class:?}")
+            }
+            Error::Placement(m) => write!(f, "placement failed: {m}"),
+            Error::Routing { from, to } => {
+                write!(f, "routing failed: no path from tile {from} to tile {to}")
+            }
+            Error::Program(m) => write!(f, "program error: {m}"),
+            Error::Trap { pc, reason } => write!(f, "controller trap at pc={pc}: {reason}"),
+            Error::Reconfig(m) => write!(f, "reconfiguration error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            // transparent: I/O errors surface their own message
+            Error::Io(e) => fmt::Display::fmt(e, f),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -69,5 +99,40 @@ impl Error {
             self,
             Error::Placement(_) | Error::Routing { .. } | Error::NoBitstream { .. }
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_renders_structured_messages() {
+        assert_eq!(Error::Pattern("x".into()).to_string(), "pattern error: x");
+        assert_eq!(
+            Error::Routing { from: 1, to: 2 }.to_string(),
+            "routing failed: no path from tile 1 to tile 2"
+        );
+        assert_eq!(
+            Error::Trap { pc: 7, reason: "div0".into() }.to_string(),
+            "controller trap at pc=7: div0"
+        );
+    }
+
+    #[test]
+    fn io_errors_are_transparent_and_sourced() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "boom");
+        let msg = io.to_string();
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), msg);
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Parse("p".into())).is_none());
+    }
+
+    #[test]
+    fn capacity_classification() {
+        assert!(Error::Placement("full".into()).is_capacity());
+        assert!(Error::Routing { from: 0, to: 1 }.is_capacity());
+        assert!(!Error::Runtime("x".into()).is_capacity());
     }
 }

@@ -183,6 +183,15 @@ impl Engine {
         Ok(RunResult { target: Target::HlsCustom, output, timing, reconfig: None, stats: None })
     }
 
+    /// Fabric occupancy: `(tiles with a resident operator, total tiles)`.
+    ///
+    /// The pool reports this per worker — it is the residency the affinity
+    /// scheduler is trying to protect.
+    pub fn residency(&self) -> (usize, usize) {
+        let total = self.fabric.tiles.len();
+        (total - self.fabric.free_tiles().len(), total)
+    }
+
     /// Validate user channel count/lengths against the composition.
     fn validate_inputs(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<()> {
         let want = acc.composition.inputs as usize;
@@ -237,7 +246,10 @@ mod tests {
 
     fn ramp(n: usize, seed: u32) -> Vec<f32> {
         (0..n)
-            .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 / 250.0 - 2.0)
+            .map(|i| {
+                ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 / 250.0
+                    - 2.0
+            })
             .collect()
     }
 
@@ -349,7 +361,8 @@ mod tests {
                 .total();
             statics.push(t);
         }
-        let t_arm = e.run(&acc, &[a.clone(), b.clone()], Target::ArmSoftware).unwrap().timing.total();
+        let t_arm =
+            e.run(&acc, &[a.clone(), b.clone()], Target::ArmSoftware).unwrap().timing.total();
 
         // dynamic ≤ static-s1 < static-s2 < static-s3 (pass-through penalty)
         assert!(t_dyn <= statics[0] * 1.05, "dyn {t_dyn} vs s1 {}", statics[0]);
@@ -370,6 +383,18 @@ mod tests {
         let second = e.run(&acc, &[a, b], Target::DynamicOverlay).unwrap();
         assert!(first.reconfig.unwrap().seconds > 0.0);
         assert_eq!(second.reconfig.unwrap().seconds, 0.0); // residency cache
+    }
+
+    #[test]
+    fn residency_tracks_downloads() {
+        let mut e = engine();
+        assert_eq!(e.residency(), (0, 9));
+        let comp = Composition::vmul_reduce(256);
+        let acc = compile(&e, &comp);
+        e.run(&acc, &[vec![1.0; 256], vec![1.0; 256]], Target::DynamicOverlay).unwrap();
+        assert_eq!(e.residency(), (2, 9));
+        e.fabric.reset_full();
+        assert_eq!(e.residency(), (0, 9));
     }
 
     #[test]

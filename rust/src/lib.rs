@@ -29,8 +29,15 @@
 //!   numerics;
 //! * [`runtime`] — the PJRT/XLA artifact loader (AOT-compiled JAX/Pallas
 //!   kernels; Python never runs at request time);
-//! * [`coordinator`] — the run-time service: request queue, accelerator
-//!   cache, batching, metrics.
+//! * [`coordinator`] — the run-time service: request queue, sharded
+//!   accelerator cache, batching, metrics — scaled out by
+//!   [`coordinator::pool`], a multi-fabric worker pool whose affinity
+//!   scheduler routes each composition to the worker where its accelerator
+//!   is already compiled and resident (`repro serve --workers N`).
+//!
+//! The crate is dependency-free by design: PRNG ([`workload`]), bench
+//! harness ([`benchkit`]), error type ([`error`]) and CLI parsing are all
+//! in-tree, so `cargo build` works fully offline.
 
 pub mod benchkit;
 pub mod bitstream;
@@ -50,5 +57,5 @@ pub mod runtime;
 pub mod timing;
 pub mod workload;
 
-pub use config::OverlayConfig;
+pub use config::{OverlayConfig, ServiceConfig};
 pub use error::{Error, Result};

@@ -11,16 +11,14 @@
 //!   repro verify [--n N]        three-way value agreement (overlay/CPU/PJRT)
 //!   repro isa                   print the 42-instruction opcode table
 //!   repro inspect --pattern P   show placement + disassembled program
-//!   repro serve --requests K    coordinator service demo (threaded loop)
+//!   repro serve --requests K --workers N   multi-fabric pool service demo
 //! ```
 //!
-//! Arg parsing is hand-rolled (`--flag value` pairs) — the workspace builds
-//! offline without clap.
-
-use anyhow::{anyhow, bail, Context, Result};
+//! Arg parsing is hand-rolled (`--flag value` pairs) and errors ride a
+//! boxed-error shim — the workspace builds offline without clap or anyhow.
 
 use jit_overlay::bitstream::OperatorKind;
-use jit_overlay::coordinator::{spawn_service, Coordinator, Job, Request};
+use jit_overlay::coordinator::{Coordinator, Request, WorkerPool};
 use jit_overlay::exec::Engine;
 use jit_overlay::isa::{asm, Category, Opcode};
 use jit_overlay::jit::Jit;
@@ -29,7 +27,36 @@ use jit_overlay::place::StaticScenario;
 use jit_overlay::report::{ms, speedup, Table};
 use jit_overlay::runtime::{default_artifacts_dir, Runtime};
 use jit_overlay::timing::Target;
-use jit_overlay::{workload, OverlayConfig};
+use jit_overlay::{workload, OverlayConfig, ServiceConfig};
+
+/// CLI-local result over a boxed error (the anyhow stand-in).
+type Result<T, E = Box<dyn std::error::Error>> = std::result::Result<T, E>;
+
+/// Build a boxed error from a format string.
+macro_rules! anyhow {
+    ($($arg:tt)*) => { Box::<dyn std::error::Error>::from(format!($($arg)*)) };
+}
+
+/// Early-return with a formatted boxed error.
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err(anyhow!($($arg)*)) };
+}
+
+/// `.context(..)` / `.with_context(..)` on any displayable error.
+trait Context<T> {
+    fn context(self, msg: &'static str) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &'static str) -> Result<T> {
+        self.map_err(|e| anyhow!("{msg}: {e}"))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| anyhow!("{}: {e}", f()))
+    }
+}
 
 /// Minimal `--key value` argument map.
 struct Args {
@@ -320,38 +347,45 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize("requests", 64)?;
     let n = args.usize("n", 1024)?;
-    let coord = Coordinator::new(OverlayConfig::default())?;
-    let (tx, handle) = spawn_service(coord);
-    let patterns = [
-        Composition::vmul_reduce(n),
-        Composition::map(OperatorKind::Sqrt, n),
-        Composition::filter_reduce(0.25, n),
-        Composition::axpy(1.5, n),
-    ];
+    let workers = args.usize("workers", 1)?;
+    let seed = args.u64("seed", 0xF00D)?;
+    let pool = WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(workers))?;
+    let comps = workload::mixed_compositions(requests, n, seed);
+
     let t0 = std::time::Instant::now();
-    for k in 0..requests {
-        let comp = patterns[k % patterns.len()].clone();
-        let inputs: Vec<Vec<f32>> = (0..comp.inputs)
-            .map(|c| workload::vector(n, (k * 4 + c as usize) as u64, 0.1, 2.0))
-            .collect();
-        let (rtx, rrx) = std::sync::mpsc::channel();
-        tx.send(Job { request: Request::dynamic(comp, inputs), reply: rtx })
-            .map_err(|_| anyhow!("service thread died"))?;
-        rrx.recv()??;
+    // enqueue everything up front (the pool pipelines per worker), then drain
+    let mut pending = Vec::with_capacity(requests);
+    for (k, comp) in comps.into_iter().enumerate() {
+        let inputs = workload::request_inputs(&comp, k as u64);
+        pending.push(pool.submit(Request::dynamic(comp, inputs))?);
     }
-    drop(tx);
-    let metrics = handle.join().map_err(|_| anyhow!("service panicked"))?;
+    for rx in pending {
+        rx.recv().context("pool worker dropped a reply")??;
+    }
     let dt = t0.elapsed().as_secs_f64();
-    println!("{}", metrics.summary());
+
+    let report = pool.shutdown();
+    for (w, (m, (res, total))) in report
+        .per_worker
+        .iter()
+        .zip(&report.per_worker_residency)
+        .enumerate()
+    {
+        println!("worker {w}: {} residency={res}/{total}", m.summary());
+    }
+    println!("pool ({workers} workers): {}", report.aggregate.summary());
     println!(
-        "served {requests} requests in {:.1} ms ({:.0} req/s wall)",
+        "served {requests} requests in {:.1} ms ({:.0} req/s wall), {} cached accelerators, {:.2} PR downloads/request",
         dt * 1e3,
-        requests as f64 / dt
+        requests as f64 / dt,
+        report.cached_accelerators,
+        report.aggregate.pr_downloads as f64 / requests.max(1) as f64,
     );
     Ok(())
 }
 
 const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve> [--flag value ...]
+  serve: --requests K --workers N --n LEN --seed S (multi-fabric pool)
   see crate docs / README for per-command flags";
 
 fn main() -> Result<()> {

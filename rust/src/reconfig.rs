@@ -19,12 +19,28 @@ use crate::place::Placement;
 pub struct ReconfigStats {
     /// Tiles whose PR region was written.
     pub downloads: usize,
+    /// Downloads that overwrote a *different* resident operator — the
+    /// residency-thrash signal per fabric (cold loads write empty regions
+    /// and do not count).
+    pub replaced: usize,
     /// Tiles skipped because the right operator was already resident.
     pub cache_hits: usize,
     /// Configuration bytes moved through the ICAP.
     pub bytes: usize,
     /// Wall-clock seconds spent reconfiguring.
     pub seconds: f64,
+}
+
+impl ReconfigStats {
+    /// Residency hit rate in [0, 1] for this plan application.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.downloads + self.cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
 /// The PR download engine + residency cache.
@@ -51,6 +67,9 @@ impl PrManager {
                 stats.cache_hits += 1;
                 continue;
             }
+            if fabric.tiles[a.tile].resident.is_some() {
+                stats.replaced += 1;
+            }
             let bs = lib.select(a.op, fabric.tiles[a.tile].class)?;
             fabric.load_bitstream(a.tile, bs)?;
             stats.downloads += 1;
@@ -58,6 +77,7 @@ impl PrManager {
         }
         stats.seconds = stats.bytes as f64 / fabric.cfg.clocks.icap_bytes_per_sec;
         self.lifetime.downloads += stats.downloads;
+        self.lifetime.replaced += stats.replaced;
         self.lifetime.cache_hits += stats.cache_hits;
         self.lifetime.bytes += stats.bytes;
         self.lifetime.seconds += stats.seconds;
@@ -163,6 +183,37 @@ mod tests {
         for a in &p.assignments {
             assert!(f.tiles[a.tile].resident.is_some());
         }
+    }
+
+    #[test]
+    fn replacing_download_counts_as_thrash() {
+        let (mut f, lib, mut pr) = setup();
+        let p1 = vmul_placement(&f, &lib);
+        let s1 = pr.apply(&mut f, &lib, &p1).unwrap();
+        assert_eq!(s1.replaced, 0, "cold loads are not thrash");
+        // force a different operator onto the same tiles
+        let p2 = Placement {
+            assignments: p1
+                .assignments
+                .iter()
+                .map(|a| crate::place::Assignment { op: OperatorKind::Add, ..*a })
+                .collect(),
+        };
+        let s2 = pr.apply(&mut f, &lib, &p2).unwrap();
+        assert_eq!(s2.downloads, 2);
+        assert_eq!(s2.replaced, 2);
+        assert_eq!(pr.lifetime.replaced, 2);
+    }
+
+    #[test]
+    fn hit_rate_reflects_residency() {
+        let (mut f, lib, mut pr) = setup();
+        let p = vmul_placement(&f, &lib);
+        let cold = pr.apply(&mut f, &lib, &p).unwrap();
+        assert_eq!(cold.hit_rate(), 0.0);
+        let warm = pr.apply(&mut f, &lib, &p).unwrap();
+        assert_eq!(warm.hit_rate(), 1.0);
+        assert_eq!(ReconfigStats::default().hit_rate(), 0.0);
     }
 
     #[test]

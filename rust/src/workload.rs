@@ -75,6 +75,52 @@ pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
 }
 
+// ---------------------------------------------------------------------------
+// Service request streams
+// ---------------------------------------------------------------------------
+
+use crate::bitstream::OperatorKind;
+use crate::patterns::Composition;
+
+/// The skewed composition mix a service bench drives the coordinator with:
+/// 80% of requests repeat one of four "hot" compositions (where affinity
+/// scheduling and both caches should win), 20% draw from a "cold" tail of
+/// distinct pipelines (which forces JIT compiles and PR churn).
+pub fn mixed_compositions(count: usize, n: usize, seed: u64) -> Vec<Composition> {
+    use OperatorKind::*;
+    let hot = [
+        Composition::vmul_reduce(n),
+        Composition::map(Sqrt, n),
+        Composition::filter_reduce(0.25, n),
+        Composition::axpy(1.5, n),
+    ];
+    let cold = [
+        Composition::chain(&[Abs, Square], n).expect("static chain"),
+        Composition::chain(&[Neg, Abs, Relu], n).expect("static chain"),
+        Composition::map(Exp, n),
+        Composition::chain(&[Square, Neg], n).expect("static chain"),
+    ];
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            if rng.below(10) < 8 {
+                hot[rng.below(hot.len())].clone()
+            } else {
+                cold[rng.below(cold.len())].clone()
+            }
+        })
+        .collect()
+}
+
+/// Deterministic input channels for one request of a stream (`k` is the
+/// request index — every request gets distinct data). The 0.1..2.0 domain
+/// is safe for every operator in the mixed stream (sqrt, exp, ...).
+pub fn request_inputs(comp: &Composition, k: u64) -> Vec<Vec<f32>> {
+    (0..comp.inputs)
+        .map(|c| vector(comp.n, k.wrapping_mul(31).wrapping_add(c as u64), 0.1, 2.0))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,5 +169,38 @@ mod tests {
         let (a, b) = paper_16kb(0);
         assert_eq!(a.len() * 4, 16 * 1024);
         assert_eq!(b.len() * 4, 16 * 1024);
+    }
+
+    #[test]
+    fn mixed_stream_is_deterministic_and_skewed() {
+        let a = mixed_compositions(200, 256, 42);
+        let b = mixed_compositions(200, 256, 42);
+        assert_eq!(a.len(), 200);
+        let keys_a: Vec<u64> = a.iter().map(|c| c.cache_key()).collect();
+        let keys_b: Vec<u64> = b.iter().map(|c| c.cache_key()).collect();
+        assert_eq!(keys_a, keys_b, "stream must be reproducible");
+        // skew: the four hot compositions dominate
+        let hot_keys: std::collections::HashSet<u64> = [
+            Composition::vmul_reduce(256).cache_key(),
+            Composition::map(OperatorKind::Sqrt, 256).cache_key(),
+            Composition::filter_reduce(0.25, 256).cache_key(),
+            Composition::axpy(1.5, 256).cache_key(),
+        ]
+        .into_iter()
+        .collect();
+        let hot_count = keys_a.iter().filter(|k| hot_keys.contains(k)).count();
+        assert!(hot_count > 140 && hot_count < 190, "hot share was {hot_count}/200");
+    }
+
+    #[test]
+    fn request_inputs_match_composition_shape() {
+        for comp in mixed_compositions(20, 128, 7) {
+            let inputs = request_inputs(&comp, 3);
+            assert_eq!(inputs.len(), comp.inputs as usize);
+            for ch in &inputs {
+                assert_eq!(ch.len(), 128);
+                assert!(ch.iter().all(|v| (0.1..2.0).contains(v)));
+            }
+        }
     }
 }
