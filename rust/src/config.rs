@@ -66,11 +66,43 @@ pub struct ServiceConfig {
     /// requests deeper. Low values favor load balance; high values favor
     /// residency (fewer PR downloads).
     pub max_queue_skew: usize,
+    /// Bounded per-worker queue depth (≥ 1). A full queue exerts
+    /// backpressure: `WorkerPool::try_submit` returns
+    /// [`crate::Error::PoolBusy`], `WorkerPool::submit` blocks for space.
+    pub queue_capacity: usize,
+    /// Maximum jobs a worker pops per wakeup and reorders with the
+    /// reconfiguration-aware scheduler before serving (≥ 1). `1` degenerates
+    /// to the PR 1 FIFO drain: no reordering, one metrics fold per job.
+    pub drain_window: usize,
+    /// Work-stealing threshold: an idle worker steals the tail composition
+    /// group of the deepest queue only when that queue holds at least this
+    /// many jobs. [`usize::MAX`] disables stealing entirely.
+    pub steal_min_depth: usize,
+    /// LRU cap on the pool-wide compiled-accelerator cache (`0` =
+    /// unbounded). Enforced per lock shard as `ceil(capacity /
+    /// cache_shards)`, so the true bound is within one entry per shard of
+    /// this value and a skewed key distribution can evict a hot shard
+    /// before the nominal total is reached (set `cache_shards: 1` for an
+    /// exact cap). Evictions count into `Metrics::lru_evictions`.
+    pub cache_capacity: usize,
+    /// LRU cap on the pool routing table (`0` = unbounded). Evicting a
+    /// sticky route only forgets affinity: the composition falls back to
+    /// its home-hash worker on its next request.
+    pub route_capacity: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 1, cache_shards: 8, max_queue_skew: 4 }
+        Self {
+            workers: 1,
+            cache_shards: 8,
+            max_queue_skew: 4,
+            queue_capacity: 256,
+            drain_window: 32,
+            steal_min_depth: 2,
+            cache_capacity: 256,
+            route_capacity: 1024,
+        }
     }
 }
 
@@ -80,6 +112,19 @@ impl ServiceConfig {
         Self { workers, ..Self::default() }
     }
 
+    /// Disable work-stealing (pure home/sticky affinity).
+    pub fn without_stealing(mut self) -> Self {
+        self.steal_min_depth = usize::MAX;
+        self
+    }
+
+    /// Degenerate to the PR 1 FIFO drain: one job per wakeup, no burst
+    /// reordering (baseline for the burst-draining benchmarks).
+    pub fn fifo_drain(mut self) -> Self {
+        self.drain_window = 1;
+        self
+    }
+
     /// Validate invariants. Call after deserializing user-supplied configs.
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 {
@@ -87,6 +132,12 @@ impl ServiceConfig {
         }
         if self.cache_shards == 0 {
             return Err(Error::Config("cache needs at least one shard".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(Error::Config("worker queues need capacity for at least one job".into()));
+        }
+        if self.drain_window == 0 {
+            return Err(Error::Config("drain window must admit at least one job".into()));
         }
         Ok(())
     }
@@ -268,5 +319,15 @@ mod tests {
     fn service_config_rejects_zero_workers_and_shards() {
         assert!(ServiceConfig { workers: 0, ..Default::default() }.validate().is_err());
         assert!(ServiceConfig { cache_shards: 0, ..Default::default() }.validate().is_err());
+        assert!(ServiceConfig { queue_capacity: 0, ..Default::default() }.validate().is_err());
+        assert!(ServiceConfig { drain_window: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn service_config_builders() {
+        let s = ServiceConfig::with_workers(4).without_stealing().fifo_drain();
+        assert_eq!(s.steal_min_depth, usize::MAX);
+        assert_eq!(s.drain_window, 1);
+        s.validate().unwrap();
     }
 }

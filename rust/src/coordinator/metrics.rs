@@ -31,6 +31,24 @@ pub struct Metrics {
     pub busy_seconds: f64,
     /// Whole-fabric evictions forced by placement capacity misses.
     pub evictions: u64,
+    /// Drain bursts served by pool workers (a burst is one queue window
+    /// reordered by the reconfiguration-aware scheduler and served with a
+    /// single metrics fold).
+    pub bursts: u64,
+    /// Composition-group switches *within* served bursts: the number of
+    /// adjacent same-burst job pairs whose composition keys differ after
+    /// reordering. FIFO draining of an interleaved stream maximizes this;
+    /// burst draining collapses it to (groups − 1) per window.
+    pub burst_group_switches: u64,
+    /// Work-stealing events: an idle worker took a whole composition group
+    /// from the deepest queue (counted on the thief).
+    pub steals: u64,
+    /// Submissions rejected with [`crate::error::Error::PoolBusy`]
+    /// (bounded-queue backpressure). Pool-level: recorded in the aggregate
+    /// only, never in a worker's own record.
+    pub rejected: u64,
+    /// Entries evicted from the LRU-capped accelerator cache.
+    pub lru_evictions: u64,
 }
 
 impl Metrics {
@@ -67,6 +85,11 @@ impl Metrics {
         self.pr_seconds += other.pr_seconds;
         self.busy_seconds += other.busy_seconds;
         self.evictions += other.evictions;
+        self.bursts += other.bursts;
+        self.burst_group_switches += other.burst_group_switches;
+        self.steals += other.steals;
+        self.rejected += other.rejected;
+        self.lru_evictions += other.lru_evictions;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
@@ -83,13 +106,18 @@ impl Metrics {
             pr_seconds: self.pr_seconds - earlier.pr_seconds,
             busy_seconds: self.busy_seconds - earlier.busy_seconds,
             evictions: self.evictions - earlier.evictions,
+            bursts: self.bursts - earlier.bursts,
+            burst_group_switches: self.burst_group_switches - earlier.burst_group_switches,
+            steals: self.steals - earlier.steals,
+            rejected: self.rejected - earlier.rejected,
+            lru_evictions: self.lru_evictions - earlier.lru_evictions,
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms",
+            "requests={} jit={} hits={} ({:.0}%) pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -100,6 +128,11 @@ impl Metrics {
             self.pr_replaced,
             self.pr_seconds * 1e3,
             self.busy_seconds * 1e3,
+            self.bursts,
+            self.burst_group_switches,
+            self.steals,
+            self.rejected,
+            self.lru_evictions,
         )
     }
 }
@@ -118,6 +151,11 @@ pub struct AtomicMetrics {
     pr_region_hits: AtomicU64,
     pr_replaced: AtomicU64,
     evictions: AtomicU64,
+    bursts: AtomicU64,
+    burst_group_switches: AtomicU64,
+    steals: AtomicU64,
+    rejected: AtomicU64,
+    lru_evictions: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -137,6 +175,11 @@ impl AtomicMetrics {
         self.pr_region_hits.fetch_add(d.pr_region_hits, Ordering::Relaxed);
         self.pr_replaced.fetch_add(d.pr_replaced, Ordering::Relaxed);
         self.evictions.fetch_add(d.evictions, Ordering::Relaxed);
+        self.bursts.fetch_add(d.bursts, Ordering::Relaxed);
+        self.burst_group_switches.fetch_add(d.burst_group_switches, Ordering::Relaxed);
+        self.steals.fetch_add(d.steals, Ordering::Relaxed);
+        self.rejected.fetch_add(d.rejected, Ordering::Relaxed);
+        self.lru_evictions.fetch_add(d.lru_evictions, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -155,6 +198,11 @@ impl AtomicMetrics {
             pr_seconds: self.pr_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             busy_seconds: self.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             evictions: self.evictions.load(Ordering::Relaxed),
+            bursts: self.bursts.load(Ordering::Relaxed),
+            burst_group_switches: self.burst_group_switches.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            lru_evictions: self.lru_evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -196,12 +244,22 @@ mod tests {
             pr_seconds: 0.25,
             busy_seconds: 1.5,
             evictions: 1,
+            bursts: 2,
+            burst_group_switches: 3,
+            steals: 1,
+            rejected: 4,
+            lru_evictions: 2,
         };
         let mut b = a;
         b.merge(&a);
         let d = b.delta_since(&a);
         assert_eq!(d.requests, a.requests);
         assert_eq!(d.pr_region_hits, a.pr_region_hits);
+        assert_eq!(d.bursts, a.bursts);
+        assert_eq!(d.burst_group_switches, a.burst_group_switches);
+        assert_eq!(d.steals, a.steals);
+        assert_eq!(d.rejected, a.rejected);
+        assert_eq!(d.lru_evictions, a.lru_evictions);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
     }
 
@@ -219,6 +277,11 @@ mod tests {
             pr_seconds: 0.002,
             busy_seconds: 0.003,
             evictions: 0,
+            bursts: 1,
+            burst_group_switches: 2,
+            steals: 1,
+            rejected: 3,
+            lru_evictions: 1,
         };
         agg.record(&d);
         agg.record(&d);
@@ -227,6 +290,11 @@ mod tests {
         assert_eq!(s.pr_downloads, 6);
         assert_eq!(s.pr_region_hits, 10);
         assert_eq!(s.pr_replaced, 2);
+        assert_eq!(s.bursts, 2);
+        assert_eq!(s.burst_group_switches, 4);
+        assert_eq!(s.steals, 2);
+        assert_eq!(s.rejected, 6);
+        assert_eq!(s.lru_evictions, 2);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

@@ -14,7 +14,9 @@
 //! [`Coordinator`] is the synchronous core; [`serve`]/[`spawn_service`]
 //! wrap it in an mpsc request loop on a dedicated thread, and [`pool`]
 //! scales it out to N workers — each owning its own fabric — behind an
-//! affinity scheduler (used by `repro serve --workers N`).
+//! affinity scheduler with bounded queues, reconfiguration-aware burst
+//! draining ([`Coordinator::serve_burst`]) and work-stealing (used by
+//! `repro serve --workers N`).
 
 pub mod metrics;
 pub mod pool;
@@ -23,6 +25,7 @@ pub use metrics::{AtomicMetrics, Metrics};
 pub use pool::{PoolReport, WorkerPool};
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
@@ -47,41 +50,109 @@ use crate::timing::Target;
 /// per-fabric placement specialization is a ROADMAP item. Sharding keeps
 /// writer stalls local to one key-slice while the hot path — repeat
 /// compositions — takes only a read lock.
+///
+/// The cache is LRU-capped (satellite of ISSUE 3): `capacity` entries,
+/// enforced per shard as `ceil(capacity / shards)` (`0` = unbounded) — so
+/// the bound is approximate under skewed key distributions; one shard
+/// gives an exact cap. Recency is tracked with a relaxed atomic clock so
+/// `get` bumps an entry's timestamp under the *read* lock; eviction scans
+/// its shard for the stalest entry at insert time, which is O(shard size)
+/// on a path that already pays a JIT compile. Shard locks recover from
+/// poisoning — an insert/remove either completed or never happened, so a
+/// panicking worker cannot leave a shard logically corrupt, and must not
+/// cascade its panic into every other worker sharing the cache.
 #[derive(Debug)]
 pub struct AcceleratorCache {
-    shards: Vec<RwLock<HashMap<u64, Arc<CompiledAccelerator>>>>,
+    shards: Vec<RwLock<HashMap<u64, CacheEntry>>>,
+    /// Per-shard entry cap (`usize::MAX` = unbounded).
+    shard_capacity: usize,
+    /// Monotonic recency clock shared by every shard.
+    clock: AtomicU64,
+}
+
+#[derive(Debug)]
+struct CacheEntry {
+    acc: Arc<CompiledAccelerator>,
+    last_hit: AtomicU64,
 }
 
 impl AcceleratorCache {
-    /// Build a cache with `shards` independent lock domains (≥ 1).
+    /// Build an unbounded cache with `shards` independent lock domains (≥ 1).
     pub fn new(shards: usize) -> AcceleratorCache {
+        Self::bounded(shards, 0)
+    }
+
+    /// Build a cache capped at `capacity` total entries (`0` = unbounded),
+    /// split evenly across `shards` lock domains (≥ 1).
+    pub fn bounded(shards: usize, capacity: usize) -> AcceleratorCache {
         let shards = shards.max(1);
+        let shard_capacity = if capacity == 0 {
+            usize::MAX
+        } else {
+            // ceil(capacity / shards) — spelled without the (a + b - 1) / b
+            // idiom because usize::div_ceil needs Rust 1.73 and the crate's
+            // MSRV is 1.70 — so per-shard caps sum to ≥ capacity and a
+            // single-shard cache caps at exactly `capacity`
+            (capacity / shards + usize::from(capacity % shards != 0)).max(1)
+        };
         AcceleratorCache {
             shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            shard_capacity,
+            clock: AtomicU64::new(0),
         }
     }
 
-    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, Arc<CompiledAccelerator>>> {
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, CacheEntry>> {
         &self.shards[(key % self.shards.len() as u64) as usize]
     }
 
-    /// Look up a compiled accelerator.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Look up a compiled accelerator, refreshing its LRU recency.
     pub fn get(&self, key: u64) -> Option<Arc<CompiledAccelerator>> {
-        self.shard(key).read().expect("cache shard poisoned").get(&key).cloned()
+        let shard = self.shard(key).read().unwrap_or_else(|p| p.into_inner());
+        shard.get(&key).map(|e| {
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            e.acc.clone()
+        })
     }
 
     /// Insert unless already present; returns the winning entry (first
-    /// writer wins, so concurrent compilers converge on one accelerator).
-    pub fn insert(&self, key: u64, acc: Arc<CompiledAccelerator>) -> Arc<CompiledAccelerator> {
-        let mut shard = self.shard(key).write().expect("cache shard poisoned");
-        shard.entry(key).or_insert(acc).clone()
+    /// writer wins, so concurrent compilers converge on one accelerator)
+    /// plus the number of least-recently-hit entries evicted to make room
+    /// (0 or 1 today).
+    pub fn insert(
+        &self,
+        key: u64,
+        acc: Arc<CompiledAccelerator>,
+    ) -> (Arc<CompiledAccelerator>, usize) {
+        let mut shard = self.shard(key).write().unwrap_or_else(|p| p.into_inner());
+        if let Some(existing) = shard.get(&key) {
+            existing.last_hit.store(self.tick(), Ordering::Relaxed);
+            return (existing.acc.clone(), 0);
+        }
+        let mut evicted = 0;
+        while shard.len() >= self.shard_capacity {
+            let stalest = shard
+                .iter()
+                .min_by_key(|(_, e)| e.last_hit.load(Ordering::Relaxed))
+                .map(|(k, _)| *k)
+                .expect("shard at capacity is nonempty");
+            shard.remove(&stalest);
+            evicted += 1;
+        }
+        let entry = CacheEntry { acc: acc.clone(), last_hit: AtomicU64::new(self.tick()) };
+        shard.insert(key, entry);
+        (acc, evicted)
     }
 
     /// Number of cached accelerators across all shards.
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.read().expect("cache shard poisoned").len())
+            .map(|s| s.read().unwrap_or_else(|p| p.into_inner()).len())
             .sum()
     }
 
@@ -129,8 +200,9 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: OverlayConfig) -> Result<Coordinator> {
-        let shards = ServiceConfig::default().cache_shards;
-        Self::with_cache(cfg, Arc::new(AcceleratorCache::new(shards)))
+        let service = ServiceConfig::default();
+        let cache = AcceleratorCache::bounded(service.cache_shards, service.cache_capacity);
+        Self::with_cache(cfg, Arc::new(cache))
     }
 
     /// Build a coordinator serving from a shared (pool-wide) cache.
@@ -169,7 +241,8 @@ impl Coordinator {
         self.metrics.jit_compiles += 1;
         self.metrics.jit_seconds += dt;
         // first writer wins; a racing worker's duplicate compile converges
-        let acc = self.cache.insert(key, Arc::new(compiled));
+        let (acc, evicted) = self.cache.insert(key, Arc::new(compiled));
+        self.metrics.lru_evictions += evicted as u64;
         Ok((acc, dt, false))
     }
 
@@ -191,16 +264,58 @@ impl Coordinator {
     /// Reconfiguration-aware batch schedule: stable-group requests by
     /// composition key. Returns the execution order (indices into `reqs`).
     pub fn schedule(reqs: &[Request]) -> Vec<usize> {
+        let keys: Vec<u64> = reqs.iter().map(|r| r.comp.cache_key()).collect();
+        Self::schedule_keys(&keys)
+    }
+
+    /// [`Coordinator::schedule`] over bare composition keys — the form the
+    /// pool's drain loop uses, where requests arrive wrapped in [`Job`]s.
+    /// Stable: groups are ordered by first arrival and arrival order is
+    /// preserved within a group.
+    pub fn schedule_keys(keys: &[u64]) -> Vec<usize> {
         let mut first_seen: HashMap<u64, usize> = HashMap::new();
-        let mut order: Vec<(usize, usize)> = Vec::with_capacity(reqs.len()); // (group, idx)
-        for (i, r) in reqs.iter().enumerate() {
-            let key = r.comp.cache_key();
+        let mut order: Vec<(usize, usize)> = Vec::with_capacity(keys.len()); // (group, idx)
+        for (i, &key) in keys.iter().enumerate() {
             let next_group = first_seen.len();
             let g = *first_seen.entry(key).or_insert(next_group);
             order.push((g, i));
         }
         order.sort(); // stable by (group, arrival)
         order.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Serve a drained queue window in reconfiguration-minimizing order:
+    /// stable-group the jobs by composition key, serve group by group, and
+    /// account the burst counters (`bursts`, `burst_group_switches`).
+    ///
+    /// Replies are **returned, not sent**: each response is paired with its
+    /// own request's reply channel (reordering can never cross-wire them),
+    /// and the caller delivers after folding the burst's single metrics
+    /// delta — so a client that has received a reply always observes that
+    /// request in the pool aggregate. A per-request failure becomes that
+    /// client's reply and does not abort the rest of the burst.
+    pub fn serve_burst(&mut self, jobs: Vec<Job>) -> BurstReplies {
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        let keys: Vec<u64> = jobs.iter().map(|j| j.request.comp.cache_key()).collect();
+        let order = Self::schedule_keys(&keys);
+        let mut jobs: Vec<Option<Job>> = jobs.into_iter().map(Some).collect();
+        let mut replies = Vec::with_capacity(jobs.len());
+        let mut prev_key: Option<u64> = None;
+        let mut switches = 0u64;
+        for i in order {
+            let job = jobs[i].take().expect("schedule visits each job once");
+            if prev_key.is_some() && prev_key != Some(keys[i]) {
+                switches += 1;
+            }
+            prev_key = Some(keys[i]);
+            let resp = self.submit(&job.request);
+            replies.push((job.reply, resp));
+        }
+        self.metrics.bursts += 1;
+        self.metrics.burst_group_switches += switches;
+        replies
     }
 
     /// Serve a batch in reconfiguration-minimizing order; returns responses
@@ -225,6 +340,11 @@ pub struct Job {
     pub request: Request,
     pub reply: std::sync::mpsc::Sender<Result<Response>>,
 }
+
+/// What [`Coordinator::serve_burst`] hands back: each served job's reply
+/// channel with its response, in served (reordered) order, for the caller
+/// to deliver after folding metrics.
+pub type BurstReplies = Vec<(std::sync::mpsc::Sender<Result<Response>>, Result<Response>)>;
 
 /// Request loop: drain jobs from `rx`, serve them on this thread, return
 /// the final metrics when all senders hang up.
@@ -435,11 +555,87 @@ mod tests {
         let acc1 = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
         let acc2 = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
         let key = comp.cache_key();
-        let won = cache.insert(key, acc1.clone());
+        let (won, _) = cache.insert(key, acc1.clone());
         assert!(Arc::ptr_eq(&won, &acc1));
-        let lost = cache.insert(key, acc2);
+        let (lost, evicted) = cache.insert(key, acc2);
         assert!(Arc::ptr_eq(&lost, &acc1), "second insert must return the first entry");
+        assert_eq!(evicted, 0);
         assert!(cache.get(key).is_some());
         assert!(cache.get(key ^ 1).is_none());
+    }
+
+    /// Satellite (ISSUE 3): a cap of K holds under K+N distinct
+    /// compositions, and the evicted entry is the least-recently-hit one.
+    #[test]
+    fn lru_cap_holds_and_evicts_stalest() {
+        const K: usize = 4;
+        let e = Engine::new(OverlayConfig::default()).unwrap();
+        let comp = Composition::vmul_reduce(128);
+        let acc = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
+        let cache = AcceleratorCache::bounded(1, K);
+        for key in 0..K as u64 {
+            let (_, evicted) = cache.insert(key, acc.clone());
+            assert_eq!(evicted, 0);
+            assert!(cache.len() <= K);
+        }
+        assert_eq!(cache.len(), K);
+        // touch key 0 so key 1 becomes the stalest
+        assert!(cache.get(0).is_some());
+        let mut evictions = 0;
+        for key in K as u64..(K + 3) as u64 {
+            let (_, evicted) = cache.insert(key, acc.clone());
+            evictions += evicted;
+            assert!(cache.len() <= K, "cap of {K} violated: {}", cache.len());
+        }
+        assert_eq!(cache.len(), K);
+        assert_eq!(evictions, 3);
+        assert!(cache.get(0).is_some(), "recently-hit entry must survive");
+        assert!(cache.get(1).is_none(), "least-recently-hit entry must be evicted first");
+    }
+
+    /// End-to-end: a capacity-1 coordinator cache recompiles on alternation
+    /// and counts its LRU evictions.
+    #[test]
+    fn coordinator_counts_lru_evictions() {
+        let service = ServiceConfig { cache_shards: 1, cache_capacity: 1, ..Default::default() };
+        let cache = AcceleratorCache::bounded(service.cache_shards, service.cache_capacity);
+        let mut c = Coordinator::with_cache(OverlayConfig::default(), Arc::new(cache)).unwrap();
+        c.submit(&vmul_req(256, 1.0)).unwrap();
+        c.submit(&map_req(256)).unwrap(); // evicts the vmul accelerator
+        c.submit(&vmul_req(256, 1.0)).unwrap(); // recompile, evicts the map
+        assert_eq!(c.metrics.jit_compiles, 3);
+        assert_eq!(c.metrics.cache_hits, 0);
+        assert_eq!(c.metrics.lru_evictions, 2);
+        assert_eq!(c.cached_accelerators(), 1);
+    }
+
+    #[test]
+    fn serve_burst_groups_and_replies_in_pair() {
+        let mut c = coord();
+        let reqs = vec![vmul_req(512, 1.0), map_req(512), vmul_req(512, 2.0), map_req(512)];
+        let mut rxs = Vec::new();
+        let jobs: Vec<Job> = reqs
+            .into_iter()
+            .map(|request| {
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                rxs.push(rrx);
+                Job { request, reply: rtx }
+            })
+            .collect();
+        let replies = c.serve_burst(jobs);
+        assert_eq!(replies.len(), 4);
+        assert_eq!(c.metrics.bursts, 1);
+        // [A, B, A, B] regroups to [A, A, B, B]: exactly one switch
+        assert_eq!(c.metrics.burst_group_switches, 1);
+        for (tx, resp) in replies {
+            tx.send(resp).unwrap();
+        }
+        // replies pair with their own request channels despite reordering
+        let r0 = rxs[0].recv().unwrap().unwrap();
+        assert_eq!(r0.run.output.as_scalar(), Some(1024.0));
+        let r2 = rxs[2].recv().unwrap().unwrap();
+        assert_eq!(r2.run.output.as_scalar(), Some(2048.0));
+        assert!(rxs[1].recv().unwrap().unwrap().run.output.as_vector().is_some());
+        assert!(rxs[3].recv().unwrap().unwrap().run.output.as_vector().is_some());
     }
 }

@@ -1,9 +1,10 @@
-//! Multi-fabric worker pool with affinity scheduling.
+//! Multi-fabric worker pool: bounded queues, reconfiguration-aware burst
+//! draining, and whole-group work-stealing.
 //!
 //! The paper's run-time system owns **one** overlay fabric; this module
 //! scales it out the way a deployment would: N workers, each owning its own
 //! [`crate::exec::Engine`] (fabric + PR manager + residency state), fed
-//! through per-worker queues by an **affinity scheduler**:
+//! through **bounded per-worker job queues** by an affinity scheduler:
 //!
 //! * **home routing** — each [`Request`]'s composition hashes to a home
 //!   worker (`cache_key % workers`), so repeated compositions land where
@@ -13,22 +14,59 @@
 //! * **sticky spill** — when the home queue runs deeper than the
 //!   least-loaded worker by more than `max_queue_skew`, the request spills
 //!   to the least-loaded worker and the routing table is updated so future
-//!   repeats follow it (residency migrates once, not per request);
-//! * **shared JIT cache** — compiled accelerators live in the pool-wide
-//!   sharded [`AcceleratorCache`], so a spill never recompiles, it only
-//!   re-downloads bitstreams on the new fabric;
-//! * **aggregate metrics** — workers fold per-request deltas into one
-//!   [`AtomicMetrics`] snapshot, so pool totals are observable while the
-//!   pool is live and provably equal to the sum of worker records.
+//!   repeats follow it (residency migrates once, not per request). The
+//!   routing table is LRU-capped (`route_capacity`); evicting a route only
+//!   forgets affinity — the key falls back to its home hash;
+//! * **burst draining** — a worker pops up to `drain_window` queued jobs
+//!   per wakeup and runs them through the coordinator's
+//!   reconfiguration-aware scheduler ([`Coordinator::serve_burst`]):
+//!   stable-grouped by composition key, the fabric reconfigures once per
+//!   *group* instead of once per interleaved request, and the worker folds
+//!   **one** metrics delta per burst. `drain_window = 1` degenerates to the
+//!   PR 1 FIFO drain;
+//! * **work-stealing** — an idle worker (empty queue) steals from the
+//!   deepest queue once it holds ≥ `steal_min_depth` jobs. It takes the
+//!   **whole tail composition group** (every queued job of the tail key —
+//!   never a prefix), refuses a tail key that continues into the burst the
+//!   victim is currently serving (so a same-key run cut by the drain
+//!   window is not split across fabrics), and the route table is repointed
+//!   so repeats follow the stolen residency to the thief's fabric;
+//! * **backpressure** — queues are bounded at `queue_capacity`:
+//!   [`WorkerPool::try_submit`] fails fast with [`Error::PoolBusy`] (and
+//!   counts `Metrics::rejected`), [`WorkerPool::submit`] blocks until the
+//!   chosen queue has room. The full-queue check reads an atomic depth
+//!   mirror, so rejection never takes a lock, and acceptance takes one
+//!   short per-worker lock — submitters to different workers never
+//!   contend (the PR 1 `Mutex<mpsc::Sender>` wrapper is gone);
+//! * **aggregate metrics** — workers fold per-burst deltas into one
+//!   [`AtomicMetrics`] snapshot *before* delivering the burst's replies,
+//!   so any client holding a response already sees it counted, and pool
+//!   totals equal the sum of worker records (`rejected` excepted — it is
+//!   pool-level, accounted by the submit path).
+//!
+//! For deterministic batching experiments, [`WorkerPool::new_paused`]
+//! spawns workers held at a start gate: enqueue a full backlog, then
+//! [`WorkerPool::start`] (or [`WorkerPool::start_worker`]) and measure the
+//! pure drain. The benches and the burst/steal tests are built on this.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::{AcceleratorCache, AtomicMetrics, Coordinator, Job, Metrics, Request, Response};
 use crate::config::{OverlayConfig, ServiceConfig};
 use crate::error::{Error, Result};
+
+/// Shortest idle-worker sleep between checking its own queue and the steal
+/// candidates. Doubles up to [`IDLE_POLL_MAX`] while nothing arrives, so a
+/// busy pool steals within ~0.5 ms but an idle pool settles at ~50
+/// wakeups/s per worker instead of 2000.
+const IDLE_POLL: Duration = Duration::from_micros(500);
+
+/// Idle-poll backoff ceiling (worst-case added steal latency).
+const IDLE_POLL_MAX: Duration = Duration::from_millis(20);
 
 /// What a worker thread leaves behind when the pool shuts down.
 struct WorkerExit {
@@ -37,14 +75,371 @@ struct WorkerExit {
     total_tiles: usize,
 }
 
-struct WorkerHandle {
-    /// `mpsc::Sender` is not `Sync` on older toolchains; the mutex is held
-    /// only for the enqueue itself.
-    tx: Mutex<mpsc::Sender<Job>>,
-    handle: JoinHandle<WorkerExit>,
+/// A bounded MPMC job queue: submitters push, the owning worker drains in
+/// bursts, idle peers steal whole composition groups from the tail.
+struct JobQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    /// Mirror of `inner.jobs.len()`, readable without the lock: the
+    /// lock-free full-queue fast-fail and the steal victim choice.
+    depth: AtomicUsize,
     /// Queued + in-flight requests on this worker (the scheduler's load
     /// signal). Incremented at dispatch, decremented after serving.
-    load: Arc<AtomicUsize>,
+    load: AtomicUsize,
+    /// Composition key of the tail of the burst the owner is currently
+    /// serving, valid while `inflight_valid`. Written only by the owning
+    /// worker: under the queue lock at pop time, or (for a stolen group)
+    /// inside `steal_into` before the route repoint publishes the thief.
+    /// Thieves refuse to steal this key, so a same-key run cut by the
+    /// drain window is not split across fabrics (the common straddle).
+    /// Distinct groups interleaved across the window boundary can still
+    /// migrate — bounded extra downloads, not a correctness issue.
+    inflight_tail_key: AtomicU64,
+    inflight_valid: AtomicBool,
+}
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// A failed push hands the job back so the caller can fail over or reject.
+enum PushError {
+    Full(Job),
+    Closed(Job),
+}
+
+impl JobQueue {
+    fn new(capacity: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            depth: AtomicUsize::new(0),
+            load: AtomicUsize::new(0),
+            inflight_tail_key: AtomicU64::new(0),
+            inflight_valid: AtomicBool::new(false),
+        }
+    }
+
+    /// Lock the queue, recovering from poisoning: every critical section
+    /// leaves the deque in a consistent state (a push/pop either completed
+    /// or never happened), so a panicking peer cannot corrupt it.
+    fn lock(&self) -> MutexGuard<'_, QueueInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Non-blocking push. A full queue is detected from the atomic depth
+    /// mirror before taking any lock, so the backpressure path is lock-free.
+    fn try_push(&self, job: Job) -> std::result::Result<(), PushError> {
+        if self.depth.load(Ordering::Relaxed) >= self.capacity {
+            return Err(PushError::Full(job));
+        }
+        let mut g = self.lock();
+        if g.closed {
+            return Err(PushError::Closed(job));
+        }
+        if g.jobs.len() >= self.capacity {
+            return Err(PushError::Full(job));
+        }
+        g.jobs.push_back(job);
+        self.depth.store(g.jobs.len(), Ordering::Relaxed);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for room. `Err` returns the job when the queue
+    /// closed while waiting (the worker is gone).
+    fn push_blocking(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut g = self.lock();
+        loop {
+            if g.closed {
+                return Err(job);
+            }
+            if g.jobs.len() < self.capacity {
+                g.jobs.push_back(job);
+                self.depth.store(g.jobs.len(), Ordering::Relaxed);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Pop up to `max` jobs in arrival order. `None` means closed *and*
+    /// drained (the worker should exit); `Some(empty)` means currently
+    /// empty but still open (try stealing, then wait).
+    fn pop_burst(&self, max: usize) -> Option<Vec<Job>> {
+        let mut g = self.lock();
+        if !g.jobs.is_empty() {
+            let take = max.min(g.jobs.len());
+            let burst: Vec<Job> = g.jobs.drain(..take).collect();
+            self.depth.store(g.jobs.len(), Ordering::Relaxed);
+            // mark the burst's tail group while still holding the lock, so
+            // a thief can never observe the queue remainder without also
+            // seeing that its head group is in flight here
+            let tail = burst.last().expect("nonempty burst");
+            self.mark_inflight(tail.request.comp.cache_key());
+            drop(g);
+            self.not_full.notify_all();
+            Some(burst)
+        } else if g.closed {
+            None
+        } else {
+            Some(Vec::new())
+        }
+    }
+
+    /// Park until the queue becomes nonempty or closes. With a timeout —
+    /// the idle worker's steal-poll cadence — the wait wakes periodically
+    /// to scan for steal victims; without one it sleeps until notified
+    /// (stealing disabled: nothing else to watch).
+    fn wait_nonempty(&self, timeout: Option<Duration>) {
+        let g = self.lock();
+        if !g.jobs.is_empty() || g.closed {
+            return;
+        }
+        match timeout {
+            Some(t) => {
+                let (woken, _) =
+                    self.not_empty.wait_timeout(g, t).unwrap_or_else(|p| p.into_inner());
+                drop(woken);
+            }
+            None => {
+                let woken = self.not_empty.wait(g).unwrap_or_else(|p| p.into_inner());
+                drop(woken);
+            }
+        }
+    }
+
+    /// Close the queue: submitters fail over, the worker drains and exits.
+    fn close(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Close the queue *and discard* anything still queued. Dropping the
+    /// jobs drops their reply senders, so clients blocked in `recv` observe
+    /// a disconnect instead of hanging forever — the fate queued work met
+    /// in PR 1 when a worker's `mpsc::Receiver` died with it. Zeroing the
+    /// depth mirror also keeps [`JobQueue::try_push`]'s lock-free full
+    /// check from reporting a dead-at-capacity queue as `Full` (which would
+    /// surface as `PoolBusy` instead of failing over). The load counter is
+    /// deliberately left inflated: a dead worker must not look attractive
+    /// to the spill heuristic.
+    fn close_and_discard(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        g.jobs.clear();
+        self.depth.store(0, Ordering::Relaxed);
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Record the in-flight burst's tail composition key (see the field
+    /// docs for the straddle-protection rationale).
+    fn mark_inflight(&self, key: u64) {
+        self.inflight_tail_key.store(key, Ordering::Relaxed);
+        // Release pairs with the Acquire in the steal guard: a reader that
+        // observes `valid` also observes the matching key
+        self.inflight_valid.store(true, Ordering::Release);
+    }
+
+    /// The burst finished: its groups are fully served and stealable again.
+    fn clear_inflight(&self) {
+        self.inflight_valid.store(false, Ordering::Relaxed);
+    }
+}
+
+/// A start gate: worker threads wait here so paused pools can accumulate a
+/// backlog before serving (deterministic burst/steal experiments).
+struct Gate {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(open: bool) -> Gate {
+        Gate { flag: Mutex::new(open), cv: Condvar::new() }
+    }
+
+    fn wait(&self) {
+        let mut g = self.flag.lock().unwrap_or_else(|p| p.into_inner());
+        while !*g {
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn open(&self) {
+        let mut g = self.flag.lock().unwrap_or_else(|p| p.into_inner());
+        *g = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Sticky composition→worker routing table with an LRU cap.
+///
+/// The steady state — looking up or repointing an existing route — takes
+/// only the read lock: the worker index and recency live in atomics inside
+/// the entry. The write lock is taken once per brand-new composition.
+struct RouteTable {
+    map: RwLock<HashMap<u64, RouteEntry>>,
+    clock: AtomicU64,
+    /// Max entries (`usize::MAX` = unbounded).
+    capacity: usize,
+}
+
+struct RouteEntry {
+    worker: AtomicUsize,
+    last_hit: AtomicU64,
+}
+
+impl RouteTable {
+    fn new(capacity: usize) -> RouteTable {
+        RouteTable {
+            map: RwLock::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            capacity: if capacity == 0 { usize::MAX } else { capacity },
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn get(&self, key: u64) -> Option<usize> {
+        let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+        map.get(&key).map(|e| {
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            e.worker.load(Ordering::Relaxed)
+        })
+    }
+
+    /// Point `key` at `worker`, evicting the least-recently-hit route when
+    /// a brand-new key would exceed the cap.
+    fn set(&self, key: u64, worker: usize) {
+        {
+            let map = self.map.read().unwrap_or_else(|p| p.into_inner());
+            if let Some(e) = map.get(&key) {
+                e.worker.store(worker, Ordering::Relaxed);
+                e.last_hit.store(self.tick(), Ordering::Relaxed);
+                return;
+            }
+        }
+        let mut map = self.map.write().unwrap_or_else(|p| p.into_inner());
+        if let Some(e) = map.get(&key) {
+            e.worker.store(worker, Ordering::Relaxed);
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            return;
+        }
+        if map.len() >= self.capacity {
+            // amortize the O(n) recency scan: evict the stalest ~1/8 of the
+            // table in one pass, so a cold stream of brand-new keys pays
+            // the scan once per batch instead of on every insert (the
+            // write lock is exclusive — submitters wait behind it)
+            let batch = (self.capacity / 8).max(1).min(map.len());
+            let mut entries: Vec<(u64, u64)> = map
+                .iter()
+                .map(|(k, e)| (e.last_hit.load(Ordering::Relaxed), *k))
+                .collect();
+            entries.select_nth_unstable(batch - 1);
+            for (_, stale_key) in entries.into_iter().take(batch) {
+                map.remove(&stale_key);
+            }
+        }
+        map.insert(
+            key,
+            RouteEntry {
+                worker: AtomicUsize::new(worker),
+                last_hit: AtomicU64::new(self.tick()),
+            },
+        );
+    }
+
+    fn len(&self) -> usize {
+        self.map.read().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+/// State shared by submitters and every worker thread.
+struct PoolShared {
+    queues: Vec<JobQueue>,
+    route: RouteTable,
+    gates: Vec<Gate>,
+    steal_min_depth: usize,
+    max_queue_skew: usize,
+}
+
+impl PoolShared {
+    /// Try to steal work for idle worker `thief`: pick the deepest other
+    /// queue, and if it holds at least `steal_min_depth` jobs, extract
+    /// **every** queued job of its tail composition key — whole groups
+    /// only, never splitting one — and repoint the route so repeats follow
+    /// the stolen residency.
+    fn steal_into(&self, thief: usize) -> Option<Vec<Job>> {
+        if self.steal_min_depth == usize::MAX {
+            return None;
+        }
+        let mut victim = None;
+        let mut deepest = 0;
+        for (i, q) in self.queues.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            let d = q.depth.load(Ordering::Relaxed);
+            if d > deepest {
+                deepest = d;
+                victim = Some(i);
+            }
+        }
+        let v = victim?;
+        if deepest < self.steal_min_depth {
+            return None;
+        }
+        let vq = &self.queues[v];
+        let mut g = vq.lock();
+        let key = g.jobs.back()?.request.comp.cache_key();
+        // the tail group may continue into the burst the victim is serving
+        // right now (a same-key run cut by the drain window): stealing it
+        // would split the group across fabrics and thrash both
+        if vq.inflight_valid.load(Ordering::Acquire)
+            && vq.inflight_tail_key.load(Ordering::Relaxed) == key
+        {
+            return None;
+        }
+        let mut stolen = Vec::new();
+        let mut kept = VecDeque::with_capacity(g.jobs.len());
+        while let Some(job) = g.jobs.pop_front() {
+            if job.request.comp.cache_key() == key {
+                stolen.push(job);
+            } else {
+                kept.push_back(job);
+            }
+        }
+        g.jobs = kept;
+        self.queues[thief].load.fetch_add(stolen.len(), Ordering::SeqCst);
+        vq.load.fetch_sub(stolen.len(), Ordering::SeqCst);
+        vq.depth.store(g.jobs.len(), Ordering::Relaxed);
+        drop(g);
+        vq.not_full.notify_all();
+        // guard the stolen group on the thief's marker BEFORE the route
+        // repoint publishes the new destination: otherwise a same-key job
+        // could route to the thief and a third worker could re-steal it
+        // while this group is in flight
+        self.queues[thief].mark_inflight(key);
+        self.route.set(key, thief);
+        Some(stolen)
+    }
 }
 
 /// Final pool accounting returned by [`WorkerPool::shutdown`].
@@ -64,11 +459,12 @@ pub struct PoolReport {
 }
 
 impl PoolReport {
-    /// Sum of the per-worker records. Equals [`PoolReport::aggregate`] up
-    /// to nanosecond rounding on the seconds fields — provided
-    /// [`PoolReport::panicked_workers`] is empty (a panicked worker's
-    /// record is lost while its already-folded deltas stay in the
-    /// aggregate).
+    /// Sum of the per-worker records. Equals [`PoolReport::aggregate`] on
+    /// every worker-served counter (up to nanosecond rounding on the
+    /// seconds fields) — provided [`PoolReport::panicked_workers`] is empty.
+    /// The exception is `Metrics::rejected`: backpressure rejections are
+    /// recorded by the submit path straight into the aggregate and appear
+    /// in no worker's record.
     pub fn worker_sum(&self) -> Metrics {
         let mut sum = Metrics::default();
         for m in &self.per_worker {
@@ -80,50 +476,112 @@ impl PoolReport {
 
 /// A pool of N coordinator workers, each owning its own overlay fabric.
 pub struct WorkerPool {
-    workers: Vec<WorkerHandle>,
-    /// Composition key → worker that last served it (sticky affinity).
-    route: RwLock<HashMap<u64, usize>>,
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<WorkerExit>>,
     /// Live pool-level aggregate (see [`AtomicMetrics`]).
     pub metrics: Arc<AtomicMetrics>,
     cache: Arc<AcceleratorCache>,
-    max_queue_skew: usize,
+    queue_capacity: usize,
 }
 
 impl WorkerPool {
-    /// Spawn `service.workers` workers, each with a fabric built from `cfg`.
+    /// Spawn `service.workers` workers, each with a fabric built from
+    /// `cfg`, serving immediately.
     pub fn new(cfg: OverlayConfig, service: ServiceConfig) -> Result<WorkerPool> {
+        Self::build(cfg, service, true)
+    }
+
+    /// Like [`WorkerPool::new`], but workers are held at a start gate until
+    /// [`WorkerPool::start`] / [`WorkerPool::start_worker`]: enqueue a full
+    /// backlog first, then release the workers and measure the pure drain.
+    ///
+    /// While paused nothing drains, so blocking [`WorkerPool::submit`]
+    /// calls beyond `queue_capacity` will wait until the pool starts;
+    /// paused experiments should size `queue_capacity` to the backlog (or
+    /// use [`WorkerPool::try_submit`]).
+    pub fn new_paused(cfg: OverlayConfig, service: ServiceConfig) -> Result<WorkerPool> {
+        Self::build(cfg, service, false)
+    }
+
+    fn build(cfg: OverlayConfig, service: ServiceConfig, started: bool) -> Result<WorkerPool> {
         service.validate()?;
-        let cache = Arc::new(AcceleratorCache::new(service.cache_shards));
+        let cache =
+            Arc::new(AcceleratorCache::bounded(service.cache_shards, service.cache_capacity));
         let metrics = Arc::new(AtomicMetrics::default());
-        let mut workers = Vec::with_capacity(service.workers);
+        let shared = Arc::new(PoolShared {
+            queues: (0..service.workers).map(|_| JobQueue::new(service.queue_capacity)).collect(),
+            route: RouteTable::new(service.route_capacity),
+            gates: (0..service.workers).map(|_| Gate::new(started)).collect(),
+            steal_min_depth: service.steal_min_depth,
+            max_queue_skew: service.max_queue_skew,
+        });
+        let mut handles = Vec::with_capacity(service.workers);
         for w in 0..service.workers {
-            let coord = Coordinator::with_cache(cfg.clone(), cache.clone())?;
-            let (tx, rx) = mpsc::channel::<Job>();
-            let load = Arc::new(AtomicUsize::new(0));
-            let worker_load = load.clone();
-            let agg = metrics.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("overlay-worker-{w}"))
-                .spawn(move || worker_loop(coord, rx, agg, worker_load))?;
-            workers.push(WorkerHandle { tx: Mutex::new(tx), handle, load });
+            let spawned = Coordinator::with_cache(cfg.clone(), cache.clone()).and_then(|coord| {
+                let shared_w = shared.clone();
+                let agg = metrics.clone();
+                let drain_window = service.drain_window;
+                std::thread::Builder::new()
+                    .name(format!("overlay-worker-{w}"))
+                    .spawn(move || worker_loop(coord, w, shared_w, agg, drain_window))
+                    .map_err(Error::from)
+            });
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // release the workers already spawned so they exit
+                    // instead of leaking at the gate
+                    for q in &shared.queues {
+                        q.close();
+                    }
+                    for g in &shared.gates {
+                        g.open();
+                    }
+                    return Err(e);
+                }
+            }
         }
         Ok(WorkerPool {
-            workers,
-            route: RwLock::new(HashMap::new()),
+            shared,
+            handles,
             metrics,
             cache,
-            max_queue_skew: service.max_queue_skew,
+            queue_capacity: service.queue_capacity,
         })
+    }
+
+    /// Release every worker of a paused pool.
+    pub fn start(&self) {
+        for g in &self.shared.gates {
+            g.open();
+        }
+    }
+
+    /// Release a single worker of a paused pool (deterministic
+    /// work-stealing experiments: start only the thief).
+    pub fn start_worker(&self, w: usize) {
+        self.shared.gates[w].open();
     }
 
     /// Number of workers in the pool.
     pub fn worker_count(&self) -> usize {
-        self.workers.len()
+        self.shared.queues.len()
     }
 
     /// Compiled accelerators currently in the shared cache.
     pub fn cached_accelerators(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Entries in the sticky routing table (LRU-capped at
+    /// `ServiceConfig::route_capacity`).
+    pub fn routed_compositions(&self) -> usize {
+        self.shared.route.len()
+    }
+
+    /// Jobs currently queued (not in-flight) at worker `w`.
+    pub fn queue_depth(&self, w: usize) -> usize {
+        self.shared.queues[w].depth.load(Ordering::Relaxed)
     }
 
     /// Live aggregate metrics snapshot.
@@ -135,10 +593,10 @@ impl WorkerPool {
     /// now: the sticky/home worker unless its queue is `max_queue_skew`
     /// deeper than the least-loaded one.
     ///
-    /// Read-only — the routing table is only updated by [`Self::submit`].
-    /// Two racing submitters of a brand-new key may both compute the same
-    /// home (deterministic hash), so the race at worst duplicates one JIT
-    /// compile, which the shared cache converges.
+    /// Read-only — the routing table is only updated by submission and
+    /// stealing. Two racing submitters of a brand-new key may both compute
+    /// the same home (deterministic hash), so the race at worst duplicates
+    /// one JIT compile, which the shared cache converges.
     pub fn planned_worker(&self, key: u64) -> usize {
         self.route_decision(key).0
     }
@@ -146,16 +604,15 @@ impl WorkerPool {
     /// One route-table read: returns the chosen worker and whether the
     /// sticky entry must be updated to match it.
     fn route_decision(&self, key: u64) -> (usize, bool) {
-        let n = self.workers.len();
-        let sticky =
-            self.route.read().expect("route table poisoned").get(&key).copied();
+        let n = self.shared.queues.len();
+        let sticky = self.shared.route.get(key);
         let home = sticky.unwrap_or((key % n as u64) as usize);
         // single allocation-free pass over the load counters
         let mut home_load = 0;
         let mut least = home;
         let mut least_load = usize::MAX;
-        for (i, w) in self.workers.iter().enumerate() {
-            let l = w.load.load(Ordering::SeqCst);
+        for (i, q) in self.shared.queues.iter().enumerate() {
+            let l = q.load.load(Ordering::SeqCst);
             if i == home {
                 home_load = l;
             }
@@ -164,66 +621,104 @@ impl WorkerPool {
                 least = i;
             }
         }
-        let chosen = if home_load > least_load + self.max_queue_skew { least } else { home };
+        let spill = home_load > least_load.saturating_add(self.shared.max_queue_skew);
+        let chosen = if spill { least } else { home };
         (chosen, sticky != Some(chosen))
     }
 
-    /// Enqueue a request; returns the reply channel immediately.
+    /// Enqueue a request; returns the reply channel immediately. Blocks
+    /// while the chosen worker's bounded queue is full (backpressure by
+    /// waiting — use [`WorkerPool::try_submit`] to fail fast instead).
     ///
     /// Submitting many requests before draining any replies is how callers
-    /// express pipelining. Each worker serves its queue in FIFO order, so
-    /// per-submitter, per-composition ordering holds while the route is
-    /// stable; a spill migrates the composition to another queue, so
-    /// requests already queued at the old worker may execute after newer
-    /// ones at the new worker. Today's compositions are stateless, so only
-    /// reply order per client matters (which submit/recv pairing preserves);
-    /// callers needing strict per-key FIFO should disable spilling via a
-    /// large [`ServiceConfig::max_queue_skew`].
+    /// express pipelining. Each worker serves its queue in drain bursts
+    /// reordered per window by composition group, so replies always pair
+    /// with their own request channel and per-client `recv` order is
+    /// whatever submit/recv pairing the client chose; strict pool-wide
+    /// per-key FIFO is not guaranteed once spills or steals migrate a
+    /// composition (disable them via `max_queue_skew` / `steal_min_depth`
+    /// if required).
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit_inner(request, true)
+    }
+
+    /// Enqueue a request without blocking: a full queue returns
+    /// [`Error::PoolBusy`] (counted in `Metrics::rejected`) and the caller
+    /// decides — retry, shed, or drain replies first.
+    pub fn try_submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit_inner(request, false)
+    }
+
+    fn submit_inner(
+        &self,
+        request: Request,
+        block: bool,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
         let key = request.comp.cache_key();
         // the routing table is written only when the decision changed — the
         // steady state (repeat composition, stable route) stays on the read
         // path and never serializes submitters
         let (w, stale) = self.route_decision(key);
         if stale {
-            self.route.write().expect("route table poisoned").insert(key, w);
+            self.shared.route.set(key, w);
         }
         let (rtx, rrx) = mpsc::channel();
         let mut job = Job { request, reply: rtx };
-        match self.try_send(w, job) {
+        match self.enqueue(w, job, block) {
             Ok(()) => return Ok(rrx),
-            Err(j) => job = j,
+            Err(PushError::Full(_)) => return Err(self.reject(w)),
+            Err(PushError::Closed(j)) => job = j,
         }
-        // worker `w` is dead (its receiver dropped, e.g. a panicked
-        // thread). Fail over to the other workers — lowest load first so a
-        // dead worker's frozen 0 counter can't keep attracting traffic —
-        // and repoint the sticky route at whoever accepted.
-        let mut candidates: Vec<usize> = (0..self.workers.len()).filter(|&i| i != w).collect();
-        candidates.sort_by_key(|&i| self.workers[i].load.load(Ordering::SeqCst));
+        // worker `w` is gone (its queue closed, e.g. a panicked thread).
+        // Fail over to the other workers — lowest load first so a dead
+        // worker's frozen counter can't keep attracting traffic — and
+        // repoint the sticky route at whoever accepted. A full candidate is
+        // skipped, not fatal: another may still have room.
+        let mut candidates: Vec<usize> =
+            (0..self.shared.queues.len()).filter(|&i| i != w).collect();
+        candidates.sort_by_key(|&i| self.shared.queues[i].load.load(Ordering::SeqCst));
+        let mut full_candidate = None;
         for c in candidates {
-            match self.try_send(c, job) {
+            match self.enqueue(c, job, block) {
                 Ok(()) => {
-                    self.route.write().expect("route table poisoned").insert(key, c);
+                    self.shared.route.set(key, c);
                     return Ok(rrx);
                 }
-                Err(j) => job = j,
+                Err(PushError::Full(j)) => {
+                    full_candidate = Some(c);
+                    job = j;
+                }
+                Err(PushError::Closed(j)) => job = j,
             }
         }
-        Err(Error::Runtime("every pool worker is gone".into()))
+        match full_candidate {
+            // at least one live worker exists, it is just saturated
+            Some(c) => Err(self.reject(c)),
+            None => Err(Error::Runtime("every pool worker is gone".into())),
+        }
     }
 
-    /// Enqueue on worker `w`, keeping the load counter consistent; returns
-    /// the job when the worker's receiver is gone.
-    fn try_send(&self, w: usize, job: Job) -> std::result::Result<(), Job> {
-        let worker = &self.workers[w];
-        worker.load.fetch_add(1, Ordering::SeqCst);
-        match worker.tx.lock().expect("worker sender poisoned").send(job) {
-            Ok(()) => Ok(()),
-            Err(mpsc::SendError(job)) => {
-                worker.load.fetch_sub(1, Ordering::SeqCst);
-                Err(job)
-            }
+    /// Enqueue on worker `w`, keeping the load counter consistent.
+    fn enqueue(&self, w: usize, job: Job, block: bool) -> std::result::Result<(), PushError> {
+        let q = &self.shared.queues[w];
+        // count the job before it becomes poppable so the worker's
+        // post-serve decrement can never underflow the counter
+        q.load.fetch_add(1, Ordering::SeqCst);
+        let res = if block {
+            q.push_blocking(job).map_err(PushError::Closed)
+        } else {
+            q.try_push(job)
+        };
+        if res.is_err() {
+            q.load.fetch_sub(1, Ordering::SeqCst);
         }
+        res
+    }
+
+    /// Account one backpressure rejection and build the error.
+    fn reject(&self, worker: usize) -> Error {
+        self.metrics.record(&Metrics { rejected: 1, ..Default::default() });
+        Error::PoolBusy { worker, capacity: self.queue_capacity }
     }
 
     /// Enqueue a request and block for its response.
@@ -233,16 +728,27 @@ impl WorkerPool {
             .map_err(|_| Error::Runtime("pool worker dropped the reply".into()))?
     }
 
+    /// Close every queue and open every gate: workers drain what is
+    /// already queued, reply, and exit. Idempotent.
+    fn release_workers(&self) {
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for g in &self.shared.gates {
+            g.open();
+        }
+    }
+
     /// Drain all queues, stop every worker, and return the final report.
-    pub fn shutdown(self) -> PoolReport {
-        let WorkerPool { workers, metrics, cache, .. } = self;
-        let mut per_worker = Vec::with_capacity(workers.len());
-        let mut per_worker_residency = Vec::with_capacity(workers.len());
+    pub fn shutdown(mut self) -> PoolReport {
+        // closing ends each worker's loop after it drains everything
+        // already queued; opening the gates lets paused pools drain too
+        self.release_workers();
+        let handles = std::mem::take(&mut self.handles);
+        let mut per_worker = Vec::with_capacity(handles.len());
+        let mut per_worker_residency = Vec::with_capacity(handles.len());
         let mut panicked_workers = Vec::new();
-        for (w, WorkerHandle { tx, handle, .. }) in workers.into_iter().enumerate() {
-            // dropping the sender ends the worker's recv loop after it
-            // drains everything already queued
-            drop(tx);
+        for (w, handle) in handles.into_iter().enumerate() {
             let exit = handle.join().unwrap_or_else(|_| {
                 panicked_workers.push(w);
                 WorkerExit { metrics: Metrics::default(), resident_tiles: 0, total_tiles: 0 }
@@ -251,35 +757,100 @@ impl WorkerPool {
             per_worker_residency.push((exit.resident_tiles, exit.total_tiles));
         }
         PoolReport {
-            aggregate: metrics.snapshot(),
+            aggregate: self.metrics.snapshot(),
             per_worker,
             per_worker_residency,
-            cached_accelerators: cache.len(),
+            cached_accelerators: self.cache.len(),
             panicked_workers,
         }
     }
 
     #[cfg(test)]
     fn force_load(&self, worker: usize, load: usize) {
-        self.workers[worker].load.store(load, Ordering::SeqCst);
+        self.shared.queues[worker].load.store(load, Ordering::SeqCst);
     }
 }
 
-/// One worker's request loop: serve jobs FIFO, fold metric deltas into the
-/// pool aggregate, and report the final fabric occupancy on exit.
+impl Drop for WorkerPool {
+    /// Dropping the pool without [`WorkerPool::shutdown`] (early `?`
+    /// return, caller panic) must not park the worker threads forever at a
+    /// gate or an empty-queue wait: close the queues and open the gates so
+    /// every worker drains its backlog, delivers the replies, and exits on
+    /// its own — the drop itself never blocks. (PR 1 got this for free
+    /// from dropping the `mpsc::Sender`s.)
+    fn drop(&mut self) {
+        self.release_workers();
+    }
+}
+
+/// Closes and drains the worker's queue on the way out — normal exit *or*
+/// a panic in the serving path — so submitters fail over instead of
+/// feeding a dead worker, and already-queued clients get a disconnect
+/// instead of an eternal `recv`. On the normal path the queue is already
+/// closed and drained, so the discard is a no-op.
+struct CloseOnExit<'a> {
+    shared: &'a PoolShared,
+    idx: usize,
+}
+
+impl Drop for CloseOnExit<'_> {
+    fn drop(&mut self) {
+        self.shared.queues[self.idx].close_and_discard();
+    }
+}
+
+/// One worker's loop: drain bursts from the own queue, reorder each burst
+/// with the reconfiguration-aware scheduler, steal whole composition groups
+/// when idle, fold one metrics delta per burst (before delivering replies),
+/// and report the final fabric occupancy on exit.
 fn worker_loop(
     mut coord: Coordinator,
-    rx: mpsc::Receiver<Job>,
+    idx: usize,
+    shared: Arc<PoolShared>,
     agg: Arc<AtomicMetrics>,
-    load: Arc<AtomicUsize>,
+    drain_window: usize,
 ) -> WorkerExit {
-    while let Ok(job) = rx.recv() {
+    shared.gates[idx].wait();
+    let queue = &shared.queues[idx];
+    let _close_on_exit = CloseOnExit { shared: &shared, idx };
+    // with stealing disabled there is nothing to poll for: sleep until
+    // a submitter or shutdown notifies
+    let polling = shared.steal_min_depth != usize::MAX;
+    let mut idle_poll = IDLE_POLL;
+    loop {
+        let popped = match queue.pop_burst(drain_window) {
+            None => break, // closed and drained
+            Some(popped) => popped,
+        };
+        let (burst, stole) = if popped.is_empty() {
+            match shared.steal_into(idx) {
+                // steal_into already marked this queue's inflight key,
+                // before publishing the route repoint
+                Some(stolen) => (stolen, true),
+                None => {
+                    queue.wait_nonempty(polling.then_some(idle_poll));
+                    if polling {
+                        idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);
+                    }
+                    continue;
+                }
+            }
+        } else {
+            (popped, false)
+        };
+        idle_poll = IDLE_POLL;
         let before = coord.metrics;
-        let resp = coord.submit(&job.request);
+        if stole {
+            coord.metrics.steals += 1;
+        }
+        let replies = coord.serve_burst(burst);
         agg.record(&coord.metrics.delta_since(&before));
-        load.fetch_sub(1, Ordering::SeqCst);
-        // a hung-up client is not a worker error
-        let _ = job.reply.send(resp);
+        queue.load.fetch_sub(replies.len(), Ordering::SeqCst);
+        queue.clear_inflight();
+        for (reply, resp) in replies {
+            // a hung-up client is not a worker error
+            let _ = reply.send(resp);
+        }
     }
     let (resident_tiles, total_tiles) = coord.engine.residency();
     WorkerExit { metrics: coord.metrics, resident_tiles, total_tiles }
@@ -331,6 +902,10 @@ mod tests {
         assert_eq!(sum.cache_hits, report.aggregate.cache_hits);
         assert_eq!(sum.pr_downloads, report.aggregate.pr_downloads);
         assert_eq!(sum.pr_region_hits, report.aggregate.pr_region_hits);
+        assert_eq!(sum.bursts, report.aggregate.bursts);
+        assert_eq!(sum.burst_group_switches, report.aggregate.burst_group_switches);
+        assert_eq!(sum.steals, report.aggregate.steals);
+        assert!(report.aggregate.bursts >= 1);
     }
 
     #[test]
@@ -354,6 +929,11 @@ mod tests {
         // ... and the home fabric kept the operators resident
         assert_eq!(report.aggregate.pr_downloads, 2);
         assert_eq!(report.aggregate.pr_region_hits, 2 * 5);
+        // serial submit_wait never builds a queue: every burst is one job
+        // and a single-composition stream never switches groups
+        assert_eq!(report.aggregate.bursts, 6);
+        assert_eq!(report.aggregate.burst_group_switches, 0);
+        assert_eq!(report.aggregate.steals, 0);
     }
 
     #[test]
@@ -410,5 +990,57 @@ mod tests {
         for (_, total) in report.per_worker_residency {
             assert_eq!(total, 9);
         }
+    }
+
+    #[test]
+    fn try_submit_rejects_when_queue_full() {
+        let service = ServiceConfig {
+            queue_capacity: 2,
+            ..ServiceConfig::with_workers(1).without_stealing()
+        };
+        let pool = WorkerPool::new_paused(OverlayConfig::default(), service).unwrap();
+        let a = pool.try_submit(vmul_req(128, 1)).unwrap();
+        let b = pool.try_submit(vmul_req(128, 2)).unwrap();
+        match pool.try_submit(vmul_req(128, 3)) {
+            Err(Error::PoolBusy { worker: 0, capacity: 2 }) => {}
+            other => panic!("expected PoolBusy, got {other:?}"),
+        }
+        assert_eq!(pool.snapshot().rejected, 1);
+        assert_eq!(pool.queue_depth(0), 2);
+        // draining frees capacity again
+        pool.start();
+        a.recv().unwrap().unwrap();
+        b.recv().unwrap().unwrap();
+        let c = pool.try_submit(vmul_req(128, 4)).unwrap();
+        c.recv().unwrap().unwrap();
+        let report = pool.shutdown();
+        assert_eq!(report.aggregate.requests, 3);
+        assert_eq!(report.aggregate.rejected, 1);
+        // rejected is pool-level: it appears in no worker record
+        assert_eq!(report.worker_sum().rejected, 0);
+    }
+
+    #[test]
+    fn paused_pool_drains_one_burst_with_grouping() {
+        let service = ServiceConfig {
+            max_queue_skew: usize::MAX - 1, // affinity only, no spills
+            ..ServiceConfig::with_workers(1).without_stealing()
+        };
+        let pool = WorkerPool::new_paused(OverlayConfig::default(), service).unwrap();
+        // interleaved A,B,A,B — one drain window regroups to A,A,B,B
+        let mut pending = Vec::new();
+        for k in 0..2 {
+            pending.push(pool.submit(vmul_req(256, k)).unwrap());
+            pending.push(pool.submit(map_req(256)).unwrap());
+        }
+        assert_eq!(pool.queue_depth(0), 4);
+        pool.start();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = pool.shutdown();
+        assert_eq!(report.aggregate.requests, 4);
+        assert_eq!(report.aggregate.bursts, 1);
+        assert_eq!(report.aggregate.burst_group_switches, 1);
     }
 }

@@ -46,6 +46,10 @@ pub enum Error {
     /// Configuration rejected at validation time.
     Config(String),
 
+    /// Backpressure: the chosen pool worker's bounded queue is full.
+    /// Retry later, drain replies, or use the blocking submit path.
+    PoolBusy { worker: usize, capacity: usize },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 
@@ -70,6 +74,9 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::PoolBusy { worker, capacity } => {
+                write!(f, "pool busy: worker {worker} queue at capacity {capacity}")
+            }
             // transparent: I/O errors surface their own message
             Error::Io(e) => fmt::Display::fmt(e, f),
             Error::Parse(m) => write!(f, "parse error: {m}"),
@@ -134,5 +141,15 @@ mod tests {
         assert!(Error::Placement("full".into()).is_capacity());
         assert!(Error::Routing { from: 0, to: 1 }.is_capacity());
         assert!(!Error::Runtime("x".into()).is_capacity());
+        // backpressure is a service condition, not a placement-capacity miss
+        assert!(!Error::PoolBusy { worker: 0, capacity: 8 }.is_capacity());
+    }
+
+    #[test]
+    fn pool_busy_renders() {
+        assert_eq!(
+            Error::PoolBusy { worker: 2, capacity: 64 }.to_string(),
+            "pool busy: worker 2 queue at capacity 64"
+        );
     }
 }

@@ -29,11 +29,14 @@
 //!   numerics;
 //! * [`runtime`] — the PJRT/XLA artifact loader (AOT-compiled JAX/Pallas
 //!   kernels; Python never runs at request time);
-//! * [`coordinator`] — the run-time service: request queue, sharded
-//!   accelerator cache, batching, metrics — scaled out by
-//!   [`coordinator::pool`], a multi-fabric worker pool whose affinity
-//!   scheduler routes each composition to the worker where its accelerator
-//!   is already compiled and resident (`repro serve --workers N`).
+//! * [`coordinator`] — the run-time service: bounded request queues, an
+//!   LRU-capped sharded accelerator cache, reconfiguration-aware batching,
+//!   metrics — scaled out by [`coordinator::pool`], a multi-fabric worker
+//!   pool whose affinity scheduler routes each composition to the worker
+//!   where its accelerator is already compiled and resident, whose workers
+//!   drain their queues in scheduler-reordered bursts, and whose idle
+//!   workers steal whole composition groups from the deepest queue
+//!   (`repro serve --workers N --drain-window W --steal-depth D`).
 //!
 //! The crate is dependency-free by design: PRNG ([`workload`]), bench
 //! harness ([`benchkit`]), error type ([`error`]) and CLI parsing are all

@@ -349,7 +349,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.usize("n", 1024)?;
     let workers = args.usize("workers", 1)?;
     let seed = args.u64("seed", 0xF00D)?;
-    let pool = WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(workers))?;
+    let mut service = ServiceConfig::with_workers(workers);
+    service.queue_capacity = args.usize("queue-capacity", service.queue_capacity)?;
+    service.drain_window = args.usize("drain-window", service.drain_window)?;
+    service.max_queue_skew = args.usize("skew", service.max_queue_skew)?;
+    // --steal-depth 0 disables stealing entirely
+    service.steal_min_depth = match args.usize("steal-depth", service.steal_min_depth)? {
+        0 => usize::MAX,
+        d => d,
+    };
+    let pool = WorkerPool::new(OverlayConfig::default(), service)?;
     let comps = workload::mixed_compositions(requests, n, seed);
 
     let t0 = std::time::Instant::now();
@@ -386,6 +395,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve> [--flag value ...]
   serve: --requests K --workers N --n LEN --seed S (multi-fabric pool)
+         --drain-window W (burst size; 1 = FIFO)  --queue-capacity C (backpressure)
+         --steal-depth D (work-stealing threshold; 0 = off)  --skew S (spill threshold)
   see crate docs / README for per-command flags";
 
 fn main() -> Result<()> {

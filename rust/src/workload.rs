@@ -121,6 +121,47 @@ pub fn request_inputs(comp: &Composition, k: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// Three distinct 5-stage chains. On the default 9-tile fabric any two of
+/// them cannot co-reside (5 + 5 > 9 tiles), so switching between them
+/// forces whole-fabric eviction + re-download — the adversarial case the
+/// burst drainer and the affinity scheduler exist to amortize.
+pub fn conflicting_chains(n: usize) -> [Composition; 3] {
+    use OperatorKind::*;
+    [
+        Composition::chain(&[Neg, Abs, Square, Relu, Neg], n).expect("static chain"),
+        Composition::chain(&[Abs, Neg, Relu, Square, Abs], n).expect("static chain"),
+        Composition::chain(&[Relu, Square, Abs, Neg, Relu], n).expect("static chain"),
+    ]
+}
+
+/// Adversarial round-robin interleaving: `A,B,C,A,B,C,...` for `rounds`
+/// cycles over `comps`. Served FIFO on one fabric this thrashes the PR
+/// regions on every request; a reconfiguration-aware drain regroups it to
+/// one reconfiguration per composition group per window.
+pub fn interleaved_stream(comps: &[Composition], rounds: usize) -> Vec<Composition> {
+    (0..rounds * comps.len()).map(|i| comps[i % comps.len()].clone()).collect()
+}
+
+/// Two conflicting chains whose composition keys are congruent mod
+/// `modulus` — on a pool of `modulus` workers (or any divisor of it) both
+/// hash to the *same* home, so an interleaved stream of the pair actually
+/// contends for one fabric instead of hashing apart. Scans 48 workload
+/// lengths × the three chain pairs; `None` is astronomically unlikely
+/// (≈ (1−1/m)^144) and impossible for `modulus = 2` (pigeonhole over
+/// three keys).
+pub fn home_aligned_conflicting_pair(modulus: u64) -> Option<(Composition, Composition)> {
+    for i in 0..48usize {
+        let n = 512 + 32 * i;
+        let [a, b, c] = conflicting_chains(n);
+        for (x, y) in [(&a, &b), (&a, &c), (&b, &c)] {
+            if x.cache_key() % modulus == y.cache_key() % modulus {
+                return Some((x.clone(), y.clone()));
+            }
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +231,43 @@ mod tests {
         .collect();
         let hot_count = keys_a.iter().filter(|k| hot_keys.contains(k)).count();
         assert!(hot_count > 140 && hot_count < 190, "hot share was {hot_count}/200");
+    }
+
+    #[test]
+    fn conflicting_chains_are_distinct_and_oversized_pairwise() {
+        let chains = conflicting_chains(256);
+        let keys: std::collections::HashSet<u64> =
+            chains.iter().map(|c| c.cache_key()).collect();
+        assert_eq!(keys.len(), 3, "chains must have distinct cache keys");
+        for c in &chains {
+            assert_eq!(c.stages().len(), 5, "two 5-stage chains must overflow 9 tiles");
+            assert_eq!(c.inputs, 1);
+        }
+    }
+
+    #[test]
+    fn home_aligned_pair_is_aligned_and_conflicting() {
+        for workers in [2u64, 4, 8] {
+            let (a, b) =
+                home_aligned_conflicting_pair(workers).expect("alignment search must succeed");
+            assert_eq!(a.cache_key() % workers, b.cache_key() % workers);
+            assert_ne!(a.cache_key(), b.cache_key());
+            assert_eq!(a.stages().len() + b.stages().len(), 10, "pair must overflow 9 tiles");
+        }
+    }
+
+    #[test]
+    fn interleaved_stream_round_robins() {
+        let chains = conflicting_chains(128);
+        let s = interleaved_stream(&chains, 4);
+        assert_eq!(s.len(), 12);
+        for (i, comp) in s.iter().enumerate() {
+            assert_eq!(comp.cache_key(), chains[i % 3].cache_key());
+        }
+        // adjacent requests always conflict — the worst case for FIFO
+        for w in s.windows(2) {
+            assert_ne!(w[0].cache_key(), w[1].cache_key());
+        }
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Pool-level burst draining, work-stealing, backpressure, and routing-cap
+//! tests (ISSUE 3 acceptance criteria).
+//!
+//! Determinism technique: `WorkerPool::new_paused` holds every worker at a
+//! start gate, so a full backlog can be enqueued before any serving starts
+//! — the drain order is then a pure function of the configuration, not of
+//! submit/serve timing. The steal test additionally releases only the
+//! thief (`start_worker`) so the victim's queue is provably untouched
+//! while the steal happens.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::coordinator::{Metrics, Request, WorkerPool};
+use jit_overlay::exec::cpu::{self, Value};
+use jit_overlay::patterns::Composition;
+use jit_overlay::{workload, Error, OverlayConfig, ServiceConfig};
+
+/// A,B,A,B,… requests with per-request distinct inputs.
+fn interleaved_requests(a: &Composition, b: &Composition, rounds: usize) -> Vec<Request> {
+    workload::interleaved_stream(&[a.clone(), b.clone()], rounds)
+        .into_iter()
+        .enumerate()
+        .map(|(i, comp)| {
+            let inputs = workload::request_inputs(&comp, i as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect()
+}
+
+/// Enqueue the whole backlog on a paused pool, release it, drain replies.
+fn drain_paused(service: ServiceConfig, reqs: &[Request]) -> Metrics {
+    let pool = WorkerPool::new_paused(OverlayConfig::default(), service).expect("pool spawn");
+    let pending: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone()).expect("submit")).collect();
+    pool.start();
+    for rx in pending {
+        rx.recv().expect("worker alive").expect("request served");
+    }
+    pool.shutdown().aggregate
+}
+
+/// ISSUE 3 acceptance: on the interleaved conflicting-chain workload at 4
+/// workers, burst draining shows strictly fewer PR downloads per request
+/// than the PR 1 FIFO drain (the pool-level mirror of the coordinator's
+/// `batched_order_reduces_pr_downloads`).
+#[test]
+fn burst_drain_beats_fifo_on_interleaved_conflicts() {
+    const WORKERS: usize = 4;
+    const ROUNDS: usize = 4;
+    let Some((a, b)) = workload::home_aligned_conflicting_pair(WORKERS as u64) else {
+        eprintln!("skipping: no home-aligned chain pair under this hasher");
+        return;
+    };
+    let reqs = interleaved_requests(&a, &b, ROUNDS);
+    let service = |drain_window: usize| {
+        ServiceConfig {
+            drain_window,
+            queue_capacity: reqs.len(),
+            max_queue_skew: 1_000_000, // affinity only: the stream stays on one fabric
+            ..ServiceConfig::with_workers(WORKERS)
+        }
+        .without_stealing()
+    };
+
+    let fifo = drain_paused(service(1), &reqs);
+    let burst = drain_paused(service(reqs.len()), &reqs);
+
+    assert_eq!(fifo.requests, reqs.len() as u64);
+    assert_eq!(burst.requests, reqs.len() as u64);
+    // FIFO: one burst per job, never a within-burst switch, PR thrash on
+    // every A↔B alternation
+    assert_eq!(fifo.bursts, reqs.len() as u64);
+    assert_eq!(fifo.burst_group_switches, 0);
+    assert!(fifo.evictions >= 1, "the FIFO baseline must actually thrash");
+    // burst: the whole backlog drains as one window, regrouped to A…A B…B
+    assert_eq!(burst.bursts, 1);
+    assert_eq!(burst.burst_group_switches, 1);
+    assert!(
+        burst.pr_downloads < fifo.pr_downloads,
+        "burst {} !< fifo {} PR downloads",
+        burst.pr_downloads,
+        fifo.pr_downloads
+    );
+    let per_req = |m: &Metrics| m.pr_downloads as f64 / m.requests as f64;
+    assert!(per_req(&burst) < per_req(&fifo));
+}
+
+/// ISSUE 3 acceptance: with one worker's queue force-loaded deep, an idle
+/// worker steals a whole composition group (never splitting it), the route
+/// table repoints to the thief, and aggregate metrics still equal the
+/// per-worker sum.
+#[test]
+fn idle_worker_steals_whole_group_and_repoints_route() {
+    const K: usize = 4; // jobs per composition group
+    let (a, b) = workload::home_aligned_conflicting_pair(2).expect("pigeonhole over three keys");
+    let home = (a.cache_key() % 2) as usize;
+    let thief = 1 - home;
+    let service = ServiceConfig {
+        queue_capacity: 2 * K,
+        max_queue_skew: 1_000_000, // no spills: the backlog queues at home
+        steal_min_depth: K + 1,    // exactly one steal: 2K ≥ K+1 > K
+        ..ServiceConfig::with_workers(2)
+    };
+    let pool = WorkerPool::new_paused(OverlayConfig::default(), service).unwrap();
+    let reqs = interleaved_requests(&a, &b, K);
+    let pending: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone()).unwrap()).collect();
+    assert_eq!(pool.queue_depth(home), 2 * K);
+    assert_eq!(pool.queue_depth(thief), 0);
+
+    // release only the thief: it must find its own queue empty, steal the
+    // tail group — every queued `b` job, interleaved or not — and serve it
+    pool.start_worker(thief);
+    let mut waited = 0;
+    while pool.snapshot().requests < K as u64 {
+        std::thread::sleep(Duration::from_millis(1));
+        waited += 1;
+        assert!(waited < 10_000, "thief never served the stolen group");
+    }
+    assert_eq!(pool.snapshot().steals, 1);
+    assert_eq!(
+        pool.queue_depth(home),
+        K,
+        "only the tail group may be taken — groups are never split"
+    );
+    assert_eq!(
+        pool.planned_worker(b.cache_key()),
+        thief,
+        "route must repoint so repeats follow the stolen residency"
+    );
+    assert_eq!(pool.planned_worker(a.cache_key()), home);
+
+    pool.start_worker(home);
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = pool.shutdown();
+
+    // the thief served exactly the stolen group, the victim the rest
+    assert_eq!(report.per_worker[thief].requests, K as u64);
+    assert_eq!(report.per_worker[thief].steals, 1);
+    assert_eq!(report.per_worker[home].requests, K as u64);
+    assert_eq!(report.per_worker[home].steals, 0);
+    // each fabric served one single-composition burst: no switches, no
+    // cross-composition thrash anywhere
+    assert_eq!(report.aggregate.bursts, 2);
+    assert_eq!(report.aggregate.burst_group_switches, 0);
+    assert_eq!(report.aggregate.pr_replaced, 0);
+    assert_eq!(report.aggregate.evictions, 0);
+    // aggregate equals the per-worker sum
+    let sum = report.worker_sum();
+    assert_eq!(sum.requests, report.aggregate.requests);
+    assert_eq!(sum.jit_compiles, report.aggregate.jit_compiles);
+    assert_eq!(sum.cache_hits, report.aggregate.cache_hits);
+    assert_eq!(sum.pr_downloads, report.aggregate.pr_downloads);
+    assert_eq!(sum.pr_region_hits, report.aggregate.pr_region_hits);
+    assert_eq!(sum.bursts, report.aggregate.bursts);
+    assert_eq!(sum.burst_group_switches, report.aggregate.burst_group_switches);
+    assert_eq!(sum.steals, report.aggregate.steals);
+    assert_eq!(sum.lru_evictions, report.aggregate.lru_evictions);
+    assert!(report.panicked_workers.is_empty());
+}
+
+/// Backpressure: a full bounded queue rejects `try_submit` with `PoolBusy`
+/// and counts it, while blocking `submit` waits for room instead.
+#[test]
+fn backpressure_rejects_then_recovers() {
+    let service = ServiceConfig {
+        queue_capacity: 3,
+        ..ServiceConfig::with_workers(1).without_stealing()
+    };
+    let pool = WorkerPool::new_paused(OverlayConfig::default(), service).unwrap();
+    let comp = Composition::map(OperatorKind::Sqrt, 128);
+    let req = |k: u64| Request::dynamic(comp.clone(), workload::request_inputs(&comp, k));
+    let mut pending = Vec::new();
+    for k in 0..3 {
+        pending.push(pool.try_submit(req(k)).unwrap());
+    }
+    for k in 3..5 {
+        match pool.try_submit(req(k)) {
+            Err(Error::PoolBusy { worker: 0, capacity: 3 }) => {}
+            other => panic!("expected PoolBusy, got {other:?}"),
+        }
+    }
+    assert_eq!(pool.snapshot().rejected, 2);
+    pool.start();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    // started pool: blocking submits ride the backpressure without errors
+    for k in 5..25 {
+        pool.submit_wait(req(k)).unwrap();
+    }
+    let report = pool.shutdown();
+    assert_eq!(report.aggregate.requests, 23);
+    assert_eq!(report.aggregate.rejected, 2);
+    // rejections are pool-level accounting, not any worker's
+    assert_eq!(report.worker_sum().rejected, 0);
+}
+
+/// Satellite: contended-submit regression. Many client threads pipeline
+/// blocking submits of one hot composition through tiny bounded queues;
+/// every request must be served exactly once and the counters conserve.
+#[test]
+fn contended_pipelined_submitters_conserve_requests() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 40;
+    let service = ServiceConfig {
+        queue_capacity: 4,
+        drain_window: 4,
+        ..ServiceConfig::with_workers(2)
+    };
+    let pool = Arc::new(WorkerPool::new(OverlayConfig::default(), service).unwrap());
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS as u64 {
+        let p = pool.clone();
+        joins.push(std::thread::spawn(move || {
+            let comp = Composition::vmul_reduce(256);
+            let mut rxs = Vec::new();
+            for i in 0..PER_CLIENT as u64 {
+                let inputs = workload::request_inputs(&comp, c * 1000 + i);
+                rxs.push(p.submit(Request::dynamic(comp.clone(), inputs)).unwrap());
+            }
+            for rx in rxs {
+                rx.recv().expect("worker alive").expect("request served");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let report = Arc::try_unwrap(pool).ok().expect("clients done").shutdown();
+    assert_eq!(report.aggregate.requests, (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(report.aggregate.rejected, 0, "blocking submit never rejects");
+    let sum = report.worker_sum();
+    assert_eq!(sum.requests, report.aggregate.requests);
+    assert_eq!(sum.jit_compiles, report.aggregate.jit_compiles);
+    assert_eq!(sum.cache_hits, report.aggregate.cache_hits);
+    assert_eq!(sum.pr_downloads, report.aggregate.pr_downloads);
+    assert_eq!(sum.bursts, report.aggregate.bursts);
+    assert!(report.panicked_workers.is_empty());
+}
+
+fn agree(a: &Value, b: &Value) -> bool {
+    const TOL: f32 = 1e-3;
+    match (a, b) {
+        (Value::Scalar(x), Value::Scalar(y)) => (x - y).abs() <= TOL * (1.0 + y.abs()),
+        (Value::Vector(x), Value::Vector(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| (p - q).abs() <= TOL * (1.0 + q.abs()))
+        }
+        _ => false,
+    }
+}
+
+/// Satellite: property-style reply integrity. Random interleaved streams
+/// with aggressive bursting and stealing — every reply must carry the
+/// value of *its own* request (distinct inputs per request make the value
+/// a fingerprint of the pairing) and per-client recv order must hold.
+#[test]
+fn random_interleaved_streams_preserve_reply_integrity() {
+    const CLIENTS: u64 = 3;
+    const PER_CLIENT: usize = 30;
+    let service = ServiceConfig {
+        queue_capacity: 64,
+        drain_window: 8,
+        steal_min_depth: 1, // steal at any depth: maximize migrations
+        max_queue_skew: 2,  // spill eagerly too
+        ..ServiceConfig::with_workers(3)
+    };
+    let pool = Arc::new(WorkerPool::new(OverlayConfig::default(), service).unwrap());
+    let mut joins = Vec::new();
+    for client in 0..CLIENTS {
+        let p = pool.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = workload::Rng::new(0xC0FFEE + client);
+            let chains = workload::conflicting_chains(256);
+            let reqs: Vec<Request> = (0..PER_CLIENT as u64)
+                .map(|i| {
+                    let comp = match rng.below(5) {
+                        0 => chains[0].clone(),
+                        1 => chains[1].clone(),
+                        2 => chains[2].clone(),
+                        3 => Composition::map(OperatorKind::Sqrt, 256),
+                        _ => Composition::vmul_reduce(256),
+                    };
+                    let inputs = workload::request_inputs(&comp, client * 10_000 + i);
+                    Request::dynamic(comp, inputs)
+                })
+                .collect();
+            let expected: Vec<Value> =
+                reqs.iter().map(|r| cpu::eval(&r.comp, &r.inputs).unwrap()).collect();
+            let rxs: Vec<_> = reqs.iter().map(|r| p.submit(r.clone()).unwrap()).collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().expect("worker hung up").expect("request failed");
+                assert!(
+                    agree(&resp.run.output, &expected[i]),
+                    "client {client} reply {i} cross-wired: {:?} vs {:?}",
+                    resp.run.output,
+                    expected[i]
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let report = Arc::try_unwrap(pool).ok().expect("clients done").shutdown();
+    assert_eq!(report.aggregate.requests, CLIENTS * PER_CLIENT as u64);
+    let sum = report.worker_sum();
+    assert_eq!(sum.requests, report.aggregate.requests);
+    assert_eq!(sum.pr_downloads, report.aggregate.pr_downloads);
+    assert_eq!(sum.steals, report.aggregate.steals);
+    assert!(report.panicked_workers.is_empty());
+}
+
+/// Satellite: the routing table honors its LRU cap under K+N distinct
+/// compositions.
+#[test]
+fn route_table_honors_lru_cap() {
+    const CAP: usize = 8;
+    let service = ServiceConfig { route_capacity: CAP, ..ServiceConfig::with_workers(2) };
+    let pool = WorkerPool::new(OverlayConfig::default(), service).unwrap();
+    for i in 0..CAP + 6 {
+        let comp = Composition::vmul_reduce(64 + 64 * i); // distinct keys
+        let inputs = workload::request_inputs(&comp, i as u64);
+        pool.submit_wait(Request::dynamic(comp, inputs)).unwrap();
+        assert!(
+            pool.routed_compositions() <= CAP,
+            "route cap {CAP} violated: {}",
+            pool.routed_compositions()
+        );
+    }
+    assert_eq!(pool.routed_compositions(), CAP);
+    let report = pool.shutdown();
+    assert_eq!(report.aggregate.requests, (CAP + 6) as u64);
+}

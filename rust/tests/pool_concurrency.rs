@@ -22,12 +22,14 @@ fn pool(workers: usize) -> WorkerPool {
     WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(workers)).unwrap()
 }
 
-/// A pool whose scheduler never spills: pure home/sticky affinity. The
-/// deep pipelined queues of the ordering test would otherwise make the
-/// spill decision (and thus compile counts) timing-dependent.
+/// A pool whose scheduler never spills or steals: pure home/sticky
+/// affinity. The deep pipelined queues of the ordering test would
+/// otherwise make the spill/steal decisions (and thus compile counts)
+/// timing-dependent.
 fn affinity_only_pool(workers: usize) -> WorkerPool {
     let service =
-        ServiceConfig { max_queue_skew: 1_000_000, ..ServiceConfig::with_workers(workers) };
+        ServiceConfig { max_queue_skew: 1_000_000, ..ServiceConfig::with_workers(workers) }
+            .without_stealing();
     WorkerPool::new(OverlayConfig::default(), service).unwrap()
 }
 
