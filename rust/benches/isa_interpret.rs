@@ -61,10 +61,10 @@ fn main() {
     });
 
     // (c) codec round-trip of the compiled program image
-    let words = acc.program.to_words();
+    let words = acc.program().to_words();
     bench.bench("decode_program", || encode::decode_all(&words).unwrap().len());
     bench.bench("encode_program", || {
-        encode::encode_all(acc.program.instrs()).unwrap().len()
+        encode::encode_all(acc.program().instrs()).unwrap().len()
     });
     bench.finish();
 }

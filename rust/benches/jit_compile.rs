@@ -32,7 +32,7 @@ fn main() {
 
     let mut bench = Bench::new("jit_compile");
     for (name, comp) in suite(4096) {
-        bench.bench(name, || Jit.compile(&fabric, &lib, &comp).unwrap().program.len());
+        bench.bench(name, || Jit.compile(&fabric, &lib, &comp).unwrap().program().len());
     }
 
     // coordinator cache-hit path (what repeat requests pay)

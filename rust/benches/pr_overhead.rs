@@ -61,18 +61,18 @@ fn main() {
         engine.fabric.reset_full();
         engine
             .pr
-            .apply(&mut engine.fabric, &engine.lib, &acc.placement)
+            .apply(&mut engine.fabric, &engine.lib, acc.placement())
             .unwrap()
             .downloads
     });
     engine
         .pr
-        .apply(&mut engine.fabric, &engine.lib, &acc.placement)
+        .apply(&mut engine.fabric, &engine.lib, acc.placement())
         .unwrap();
     bench.bench("apply_warm", || {
         engine
             .pr
-            .apply(&mut engine.fabric, &engine.lib, &acc.placement)
+            .apply(&mut engine.fabric, &engine.lib, acc.placement())
             .unwrap()
             .cache_hits
     });

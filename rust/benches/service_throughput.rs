@@ -1,7 +1,7 @@
 //! Bench: worker-pool throughput — FIFO drain vs burst drain vs
 //! burst+steal at 1/2/4/8 workers.
 //!
-//! Two streams drive every (workers × mode) cell:
+//! Three streams drive every (workers × mode) cell:
 //!
 //! * **mixed** — the 80% hot / 20% cold skew of
 //!   `workload::mixed_compositions` (req/s focus: burst draining must not
@@ -9,7 +9,13 @@
 //! * **adversarial** — `workload::interleaved_stream` over a home-aligned
 //!   pair of conflicting 5-stage chains, the PR-thrash worst case
 //!   (PR-downloads/request focus: burst draining must collapse the
-//!   per-switch re-download).
+//!   per-switch re-download);
+//! * **spill-heavy** — `workload::spill_heavy_compositions`: many distinct
+//!   keys under `max_queue_skew = 0`, so affinity routing migrates
+//!   compositions between fabrics constantly. This is the stream that
+//!   makes the cost of placement-only respecialization — and the resident
+//!   clobbers it avoids (ISSUE 4) — visible in the `respec` / `clob-avoid`
+//!   columns next to the download counts.
 //!
 //! Methodology: pools start **paused**, the whole backlog is enqueued,
 //! then the workers are released and the wall clock measures the pure
@@ -56,6 +62,17 @@ fn aligned_conflicting_pair() -> (Composition, Composition) {
 fn adversarial_stream(requests: usize) -> Vec<Request> {
     let (a, b) = aligned_conflicting_pair();
     workload::interleaved_stream(&[a, b], requests / 2)
+        .into_iter()
+        .enumerate()
+        .map(|(k, comp)| {
+            let inputs = workload::request_inputs(&comp, k as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect()
+}
+
+fn spill_heavy_stream(requests: usize) -> Vec<Request> {
+    workload::spill_heavy_compositions(requests, 24, 0x5B111)
         .into_iter()
         .enumerate()
         .map(|(k, comp)| {
@@ -151,6 +168,8 @@ fn bench_stream(
             "PR hit rate",
             "switches",
             "steals",
+            "respec",
+            "clob-avoid",
         ],
     );
     t.row(&[
@@ -162,6 +181,8 @@ fn bench_stream(
         format!("{:.0}%", base_m.pr_hit_rate() * 100.0),
         "-".into(),
         "-".into(),
+        base_m.placement_respecializations.to_string(),
+        base_m.residency_clobbers_avoided.to_string(),
     ]);
 
     let mut cells = Vec::new();
@@ -177,6 +198,8 @@ fn bench_stream(
                 format!("{:.0}%", m.pr_hit_rate() * 100.0),
                 m.burst_group_switches.to_string(),
                 m.steals.to_string(),
+                m.placement_respecializations.to_string(),
+                m.residency_clobbers_avoided.to_string(),
             ]);
             cells.push((workers, mode.name(), dt, m));
         }
@@ -204,9 +227,13 @@ fn main() {
     // mixed: spills on (default skew) — the live scheduler as deployed.
     // adversarial: affinity only, so the home-aligned pair provably
     // contends for one fabric and the modes differ only in drain policy.
+    // spill-heavy: skew 0 — any imbalance migrates a composition, so
+    // placement respecialization runs constantly and its cost shows up
+    // next to the download counts.
     let default_skew = ServiceConfig::default().max_queue_skew;
     let mixed = bench_stream("mixed", &mixed_stream(requests, n), default_skew);
     let adversarial = bench_stream("adversarial", &adversarial_stream(requests), 1_000_000);
+    let spill = bench_stream("spill-heavy", &spill_heavy_stream(requests), 0);
 
     // ISSUE 3 acceptance, evaluated at 4 workers
     let requests = requests as f64;
@@ -224,5 +251,17 @@ fn main() {
         "4-worker acceptance: mixed req/s burst {burst_rate:.0} vs fifo {fifo_rate:.0} (no worse: {}), adversarial PR dl/req burst {burst_dpr:.3} vs fifo {fifo_dpr:.3} (strictly fewer: {})",
         if ok_rate { "PASS" } else { "MISS" },
         if ok_dpr { "PASS" } else { "MISS" },
+    );
+
+    // ISSUE 4: on the spill-heavy stream at 4 workers, migrations pay
+    // placement-only respecializations instead of clobbering residents —
+    // both counters must be visible (nonzero) in the series
+    let (_, _, _, spill_m) = cell(&spill, 4, "burst+steal");
+    println!(
+        "4-worker spill-heavy: {} respecializations, {} clobbers avoided, {} requests (visible: {})",
+        spill_m.placement_respecializations,
+        spill_m.residency_clobbers_avoided,
+        spill_m.requests,
+        if spill_m.placement_respecializations > 0 { "PASS" } else { "MISS" },
     );
 }

@@ -27,8 +27,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let comp = Composition::branch(0.5, OperatorKind::Sqrt, OperatorKind::Square, n);
     let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
 
-    println!("speculative diamond ({} stages):", acc.stages.len());
-    for (s, a) in acc.stages.iter().zip(&acc.placement.assignments) {
+    println!("speculative diamond ({} stages):", acc.stages().len());
+    for (s, a) in acc.stages().iter().zip(&acc.placement().assignments) {
         println!("  {:9} -> tile {} ({:?})", s.op.name(), a.tile, a.class);
     }
     println!("pass-through hops: {} (contiguous ⇒ 0)", acc.total_hops());

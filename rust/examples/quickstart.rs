@@ -34,12 +34,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
     println!(
         "jit: {} stages, {} pass-through hops, {}-instr program, chunk {}",
-        acc.stages.len(),
+        acc.stages().len(),
         acc.total_hops(),
-        acc.program.len(),
-        acc.chunk
+        acc.program().len(),
+        acc.chunk()
     );
-    for (s, a) in acc.stages.iter().zip(&acc.placement.assignments) {
+    for (s, a) in acc.stages().iter().zip(&acc.placement().assignments) {
         println!("  {:8} -> tile {} ({:?})", s.op.name(), a.tile, a.class);
     }
 

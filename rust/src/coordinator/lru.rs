@@ -1,0 +1,346 @@
+//! One bounded LRU map, three users.
+//!
+//! [`ClockLru`] is the atomic-clock LRU that used to be spelled twice —
+//! once inside `AcceleratorCache` (per shard) and once as the pool's
+//! `RouteTable` — and now also backs the per-fabric placement-plan cache.
+//! The design point all three share: the *hot* path (lookup, or in-place
+//! update of a value with interior mutability) takes only the read lock,
+//! because recency lives in a relaxed `AtomicU64` per entry and the clock
+//! itself is a relaxed `fetch_add`. The write lock is taken once per
+//! brand-new key, where eviction — a scan for the stalest entries — rides
+//! on a path that already pays an insert.
+//!
+//! Eviction granularity is configurable: the accelerator cache evicts one
+//! entry at a time (inserts there already pay a JIT compile), while the
+//! route table amortizes its O(n) recency scan by dropping the stalest
+//! ~1/8 of the table per pass (submitters wait behind its write lock).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// A bounded `u64 → V` map with atomic-clock LRU eviction.
+///
+/// Locks recover from poisoning: every critical section leaves the map in
+/// a consistent state (an insert/remove either completed or never
+/// happened), so a panicking user cannot leave it logically corrupt.
+#[derive(Debug)]
+pub struct ClockLru<V> {
+    map: RwLock<HashMap<u64, ClockEntry<V>>>,
+    /// Monotonic recency clock; ticked under either lock.
+    clock: AtomicU64,
+    /// Max entries (`usize::MAX` = unbounded). Atomic so a cap can be
+    /// raised on a live map ([`ClockLru::raise_capacity`]).
+    capacity: AtomicUsize,
+    /// Entries removed per eviction pass (≥ 1).
+    evict_batch: usize,
+}
+
+#[derive(Debug)]
+struct ClockEntry<V> {
+    value: V,
+    last_hit: AtomicU64,
+}
+
+impl<V> ClockLru<V> {
+    /// A map capped at `capacity` entries (`0` = unbounded), evicting the
+    /// single stalest entry when a new key needs room.
+    pub fn new(capacity: usize) -> ClockLru<V> {
+        Self::with_evict_batch(capacity, 1)
+    }
+
+    /// Like [`ClockLru::new`], but each eviction pass drops the stalest
+    /// `evict_batch` entries in one scan (amortizes cold-key churn).
+    pub fn with_evict_batch(capacity: usize, evict_batch: usize) -> ClockLru<V> {
+        ClockLru {
+            map: RwLock::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            capacity: AtomicUsize::new(if capacity == 0 { usize::MAX } else { capacity }),
+            evict_batch: evict_batch.max(1),
+        }
+    }
+
+    /// Raise the capacity to at least `capacity` (`0` = unbounded). Never
+    /// shrinks — shrinking a live map would demand an eviction sweep here
+    /// instead of on the insert path.
+    pub fn raise_capacity(&self, capacity: usize) {
+        let cap = if capacity == 0 { usize::MAX } else { capacity };
+        self.capacity.fetch_max(cap, Ordering::Relaxed);
+    }
+
+    /// Visit every value under the read lock (no recency bump).
+    pub fn for_each(&self, mut f: impl FnMut(&V)) {
+        for e in self.read_map().values() {
+            f(&e.value);
+        }
+    }
+
+    fn read_map(&self) -> RwLockReadGuard<'_, HashMap<u64, ClockEntry<V>>> {
+        self.map.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write_map(&self) -> RwLockWriteGuard<'_, HashMap<u64, ClockEntry<V>>> {
+        self.map.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Look up `key`, refreshing its LRU recency; `read` runs on the value
+    /// under the read lock.
+    pub fn get<R>(&self, key: u64, read: impl FnOnce(&V) -> R) -> Option<R> {
+        let map = self.read_map();
+        map.get(&key).map(|e| {
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            read(&e.value)
+        })
+    }
+
+    /// Recency-neutral lookup: a probe (e.g. steal-victim scoring) must not
+    /// distort the LRU order it is inspecting.
+    pub fn peek<R>(&self, key: u64, read: impl FnOnce(&V) -> R) -> Option<R> {
+        let map = self.read_map();
+        map.get(&key).map(|e| read(&e.value))
+    }
+
+    /// Read the most-recently-hit entry without bumping anything (`None`
+    /// when empty).
+    pub fn most_recent<R>(&self, read: impl FnOnce(&V) -> R) -> Option<R> {
+        let map = self.read_map();
+        map.values()
+            .max_by_key(|e| e.last_hit.load(Ordering::Relaxed))
+            .map(|e| read(&e.value))
+    }
+
+    /// Insert unless already present — first writer wins, so concurrent
+    /// builders of one key converge on a single value. `read` runs on the
+    /// entry that ends up in the map (fresh or pre-existing). Returns the
+    /// read result plus the number of stale entries evicted to make room.
+    pub fn insert_if_absent<R>(
+        &self,
+        key: u64,
+        value: V,
+        read: impl FnOnce(&V) -> R,
+    ) -> (R, usize) {
+        let mut map = self.write_map();
+        if let Some(e) = map.get(&key) {
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            return (read(&e.value), 0);
+        }
+        let evicted = self.evict_for_insert(&mut map);
+        map.insert(key, ClockEntry { value, last_hit: AtomicU64::new(self.tick()) });
+        (read(&map[&key].value), evicted)
+    }
+
+    /// Overwrite-or-insert under the write lock (plan respecialization:
+    /// a stale value must be *replaced*, not kept by first-writer-wins).
+    /// Returns the number of stale entries evicted to make room.
+    pub fn put(&self, key: u64, value: V) -> usize {
+        let mut map = self.write_map();
+        if let Some(e) = map.get_mut(&key) {
+            e.value = value;
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            return 0;
+        }
+        let evicted = self.evict_for_insert(&mut map);
+        map.insert(key, ClockEntry { value, last_hit: AtomicU64::new(self.tick()) });
+        evicted
+    }
+
+    /// Update an existing value in place — through `&V`, so `V` supplies
+    /// interior mutability (the route table's `AtomicUsize`) — on the
+    /// *read* lock, falling back to a write-locked insert of `make()` for
+    /// a brand-new key. The steady state never serializes readers.
+    pub fn update_or_insert(
+        &self,
+        key: u64,
+        update: impl Fn(&V),
+        make: impl FnOnce() -> V,
+    ) -> usize {
+        {
+            let map = self.read_map();
+            if let Some(e) = map.get(&key) {
+                update(&e.value);
+                e.last_hit.store(self.tick(), Ordering::Relaxed);
+                return 0;
+            }
+        }
+        let mut map = self.write_map();
+        if let Some(e) = map.get(&key) {
+            update(&e.value);
+            e.last_hit.store(self.tick(), Ordering::Relaxed);
+            return 0;
+        }
+        let evicted = self.evict_for_insert(&mut map);
+        map.insert(key, ClockEntry { value: make(), last_hit: AtomicU64::new(self.tick()) });
+        evicted
+    }
+
+    /// Make room for one incoming entry: when the map is at capacity, drop
+    /// the stalest `max(evict_batch, overflow)` entries in a single
+    /// `select_nth` pass. Returns how many were removed.
+    fn evict_for_insert(&self, map: &mut HashMap<u64, ClockEntry<V>>) -> usize {
+        let capacity = self.capacity.load(Ordering::Relaxed);
+        if map.len() < capacity {
+            return 0;
+        }
+        let overflow = map.len() + 1 - capacity;
+        let batch = overflow.max(self.evict_batch).min(map.len());
+        let mut entries: Vec<(u64, u64)> = map
+            .iter()
+            .map(|(k, e)| (e.last_hit.load(Ordering::Relaxed), *k))
+            .collect();
+        entries.select_nth_unstable(batch - 1);
+        for (_, stale_key) in entries.into_iter().take(batch) {
+            map.remove(&stale_key);
+        }
+        batch
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.read_map().len()
+    }
+
+    /// True when nothing has been inserted (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_and_insert_roundtrip() {
+        let m: ClockLru<u32> = ClockLru::new(0);
+        assert!(m.is_empty());
+        assert_eq!(m.get(1, |v| *v), None);
+        let (winner, evicted) = m.insert_if_absent(1, 10, |v| *v);
+        assert_eq!((winner, evicted), (10, 0));
+        assert_eq!(m.get(1, |v| *v), Some(10));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn first_writer_wins() {
+        let m: ClockLru<u32> = ClockLru::new(0);
+        m.insert_if_absent(7, 1, |_| ());
+        let (winner, evicted) = m.insert_if_absent(7, 2, |v| *v);
+        assert_eq!(winner, 1, "second insert must observe the first value");
+        assert_eq!(evicted, 0);
+    }
+
+    #[test]
+    fn put_overwrites() {
+        let m: ClockLru<u32> = ClockLru::new(0);
+        assert_eq!(m.put(7, 1), 0);
+        assert_eq!(m.put(7, 2), 0);
+        assert_eq!(m.get(7, |v| *v), Some(2));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn cap_holds_and_evicts_stalest() {
+        const K: usize = 4;
+        let m: ClockLru<u64> = ClockLru::new(K);
+        for key in 0..K as u64 {
+            let (_, evicted) = m.insert_if_absent(key, key, |v| *v);
+            assert_eq!(evicted, 0);
+        }
+        // touch key 0 so key 1 becomes the stalest
+        assert!(m.get(0, |_| ()).is_some());
+        let mut evictions = 0;
+        for key in K as u64..(K + 3) as u64 {
+            let (_, evicted) = m.insert_if_absent(key, key, |v| *v);
+            evictions += evicted;
+            assert!(m.len() <= K, "cap of {K} violated: {}", m.len());
+        }
+        assert_eq!(m.len(), K);
+        assert_eq!(evictions, 3);
+        assert!(m.get(0, |_| ()).is_some(), "recently-hit entry must survive");
+        assert!(m.get(1, |_| ()).is_none(), "stalest entry must be evicted first");
+    }
+
+    #[test]
+    fn batch_eviction_drops_a_batch_in_one_pass() {
+        let m: ClockLru<u64> = ClockLru::with_evict_batch(16, 4);
+        for key in 0..16u64 {
+            m.insert_if_absent(key, key, |_| ());
+        }
+        let (_, evicted) = m.insert_if_absent(100, 100, |v| *v);
+        assert_eq!(evicted, 4);
+        assert_eq!(m.len(), 13);
+        for key in 0..4u64 {
+            assert!(m.peek(key, |_| ()).is_none(), "stalest 4 must be gone");
+        }
+    }
+
+    #[test]
+    fn update_or_insert_updates_in_place() {
+        use std::sync::atomic::AtomicUsize;
+        let m: ClockLru<AtomicUsize> = ClockLru::new(0);
+        let evicted = m.update_or_insert(
+            3,
+            |w| w.store(1, Ordering::Relaxed),
+            || AtomicUsize::new(1),
+        );
+        assert_eq!(evicted, 0);
+        m.update_or_insert(3, |w| w.store(9, Ordering::Relaxed), || AtomicUsize::new(0));
+        assert_eq!(m.get(3, |w| w.load(Ordering::Relaxed)), Some(9));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn peek_does_not_bump_recency() {
+        let m: ClockLru<u64> = ClockLru::new(2);
+        m.insert_if_absent(1, 1, |_| ());
+        m.insert_if_absent(2, 2, |_| ());
+        // peeks at 1 must not protect it: 1 is still the stalest
+        for _ in 0..8 {
+            assert!(m.peek(1, |_| ()).is_some());
+        }
+        assert!(m.get(2, |_| ()).is_some());
+        m.insert_if_absent(3, 3, |_| ());
+        assert!(m.peek(1, |_| ()).is_none(), "peeked-only entry must be evicted");
+        assert!(m.peek(2, |_| ()).is_some());
+    }
+
+    #[test]
+    fn raise_capacity_stops_eviction() {
+        let m: ClockLru<u64> = ClockLru::new(2);
+        m.insert_if_absent(1, 1, |_| ());
+        m.insert_if_absent(2, 2, |_| ());
+        m.raise_capacity(4);
+        let (_, evicted) = m.insert_if_absent(3, 3, |v| *v);
+        assert_eq!(evicted, 0, "raised cap must admit the third entry");
+        assert_eq!(m.len(), 3);
+        // raising never shrinks
+        m.raise_capacity(1);
+        let (_, evicted) = m.insert_if_absent(4, 4, |v| *v);
+        assert_eq!(evicted, 0);
+        assert_eq!(m.len(), 4);
+        let mut sum = 0;
+        m.for_each(|v| sum += *v);
+        assert_eq!(sum, 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn most_recent_tracks_hits() {
+        let m: ClockLru<u64> = ClockLru::new(0);
+        assert_eq!(m.most_recent(|v| *v), None);
+        m.insert_if_absent(1, 10, |_| ());
+        m.insert_if_absent(2, 20, |_| ());
+        assert_eq!(m.most_recent(|v| *v), Some(20));
+        m.get(1, |_| ());
+        assert_eq!(m.most_recent(|v| *v), Some(10));
+    }
+
+    #[test]
+    fn shareable_across_threads() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<ClockLru<u64>>();
+    }
+}

@@ -13,10 +13,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct Metrics {
     /// Requests served.
     pub requests: u64,
-    /// JIT compilations performed (accelerator-cache misses).
+    /// JIT compilations performed (accelerator-cache misses: front end +
+    /// placement).
     pub jit_compiles: u64,
-    /// Accelerator-cache hits.
+    /// Full accelerator-cache hits: shared program *and* a live plan for
+    /// this fabric. Per key, `cache_hits + placement_respecializations +
+    /// jit_compiles == requests` (absent request errors).
     pub cache_hits: u64,
+    /// Placement-only recompiles: the program was cached but this fabric
+    /// had no (or a stale) specialized placement plan.
+    pub placement_respecializations: u64,
+    /// Respecializations that replaced a plan which would have overwritten
+    /// this fabric's residents even though free tiles could host it — the
+    /// clobbers the pre-specialization cache silently committed.
+    pub residency_clobbers_avoided: u64,
     /// Wall-clock seconds spent in the JIT.
     pub jit_seconds: f64,
     /// PR bitstream downloads issued.
@@ -52,9 +62,13 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// Accelerator-cache hit rate in [0, 1].
+    /// Full accelerator-cache hit rate in [0, 1]: the share of requests
+    /// that paid *no* JIT work at all. The denominator covers every
+    /// resolution outcome (hits + placement respecializations + full
+    /// compiles — the conservation law), so a spill-heavy stream whose
+    /// respecializations pay real placement time is not counted as cached.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.jit_compiles + self.cache_hits;
+        let total = self.jit_compiles + self.placement_respecializations + self.cache_hits;
         if total == 0 {
             0.0
         } else {
@@ -78,6 +92,8 @@ impl Metrics {
         self.requests += other.requests;
         self.jit_compiles += other.jit_compiles;
         self.cache_hits += other.cache_hits;
+        self.placement_respecializations += other.placement_respecializations;
+        self.residency_clobbers_avoided += other.residency_clobbers_avoided;
         self.jit_seconds += other.jit_seconds;
         self.pr_downloads += other.pr_downloads;
         self.pr_region_hits += other.pr_region_hits;
@@ -99,6 +115,10 @@ impl Metrics {
             requests: self.requests - earlier.requests,
             jit_compiles: self.jit_compiles - earlier.jit_compiles,
             cache_hits: self.cache_hits - earlier.cache_hits,
+            placement_respecializations: self.placement_respecializations
+                - earlier.placement_respecializations,
+            residency_clobbers_avoided: self.residency_clobbers_avoided
+                - earlier.residency_clobbers_avoided,
             jit_seconds: self.jit_seconds - earlier.jit_seconds,
             pr_downloads: self.pr_downloads - earlier.pr_downloads,
             pr_region_hits: self.pr_region_hits - earlier.pr_region_hits,
@@ -117,11 +137,13 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
             self.hit_rate() * 100.0,
+            self.placement_respecializations,
+            self.residency_clobbers_avoided,
             self.pr_downloads,
             self.pr_region_hits,
             self.pr_hit_rate() * 100.0,
@@ -147,6 +169,8 @@ pub struct AtomicMetrics {
     requests: AtomicU64,
     jit_compiles: AtomicU64,
     cache_hits: AtomicU64,
+    placement_respecializations: AtomicU64,
+    residency_clobbers_avoided: AtomicU64,
     pr_downloads: AtomicU64,
     pr_region_hits: AtomicU64,
     pr_replaced: AtomicU64,
@@ -171,6 +195,10 @@ impl AtomicMetrics {
         self.requests.fetch_add(d.requests, Ordering::Relaxed);
         self.jit_compiles.fetch_add(d.jit_compiles, Ordering::Relaxed);
         self.cache_hits.fetch_add(d.cache_hits, Ordering::Relaxed);
+        self.placement_respecializations
+            .fetch_add(d.placement_respecializations, Ordering::Relaxed);
+        self.residency_clobbers_avoided
+            .fetch_add(d.residency_clobbers_avoided, Ordering::Relaxed);
         self.pr_downloads.fetch_add(d.pr_downloads, Ordering::Relaxed);
         self.pr_region_hits.fetch_add(d.pr_region_hits, Ordering::Relaxed);
         self.pr_replaced.fetch_add(d.pr_replaced, Ordering::Relaxed);
@@ -191,6 +219,10 @@ impl AtomicMetrics {
             requests: self.requests.load(Ordering::Relaxed),
             jit_compiles: self.jit_compiles.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            placement_respecializations: self
+                .placement_respecializations
+                .load(Ordering::Relaxed),
+            residency_clobbers_avoided: self.residency_clobbers_avoided.load(Ordering::Relaxed),
             jit_seconds: self.jit_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             pr_downloads: self.pr_downloads.load(Ordering::Relaxed),
             pr_region_hits: self.pr_region_hits.load(Ordering::Relaxed),
@@ -221,6 +253,14 @@ mod tests {
     fn hit_rate_computes() {
         let m = Metrics { jit_compiles: 1, cache_hits: 3, ..Default::default() };
         assert!((m.hit_rate() - 0.75).abs() < 1e-12);
+        // respecializations pay placement time: they dilute the hit rate
+        let m = Metrics {
+            jit_compiles: 1,
+            placement_respecializations: 4,
+            cache_hits: 3,
+            ..Default::default()
+        };
+        assert!((m.hit_rate() - 0.375).abs() < 1e-12);
         let m = Metrics { pr_downloads: 1, pr_region_hits: 4, ..Default::default() };
         assert!((m.pr_hit_rate() - 0.8).abs() < 1e-12);
     }
@@ -237,6 +277,8 @@ mod tests {
             requests: 3,
             jit_compiles: 1,
             cache_hits: 2,
+            placement_respecializations: 2,
+            residency_clobbers_avoided: 1,
             jit_seconds: 0.5,
             pr_downloads: 4,
             pr_region_hits: 6,
@@ -254,6 +296,8 @@ mod tests {
         b.merge(&a);
         let d = b.delta_since(&a);
         assert_eq!(d.requests, a.requests);
+        assert_eq!(d.placement_respecializations, a.placement_respecializations);
+        assert_eq!(d.residency_clobbers_avoided, a.residency_clobbers_avoided);
         assert_eq!(d.pr_region_hits, a.pr_region_hits);
         assert_eq!(d.bursts, a.bursts);
         assert_eq!(d.burst_group_switches, a.burst_group_switches);
@@ -270,6 +314,8 @@ mod tests {
             requests: 2,
             jit_compiles: 1,
             cache_hits: 1,
+            placement_respecializations: 1,
+            residency_clobbers_avoided: 1,
             jit_seconds: 0.001,
             pr_downloads: 3,
             pr_region_hits: 5,
@@ -287,6 +333,8 @@ mod tests {
         agg.record(&d);
         let s = agg.snapshot();
         assert_eq!(s.requests, 4);
+        assert_eq!(s.placement_respecializations, 2);
+        assert_eq!(s.residency_clobbers_avoided, 2);
         assert_eq!(s.pr_downloads, 6);
         assert_eq!(s.pr_region_hits, 10);
         assert_eq!(s.pr_replaced, 2);

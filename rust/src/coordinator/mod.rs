@@ -18,62 +18,84 @@
 //! draining ([`Coordinator::serve_burst`]) and work-stealing (used by
 //! `repro serve --workers N`).
 
+pub mod lru;
 pub mod metrics;
 pub mod pool;
 
+pub use lru::ClockLru;
 pub use metrics::{AtomicMetrics, Metrics};
 pub use pool::{PoolReport, WorkerPool};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{OverlayConfig, ServiceConfig};
 use crate::error::Result;
 use crate::exec::{Engine, RunResult};
-use crate::jit::{CompiledAccelerator, Jit};
+use crate::jit::{AcceleratorProgram, CompiledAccelerator, Jit, PlacementPlan};
 use crate::patterns::Composition;
 use crate::timing::Target;
+
+/// Default placement plans retained per cached composition — one per
+/// fabric that has executed it, LRU-capped so a long-lived cache shared by
+/// many short-lived fabrics cannot grow without bound (an evicted plan
+/// only costs a placement-only recompile on that fabric's next request).
+/// A pool raises this to its worker count so a hot composition touched by
+/// every fabric never cycles the plan LRU (see
+/// [`AcceleratorCache::with_plan_capacity`]).
+const DEFAULT_PLANS_PER_COMPOSITION: usize = 8;
 
 /// Sharded, read-mostly cache of compiled accelerators, keyed by
 /// [`Composition::cache_key`].
 ///
-/// Shared across every worker of a [`WorkerPool`]: a composition JIT-ed on
-/// one fabric is immediately *usable* on all others — tile indices and
-/// region classes are identical across fabrics of one config, and the PR
-/// manager simply overwrites whatever is resident in the placement's
-/// tiles. Note the placement reflects the *compiling* fabric's occupancy
-/// at compile time: replayed on a different fabric it may overwrite
-/// residents even when free tiles exist there. Affinity routing keeps that
-/// rare (a composition normally stays on the fabric that compiled it);
-/// per-fabric placement specialization is a ROADMAP item. Sharding keeps
-/// writer stalls local to one key-slice while the hot path — repeat
-/// compositions — takes only a read lock.
+/// Shared across every worker of a [`WorkerPool`]. Each entry is split the
+/// way the JIT is split: the fabric-independent
+/// [`AcceleratorProgram`] (stages + bitstream class selection — valid on
+/// every fabric of a config) plus a small per-fabric map of
+/// [`PlacementPlan`]s, because a placement is only valid against the
+/// occupancy of the fabric it was compiled for. A composition JIT-ed on
+/// one fabric therefore skips the JIT *front end* everywhere, and pays at
+/// most a placement-only respecialization the first time it lands on
+/// another fabric — it never replays a foreign placement over that
+/// fabric's residents (the pre-ISSUE-4 spill bug).
 ///
-/// The cache is LRU-capped (satellite of ISSUE 3): `capacity` entries,
-/// enforced per shard as `ceil(capacity / shards)` (`0` = unbounded) — so
-/// the bound is approximate under skewed key distributions; one shard
-/// gives an exact cap. Recency is tracked with a relaxed atomic clock so
-/// `get` bumps an entry's timestamp under the *read* lock; eviction scans
-/// its shard for the stalest entry at insert time, which is O(shard size)
-/// on a path that already pays a JIT compile. Shard locks recover from
-/// poisoning — an insert/remove either completed or never happened, so a
-/// panicking worker cannot leave a shard logically corrupt, and must not
-/// cascade its panic into every other worker sharing the cache.
+/// Structure: both levels — the sharded key map and each entry's plan map
+/// — are [`ClockLru`]s, the crate's one bounded-map implementation. The
+/// spec level is LRU-capped at `capacity` entries, enforced per shard as
+/// `ceil(capacity / shards)` (`0` = unbounded), so the bound is
+/// approximate under skewed key distributions; one shard gives an exact
+/// cap. Lookups bump recency under the read lock; eviction scans ride the
+/// insert path, which already pays a JIT compile. Shard locks recover from
+/// poisoning, so a panicking worker cannot leave a shard logically corrupt
+/// or cascade into peers sharing the cache.
 #[derive(Debug)]
 pub struct AcceleratorCache {
-    shards: Vec<RwLock<HashMap<u64, CacheEntry>>>,
-    /// Per-shard entry cap (`usize::MAX` = unbounded).
-    shard_capacity: usize,
-    /// Monotonic recency clock shared by every shard.
-    clock: AtomicU64,
+    shards: Vec<ClockLru<CachedAccelerator>>,
+    /// Cap on each entry's per-fabric plan map (`usize::MAX` = unbounded).
+    /// Atomic so [`AcceleratorCache::ensure_plan_capacity`] can raise it on
+    /// a live (externally built) cache.
+    plan_capacity: std::sync::atomic::AtomicUsize,
 }
 
+/// One cached composition: the shared program plus every fabric's
+/// specialized placement plan, keyed by [`crate::overlay::Fabric::id`].
 #[derive(Debug)]
-struct CacheEntry {
-    acc: Arc<CompiledAccelerator>,
-    last_hit: AtomicU64,
+struct CachedAccelerator {
+    spec: Arc<AcceleratorProgram>,
+    plans: ClockLru<Arc<PlacementPlan>>,
+}
+
+/// What [`AcceleratorCache::lookup`] returns on a spec hit.
+pub struct CacheHit {
+    /// The shared, fabric-independent program.
+    pub spec: Arc<AcceleratorProgram>,
+    /// The querying fabric's own specialized plan, if one is cached.
+    pub plan: Option<Arc<PlacementPlan>>,
+    /// When `plan` is `None`: the most-recently-used *other* fabric's plan
+    /// — the placement the pre-split pool-wide cache would have replayed
+    /// verbatim. Used to account `Metrics::residency_clobbers_avoided`.
+    pub foreign_plan: Option<Arc<PlacementPlan>>,
 }
 
 impl AcceleratorCache {
@@ -85,9 +107,21 @@ impl AcceleratorCache {
     /// Build a cache capped at `capacity` total entries (`0` = unbounded),
     /// split evenly across `shards` lock domains (≥ 1).
     pub fn bounded(shards: usize, capacity: usize) -> AcceleratorCache {
+        Self::with_plan_capacity(shards, capacity, DEFAULT_PLANS_PER_COMPOSITION)
+    }
+
+    /// [`AcceleratorCache::bounded`] with an explicit cap on each entry's
+    /// per-fabric plan map. A pool sizes this to its worker count, so a
+    /// composition hot on every fabric holds one plan per fabric without
+    /// LRU cycling; `0` = unbounded.
+    pub fn with_plan_capacity(
+        shards: usize,
+        capacity: usize,
+        plan_capacity: usize,
+    ) -> AcceleratorCache {
         let shards = shards.max(1);
         let shard_capacity = if capacity == 0 {
-            usize::MAX
+            0 // ClockLru's own "unbounded" sentinel
         } else {
             // ceil(capacity / shards) — spelled without the (a + b - 1) / b
             // idiom because usize::div_ceil needs Rust 1.73 and the crate's
@@ -96,64 +130,91 @@ impl AcceleratorCache {
             (capacity / shards + usize::from(capacity % shards != 0)).max(1)
         };
         AcceleratorCache {
-            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
-            shard_capacity,
-            clock: AtomicU64::new(0),
+            shards: (0..shards).map(|_| ClockLru::new(shard_capacity)).collect(),
+            plan_capacity: std::sync::atomic::AtomicUsize::new(if plan_capacity == 0 {
+                usize::MAX
+            } else {
+                plan_capacity
+            }),
         }
     }
 
-    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, CacheEntry>> {
+    /// Raise the per-composition plan cap to at least `fabrics` — one slot
+    /// per fabric that will share this cache — for future entries *and*
+    /// every already-cached one. Pool construction calls this, so an
+    /// externally supplied cache (built with the smaller default cap)
+    /// cannot silently cycle a hot composition's plan LRU under a wide
+    /// pool. Never shrinks.
+    pub fn ensure_plan_capacity(&self, fabrics: usize) {
+        self.plan_capacity
+            .fetch_max(fabrics.max(1), std::sync::atomic::Ordering::Relaxed);
+        for shard in &self.shards {
+            shard.for_each(|e| e.plans.raise_capacity(fabrics));
+        }
+    }
+
+    fn shard(&self, key: u64) -> &ClockLru<CachedAccelerator> {
         &self.shards[(key % self.shards.len() as u64) as usize]
     }
 
-    fn tick(&self) -> u64 {
-        self.clock.fetch_add(1, Ordering::Relaxed) + 1
-    }
-
-    /// Look up a compiled accelerator, refreshing its LRU recency.
-    pub fn get(&self, key: u64) -> Option<Arc<CompiledAccelerator>> {
-        let shard = self.shard(key).read().unwrap_or_else(|p| p.into_inner());
-        shard.get(&key).map(|e| {
-            e.last_hit.store(self.tick(), Ordering::Relaxed);
-            e.acc.clone()
+    /// Look up a composition for one fabric, refreshing LRU recency at
+    /// both levels.
+    pub fn lookup(&self, key: u64, fabric: u64) -> Option<CacheHit> {
+        self.shard(key).get(key, |e| {
+            let plan = e.plans.get(fabric, Arc::clone);
+            let foreign_plan =
+                if plan.is_none() { e.plans.most_recent(Arc::clone) } else { None };
+            CacheHit { spec: e.spec.clone(), plan, foreign_plan }
         })
     }
 
-    /// Insert unless already present; returns the winning entry (first
-    /// writer wins, so concurrent compilers converge on one accelerator)
-    /// plus the number of least-recently-hit entries evicted to make room
-    /// (0 or 1 today).
+    /// Insert a freshly compiled accelerator. First writer wins on the
+    /// spec (concurrent compilers converge on one program), but the given
+    /// plan always lands in the winner's per-fabric plan map — it was
+    /// placed against the caller's live occupancy either way. Returns the
+    /// winning accelerator for `plan.fabric` plus the number of LRU
+    /// entries evicted (spec-level and plan-level combined).
     pub fn insert(
         &self,
         key: u64,
-        acc: Arc<CompiledAccelerator>,
-    ) -> (Arc<CompiledAccelerator>, usize) {
-        let mut shard = self.shard(key).write().unwrap_or_else(|p| p.into_inner());
-        if let Some(existing) = shard.get(&key) {
-            existing.last_hit.store(self.tick(), Ordering::Relaxed);
-            return (existing.acc.clone(), 0);
-        }
-        let mut evicted = 0;
-        while shard.len() >= self.shard_capacity {
-            let stalest = shard
-                .iter()
-                .min_by_key(|(_, e)| e.last_hit.load(Ordering::Relaxed))
-                .map(|(k, _)| *k)
-                .expect("shard at capacity is nonempty");
-            shard.remove(&stalest);
-            evicted += 1;
-        }
-        let entry = CacheEntry { acc: acc.clone(), last_hit: AtomicU64::new(self.tick()) };
-        shard.insert(key, entry);
-        (acc, evicted)
+        spec: Arc<AcceleratorProgram>,
+        plan: Arc<PlacementPlan>,
+    ) -> (CompiledAccelerator, usize) {
+        let fabric = plan.fabric;
+        let entry = CachedAccelerator {
+            spec,
+            plans: ClockLru::new(
+                self.plan_capacity.load(std::sync::atomic::Ordering::Relaxed),
+            ),
+        };
+        let ((winner, plan_evicted), spec_evicted) =
+            self.shard(key).insert_if_absent(key, entry, |e| {
+                (e.spec.clone(), e.plans.put(fabric, plan.clone()))
+            });
+        (CompiledAccelerator { spec: winner, plan }, spec_evicted + plan_evicted)
     }
 
-    /// Number of cached accelerators across all shards.
+    /// Cache a respecialized plan for `plan.fabric` (overwriting any stale
+    /// one). Returns plan-level LRU evictions; a no-op when the spec entry
+    /// was itself evicted in the meantime.
+    pub fn insert_plan(&self, key: u64, plan: Arc<PlacementPlan>) -> usize {
+        self.shard(key)
+            .get(key, |e| e.plans.put(plan.fabric, plan.clone()))
+            .unwrap_or(0)
+    }
+
+    /// Recency-neutral probe: does `fabric` already hold a specialized
+    /// plan for this composition? (Steal-victim scoring — a probe must not
+    /// distort either LRU.)
+    pub fn has_plan(&self, key: u64, fabric: u64) -> bool {
+        self.shard(key)
+            .peek(key, |e| e.plans.peek(fabric, |_| ()).is_some())
+            .unwrap_or(false)
+    }
+
+    /// Number of cached compositions across all shards.
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.read().unwrap_or_else(|p| p.into_inner()).len())
-            .sum()
+        self.shards.iter().map(ClockLru::len).sum()
     }
 
     /// True when nothing has been cached yet.
@@ -180,9 +241,12 @@ impl Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub run: RunResult,
-    /// JIT compile time for this request (0 on accelerator-cache hits).
+    /// JIT time paid by this request: a full compile on a cold key, a
+    /// placement-only respecialization when a cached accelerator first
+    /// lands on this fabric (or its plan went stale), 0 on a full hit.
     pub jit_seconds: f64,
-    /// Did the accelerator cache hit?
+    /// Did the accelerator cache supply the (fabric-independent) program?
+    /// True on both full hits and placement-only respecializations.
     pub cached: bool,
 }
 
@@ -210,22 +274,84 @@ impl Coordinator {
         Ok(Coordinator { engine: Engine::new(cfg)?, jit: Jit, cache, metrics: Metrics::default() })
     }
 
-    /// Compile (or fetch) the accelerator for a composition.
+    /// Compile (or fetch) the accelerator for a composition, specialized to
+    /// this coordinator's fabric.
     ///
-    /// Compilation sees the fabric's *current* occupancy, so co-residency
-    /// is exploited when capacity allows (different accelerators land on
-    /// disjoint tiles and never evict each other). When the placer runs out
-    /// of tiles, the coordinator evicts all residents and recompiles against
-    /// the empty fabric — the PR manager will re-download on demand (this is
-    /// the thrash the batcher exists to amortize).
+    /// Three outcomes, in decreasing order of luck:
+    ///
+    /// * **full hit** — the shared cache holds the program *and* a live
+    ///   plan for this fabric: nothing to compile;
+    /// * **placement respecialization** — the program is cached but this
+    ///   fabric has no plan (first landing after an affinity spill or
+    ///   steal), or its cached plan went stale (replaying it would clobber
+    ///   residents the fabric still has room to avoid): re-run only the
+    ///   placement phase against the *current* occupancy and cache the
+    ///   specialized plan per `(composition, fabric)`;
+    /// * **full compile** — cold key: front end + placement, then publish
+    ///   both (first writer wins on the program, so racing workers
+    ///   converge).
+    ///
+    /// Placement always sees the fabric's *current* occupancy, so
+    /// co-residency is exploited when capacity allows (different
+    /// accelerators land on disjoint tiles and never evict each other).
+    /// When the placer runs out of tiles, the coordinator evicts all
+    /// residents and replaces against the empty fabric — the PR manager
+    /// re-downloads on demand (the thrash the batcher exists to amortize).
     pub fn accelerator(
         &mut self,
         comp: &Composition,
-    ) -> Result<(Arc<CompiledAccelerator>, f64, bool)> {
+    ) -> Result<(CompiledAccelerator, f64, bool)> {
         let key = comp.cache_key();
-        if let Some(acc) = self.cache.get(key) {
-            self.metrics.cache_hits += 1;
-            return Ok((acc, 0.0, true));
+        let fabric = self.engine.fabric.id;
+        if let Some(hit) = self.cache.lookup(key, fabric) {
+            if let Some(plan) = hit.plan {
+                if !self.engine.plan_clobbers(&plan) {
+                    self.metrics.cache_hits += 1;
+                    return Ok((CompiledAccelerator { spec: hit.spec, plan }, 0.0, true));
+                }
+                // The occupancy drifted under this fabric's cached plan:
+                // replaying it would overwrite residents. *Attempt* a
+                // placement-only recompile against the live occupancy —
+                // the attempt is the feasibility check, so this covers
+                // every spec shape (branch diamonds included, which the
+                // engine's predictive guard cannot judge). If the fabric
+                // genuinely has no room, replaying the old plan is the
+                // legitimate capacity thrash the batcher amortizes.
+                return match self.place_fresh(&hit.spec) {
+                    Ok((new_plan, dt)) => {
+                        self.metrics.residency_clobbers_avoided += 1;
+                        Ok(self.publish_plan(hit.spec, new_plan, dt))
+                    }
+                    Err(e) if e.is_capacity() => {
+                        self.metrics.cache_hits += 1;
+                        Ok((CompiledAccelerator { spec: hit.spec, plan }, 0.0, true))
+                    }
+                    Err(e) => Err(e),
+                };
+            }
+            // First landing on this fabric: specialize the placement. The
+            // pre-split behavior — replaying another fabric's frozen plan
+            // over whatever lives here — is what the clobbers-avoided
+            // counter measures.
+            let foreign_would_clobber =
+                hit.foreign_plan.is_some_and(|p| self.engine.plan_clobbers(&p));
+            let (plan, dt) = match self.place_fresh(&hit.spec) {
+                Ok((plan, dt)) => {
+                    if foreign_would_clobber {
+                        self.metrics.residency_clobbers_avoided += 1;
+                    }
+                    (plan, dt)
+                }
+                Err(e) if e.is_capacity() => {
+                    // no clean fit anywhere: evict everything and place on
+                    // the empty fabric, as a full compile would
+                    self.metrics.evictions += 1;
+                    self.engine.fabric.reset_full();
+                    self.place_fresh(&hit.spec)?
+                }
+                Err(e) => return Err(e),
+            };
+            return Ok(self.publish_plan(hit.spec, plan, dt));
         }
         let t0 = Instant::now();
         let compiled = match self.jit.compile(&self.engine.fabric, &self.engine.lib, comp) {
@@ -241,9 +367,32 @@ impl Coordinator {
         self.metrics.jit_compiles += 1;
         self.metrics.jit_seconds += dt;
         // first writer wins; a racing worker's duplicate compile converges
-        let (acc, evicted) = self.cache.insert(key, Arc::new(compiled));
+        let (acc, evicted) = self.cache.insert(key, compiled.spec, compiled.plan);
         self.metrics.lru_evictions += evicted as u64;
         Ok((acc, dt, false))
+    }
+
+    /// One timed placement-only attempt against the live occupancy (no
+    /// fallback — callers decide between eviction and replay on capacity).
+    fn place_fresh(&mut self, spec: &Arc<AcceleratorProgram>) -> Result<(PlacementPlan, f64)> {
+        let t0 = Instant::now();
+        let plan = self.jit.place_onto(&self.engine.fabric, spec)?;
+        Ok((plan, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Account a placement respecialization and publish its plan to the
+    /// per-fabric plan cache.
+    fn publish_plan(
+        &mut self,
+        spec: Arc<AcceleratorProgram>,
+        plan: PlacementPlan,
+        dt: f64,
+    ) -> (CompiledAccelerator, f64, bool) {
+        self.metrics.placement_respecializations += 1;
+        self.metrics.jit_seconds += dt;
+        let plan = Arc::new(plan);
+        self.metrics.lru_evictions += self.cache.insert_plan(spec.key, plan.clone()) as u64;
+        (CompiledAccelerator { spec, plan }, dt, true)
     }
 
     /// Serve one request.
@@ -415,6 +564,39 @@ mod tests {
         assert_eq!(order, vec![0, 2, 4, 1, 3]);
     }
 
+    /// A plan cap below the fabric count cycles the per-composition plan
+    /// LRU (every landing respecializes); raising it — what pool
+    /// construction does for externally supplied caches — restores the
+    /// full-hit steady state.
+    #[test]
+    fn ensure_plan_capacity_prevents_plan_cycling() {
+        let cache = Arc::new(AcceleratorCache::with_plan_capacity(1, 0, 1));
+        let mut coords: Vec<Coordinator> = (0..3)
+            .map(|_| Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap())
+            .collect();
+        for pass in 0..2 {
+            for c in coords.iter_mut() {
+                c.submit(&vmul_req(256, pass as f32 + 1.0)).unwrap();
+            }
+        }
+        let cycled: u64 =
+            coords.iter().map(|c| c.metrics.placement_respecializations).sum();
+        assert_eq!(cycled, 5, "a single plan slot must cycle under 3 fabrics");
+        assert_eq!(coords.iter().map(|c| c.metrics.cache_hits).sum::<u64>(), 0);
+
+        cache.ensure_plan_capacity(3);
+        for pass in 0..2 {
+            for c in coords.iter_mut() {
+                c.submit(&vmul_req(256, pass as f32 + 3.0)).unwrap();
+            }
+        }
+        let respecs: u64 =
+            coords.iter().map(|c| c.metrics.placement_respecializations).sum();
+        let hits: u64 = coords.iter().map(|c| c.metrics.cache_hits).sum();
+        assert_eq!(respecs - cycled, 2, "only the evicted fabrics respecialize once more");
+        assert_eq!(hits, 4, "every later landing is a full hit");
+    }
+
     /// Two 5-stage chains cannot co-reside on a 9-tile fabric with the
     /// first one resident (only 4 tiles stay free), so switching between
     /// them forces whole-fabric eviction + re-download — the contention the
@@ -541,8 +723,16 @@ mod tests {
         assert!(!ra.cached);
         assert!(rb.cached, "second fabric must reuse the shared compile");
         assert_eq!(b.metrics.jit_compiles, 0);
-        // but b still pays its own PR downloads — residency is per fabric
+        // b's first landing is a placement-only respecialization …
+        assert_eq!(b.metrics.placement_respecializations, 1);
+        // … and b still pays its own PR downloads — residency is per fabric
         assert_eq!(b.metrics.pr_downloads, 2);
+        // b's second request is then a full (spec + plan) hit
+        let rb2 = b.submit(&vmul_req(512, 3.0)).unwrap();
+        assert!(rb2.cached);
+        assert_eq!(rb2.jit_seconds, 0.0);
+        assert_eq!(b.metrics.cache_hits, 1);
+        assert_eq!(b.metrics.placement_respecializations, 1);
         assert_eq!(cache.len(), 1);
         assert!(!cache.is_empty());
     }
@@ -552,16 +742,22 @@ mod tests {
         let cache = AcceleratorCache::new(2);
         let e = Engine::new(OverlayConfig::default()).unwrap();
         let comp = Composition::vmul_reduce(128);
-        let acc1 = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
-        let acc2 = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
+        let acc1 = Jit.compile(&e.fabric, &e.lib, &comp).unwrap();
+        let acc2 = Jit.compile(&e.fabric, &e.lib, &comp).unwrap();
         let key = comp.cache_key();
-        let (won, _) = cache.insert(key, acc1.clone());
-        assert!(Arc::ptr_eq(&won, &acc1));
-        let (lost, evicted) = cache.insert(key, acc2);
-        assert!(Arc::ptr_eq(&lost, &acc1), "second insert must return the first entry");
+        let (won, _) = cache.insert(key, acc1.spec.clone(), acc1.plan.clone());
+        assert!(Arc::ptr_eq(&won.spec, &acc1.spec));
+        let (lost, evicted) = cache.insert(key, acc2.spec.clone(), acc2.plan.clone());
+        assert!(Arc::ptr_eq(&lost.spec, &acc1.spec), "second insert must return the first spec");
         assert_eq!(evicted, 0);
-        assert!(cache.get(key).is_some());
-        assert!(cache.get(key ^ 1).is_none());
+        // both plans were placed against the same fabric: the loser's plan
+        // (fresher) overwrites, and the lookup pairs it with the winning spec
+        let hit = cache.lookup(key, e.fabric.id).expect("cached");
+        assert!(Arc::ptr_eq(&hit.spec, &acc1.spec));
+        assert!(Arc::ptr_eq(hit.plan.as_ref().unwrap(), &acc2.plan));
+        assert!(cache.lookup(key ^ 1, e.fabric.id).is_none());
+        assert!(cache.has_plan(key, e.fabric.id));
+        assert!(!cache.has_plan(key, e.fabric.id + 1));
     }
 
     /// Satellite (ISSUE 3): a cap of K holds under K+N distinct
@@ -571,26 +767,62 @@ mod tests {
         const K: usize = 4;
         let e = Engine::new(OverlayConfig::default()).unwrap();
         let comp = Composition::vmul_reduce(128);
-        let acc = Arc::new(Jit.compile(&e.fabric, &e.lib, &comp).unwrap());
+        let acc = Jit.compile(&e.fabric, &e.lib, &comp).unwrap();
+        let fabric = e.fabric.id;
         let cache = AcceleratorCache::bounded(1, K);
         for key in 0..K as u64 {
-            let (_, evicted) = cache.insert(key, acc.clone());
+            let (_, evicted) = cache.insert(key, acc.spec.clone(), acc.plan.clone());
             assert_eq!(evicted, 0);
             assert!(cache.len() <= K);
         }
         assert_eq!(cache.len(), K);
         // touch key 0 so key 1 becomes the stalest
-        assert!(cache.get(0).is_some());
+        assert!(cache.lookup(0, fabric).is_some());
         let mut evictions = 0;
         for key in K as u64..(K + 3) as u64 {
-            let (_, evicted) = cache.insert(key, acc.clone());
+            let (_, evicted) = cache.insert(key, acc.spec.clone(), acc.plan.clone());
             evictions += evicted;
             assert!(cache.len() <= K, "cap of {K} violated: {}", cache.len());
         }
         assert_eq!(cache.len(), K);
         assert_eq!(evictions, 3);
-        assert!(cache.get(0).is_some(), "recently-hit entry must survive");
-        assert!(cache.get(1).is_none(), "least-recently-hit entry must be evicted first");
+        assert!(cache.lookup(0, fabric).is_some(), "recently-hit entry must survive");
+        assert!(
+            cache.lookup(1, fabric).is_none(),
+            "least-recently-hit entry must be evicted first"
+        );
+    }
+
+    /// Tentpole (ISSUE 4): the per-key conservation law — every request is
+    /// exactly one of full hit, placement respecialization, or full
+    /// compile — across two fabrics sharing one cache.
+    #[test]
+    fn hits_plus_respecializations_plus_compiles_equal_requests() {
+        let cache = Arc::new(AcceleratorCache::new(2));
+        let mut a = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+        let mut b = Coordinator::with_cache(OverlayConfig::default(), cache).unwrap();
+        for k in 0..3 {
+            a.submit(&vmul_req(256, k as f32 + 1.0)).unwrap();
+            a.submit(&map_req(256)).unwrap();
+            b.submit(&vmul_req(256, k as f32 + 1.0)).unwrap();
+            b.submit(&map_req(256)).unwrap();
+        }
+        let mut total = a.metrics;
+        total.merge(&b.metrics);
+        assert_eq!(total.requests, 12);
+        assert_eq!(total.jit_compiles, 2, "one full compile per composition");
+        assert_eq!(
+            total.placement_respecializations, 2,
+            "one placement-only recompile per composition on the second fabric"
+        );
+        assert_eq!(
+            total.cache_hits + total.placement_respecializations + total.jit_compiles,
+            total.requests
+        );
+        // nothing ever clobbered: both fabrics had free tiles for both
+        // small accelerators, so they co-reside everywhere
+        assert_eq!(total.pr_replaced, 0);
+        assert_eq!(total.evictions, 0);
     }
 
     /// End-to-end: a capacity-1 coordinator cache recompiles on alternation

@@ -24,13 +24,17 @@
 //!   *group* instead of once per interleaved request, and the worker folds
 //!   **one** metrics delta per burst. `drain_window = 1` degenerates to the
 //!   PR 1 FIFO drain;
-//! * **work-stealing** — an idle worker (empty queue) steals from the
-//!   deepest queue once it holds ≥ `steal_min_depth` jobs. It takes the
-//!   **whole tail composition group** (every queued job of the tail key —
-//!   never a prefix), refuses a tail key that continues into the burst the
-//!   victim is currently serving (so a same-key run cut by the drain
-//!   window is not split across fabrics), and the route table is repointed
-//!   so repeats follow the stolen residency to the thief's fabric;
+//! * **work-stealing** — an idle worker (empty queue) steals from a queue
+//!   holding ≥ `steal_min_depth` jobs, **preferring victims whose tail
+//!   composition already has a placement plan cached for the thief's
+//!   fabric** (those steals skip the placement respecialization; scoring
+//!   is lock-free via an atomic tail-key mirror), deepest-first otherwise.
+//!   It takes the **whole tail composition group** (every queued job of
+//!   the tail key — never a prefix), refuses a tail key that continues
+//!   into the burst the victim is currently serving (so a same-key run cut
+//!   by the drain window is not split across fabrics), and the route table
+//!   is repointed so repeats follow the stolen residency to the thief's
+//!   fabric;
 //! * **backpressure** — queues are bounded at `queue_capacity`:
 //!   [`WorkerPool::try_submit`] fails fast with [`Error::PoolBusy`] (and
 //!   counts `Metrics::rejected`), [`WorkerPool::submit`] blocks until the
@@ -49,13 +53,15 @@
 //! [`WorkerPool::start`] (or [`WorkerPool::start_worker`]) and measure the
 //! pure drain. The benches and the burst/steal tests are built on this.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, RwLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::{AcceleratorCache, AtomicMetrics, Coordinator, Job, Metrics, Request, Response};
+use super::{
+    AcceleratorCache, AtomicMetrics, ClockLru, Coordinator, Job, Metrics, Request, Response,
+};
 use crate::config::{OverlayConfig, ServiceConfig};
 use crate::error::{Error, Result};
 
@@ -98,6 +104,13 @@ struct JobQueue {
     /// migrate — bounded extra downloads, not a correctness issue.
     inflight_tail_key: AtomicU64,
     inflight_valid: AtomicBool,
+    /// Composition key of the *queued* tail job, valid while `tail_valid`:
+    /// an atomic mirror (maintained under the lock at every push/pop/steal,
+    /// like `depth`) so steal-victim scoring reads it without contending on
+    /// the mutex of a busy queue. Purely a scoring hint — the steal itself
+    /// re-reads the real tail under the lock.
+    tail_key: AtomicU64,
+    tail_valid: AtomicBool,
 }
 
 struct QueueInner {
@@ -122,6 +135,31 @@ impl JobQueue {
             load: AtomicUsize::new(0),
             inflight_tail_key: AtomicU64::new(0),
             inflight_valid: AtomicBool::new(false),
+            tail_key: AtomicU64::new(0),
+            tail_valid: AtomicBool::new(false),
+        }
+    }
+
+    /// Refresh the queued-tail mirror from the deque (call with the lock
+    /// held, after any mutation of `jobs`).
+    fn sync_tail(&self, g: &QueueInner) {
+        match g.jobs.back() {
+            Some(j) => {
+                self.tail_key.store(j.request.comp.cache_key(), Ordering::Relaxed);
+                // Release pairs with the Acquire in `tail_hint`: a reader
+                // that observes `valid` also observes the matching key
+                self.tail_valid.store(true, Ordering::Release);
+            }
+            None => self.tail_valid.store(false, Ordering::Relaxed),
+        }
+    }
+
+    /// Lock-free read of the queued-tail mirror (`None` = empty queue).
+    fn tail_hint(&self) -> Option<u64> {
+        if self.tail_valid.load(Ordering::Acquire) {
+            Some(self.tail_key.load(Ordering::Relaxed))
+        } else {
+            None
         }
     }
 
@@ -147,6 +185,7 @@ impl JobQueue {
         }
         g.jobs.push_back(job);
         self.depth.store(g.jobs.len(), Ordering::Relaxed);
+        self.sync_tail(&g);
         drop(g);
         self.not_empty.notify_one();
         Ok(())
@@ -163,6 +202,7 @@ impl JobQueue {
             if g.jobs.len() < self.capacity {
                 g.jobs.push_back(job);
                 self.depth.store(g.jobs.len(), Ordering::Relaxed);
+                self.sync_tail(&g);
                 drop(g);
                 self.not_empty.notify_one();
                 return Ok(());
@@ -180,6 +220,7 @@ impl JobQueue {
             let take = max.min(g.jobs.len());
             let burst: Vec<Job> = g.jobs.drain(..take).collect();
             self.depth.store(g.jobs.len(), Ordering::Relaxed);
+            self.sync_tail(&g);
             // mark the burst's tail group while still holding the lock, so
             // a thief can never observe the queue remainder without also
             // seeing that its head group is in flight here
@@ -240,6 +281,7 @@ impl JobQueue {
         g.closed = true;
         g.jobs.clear();
         self.depth.store(0, Ordering::Relaxed);
+        self.sync_tail(&g);
         drop(g);
         self.not_empty.notify_all();
         self.not_full.notify_all();
@@ -287,87 +329,41 @@ impl Gate {
     }
 }
 
-/// Sticky composition→worker routing table with an LRU cap.
+/// Sticky composition→worker routing table: a [`ClockLru`] of
+/// `AtomicUsize` worker indices.
 ///
 /// The steady state — looking up or repointing an existing route — takes
-/// only the read lock: the worker index and recency live in atomics inside
-/// the entry. The write lock is taken once per brand-new composition.
+/// only the read lock: the worker index lives in an atomic inside the
+/// entry and recency in the LRU's atomic clock. The write lock is taken
+/// once per brand-new composition, where the LRU amortizes its O(n)
+/// recency scan by evicting the stalest ~1/8 of the table per pass
+/// (submitters wait behind that exclusive lock).
 struct RouteTable {
-    map: RwLock<HashMap<u64, RouteEntry>>,
-    clock: AtomicU64,
-    /// Max entries (`usize::MAX` = unbounded).
-    capacity: usize,
-}
-
-struct RouteEntry {
-    worker: AtomicUsize,
-    last_hit: AtomicU64,
+    map: ClockLru<AtomicUsize>,
 }
 
 impl RouteTable {
     fn new(capacity: usize) -> RouteTable {
-        RouteTable {
-            map: RwLock::new(HashMap::new()),
-            clock: AtomicU64::new(0),
-            capacity: if capacity == 0 { usize::MAX } else { capacity },
-        }
-    }
-
-    fn tick(&self) -> u64 {
-        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+        let batch = if capacity == 0 { 1 } else { (capacity / 8).max(1) };
+        RouteTable { map: ClockLru::with_evict_batch(capacity, batch) }
     }
 
     fn get(&self, key: u64) -> Option<usize> {
-        let map = self.map.read().unwrap_or_else(|p| p.into_inner());
-        map.get(&key).map(|e| {
-            e.last_hit.store(self.tick(), Ordering::Relaxed);
-            e.worker.load(Ordering::Relaxed)
-        })
+        self.map.get(key, |w| w.load(Ordering::Relaxed))
     }
 
-    /// Point `key` at `worker`, evicting the least-recently-hit route when
+    /// Point `key` at `worker`, evicting the least-recently-hit routes when
     /// a brand-new key would exceed the cap.
     fn set(&self, key: u64, worker: usize) {
-        {
-            let map = self.map.read().unwrap_or_else(|p| p.into_inner());
-            if let Some(e) = map.get(&key) {
-                e.worker.store(worker, Ordering::Relaxed);
-                e.last_hit.store(self.tick(), Ordering::Relaxed);
-                return;
-            }
-        }
-        let mut map = self.map.write().unwrap_or_else(|p| p.into_inner());
-        if let Some(e) = map.get(&key) {
-            e.worker.store(worker, Ordering::Relaxed);
-            e.last_hit.store(self.tick(), Ordering::Relaxed);
-            return;
-        }
-        if map.len() >= self.capacity {
-            // amortize the O(n) recency scan: evict the stalest ~1/8 of the
-            // table in one pass, so a cold stream of brand-new keys pays
-            // the scan once per batch instead of on every insert (the
-            // write lock is exclusive — submitters wait behind it)
-            let batch = (self.capacity / 8).max(1).min(map.len());
-            let mut entries: Vec<(u64, u64)> = map
-                .iter()
-                .map(|(k, e)| (e.last_hit.load(Ordering::Relaxed), *k))
-                .collect();
-            entries.select_nth_unstable(batch - 1);
-            for (_, stale_key) in entries.into_iter().take(batch) {
-                map.remove(&stale_key);
-            }
-        }
-        map.insert(
+        self.map.update_or_insert(
             key,
-            RouteEntry {
-                worker: AtomicUsize::new(worker),
-                last_hit: AtomicU64::new(self.tick()),
-            },
+            |w| w.store(worker, Ordering::Relaxed),
+            || AtomicUsize::new(worker),
         );
     }
 
     fn len(&self) -> usize {
-        self.map.read().unwrap_or_else(|p| p.into_inner()).len()
+        self.map.len()
     }
 }
 
@@ -378,40 +374,74 @@ struct PoolShared {
     gates: Vec<Gate>,
     steal_min_depth: usize,
     max_queue_skew: usize,
+    /// The pool-wide accelerator cache, consulted by steal-victim scoring.
+    cache: Arc<AcceleratorCache>,
+    /// Worker index → its fabric's id (plan-cache key).
+    fabric_ids: Vec<u64>,
 }
 
 impl PoolShared {
-    /// Try to steal work for idle worker `thief`: pick the deepest other
-    /// queue, and if it holds at least `steal_min_depth` jobs, extract
-    /// **every** queued job of its tail composition key — whole groups
-    /// only, never splitting one — and repoint the route so repeats follow
-    /// the stolen residency.
+    /// Try to steal work for idle worker `thief`: among the other queues
+    /// holding at least `steal_min_depth` jobs, **prefer a victim whose
+    /// tail composition already has a placement plan cached for the
+    /// thief's fabric** — that steal skips the placement respecialization
+    /// entirely (the group ran here before) — falling back to the deepest
+    /// queue. Extract **every** queued job of the chosen tail key — whole
+    /// groups only, never splitting one — and repoint the route so repeats
+    /// follow the stolen residency.
     fn steal_into(&self, thief: usize) -> Option<Vec<Job>> {
         if self.steal_min_depth == usize::MAX {
             return None;
         }
-        let mut victim = None;
-        let mut deepest = 0;
-        for (i, q) in self.queues.iter().enumerate() {
-            if i == thief {
-                continue;
-            }
-            let d = q.depth.load(Ordering::Relaxed);
-            if d > deepest {
-                deepest = d;
-                victim = Some(i);
-            }
-        }
-        let v = victim?;
-        if deepest < self.steal_min_depth {
+        // candidates at or above the steal threshold, deepest first
+        // (ties broken toward the lowest index, as before)
+        let mut candidates: Vec<(usize, usize)> = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != thief)
+            .filter_map(|(i, q)| {
+                let d = q.depth.load(Ordering::Relaxed);
+                (d >= self.steal_min_depth).then_some((d, i))
+            })
+            .collect();
+        candidates.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        if candidates.is_empty() {
             return None;
         }
+        // order the attempts: plan-preferred victims first, the rest after,
+        // both deepest-first — an inflight-blocked (or meanwhile emptied)
+        // victim falls through to the next candidate instead of aborting
+        // the whole steal and idling the thief
+        let thief_fabric = self.fabric_ids[thief];
+        let mut order = Vec::with_capacity(candidates.len());
+        let mut rest = Vec::new();
+        for &(_, i) in &candidates {
+            // lock-free: the tail mirror plus a recency-neutral cache peek,
+            // so scoring contends on neither busy-queue mutexes nor LRUs
+            let preferred = self.queues[i]
+                .tail_hint()
+                .map_or(false, |key| self.cache.has_plan(key, thief_fabric));
+            if preferred {
+                order.push(i);
+            } else {
+                rest.push(i);
+            }
+        }
+        order.extend(rest);
+        order.into_iter().find_map(|v| self.try_steal_from(v, thief))
+    }
+
+    /// Take the whole tail composition group of `v`'s queue for `thief`,
+    /// repointing the route so repeats follow the stolen residency. `None`
+    /// when the queue emptied since scoring or its tail group continues
+    /// into the burst the victim is serving right now (a same-key run cut
+    /// by the drain window — stealing it would split the group across
+    /// fabrics and thrash both).
+    fn try_steal_from(&self, v: usize, thief: usize) -> Option<Vec<Job>> {
         let vq = &self.queues[v];
         let mut g = vq.lock();
         let key = g.jobs.back()?.request.comp.cache_key();
-        // the tail group may continue into the burst the victim is serving
-        // right now (a same-key run cut by the drain window): stealing it
-        // would split the group across fabrics and thrash both
         if vq.inflight_valid.load(Ordering::Acquire)
             && vq.inflight_tail_key.load(Ordering::Relaxed) == key
         {
@@ -430,6 +460,7 @@ impl PoolShared {
         self.queues[thief].load.fetch_add(stolen.len(), Ordering::SeqCst);
         vq.load.fetch_sub(stolen.len(), Ordering::SeqCst);
         vq.depth.store(g.jobs.len(), Ordering::Relaxed);
+        vq.sync_tail(&g);
         drop(g);
         vq.not_full.notify_all();
         // guard the stolen group on the thief's marker BEFORE the route
@@ -488,7 +519,7 @@ impl WorkerPool {
     /// Spawn `service.workers` workers, each with a fabric built from
     /// `cfg`, serving immediately.
     pub fn new(cfg: OverlayConfig, service: ServiceConfig) -> Result<WorkerPool> {
-        Self::build(cfg, service, true)
+        Self::build(cfg, service, true, None)
     }
 
     /// Like [`WorkerPool::new`], but workers are held at a start gate until
@@ -500,32 +531,75 @@ impl WorkerPool {
     /// paused experiments should size `queue_capacity` to the backlog (or
     /// use [`WorkerPool::try_submit`]).
     pub fn new_paused(cfg: OverlayConfig, service: ServiceConfig) -> Result<WorkerPool> {
-        Self::build(cfg, service, false)
+        Self::build(cfg, service, false, None)
     }
 
-    fn build(cfg: OverlayConfig, service: ServiceConfig, started: bool) -> Result<WorkerPool> {
+    /// Like [`WorkerPool::new`], but serving from a caller-supplied shared
+    /// [`AcceleratorCache`] instead of building a private one
+    /// (`service.cache_shards` / `cache_capacity` are then ignored). This
+    /// is how accelerators pre-compiled elsewhere — another pool, a
+    /// standalone [`Coordinator`] — flow into the pool: the program is
+    /// reused as-is and each fabric specializes its own placement on first
+    /// touch.
+    pub fn with_cache(
+        cfg: OverlayConfig,
+        service: ServiceConfig,
+        cache: Arc<AcceleratorCache>,
+    ) -> Result<WorkerPool> {
+        Self::build(cfg, service, true, Some(cache))
+    }
+
+    /// [`WorkerPool::with_cache`] with workers held at the start gate (see
+    /// [`WorkerPool::new_paused`]).
+    pub fn with_cache_paused(
+        cfg: OverlayConfig,
+        service: ServiceConfig,
+        cache: Arc<AcceleratorCache>,
+    ) -> Result<WorkerPool> {
+        Self::build(cfg, service, false, Some(cache))
+    }
+
+    fn build(
+        cfg: OverlayConfig,
+        service: ServiceConfig,
+        started: bool,
+        cache: Option<Arc<AcceleratorCache>>,
+    ) -> Result<WorkerPool> {
         service.validate()?;
-        let cache =
-            Arc::new(AcceleratorCache::bounded(service.cache_shards, service.cache_capacity));
+        let cache = cache.unwrap_or_else(|| {
+            Arc::new(AcceleratorCache::bounded(service.cache_shards, service.cache_capacity))
+        });
+        // one plan slot per fabric: a composition hot on every worker must
+        // never cycle its per-fabric plan LRU — raised on externally
+        // supplied caches too (their default cap may be below the width)
+        cache.ensure_plan_capacity(service.workers);
         let metrics = Arc::new(AtomicMetrics::default());
+        // build every coordinator before spawning anything: the shared
+        // state carries each worker's fabric id (steal-victim scoring), so
+        // the ids must all be known up front — and a failed fabric
+        // construction then simply returns before any thread exists
+        let mut coords = Vec::with_capacity(service.workers);
+        for _ in 0..service.workers {
+            coords.push(Coordinator::with_cache(cfg.clone(), cache.clone())?);
+        }
         let shared = Arc::new(PoolShared {
             queues: (0..service.workers).map(|_| JobQueue::new(service.queue_capacity)).collect(),
             route: RouteTable::new(service.route_capacity),
             gates: (0..service.workers).map(|_| Gate::new(started)).collect(),
             steal_min_depth: service.steal_min_depth,
             max_queue_skew: service.max_queue_skew,
+            cache: cache.clone(),
+            fabric_ids: coords.iter().map(|c| c.engine.fabric.id).collect(),
         });
         let mut handles = Vec::with_capacity(service.workers);
-        for w in 0..service.workers {
-            let spawned = Coordinator::with_cache(cfg.clone(), cache.clone()).and_then(|coord| {
-                let shared_w = shared.clone();
-                let agg = metrics.clone();
-                let drain_window = service.drain_window;
-                std::thread::Builder::new()
-                    .name(format!("overlay-worker-{w}"))
-                    .spawn(move || worker_loop(coord, w, shared_w, agg, drain_window))
-                    .map_err(Error::from)
-            });
+        for (w, coord) in coords.into_iter().enumerate() {
+            let shared_w = shared.clone();
+            let agg = metrics.clone();
+            let drain_window = service.drain_window;
+            let spawned = std::thread::Builder::new()
+                .name(format!("overlay-worker-{w}"))
+                .spawn(move || worker_loop(coord, w, shared_w, agg, drain_window))
+                .map_err(Error::from);
             match spawned {
                 Ok(handle) => handles.push(handle),
                 Err(e) => {

@@ -37,6 +37,13 @@ pub enum Error {
     /// Reconfiguration error (bitstream does not fit the PR region, ...).
     Reconfig(String),
 
+    /// A cached placement plan no longer matches the occupancy of the
+    /// fabric it is about to be replayed on: it would overwrite residents
+    /// of other accelerators even though the fabric has enough free tiles
+    /// to host the pipeline cleanly. Run a placement-only recompile
+    /// against the live occupancy instead of replaying.
+    StalePlan { fabric: u64, free_tiles: usize },
+
     /// Artifact manifest / HLO loading problems.
     Artifact(String),
 
@@ -71,6 +78,10 @@ impl fmt::Display for Error {
             Error::Program(m) => write!(f, "program error: {m}"),
             Error::Trap { pc, reason } => write!(f, "controller trap at pc={pc}: {reason}"),
             Error::Reconfig(m) => write!(f, "reconfiguration error: {m}"),
+            Error::StalePlan { fabric, free_tiles } => write!(
+                f,
+                "stale placement plan for fabric {fabric}: replay would overwrite residents while {free_tiles} tiles are free"
+            ),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
@@ -143,6 +154,16 @@ mod tests {
         assert!(!Error::Runtime("x".into()).is_capacity());
         // backpressure is a service condition, not a placement-capacity miss
         assert!(!Error::PoolBusy { worker: 0, capacity: 8 }.is_capacity());
+        // a stale plan wants respecialization, not a bigger fabric
+        assert!(!Error::StalePlan { fabric: 1, free_tiles: 4 }.is_capacity());
+    }
+
+    #[test]
+    fn stale_plan_renders() {
+        assert_eq!(
+            Error::StalePlan { fabric: 3, free_tiles: 5 }.to_string(),
+            "stale placement plan for fabric 3: replay would overwrite residents while 5 tiles are free"
+        );
     }
 
     #[test]

@@ -12,13 +12,12 @@ pub mod cpu;
 
 pub use cpu::Value;
 
-
-use crate::bitstream::BitstreamLibrary;
+use crate::bitstream::{BitstreamLibrary, OperatorKind};
 use crate::config::OverlayConfig;
 use crate::error::{Error, Result};
-use crate::jit::CompiledAccelerator;
+use crate::jit::{AcceleratorProgram, CompiledAccelerator, PlacementPlan};
 use crate::overlay::{Controller, ExecStats, ExternalIo, Fabric};
-use crate::place::StaticScenario;
+use crate::place::{DynamicPlacer, StaticScenario};
 use crate::reconfig::{PrManager, ReconfigStats};
 use crate::timing::{arm::ArmModel, hls::HlsModel, overlay as otiming, Target, TimingBreakdown};
 
@@ -95,7 +94,21 @@ impl Engine {
         acc: &CompiledAccelerator,
         inputs: &[Vec<f32>],
     ) -> Result<RunResult> {
-        let reconfig = self.pr.apply(&mut self.fabric, &self.lib, &acc.placement)?;
+        // Residency guard: a placement plan is only valid against the
+        // occupancy it was compiled for. Replaying one that would overwrite
+        // other accelerators' residents *while free tiles could host it* is
+        // always a stale plan (compiled on another fabric, or before this
+        // fabric's occupancy moved) — refuse it so the caller respecializes
+        // instead of silently clobbering. When the fabric genuinely lacks
+        // room, overwriting is the legitimate capacity thrash the batcher
+        // amortizes, and the plan passes.
+        if self.plan_is_stale(acc) {
+            return Err(Error::StalePlan {
+                fabric: self.fabric.id,
+                free_tiles: self.fabric.free_tiles().len(),
+            });
+        }
+        let reconfig = self.pr.apply(&mut self.fabric, &self.lib, acc.placement())?;
         self.fabric.reset_data();
         self.fabric.reset_switches(); // stale routes must not leak between accelerators
 
@@ -103,7 +116,7 @@ impl Engine {
         // channels are materialized (perf §Perf-2: no operand copies).
         self.validate_inputs(acc, inputs)?;
         let scalar_bufs: Vec<Vec<f32>> =
-            acc.scalar_channels.iter().map(|&s| vec![s]).collect();
+            acc.scalar_channels().iter().map(|&s| vec![s]).collect();
         let mut io = ExternalIo::from_slices(
             inputs
                 .iter()
@@ -113,15 +126,15 @@ impl Engine {
         );
         let stats = self
             .controller
-            .run(&mut self.fabric, &acc.program, &mut io)?;
+            .run(&mut self.fabric, acc.program(), &mut io)?;
 
         let timing = otiming::pipeline_time(
             &self.fabric.cfg,
-            &acc.composition.ops(),
-            acc.composition.n,
+            &acc.composition().ops(),
+            acc.composition().n,
             acc.total_hops(),
-            acc.program.len(),
-            acc.composition.inputs as usize,
+            acc.program().len(),
+            acc.composition().inputs as usize,
             otiming::ForwardingMode::Pipelined,
         );
         let output = self.take_output(acc, io)?;
@@ -146,14 +159,14 @@ impl Engine {
         // semantics of the static overlay are identical; only timing and
         // placement freedom differ).
         let mut run = self.run_dynamic(acc, inputs)?;
-        let ops = acc.composition.ops();
+        let ops = acc.composition().ops();
         let timing = otiming::pipeline_time(
             &self.fabric.cfg,
             &ops,
-            acc.composition.n,
+            acc.composition().n,
             scenario.pass_throughs() + acc.total_hops(),
-            acc.program.len(),
-            acc.composition.inputs as usize,
+            acc.program().len(),
+            acc.composition().inputs as usize,
             otiming::ForwardingMode::StoreAndForward,
         );
         run.target = Target::StaticOverlay(scenario);
@@ -165,20 +178,20 @@ impl Engine {
     }
 
     fn run_arm(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<RunResult> {
-        let output = cpu::eval(&acc.composition, inputs)?;
-        let stages = acc.stages.len();
+        let output = cpu::eval(acc.composition(), inputs)?;
+        let stages = acc.stages().len();
         let timing = self
             .arm
-            .pattern_time(&self.fabric.cfg.clocks, stages, acc.composition.n);
+            .pattern_time(&self.fabric.cfg.clocks, stages, acc.composition().n);
         Ok(RunResult { target: Target::ArmSoftware, output, timing, reconfig: None, stats: None })
     }
 
     fn run_hls(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<RunResult> {
-        let output = cpu::eval(&acc.composition, inputs)?;
+        let output = cpu::eval(acc.composition(), inputs)?;
         let timing = self.hls.pattern_time(
             &self.fabric.cfg,
-            acc.composition.inputs as usize,
-            acc.composition.n,
+            acc.composition().inputs as usize,
+            acc.composition().n,
         );
         Ok(RunResult { target: Target::HlsCustom, output, timing, reconfig: None, stats: None })
     }
@@ -192,9 +205,44 @@ impl Engine {
         (total - self.fabric.free_tiles().len(), total)
     }
 
+    /// Would replaying `plan` overwrite residents of *other* operators on
+    /// this fabric? (Downloading into an empty tile, or re-downloading the
+    /// operator already resident, is never a clobber.)
+    pub fn plan_clobbers(&self, plan: &PlacementPlan) -> bool {
+        plan.placement
+            .assignments
+            .iter()
+            .any(|a| self.fabric.tiles[a.tile].resident.map_or(false, |r| r != a.op))
+    }
+
+    /// The residency-guard predicate: would replaying `acc`'s plan
+    /// overwrite residents of *other* operators even though this fabric's
+    /// free tiles could host the pipeline on untouched ones? True means
+    /// the plan is stale for this fabric right now and should be
+    /// respecialized, not replayed.
+    ///
+    /// Feasibility is [`DynamicPlacer::feasible`] — the placer's own
+    /// condition, shared, so a refusal here guarantees a placement-only
+    /// recompile will succeed. Branch diamonds (a Select hub needing free
+    /// *adjacent* spokes) have a stricter shape the linear check cannot
+    /// see, so the guard stays conservative there and lets the replay
+    /// through — the coordinator covers diamonds by *attempting* the
+    /// respecialization instead (see
+    /// [`Coordinator::accelerator`](crate::coordinator::Coordinator)).
+    pub fn plan_is_stale(&self, acc: &CompiledAccelerator) -> bool {
+        if !self.plan_clobbers(&acc.plan) {
+            return false;
+        }
+        let spec: &AcceleratorProgram = &acc.spec;
+        if spec.stages.iter().any(|s| s.op == OperatorKind::Select) {
+            return false;
+        }
+        DynamicPlacer::feasible(&self.fabric, &spec.classes)
+    }
+
     /// Validate user channel count/lengths against the composition.
     fn validate_inputs(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<()> {
-        let want = acc.composition.inputs as usize;
+        let want = acc.composition().inputs as usize;
         if inputs.len() != want {
             return Err(Error::Pattern(format!(
                 "composition reads {want} channels, got {}",
@@ -202,10 +250,10 @@ impl Engine {
             )));
         }
         for (k, v) in inputs.iter().enumerate() {
-            if v.len() != acc.composition.n {
+            if v.len() != acc.composition().n {
                 return Err(Error::Pattern(format!(
                     "channel {k}: expected {} elements, got {}",
-                    acc.composition.n,
+                    acc.composition().n,
                     v.len()
                 )));
             }
@@ -219,7 +267,7 @@ impl Engine {
             .first()
             .cloned()
             .ok_or_else(|| Error::Runtime("accelerator produced no output".into()))?;
-        Ok(if acc.composition.scalar_result() {
+        Ok(if acc.composition().scalar_result() {
             Value::Scalar(*out.first().ok_or_else(|| {
                 Error::Runtime("empty scalar output channel".into())
             })?)
@@ -395,6 +443,65 @@ mod tests {
         assert_eq!(e.residency(), (2, 9));
         e.fabric.reset_full();
         assert_eq!(e.residency(), (0, 9));
+    }
+
+    /// The residency guard (ISSUE 4): a plan compiled against an occupancy
+    /// that has since changed is refused when free tiles could host it, and
+    /// a placement-only respecialization then runs clean without touching
+    /// the residents the stale plan would have clobbered.
+    #[test]
+    fn stale_plan_refused_when_free_tiles_exist() {
+        let mut e = engine();
+        let n = 256;
+        // both compiled against the *empty* fabric: their placements overlap
+        let vmul = compile(&e, &Composition::vmul_reduce(n));
+        let map = compile(&e, &Composition::chain(&[OperatorKind::Abs], n).unwrap());
+        e.run(&vmul, &[vec![1.0; n], vec![1.0; n]], Target::DynamicOverlay).unwrap();
+        assert!(e.plan_is_stale(&map), "overlapping plan with 7 free tiles must be stale");
+        let err = e.run(&map, &[vec![-1.0; n]], Target::DynamicOverlay).unwrap_err();
+        assert!(matches!(err, Error::StalePlan { .. }), "got: {err}");
+        // respecialize placement-only against the live occupancy
+        let plan = Jit.place_onto(&e.fabric, &map.spec).unwrap();
+        let fresh = CompiledAccelerator { spec: map.spec.clone(), plan: plan.into() };
+        assert!(!e.plan_is_stale(&fresh));
+        let run = e.run(&fresh, &[vec![-1.0; n]], Target::DynamicOverlay).unwrap();
+        assert_eq!(run.output.as_vector().map(|v| v[0]), Some(1.0));
+        // the stale plan's victims survived
+        assert_eq!(e.fabric.tiles[0].resident, Some(OperatorKind::Mul));
+        // full fabric exception: when free tiles cannot host the pipeline,
+        // overwriting is legitimate capacity thrash, not staleness
+        let mut full = engine();
+        let chain = Composition::chain(
+            &[
+                OperatorKind::Neg,
+                OperatorKind::Abs,
+                OperatorKind::Square,
+                OperatorKind::Relu,
+                OperatorKind::Neg,
+            ],
+            n,
+        )
+        .unwrap();
+        let acc_a = compile(&full, &chain);
+        full.run(&acc_a, &[vec![1.0; n]], Target::DynamicOverlay).unwrap();
+        full.fabric.reset_full();
+        let conflicting = Composition::chain(
+            &[
+                OperatorKind::Abs,
+                OperatorKind::Neg,
+                OperatorKind::Relu,
+                OperatorKind::Square,
+                OperatorKind::Abs,
+            ],
+            n,
+        )
+        .unwrap();
+        let acc_b = compile(&full, &conflicting);
+        full.run(&acc_b, &[vec![1.0; n]], Target::DynamicOverlay).unwrap();
+        // acc_a's plan clobbers acc_b's residents, but only 4 tiles are
+        // free for its 5 stages — allowed (and counted as pr_replaced)
+        assert!(!full.plan_is_stale(&acc_a));
+        full.run(&acc_a, &[vec![1.0; n]], Target::DynamicOverlay).unwrap();
     }
 
     #[test]

@@ -254,19 +254,19 @@ mod tests {
     #[test]
     fn vmul_reduce_program_structure() {
         let acc = compile(&Composition::vmul_reduce(4096));
-        let mix = acc.program.category_mix();
+        let mix = acc.program().category_mix();
         // all four ISA categories are exercised
         assert!(mix.interconnect >= 3, "{mix:?}"); // set.out + set.in + 2×pr.connect
         assert!(mix.vector == 2, "{mix:?}");       // vec.run + vec.acc
         assert!(mix.branch >= 1, "{mix:?}");       // chunk loop
         assert!(mix.mem_reg >= 8, "{mix:?}");
-        assert_eq!(acc.chunk, 1024);
+        assert_eq!(acc.chunk(), 1024);
     }
 
     #[test]
     fn small_workload_single_chunk_no_loop_iterations() {
         let acc = compile(&Composition::vmul_reduce(256));
-        assert_eq!(acc.chunk, 256);
+        assert_eq!(acc.chunk(), 256);
     }
 
     #[test]
@@ -282,7 +282,7 @@ mod tests {
     fn scalar_channels_deduplicated() {
         // axpy uses one scalar; filter_reduce one; branch one
         let acc = compile(&Composition::axpy(3.5, 512));
-        assert_eq!(acc.scalar_channels, vec![3.5]);
+        assert_eq!(acc.scalar_channels(), vec![3.5]);
     }
 
     #[test]
@@ -294,7 +294,7 @@ mod tests {
             256,
         ));
         let vec_instrs = acc
-            .program
+            .program()
             .instrs()
             .iter()
             .filter(|i| i.op == Opcode::VecRun)
@@ -310,7 +310,7 @@ mod tests {
             Composition::map(crate::bitstream::OperatorKind::Sqrt, 4096),
         ] {
             let acc = compile(&comp);
-            acc.program.check_bram_fit(&OverlayConfig::default()).unwrap();
+            acc.program().check_bram_fit(&OverlayConfig::default()).unwrap();
         }
     }
 }

@@ -6,23 +6,31 @@
 //! programming patterns into the PR regions and set the programmable
 //! connections of the communication overlay."*
 //!
-//! [`Jit::compile`] performs, in order:
-//!  1. **linearize** the [`Composition`] into pipeline stages;
-//!  2. **select** a bitstream for each stage from the library;
-//!  3. **place** stages onto free class-compatible tiles (contiguous via
-//!     the dynamic placer; the branch diamond gets a hub placement);
-//!  4. **route** every on-fabric stream between stages;
-//!  5. **codegen** the controller program (interconnect setup, chunked DMA
-//!     loop, vector ops, result drain).
+//! Compilation is split into two phases that fail and cache independently:
 //!
-//! The output [`CompiledAccelerator`] carries everything the execution
-//! engine and the reconfiguration manager need.
+//!  * **front end** ([`Jit::frontend`]) — fabric-*independent*: linearize
+//!    the [`Composition`] into pipeline stages and select a bitstream
+//!    region class for each stage. The output [`AcceleratorProgram`] is
+//!    valid on every fabric of a config and is what the pool-wide
+//!    accelerator cache shares.
+//!  * **placement** ([`Jit::place_onto`]) — fabric-*dependent*: place the
+//!    stages onto the target fabric's currently-free class-compatible
+//!    tiles (contiguous via the dynamic placer; the branch diamond gets a
+//!    hub placement), route every on-fabric stream, and codegen the
+//!    controller program (interconnect setup, chunked DMA loop, vector
+//!    ops, result drain). The output [`PlacementPlan`] is only valid
+//!    against the occupancy it was placed against, so the coordinator
+//!    caches plans per `(composition, fabric)` and re-runs *this phase
+//!    only* when a cached accelerator first lands on a different fabric.
+//!
+//! [`Jit::compile`] is both phases back to back; [`CompiledAccelerator`]
+//! pairs the shared program with one fabric's plan.
 
 pub mod codegen;
 
+use std::sync::Arc;
 
 use crate::bitstream::{BitstreamLibrary, OperatorKind, RegionClass};
-
 use crate::error::{Error, Result};
 use crate::isa::Program;
 use crate::overlay::Fabric;
@@ -30,11 +38,28 @@ use crate::patterns::{Composition, Source, Stage};
 use crate::place::{Assignment, DynamicPlacer, Placement};
 use crate::route::{shortest_route, Route};
 
-/// A fully compiled accelerator, ready to download + run.
+/// The fabric-independent half of a compiled accelerator: what the JIT
+/// front end produces before any fabric is chosen. Shared pool-wide.
 #[derive(Debug, Clone)]
-pub struct CompiledAccelerator {
+pub struct AcceleratorProgram {
     pub composition: Composition,
+    /// Linearized pipeline stages, in dataflow order.
     pub stages: Vec<Stage>,
+    /// Bitstream region class selected for each stage (same order).
+    pub classes: Vec<RegionClass>,
+    /// [`Composition::cache_key`], precomputed.
+    pub key: u64,
+}
+
+/// The fabric-dependent half: a placement (plus its routes and the placed
+/// controller program) compiled against **one** fabric's occupancy at one
+/// point in time. Replaying it elsewhere — or later, after the occupancy
+/// moved — may overwrite residents; the engine's residency guard refuses
+/// that when free tiles exist, and the coordinator respecializes instead.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    /// Id of the fabric whose occupancy this plan was placed against.
+    pub fabric: u64,
     pub placement: Placement,
     pub routes: Vec<Route>,
     pub program: Program,
@@ -45,11 +70,56 @@ pub struct CompiledAccelerator {
     pub chunk: usize,
 }
 
-impl CompiledAccelerator {
+impl PlacementPlan {
     /// Total pass-through hops across all routes (0 for dynamic placements
     /// of linear pipelines — the paper's contiguity invariant).
     pub fn total_hops(&self) -> usize {
         self.routes.iter().map(|r| r.hops()).sum()
+    }
+}
+
+/// A fully compiled accelerator, ready to download + run: the shared
+/// program paired with one fabric's placement plan. Cheap to clone (two
+/// `Arc`s) — the cache hands these out per request.
+#[derive(Debug, Clone)]
+pub struct CompiledAccelerator {
+    pub spec: Arc<AcceleratorProgram>,
+    pub plan: Arc<PlacementPlan>,
+}
+
+impl CompiledAccelerator {
+    pub fn composition(&self) -> &Composition {
+        &self.spec.composition
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.spec.stages
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.plan.placement
+    }
+
+    pub fn routes(&self) -> &[Route] {
+        &self.plan.routes
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.plan.program
+    }
+
+    pub fn scalar_channels(&self) -> &[f32] {
+        &self.plan.scalar_channels
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.plan.chunk
+    }
+
+    /// Total pass-through hops across all routes (see
+    /// [`PlacementPlan::total_hops`]).
+    pub fn total_hops(&self) -> usize {
+        self.plan.total_hops()
     }
 }
 
@@ -58,31 +128,60 @@ impl CompiledAccelerator {
 pub struct Jit;
 
 impl Jit {
-    /// Compile `comp` against the current fabric occupancy.
+    /// Compile `comp` against `fabric`'s current occupancy: front end plus
+    /// placement in one call.
     pub fn compile(
         &self,
         fabric: &Fabric,
         lib: &BitstreamLibrary,
         comp: &Composition,
     ) -> Result<CompiledAccelerator> {
+        let spec = Arc::new(self.frontend(lib, comp)?);
+        let plan = Arc::new(self.place_onto(fabric, &spec)?);
+        Ok(CompiledAccelerator { spec, plan })
+    }
+
+    /// Fabric-independent front end: linearize stages and select a
+    /// bitstream class per stage (fails fast with a structured error when
+    /// an operator has no implementation).
+    pub fn frontend(
+        &self,
+        lib: &BitstreamLibrary,
+        comp: &Composition,
+    ) -> Result<AcceleratorProgram> {
         let stages = comp.stages();
         if stages.is_empty() {
             return Err(Error::Pattern("composition produced no stages".into()));
         }
-        // bitstream selection feasibility (fail fast with a structured error)
-        for s in &stages {
-            lib.preferred_class(s.op)?;
-        }
-
-        let placement = place_stages(fabric, lib, &stages)?;
-        let routes = route_stages(fabric, &stages, &placement)?;
-        let (program, scalar_channels, chunk) =
-            codegen::generate(&fabric.cfg, comp, &stages, &placement, &routes)?;
-        program.check_bram_fit(&fabric.cfg)?;
-
-        Ok(CompiledAccelerator {
+        let classes: Vec<RegionClass> =
+            stages.iter().map(|s| lib.preferred_class(s.op)).collect::<Result<_>>()?;
+        Ok(AcceleratorProgram {
             composition: comp.clone(),
             stages,
+            classes,
+            key: comp.cache_key(),
+        })
+    }
+
+    /// Placement-only (re)compile: place `spec`'s stages against `fabric`'s
+    /// *current* occupancy, route, and codegen. This is what runs when a
+    /// cached accelerator first executes on a fabric other than the one it
+    /// was compiled on — or when its own fabric's occupancy drifted under
+    /// a cached plan. Needs no bitstream library: the front end already
+    /// selected every stage's region class into `spec.classes`.
+    pub fn place_onto(&self, fabric: &Fabric, spec: &AcceleratorProgram) -> Result<PlacementPlan> {
+        let placement = place_stages(fabric, &spec.stages, &spec.classes)?;
+        let routes = route_stages(fabric, &spec.stages, &placement)?;
+        let (program, scalar_channels, chunk) = codegen::generate(
+            &fabric.cfg,
+            &spec.composition,
+            &spec.stages,
+            &placement,
+            &routes,
+        )?;
+        program.check_bram_fit(&fabric.cfg)?;
+        Ok(PlacementPlan {
+            fabric: fabric.id,
             placement,
             routes,
             program,
@@ -92,28 +191,26 @@ impl Jit {
     }
 }
 
-/// Place stages: linear pipelines go through the dynamic placer; the branch
-/// diamond (a Select consuming three streams) gets a hub-and-spokes
-/// placement around a tile with three free neighbours.
-fn place_stages(
-    fabric: &Fabric,
-    lib: &BitstreamLibrary,
-    stages: &[Stage],
-) -> Result<Placement> {
+/// Place stages: linear pipelines go through the dynamic placer; the
+/// branch diamond (a Select consuming three streams) gets a hub-and-spokes
+/// placement around a tile with three free neighbours. Both paths consume
+/// the front end's per-stage class selection (`classes`) — placement never
+/// re-derives it.
+fn place_stages(fabric: &Fabric, stages: &[Stage], classes: &[RegionClass]) -> Result<Placement> {
     let select_idx = stages.iter().position(|s| s.op == OperatorKind::Select);
     match select_idx {
         None => {
             let ops: Vec<OperatorKind> = stages.iter().map(|s| s.op).collect();
-            DynamicPlacer.place(fabric, lib, &ops)
+            DynamicPlacer.place_with_needs(fabric, &ops, classes)
         }
-        Some(sel) => place_diamond(fabric, lib, stages, sel),
+        Some(sel) => place_diamond(fabric, stages, classes, sel),
     }
 }
 
 fn place_diamond(
     fabric: &Fabric,
-    lib: &BitstreamLibrary,
     stages: &[Stage],
+    classes: &[RegionClass],
     sel: usize,
 ) -> Result<Placement> {
     // producers feeding the select, in slot order
@@ -127,11 +224,10 @@ fn place_diamond(
         .collect::<Result<_>>()?;
 
     let free = |t: usize| fabric.tiles[t].resident.is_none();
-    let class_ok = |t: usize, op: OperatorKind| -> bool {
-        match lib.preferred_class(op) {
-            Ok(RegionClass::Large) => fabric.tiles[t].class == RegionClass::Large,
-            Ok(RegionClass::Small) => true,
-            Err(_) => false,
+    let class_ok = |t: usize, need: RegionClass| -> bool {
+        match need {
+            RegionClass::Large => fabric.tiles[t].class == RegionClass::Large,
+            RegionClass::Small => true,
         }
     };
 
@@ -139,7 +235,7 @@ fn place_diamond(
     // host every producer (greedy matching, producers with large-region
     // needs assigned first).
     for hub in 0..fabric.tiles.len() {
-        if !free(hub) || !class_ok(hub, OperatorKind::Select) {
+        if !free(hub) || !class_ok(hub, classes[sel]) {
             continue;
         }
         let mut neigh: Vec<usize> = crate::isa::Dir::ALL
@@ -152,16 +248,11 @@ fn place_diamond(
         }
         // assign large-needing producers first
         let mut order: Vec<usize> = producers.clone();
-        order.sort_by_key(|&p| {
-            std::cmp::Reverse(matches!(
-                lib.preferred_class(stages[p].op),
-                Ok(RegionClass::Large)
-            ))
-        });
+        order.sort_by_key(|&p| std::cmp::Reverse(classes[p] == RegionClass::Large));
         let mut chosen: std::collections::HashMap<usize, usize> = Default::default();
         let mut ok = true;
         for p in order {
-            let pos = neigh.iter().position(|&t| class_ok(t, stages[p].op));
+            let pos = neigh.iter().position(|&t| class_ok(t, classes[p]));
             match pos {
                 Some(k) => {
                     chosen.insert(p, neigh.remove(k));
@@ -197,11 +288,7 @@ fn place_diamond(
 }
 
 /// Route every `Source::Stage` edge of the pipeline.
-fn route_stages(
-    fabric: &Fabric,
-    stages: &[Stage],
-    placement: &Placement,
-) -> Result<Vec<Route>> {
+fn route_stages(fabric: &Fabric, stages: &[Stage], placement: &Placement) -> Result<Vec<Route>> {
     // tiles that consume (host operators) block pass-through routing
     let mut blocked = vec![false; fabric.tiles.len()];
     for a in &placement.assignments {
@@ -246,22 +333,20 @@ mod tests {
     fn vmul_reduce_compiles_contiguous() {
         let (f, lib) = setup();
         let acc = Jit.compile(&f, &lib, &Composition::vmul_reduce(4096)).unwrap();
-        assert_eq!(acc.stages.len(), 2);
+        assert_eq!(acc.stages().len(), 2);
         assert_eq!(acc.total_hops(), 0, "dynamic overlay must be contiguous");
-        assert!(acc.placement.is_injective());
-        assert!(acc.program.len() > 5);
+        assert!(acc.placement().is_injective());
+        assert!(acc.program().len() > 5);
     }
 
     #[test]
     fn chain_compiles() {
         let (f, lib) = setup();
-        let comp = Composition::chain(
-            &[OperatorKind::Abs, OperatorKind::Sqrt, OperatorKind::Log],
-            1024,
-        )
-        .unwrap();
+        let comp =
+            Composition::chain(&[OperatorKind::Abs, OperatorKind::Sqrt, OperatorKind::Log], 1024)
+                .unwrap();
         let acc = Jit.compile(&f, &lib, &comp).unwrap();
-        assert_eq!(acc.stages.len(), 3);
+        assert_eq!(acc.stages().len(), 3);
         // sqrt & log need the two large tiles; abs can sit anywhere —
         // at most one skipped tile between stages.
         assert!(acc.total_hops() <= 2, "hops: {}", acc.total_hops());
@@ -272,11 +357,11 @@ mod tests {
         let (f, lib) = setup();
         let comp = Composition::branch(0.0, OperatorKind::Relu, OperatorKind::Neg, 512);
         let acc = Jit.compile(&f, &lib, &comp).unwrap();
-        assert_eq!(acc.stages.len(), 4);
+        assert_eq!(acc.stages().len(), 4);
         // all three producers adjacent to the select hub
         assert_eq!(acc.total_hops(), 0);
-        let sel_tile = acc.placement.assignments[3].tile;
-        for a in &acc.placement.assignments[..3] {
+        let sel_tile = acc.placement().assignments[3].tile;
+        for a in &acc.placement().assignments[..3] {
             assert_eq!(f.mesh.manhattan(a.tile, sel_tile), 1);
         }
     }
@@ -287,7 +372,7 @@ mod tests {
         let comp = Composition::branch(0.5, OperatorKind::Sqrt, OperatorKind::Square, 256);
         let acc = Jit.compile(&f, &lib, &comp).unwrap();
         let sqrt_stage = acc
-            .placement
+            .placement()
             .assignments
             .iter()
             .find(|a| a.op == OperatorKind::Sqrt)
@@ -313,6 +398,37 @@ mod tests {
     fn scalar_channels_surface_in_accelerator() {
         let (f, lib) = setup();
         let acc = Jit.compile(&f, &lib, &Composition::filter_reduce(0.75, 512)).unwrap();
-        assert_eq!(acc.scalar_channels, vec![0.75]);
+        assert_eq!(acc.scalar_channels(), &[0.75]);
+    }
+
+    /// The split itself: the front end is fabric-blind, and placement-only
+    /// recompiles land on whatever tiles the target fabric has free.
+    #[test]
+    fn place_onto_respects_target_occupancy() {
+        let (f_empty, lib) = setup();
+        let comp = Composition::vmul_reduce(256);
+        let spec = Arc::new(Jit.frontend(&lib, &comp).unwrap());
+        assert_eq!(spec.key, comp.cache_key());
+        assert_eq!(spec.stages.len(), spec.classes.len());
+        assert!(spec.classes.iter().all(|c| *c == RegionClass::Small));
+
+        let plan_a = Jit.place_onto(&f_empty, &spec).unwrap();
+        assert_eq!(plan_a.fabric, f_empty.id);
+
+        // a second fabric whose first snake tile is occupied
+        let (mut f_busy, _) = setup();
+        let bs = lib.get(OperatorKind::Abs, RegionClass::Small).unwrap().clone();
+        f_busy.load_bitstream(0, &bs).unwrap();
+        let plan_b = Jit.place_onto(&f_busy, &spec).unwrap();
+        assert_eq!(plan_b.fabric, f_busy.id);
+        assert_ne!(plan_a.fabric, plan_b.fabric);
+        assert!(
+            plan_b.placement.assignments.iter().all(|a| a.tile != 0),
+            "respecialized placement must avoid the occupied tile: {:?}",
+            plan_b.placement.assignments
+        );
+        // both plans realize the same program shape (placement-only phase)
+        assert_eq!(plan_a.chunk, plan_b.chunk);
+        assert_eq!(plan_a.scalar_channels, plan_b.scalar_channels);
     }
 }

@@ -330,17 +330,17 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let engine = Engine::new(OverlayConfig::default())?;
     let comp = parse_pattern(&args.str("pattern", "vmul-reduce"), n)?;
     let acc = Jit.compile(&engine.fabric, &engine.lib, &comp)?;
-    println!("stages: {}", acc.stages.len());
-    for (i, (s, a)) in acc.stages.iter().zip(&acc.placement.assignments).enumerate() {
+    println!("stages: {}", acc.stages().len());
+    for (i, (s, a)) in acc.stages().iter().zip(&acc.placement().assignments).enumerate() {
         println!("  stage {i}: {:10} -> tile {} ({:?})", s.op.name(), a.tile, a.class);
     }
-    for r in &acc.routes {
+    for r in acc.routes() {
         println!("  route: {} -> {} via {:?} ({} hops)", r.from, r.to, r.via, r.hops());
     }
-    println!("chunk: {} words; scalar channels: {:?}", acc.chunk, acc.scalar_channels);
-    println!("\nprogram ({} instrs):", acc.program.len());
-    print!("{}", asm::format_program(acc.program.instrs()));
-    println!("category mix: {:?}", acc.program.category_mix());
+    println!("chunk: {} words; scalar channels: {:?}", acc.chunk(), acc.scalar_channels());
+    println!("\nprogram ({} instrs):", acc.program().len());
+    print!("{}", asm::format_program(acc.program().instrs()));
+    println!("category mix: {:?}", acc.program().category_mix());
     Ok(())
 }
 

@@ -6,7 +6,6 @@
 //! inboxes modelling streams parked on input ports. The instruction BRAM is
 //! held by the controller (it sequences all tiles from one image).
 
-
 use super::interconnect::SwitchState;
 use super::mesh::Mesh;
 use crate::bitstream::{Bitstream, OperatorKind, RegionClass};
@@ -97,10 +96,19 @@ impl Tile {
 /// The whole fabric: mesh geometry + tile state + config.
 #[derive(Debug, Clone)]
 pub struct Fabric {
+    /// Process-unique fabric identity, minted at construction. Placement
+    /// plans are specialized *per fabric* (a placement is only valid
+    /// against the occupancy it was compiled for), so the plan cache keys
+    /// on this id. A `clone()` deliberately keeps the id: it duplicates
+    /// this fabric's state, occupancy included.
+    pub id: u64,
     pub mesh: Mesh,
     pub cfg: OverlayConfig,
     pub tiles: Vec<Tile>,
 }
+
+/// Mints [`Fabric::id`]s.
+static NEXT_FABRIC_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 impl Fabric {
     /// Build a powered-on, empty fabric from a config.
@@ -117,7 +125,8 @@ impl Fabric {
                 Tile::new(class, &cfg)
             })
             .collect();
-        Ok(Fabric { mesh, cfg, tiles })
+        let id = NEXT_FABRIC_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Fabric { id, mesh, cfg, tiles })
     }
 
     /// Load a bitstream into tile `idx`'s PR region.
@@ -248,6 +257,15 @@ mod tests {
         assert_eq!(f.tiles[1].resident, Some(OperatorKind::Add));
         assert_eq!(f.tiles[1].regs[0], 0.0);
         assert!(f.tiles[1].bram[0].is_empty());
+    }
+
+    #[test]
+    fn fabric_ids_are_distinct() {
+        let a = fabric();
+        let b = fabric();
+        assert_ne!(a.id, b.id, "each constructed fabric gets its own identity");
+        // a clone is the same fabric (same occupancy), so it keeps the id
+        assert_eq!(a.clone().id, a.id);
     }
 
     #[test]

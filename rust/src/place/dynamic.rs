@@ -31,9 +31,45 @@ impl DynamicPlacer {
         lib: &BitstreamLibrary,
         ops: &[OperatorKind],
     ) -> Result<Placement> {
+        // required class per stage
+        let needs: Vec<RegionClass> =
+            ops.iter().map(|&op| lib.preferred_class(op)).collect::<Result<_>>()?;
+        self.place_with_needs(fabric, ops, &needs)
+    }
+
+    /// Would [`DynamicPlacer::place_with_needs`] succeed against `fabric`'s
+    /// current occupancy? This *is* the placer's own feasibility — a greedy
+    /// earliest-compatible assignment over the free tiles in snake order
+    /// ([`try_window`] from the first window), which succeeds iff some
+    /// window does — shared so the engine's residency guard can never
+    /// disagree with the placer about what fits.
+    pub fn feasible(fabric: &Fabric, needs: &[RegionClass]) -> bool {
+        if needs.is_empty() {
+            return false;
+        }
+        let free: Vec<usize> = fabric
+            .mesh
+            .snake_order()
+            .into_iter()
+            .filter(|&t| fabric.tiles[t].resident.is_none())
+            .collect();
+        try_window(fabric, &free, needs).is_some()
+    }
+
+    /// Like [`DynamicPlacer::place`], but with the per-stage region classes
+    /// already selected — the placement-only recompile path, where the JIT
+    /// front end ran once (on some other fabric) and only the placement
+    /// must be redone against this fabric's occupancy.
+    pub fn place_with_needs(
+        &self,
+        fabric: &Fabric,
+        ops: &[OperatorKind],
+        needs: &[RegionClass],
+    ) -> Result<Placement> {
         if ops.is_empty() {
             return Err(Error::Placement("empty pipeline".into()));
         }
+        debug_assert_eq!(ops.len(), needs.len());
         let snake = fabric.mesh.snake_order();
         let free: Vec<usize> = snake
             .iter()
@@ -48,15 +84,9 @@ impl DynamicPlacer {
             )));
         }
 
-        // required class per stage
-        let needs: Vec<RegionClass> = ops
-            .iter()
-            .map(|&op| lib.preferred_class(op))
-            .collect::<Result<_>>()?;
-
         let mut best: Option<(usize, Vec<usize>)> = None; // (skips, tiles)
         for start in 0..free.len() {
-            if let Some(tiles) = try_window(fabric, &free[start..], &needs) {
+            if let Some(tiles) = try_window(fabric, &free[start..], needs) {
                 let skips = window_skips(&fabric.mesh, &tiles);
                 if best.as_ref().map_or(true, |(s, _)| skips < *s) {
                     best = Some((skips, tiles));
@@ -217,5 +247,31 @@ mod tests {
     fn empty_pipeline_rejected() {
         let (f, lib) = setup();
         assert!(DynamicPlacer.place(&f, &lib, &[]).is_err());
+    }
+
+    /// `feasible` agrees with `place_with_needs` — success and failure.
+    #[test]
+    fn feasibility_matches_placement_outcome() {
+        let (mut f, lib) = setup();
+        let small = vec![RegionClass::Small; 2];
+        let larges = vec![RegionClass::Large; 3];
+        assert!(DynamicPlacer::feasible(&f, &small));
+        assert!(!DynamicPlacer::feasible(&f, &larges), "only 2 large tiles exist");
+        assert!(!DynamicPlacer::feasible(&f, &[]));
+        // occupy all but one tile: a 2-stage pipeline no longer fits
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        let bl = lib.get(OperatorKind::Add, RegionClass::Large).unwrap().clone();
+        for t in 0..8 {
+            let b = if f.cfg.is_large_tile(t) { &bl } else { &bs };
+            f.load_bitstream(t, b).unwrap();
+        }
+        assert!(DynamicPlacer::feasible(&f, &small[..1]));
+        assert!(!DynamicPlacer::feasible(&f, &small));
+        assert_eq!(
+            DynamicPlacer::feasible(&f, &small),
+            DynamicPlacer
+                .place_with_needs(&f, &[OperatorKind::Add, OperatorKind::Add], &small)
+                .is_ok()
+        );
     }
 }

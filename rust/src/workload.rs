@@ -121,6 +121,31 @@ pub fn request_inputs(comp: &Composition, k: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// Spill-heavy stream: `distinct` small compositions (distinct cache keys,
+/// 1–2 tiles each) drawn uniformly at random. With many keys and a low
+/// `max_queue_skew`, affinity routing constantly migrates compositions
+/// between fabrics, so nearly every landing is a spill — the worst case
+/// for a pool-wide placement cache and the workload that makes placement
+/// respecialization (and the clobbers it avoids) visible in the bench
+/// series.
+pub fn spill_heavy_compositions(count: usize, distinct: usize, seed: u64) -> Vec<Composition> {
+    use OperatorKind::*;
+    let unary = [Abs, Neg, Square, Relu];
+    let pool: Vec<Composition> = (0..distinct.max(1))
+        .map(|i| {
+            let n = 64 * (1 + i % 8); // distinct n ⇒ distinct cache keys per op mix
+            match i % 3 {
+                0 => Composition::map(unary[i / 3 % unary.len()], n),
+                1 => Composition::vmul_reduce(n),
+                _ => Composition::chain(&[unary[i % unary.len()], unary[(i + 1) % unary.len()]], n)
+                    .expect("static chain"),
+            }
+        })
+        .collect();
+    let mut rng = Rng::new(seed);
+    (0..count).map(|_| pool[rng.below(pool.len())].clone()).collect()
+}
+
 /// Three distinct 5-stage chains. On the default 9-tile fabric any two of
 /// them cannot co-reside (5 + 5 > 9 tiles), so switching between them
 /// forces whole-fabric eviction + re-download — the adversarial case the
@@ -231,6 +256,21 @@ mod tests {
         .collect();
         let hot_count = keys_a.iter().filter(|k| hot_keys.contains(k)).count();
         assert!(hot_count > 140 && hot_count < 190, "hot share was {hot_count}/200");
+    }
+
+    #[test]
+    fn spill_heavy_stream_is_deterministic_and_wide() {
+        let comps = spill_heavy_compositions(200, 16, 7);
+        assert_eq!(comps.len(), 200);
+        let keys: std::collections::HashSet<u64> =
+            comps.iter().map(|c| c.cache_key()).collect();
+        assert!(keys.len() >= 12, "want a wide key set, got {}", keys.len());
+        let again = spill_heavy_compositions(200, 16, 7);
+        assert_eq!(
+            comps.iter().map(|c| c.cache_key()).collect::<Vec<_>>(),
+            again.iter().map(|c| c.cache_key()).collect::<Vec<_>>(),
+            "stream must be reproducible"
+        );
     }
 
     #[test]

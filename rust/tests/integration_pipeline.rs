@@ -185,7 +185,7 @@ fn controller_program_uses_all_isa_categories() {
     let acc = Jit
         .compile(&e.fabric, &e.lib, &Composition::vmul_reduce(4096))
         .unwrap();
-    let mix = acc.program.category_mix();
+    let mix = acc.program().category_mix();
     assert!(mix.interconnect > 0);
     assert!(mix.branch > 0);
     assert!(mix.vector > 0);
@@ -231,7 +231,7 @@ fn five_by_five_fabric_hosts_deep_pipelines() {
     let ops = [Abs, Square, Sqrt, Relu, Exp, Neg, Abs, Square];
     let comp = Composition::chain(&ops, 2048).unwrap();
     let acc = Jit.compile(&e.fabric, &e.lib, &comp).unwrap();
-    assert!(acc.placement.is_injective());
+    assert!(acc.placement().is_injective());
     let x = workload::vector(2048, 3, 0.1, 1.5);
     let got = e.run(&acc, &[x.clone()], Target::DynamicOverlay).unwrap().output;
     let want = cpu::eval(&comp, &[x]).unwrap();

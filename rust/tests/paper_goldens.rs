@@ -107,7 +107,7 @@ fn fig2_dynamic_placement_is_fully_utilized() {
     let acc = Jit.compile(&e.fabric, &e.lib, &Composition::vmul_reduce(4096)).unwrap();
     // the dynamic overlay's contiguity invariant: zero pass-through tiles
     assert_eq!(acc.total_hops(), 0);
-    assert_eq!(utilization(acc.stages.len(), acc.total_hops()), 1.0);
+    assert_eq!(utilization(acc.stages().len(), acc.total_hops()), 1.0);
 }
 
 #[test]

@@ -1,0 +1,199 @@
+//! Per-fabric placement specialization (ISSUE 4).
+//!
+//! The bug class under test: the pool-wide `AcceleratorCache` used to
+//! freeze the *compiling* fabric's placement inside the cached accelerator
+//! and replay it verbatim after an affinity spill — silently overwriting
+//! another fabric's residents even when free tiles existed there. The
+//! tentpole splits the accelerator into a fabric-independent program and a
+//! per-fabric `PlacementPlan`, respecializing the placement (placement
+//! phase only) the first time a cached accelerator lands on a new fabric.
+//!
+//! Determinism technique for the pool test: the shared cache is pre-warmed
+//! by a standalone coordinator (`WorkerPool::with_cache_paused`), so the
+//! thief's first stolen request is *provably* a respecialization — no race
+//! against the home worker compiling the spec first.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::coordinator::{AcceleratorCache, Coordinator, Request, WorkerPool};
+use jit_overlay::patterns::Composition;
+use jit_overlay::{workload, OverlayConfig, ServiceConfig};
+
+fn vmul_req(n: usize, seed: u64) -> Request {
+    let comp = Composition::vmul_reduce(n);
+    let inputs = workload::request_inputs(&comp, seed);
+    Request::dynamic(comp, inputs)
+}
+
+fn map_req(op: OperatorKind, n: usize, seed: u64) -> Request {
+    let comp = Composition::map(op, n);
+    let inputs = workload::request_inputs(&comp, seed);
+    Request::dynamic(comp, inputs)
+}
+
+/// The regression the tentpole exists for, reproduced at the coordinator
+/// level: compile a composition on fabric A, then "spill" it to fabric B
+/// whose occupancy differs while free tiles abound. Fabric B's residents
+/// must survive — on pre-ISSUE-4 main the replayed placement overwrote
+/// them (this test fails there with `pr_replaced == 1` and the Abs
+/// operator evicted).
+#[test]
+fn spilled_composition_respects_other_fabrics_residents() {
+    let n = 256;
+    let cache = Arc::new(AcceleratorCache::new(1));
+    let mut a = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+    let mut b = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+
+    // fabric A compiles vmul-reduce; its placement reflects A's empty
+    // occupancy (the first two snake tiles)
+    a.submit(&vmul_req(n, 1)).unwrap();
+    assert_eq!(a.metrics.jit_compiles, 1);
+
+    // fabric B first hosts a different accelerator: map(Abs) lands on B's
+    // first snake tile — exactly where A's frozen placement points
+    b.submit(&map_req(OperatorKind::Abs, n, 2)).unwrap();
+    let abs_tile = b
+        .engine
+        .fabric
+        .tiles
+        .iter()
+        .position(|t| t.resident == Some(OperatorKind::Abs))
+        .expect("Abs resident on fabric B");
+    let free_before = b.engine.fabric.free_tiles().len();
+    assert!(free_before >= 2, "free tiles must exist for the incoming placement");
+
+    // the cached composition now lands on B (the affinity-spill replay)
+    let resp = b.submit(&vmul_req(n, 3)).unwrap();
+    assert!(resp.cached, "the shared program must come from the cache");
+    // B's only full compile is its own map(Abs); the spilled vmul reuses
+    // the shared front end
+    assert_eq!(b.metrics.jit_compiles, 1, "no front-end recompile on a spill");
+
+    // B's resident survived: the placement was respecialized against B's
+    // occupancy instead of replayed verbatim
+    assert_eq!(
+        b.engine.fabric.tiles[abs_tile].resident,
+        Some(OperatorKind::Abs),
+        "spill replay clobbered fabric B's resident despite {free_before} free tiles"
+    );
+    assert_eq!(b.metrics.pr_replaced, 0, "no resident may be overwritten");
+    assert_eq!(b.metrics.evictions, 0);
+    assert_eq!(b.metrics.placement_respecializations, 1);
+    assert_eq!(
+        b.metrics.residency_clobbers_avoided, 1,
+        "the foreign placement would have clobbered — that avoidance is counted"
+    );
+
+    // and the respecialized plan is now cached per (composition, fabric):
+    // a repeat on B is a full hit with zero JIT time
+    let again = b.submit(&vmul_req(n, 4)).unwrap();
+    assert!(again.cached);
+    assert_eq!(again.jit_seconds, 0.0);
+    assert_eq!(b.metrics.cache_hits, 1);
+    assert_eq!(b.metrics.placement_respecializations, 1);
+
+    // fabric A kept its own plan: repeats there are hits too, and the two
+    // fabrics hold *different* placements of one shared program
+    let ra = a.submit(&vmul_req(n, 5)).unwrap();
+    assert!(ra.cached);
+    assert_eq!(a.metrics.cache_hits, 1);
+    let mul_tile_a = a
+        .engine
+        .fabric
+        .tiles
+        .iter()
+        .position(|t| t.resident == Some(OperatorKind::Mul))
+        .unwrap();
+    let mul_tile_b = b
+        .engine
+        .fabric
+        .tiles
+        .iter()
+        .position(|t| t.resident == Some(OperatorKind::Mul))
+        .unwrap();
+    assert_ne!(mul_tile_a, mul_tile_b, "B's specialized placement avoids the occupied tile");
+}
+
+/// Deterministic pool test (PR 3 `new_paused`/`start_worker` gates): a
+/// stolen composition group triggers at most one placement
+/// respecialization on the thief and zero on the home worker, with the
+/// conservation law `hits + respecializations + compiles == requests`
+/// holding in the aggregate.
+#[test]
+fn stolen_group_respecializes_once_on_thief_only() {
+    const K: usize = 4; // jobs per composition group
+    let (a, b) = workload::home_aligned_conflicting_pair(2).expect("pigeonhole over three keys");
+
+    // Pre-warm the shared cache from a standalone fabric: b's program (and
+    // that fabric's plan) are cached before the pool exists, so whoever
+    // serves b first pays exactly one placement respecialization — never a
+    // full compile, and never a race over who compiles the spec.
+    let cache = Arc::new(AcceleratorCache::new(4));
+    let mut warm = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+    warm.submit(&Request::dynamic(b.clone(), workload::request_inputs(&b, 99))).unwrap();
+    assert_eq!(warm.metrics.jit_compiles, 1);
+
+    let home = (a.cache_key() % 2) as usize;
+    let thief = 1 - home;
+    let service = ServiceConfig {
+        queue_capacity: 2 * K,
+        max_queue_skew: 1_000_000, // no spills: the backlog queues at home
+        steal_min_depth: K + 1,    // exactly one steal: 2K ≥ K+1 > K
+        ..ServiceConfig::with_workers(2)
+    };
+    let pool = WorkerPool::with_cache_paused(OverlayConfig::default(), service, cache).unwrap();
+
+    // interleave a,b,a,b,… so the tail group is b's (the pre-warmed key)
+    let reqs: Vec<Request> = workload::interleaved_stream(&[a.clone(), b.clone()], K)
+        .into_iter()
+        .enumerate()
+        .map(|(i, comp)| {
+            let inputs = workload::request_inputs(&comp, i as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect();
+    let pending: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone()).unwrap()).collect();
+    assert_eq!(pool.queue_depth(home), 2 * K);
+    assert_eq!(pool.queue_depth(thief), 0);
+
+    // release only the thief: it steals the whole b group and serves it
+    pool.start_worker(thief);
+    let mut waited = 0;
+    while pool.snapshot().requests < K as u64 {
+        std::thread::sleep(Duration::from_millis(1));
+        waited += 1;
+        assert!(waited < 10_000, "thief never served the stolen group");
+    }
+    assert_eq!(pool.snapshot().steals, 1);
+    assert_eq!(pool.queue_depth(home), K, "whole-group steal must leave a's jobs");
+
+    pool.start_worker(home);
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = pool.shutdown();
+
+    // the thief served the stolen b group: one respecialization (the spec
+    // was cached, its plan was foreign), then hits
+    assert_eq!(report.per_worker[thief].requests, K as u64);
+    assert_eq!(report.per_worker[thief].placement_respecializations, 1);
+    assert_eq!(report.per_worker[thief].jit_compiles, 0);
+    assert_eq!(report.per_worker[thief].cache_hits, (K - 1) as u64);
+    // the home worker compiled its own composition and respecialized nothing
+    assert_eq!(report.per_worker[home].requests, K as u64);
+    assert_eq!(report.per_worker[home].placement_respecializations, 0);
+    assert_eq!(report.per_worker[home].jit_compiles, 1);
+    // conservation: every pool request is exactly one of hit / respec / compile
+    let m = &report.aggregate;
+    assert_eq!(
+        m.cache_hits + m.placement_respecializations + m.jit_compiles,
+        m.requests,
+        "hits + respecializations + compiles must equal requests"
+    );
+    // nothing was clobbered anywhere: each fabric hosted one group
+    assert_eq!(m.pr_replaced, 0);
+    assert_eq!(m.evictions, 0);
+    assert!(report.panicked_workers.is_empty());
+}
