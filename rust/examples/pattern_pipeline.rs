@@ -65,7 +65,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "reconfiguration-aware batching",
         &["policy", "PR downloads", "PR time (ms)", "jit compiles", "cache hit rate"],
     );
-    for (name, m) in [("naive (arrival order)", &naive.metrics), ("batched (grouped)", &batched.metrics)] {
+    for (name, m) in
+        [("naive (arrival order)", &naive.metrics), ("batched (grouped)", &batched.metrics)]
+    {
         t.row(&[
             name.into(),
             m.pr_downloads.to_string(),

@@ -5,7 +5,6 @@
 //! A bitstream fits a region iff its footprint fits the region's budget;
 //! the slack is *internal fragmentation* — the T-FRAG study quantifies it.
 
-
 use super::OperatorKind;
 
 /// FPGA resource triple.
@@ -150,7 +149,8 @@ mod tests {
         // motivation for non-uniform sizing.
         let abs_in_large = Footprint::for_operator(OperatorKind::Abs).fragmentation_in(&b);
         let abs_in_small =
-            Footprint::for_operator(OperatorKind::Abs).fragmentation_in(&RegionClass::Small.budget());
+            Footprint::for_operator(OperatorKind::Abs)
+                .fragmentation_in(&RegionClass::Small.budget());
         assert!(abs_in_large > abs_in_small);
     }
 

@@ -11,7 +11,6 @@
 
 use std::collections::HashMap;
 
-
 use super::{Bitstream, Footprint, OperatorKind, RegionClass};
 use crate::config::OverlayConfig;
 use crate::error::{Error, Result};

@@ -13,7 +13,6 @@ pub mod library;
 pub use footprint::{Footprint, RegionClass};
 pub use library::BitstreamLibrary;
 
-
 /// Operator semantics a PR tile can host.
 ///
 /// `Route` is the "empty" configuration: the tile only forwards data
@@ -210,7 +209,11 @@ pub struct Bitstream {
 
 impl Bitstream {
     /// Deterministically derive the descriptor for (op, class).
-    pub fn synthesize(op: OperatorKind, class: RegionClass, cfg: &crate::config::OverlayConfig) -> Bitstream {
+    pub fn synthesize(
+        op: OperatorKind,
+        class: RegionClass,
+        cfg: &crate::config::OverlayConfig,
+    ) -> Bitstream {
         let footprint = Footprint::for_operator(op);
         let frame_bytes = match class {
             RegionClass::Small => cfg.small_bitstream_bytes,

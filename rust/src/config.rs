@@ -6,7 +6,6 @@
 //! (4 DSP / 156 FF / 270 LUT), ~1.250 ms full-overlay PR time, and a 660 MHz
 //! ARM software reference (Zedboard).
 
-
 use crate::error::{Error, Result};
 
 /// Clock and bandwidth parameters of the modeled platform.

@@ -19,7 +19,6 @@ pub mod program;
 
 pub use program::Program;
 
-
 /// Mesh port direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dir {

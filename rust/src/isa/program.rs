@@ -3,7 +3,6 @@
 
 use std::collections::HashMap;
 
-
 use super::{encode, Category, Instr, Opcode};
 use crate::config::OverlayConfig;
 use crate::error::{Error, Result};

@@ -18,7 +18,6 @@
 //! to element streaming for feed-forward pipelines, which is exactly the
 //! class of dataflow the JIT emits.
 
-
 use super::tile::Fabric;
 use crate::bitstream::OperatorKind;
 use crate::error::{Error, Result};

@@ -8,7 +8,6 @@
 //! the single `out_port`. All of this is configured by the controller's 22
 //! interconnect instructions.
 
-
 use crate::isa::Dir;
 
 /// Switch configuration of one tile.

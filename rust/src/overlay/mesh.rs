@@ -1,6 +1,5 @@
 //! Mesh geometry: row-major tile indexing and N-E-S-W neighbourhood.
 
-
 use crate::isa::Dir;
 
 /// A rows×cols 2-D mesh (pure geometry; no state).

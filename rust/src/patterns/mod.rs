@@ -13,7 +13,6 @@
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 
-
 use crate::bitstream::OperatorKind;
 use crate::error::{Error, Result};
 

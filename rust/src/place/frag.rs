@@ -6,7 +6,6 @@
 //! placement, these metrics quantify how much of each PR region's resource
 //! budget its resident operator leaves idle, and compare sizing policies.
 
-
 use crate::bitstream::{Footprint, RegionClass};
 
 use super::Placement;

@@ -16,7 +16,6 @@ pub mod static_;
 pub use dynamic::DynamicPlacer;
 pub use static_::{StaticScenario, StaticPlacer};
 
-
 use crate::bitstream::{OperatorKind, RegionClass};
 
 /// One operator assigned to one tile.

@@ -16,7 +16,6 @@
 //! design), which is what makes Fig. 3's static series degrade with hop
 //! count.
 
-
 use crate::bitstream::OperatorKind;
 use crate::error::{Error, Result};
 use crate::overlay::Mesh;
@@ -36,7 +35,8 @@ pub enum StaticScenario {
 }
 
 impl StaticScenario {
-    pub const ALL: [StaticScenario; 3] = [StaticScenario::S1, StaticScenario::S2, StaticScenario::S3];
+    pub const ALL: [StaticScenario; 3] =
+        [StaticScenario::S1, StaticScenario::S2, StaticScenario::S3];
 
     /// Pass-through tiles between producer and consumer in this scenario.
     pub fn pass_throughs(self) -> usize {

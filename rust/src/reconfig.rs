@@ -8,7 +8,6 @@
 //! already matches (residency caching) — the mechanism that amortizes JIT
 //! assembly across repeated requests.
 
-
 use crate::bitstream::BitstreamLibrary;
 use crate::error::Result;
 use crate::overlay::Fabric;

@@ -9,7 +9,6 @@
 
 use std::collections::{HashMap, VecDeque};
 
-
 use crate::error::{Error, Result};
 use crate::isa::{Dir, Instr, Opcode};
 use crate::overlay::Mesh;

@@ -12,7 +12,6 @@
 //! The workload's values are *computed for real* by [`crate::exec`]'s CPU
 //! backend; this module only prices the time.
 
-
 use crate::config::ClockConfig;
 
 use super::TimingBreakdown;

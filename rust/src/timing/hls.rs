@@ -8,7 +8,6 @@
 //! the overlays, derated by an efficiency factor for the un-optimized
 //! interface (no burst coalescing, conservative pipelining).
 
-
 use crate::config::OverlayConfig;
 
 use super::{transfer, TimingBreakdown};

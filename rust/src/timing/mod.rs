@@ -17,7 +17,6 @@ pub mod hls;
 pub mod overlay;
 pub mod transfer;
 
-
 /// Seconds, decomposed the way the paper reports them.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TimingBreakdown {

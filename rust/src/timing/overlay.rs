@@ -89,9 +89,12 @@ mod tests {
     fn store_and_forward_pays_per_element() {
         let c = cfg();
         let n = 4096;
-        let s1 = pipeline_time(&c, &vmul_reduce_ops(), n, 0, 16, 2, ForwardingMode::StoreAndForward);
-        let s2 = pipeline_time(&c, &vmul_reduce_ops(), n, 1, 16, 2, ForwardingMode::StoreAndForward);
-        let s3 = pipeline_time(&c, &vmul_reduce_ops(), n, 2, 16, 2, ForwardingMode::StoreAndForward);
+        let s1 =
+            pipeline_time(&c, &vmul_reduce_ops(), n, 0, 16, 2, ForwardingMode::StoreAndForward);
+        let s2 =
+            pipeline_time(&c, &vmul_reduce_ops(), n, 1, 16, 2, ForwardingMode::StoreAndForward);
+        let s3 =
+            pipeline_time(&c, &vmul_reduce_ops(), n, 2, 16, 2, ForwardingMode::StoreAndForward);
         // monotone degradation with pass-through count — Fig. 2/3's shape
         assert!(s1.total() < s2.total());
         assert!(s2.total() < s3.total());
