@@ -1,0 +1,17 @@
+# Build-time helpers. The Rust crate itself needs only `cargo`; Python runs
+# once here to AOT-compile the JAX/Pallas kernels into HLO-text artifacts
+# that the Rust PJRT runtime loads (Python is never on the request path).
+
+PYTHON ?= python3
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts clean-artifacts
+
+# AOT-lower every kernel variant into $(ARTIFACTS) (manifest.tsv is the
+# sentinel the Rust side probes; without it the pjrt_roundtrip tests print
+# their explicit skip marker instead of running).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --outdir ../$(ARTIFACTS)
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -27,11 +27,20 @@
 //! Acceptance (ISSUE 3): at 4 workers, burst req/s no worse than FIFO on
 //! the mixed stream, and strictly fewer PR downloads/request than FIFO on
 //! the adversarial stream.
+//!
+//! A second dimension (ISSUE 5) compares the serving layer itself at
+//! 64/256/1024 sessions over a fixed 4-worker pool: thread-per-client
+//! (one OS thread + per-request channels per session) vs the reactor
+//! front end (one reactor thread multiplexing every session over a shared
+//! completion queue). Acceptance: reactor throughput no worse than
+//! thread-per-client at 256 sessions.
 
-use jit_overlay::coordinator::{Coordinator, Metrics, Request, WorkerPool};
+use std::sync::Arc;
+
+use jit_overlay::coordinator::{Coordinator, Frontend, Metrics, Request, WorkerPool};
 use jit_overlay::patterns::Composition;
 use jit_overlay::report::Table;
-use jit_overlay::{workload, OverlayConfig, ServiceConfig};
+use jit_overlay::{workload, FrontendConfig, OverlayConfig, ServiceConfig};
 
 fn mixed_stream(requests: usize, n: usize) -> Vec<Request> {
     workload::mixed_compositions(requests, n, 0xF00D)
@@ -219,6 +228,135 @@ fn cell<'a>(
         .expect("cell present")
 }
 
+// ---------------------------------------------------------------------------
+// Front-end dimension (ISSUE 5): reactor vs thread-per-client by session
+// count. Same 4-worker pool, same per-session stream; what varies is the
+// serving layer — S client threads each with per-request channels, or a
+// single reactor thread multiplexing all S sessions over one completion
+// queue.
+// ---------------------------------------------------------------------------
+
+/// Thread-per-client: one OS thread per session submits its bucket through
+/// the blocking channel path and drains its own replies.
+fn run_thread_per_client(workers: usize, buckets: Vec<Vec<Request>>) -> (f64, Metrics) {
+    let service = ServiceConfig { queue_capacity: 1024, ..ServiceConfig::with_workers(workers) };
+    let pool =
+        Arc::new(WorkerPool::new(OverlayConfig::default(), service).expect("pool spawn"));
+    let t0 = std::time::Instant::now();
+    let joins: Vec<_> = buckets
+        .into_iter()
+        .map(|bucket| {
+            let p = pool.clone();
+            std::thread::spawn(move || {
+                let pending: Vec<_> =
+                    bucket.into_iter().map(|r| p.submit(r).expect("submit")).collect();
+                for rx in pending {
+                    rx.recv().expect("worker alive").expect("request served");
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (dt, Arc::try_unwrap(pool).ok().expect("clients done").shutdown().aggregate)
+}
+
+/// Reactor: one acceptor thread fans the same buckets into S multiplexed
+/// sessions; a single reactor thread serves them all.
+fn run_reactor(workers: usize, buckets: Vec<Vec<Request>>) -> (f64, Metrics) {
+    let sessions = buckets.len();
+    let service = ServiceConfig { queue_capacity: 1024, ..ServiceConfig::with_workers(workers) };
+    let pool =
+        Arc::new(WorkerPool::new(OverlayConfig::default(), service).expect("pool spawn"));
+    let fcfg = FrontendConfig {
+        reactors: 1,
+        inflight_per_session: 4,
+        max_inflight: (sessions * 4).max(64),
+    };
+    let front =
+        Frontend::new(pool.clone(), fcfg, pool.metrics.clone()).expect("front end config");
+    let threads = front.spawn().expect("reactor spawn");
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..sessions).map(|_| front.open_session()).collect();
+    // interleave submissions round-robin across sessions (concurrent
+    // arrivals), then drain each session's in-order reply stream
+    let mut counts = vec![0usize; sessions];
+    let mut buckets: Vec<std::vec::IntoIter<Request>> =
+        buckets.into_iter().map(Vec::into_iter).collect();
+    let mut any = true;
+    while any {
+        any = false;
+        for (s, b) in buckets.iter_mut().enumerate() {
+            if let Some(r) = b.next() {
+                handles[s].submit(r).expect("session open");
+                counts[s] += 1;
+                any = true;
+            }
+        }
+    }
+    for (h, count) in handles.iter().zip(&counts) {
+        for _ in 0..*count {
+            h.recv().expect("request served");
+        }
+        h.close();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    threads.shutdown();
+    drop(front);
+    (dt, Arc::try_unwrap(pool).ok().expect("front end done").shutdown().aggregate)
+}
+
+/// One bucket of the mixed stream per session.
+fn session_buckets(sessions: usize, per_session: usize, n: usize) -> Vec<Vec<Request>> {
+    let reqs = mixed_stream(sessions * per_session, n);
+    let mut buckets: Vec<Vec<Request>> = (0..sessions).map(|_| Vec::new()).collect();
+    for (k, r) in reqs.into_iter().enumerate() {
+        buckets[k % sessions].push(r);
+    }
+    buckets
+}
+
+fn bench_frontends(
+    session_counts: &[usize],
+    per_session: usize,
+) -> Vec<(usize, &'static str, f64, u64)> {
+    const WORKERS: usize = 4;
+    let mut t = Table::new(
+        "front-end throughput — reactor vs thread-per-client (4 workers, mixed stream)",
+        &["sessions", "front end", "threads", "wall (ms)", "req/s", "adm_rej", "polls"],
+    );
+    let mut cells = Vec::new();
+    for &sessions in session_counts {
+        let requests = sessions * per_session;
+        for mode in ["threads", "reactor"] {
+            let buckets = session_buckets(sessions, per_session, 1024);
+            let (dt, m) = match mode {
+                "threads" => run_thread_per_client(WORKERS, buckets),
+                _ => run_reactor(WORKERS, buckets),
+            };
+            let serving_threads = match mode {
+                // S clients + 4 workers vs 1 acceptor + 1 reactor + 4 workers
+                "threads" => sessions + WORKERS,
+                _ => 2 + WORKERS,
+            };
+            t.row(&[
+                sessions.to_string(),
+                mode.into(),
+                serving_threads.to_string(),
+                format!("{:.1}", dt * 1e3),
+                format!("{:.0}", requests as f64 / dt),
+                m.admission_rejections.to_string(),
+                m.reactor_polls.to_string(),
+            ]);
+            cells.push((sessions, mode, dt, m.requests));
+        }
+    }
+    print!("{}", t.render());
+    cells
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let requests = if quick { 48 } else { 240 };
@@ -263,5 +401,26 @@ fn main() {
         spill_m.residency_clobbers_avoided,
         spill_m.requests,
         if spill_m.placement_respecializations > 0 { "PASS" } else { "MISS" },
+    );
+
+    // ISSUE 5: session-count dimension — the reactor front end must match
+    // or beat thread-per-client at 256 sessions (64/256/1024 full sweep)
+    let (session_counts, per_session, accept_at): (&[usize], usize, usize) =
+        if quick { (&[16, 64], 4, 64) } else { (&[64, 256, 1024], 8, 256) };
+    let fcells = bench_frontends(session_counts, per_session);
+    let fcell = |mode: &str| {
+        fcells
+            .iter()
+            .find(|(s, m, _, _)| *s == accept_at && *m == mode)
+            .expect("front-end cell present")
+    };
+    let (_, _, threads_dt, threads_served) = fcell("threads");
+    let (_, _, reactor_dt, reactor_served) = fcell("reactor");
+    assert_eq!(threads_served, reactor_served, "both modes must serve the whole stream");
+    let threads_rate = *threads_served as f64 / threads_dt;
+    let reactor_rate = *reactor_served as f64 / reactor_dt;
+    println!(
+        "{accept_at}-session acceptance: reactor {reactor_rate:.0} req/s vs thread-per-client {threads_rate:.0} req/s (reactor no worse: {})",
+        if reactor_rate >= threads_rate * 0.95 { "PASS" } else { "MISS" },
     );
 }

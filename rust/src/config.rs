@@ -142,6 +142,54 @@ impl ServiceConfig {
     }
 }
 
+/// Reactor front-end configuration (see [`crate::coordinator::frontend`]).
+///
+/// Separate from [`ServiceConfig`] because it describes the *session
+/// layer* in front of the pool (how many reactor threads multiplex the
+/// client sessions, how much work may be in flight), not the pool itself.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Reactor threads (≥ 1). Sessions are partitioned across reactors by
+    /// session id, so one reactor multiplexes many sessions; more reactors
+    /// only help once a single poll loop saturates a core.
+    pub reactors: usize,
+    /// Maximum requests one session may have dispatched into the pool at
+    /// once (≥ 1). Also bounds the per-session reorder buffer that restores
+    /// in-session FIFO delivery from out-of-order completions.
+    pub inflight_per_session: usize,
+    /// Maximum requests the whole front end may have dispatched at once
+    /// (≥ 1, shared across reactors). Admission beyond either cap — or past
+    /// a pool answering `PoolBusy` — waits in the session's inbox and is
+    /// counted in `Metrics::admission_rejections`.
+    pub max_inflight: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        Self { reactors: 1, inflight_per_session: 4, max_inflight: 256 }
+    }
+}
+
+impl FrontendConfig {
+    /// Validate invariants. Call after deserializing user-supplied configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.reactors == 0 {
+            return Err(Error::Config("front end needs at least one reactor".into()));
+        }
+        if self.inflight_per_session == 0 {
+            return Err(Error::Config(
+                "sessions need an in-flight budget of at least one request".into(),
+            ));
+        }
+        if self.max_inflight == 0 {
+            return Err(Error::Config(
+                "front end needs an in-flight budget of at least one request".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Complete overlay configuration.
 #[derive(Debug, Clone)]
 pub struct OverlayConfig {
@@ -320,6 +368,16 @@ mod tests {
         assert!(ServiceConfig { cache_shards: 0, ..Default::default() }.validate().is_err());
         assert!(ServiceConfig { queue_capacity: 0, ..Default::default() }.validate().is_err());
         assert!(ServiceConfig { drain_window: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn frontend_config_defaults_validate_and_zeroes_reject() {
+        FrontendConfig::default().validate().unwrap();
+        assert!(FrontendConfig { reactors: 0, ..Default::default() }.validate().is_err());
+        assert!(FrontendConfig { inflight_per_session: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FrontendConfig { max_inflight: 0, ..Default::default() }.validate().is_err());
     }
 
     #[test]

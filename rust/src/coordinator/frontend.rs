@@ -1,0 +1,731 @@
+//! Event-driven session front end for the worker pool.
+//!
+//! The thread-per-client model costs one OS thread, one `mpsc` channel and
+//! one blocked `recv` per outstanding request; at thousands of sessions
+//! the serving layer — not the JIT — becomes the bottleneck. This module
+//! replaces it with a reactor: a small, fixed set of reactor threads
+//! (default 1) multiplexes many client sessions, polling **one shared
+//! [`CompletionQueue`]** for every in-flight request instead of blocking
+//! on per-request receivers — the epoll shape, with the completion queue
+//! standing in for the readiness list.
+//!
+//! Each session is a small state machine
+//!
+//! ```text
+//! Accepting → Queued → Dispatched → Replying → (Accepting | Closed)
+//! ```
+//!
+//! holding its pending compositions: client submissions land in the
+//! session's **inbox** (`Queued`), admission moves them into the backend
+//! (`Dispatched`, via [`Dispatch::submit_async`] — a ticket, not a
+//! receiver), and completions are reordered per session so replies reach
+//! the client **in submission order** (`Replying`) even though bursts,
+//! spills and steals complete out of order. A closed session delivers
+//! nothing further; late completions are dropped and counted.
+//!
+//! Admission is controlled on two axes — per-session in-flight
+//! (`FrontendConfig::inflight_per_session`, which also bounds the reorder
+//! buffer) and front-end-wide in-flight (`FrontendConfig::max_inflight`) —
+//! and folds into the pool's existing [`Error::PoolBusy`] backpressure: a
+//! rejected admission stays queued in its inbox and is retried, counted in
+//! `Metrics::admission_rejections`, never dropped. Between ready sessions
+//! the reactor rotates a **readiness ring**, admitting one request per
+//! session per turn, so a chatty session cannot starve quiet ones.
+//!
+//! Everything observable happens inside [`Reactor::poll_once`], which the
+//! production loop ([`Frontend::spawn`]) calls from its own thread and the
+//! deterministic test harness ([`crate::testkit`]) calls directly,
+//! interleaved with a virtual-clock engine — so ordering, fairness and
+//! starvation properties are checked without a single sleep.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::pool::{CompletionQueue, Ticket};
+use super::{AtomicMetrics, Metrics, Request, Response, WorkerPool};
+use crate::config::FrontendConfig;
+use crate::error::{Error, Result};
+
+/// How long a reactor thread parks when a poll makes no progress. Client
+/// submissions, completions, closes and shutdown all wake it explicitly;
+/// the timeout only covers cross-reactor transitions (a shared in-flight
+/// slot freed on another reactor's queue).
+const REACTOR_PARK: Duration = Duration::from_millis(5);
+
+/// Why [`Dispatch::submit_async`] did not accept a request.
+#[derive(Debug)]
+pub enum Rejected {
+    /// Backpressure: the backend is saturated. The request is handed back
+    /// untouched so the caller retries later without cloning it; nothing
+    /// will ever complete for it.
+    Busy(Request),
+    /// Hard failure: the backend cannot serve this request, ever. The
+    /// request is consumed and the error becomes its one reply.
+    Failed(Error),
+}
+
+/// An async backend the reactor can dispatch admitted requests into.
+///
+/// [`WorkerPool`] is the production implementation;
+/// [`crate::testkit::ScriptedEngine`] is the deterministic virtual-time
+/// one the front-end test suite drives.
+pub trait Dispatch {
+    /// Non-blocking async submission: on success the reply arrives as a
+    /// [`super::pool::Completion`] for the returned ticket on
+    /// `completions`.
+    fn submit_async(
+        &self,
+        request: Request,
+        completions: &Arc<CompletionQueue>,
+    ) -> std::result::Result<Ticket, Rejected>;
+}
+
+impl Dispatch for WorkerPool {
+    fn submit_async(
+        &self,
+        request: Request,
+        completions: &Arc<CompletionQueue>,
+    ) -> std::result::Result<Ticket, Rejected> {
+        self.submit_async_reclaim(request, completions).map_err(|(request, e)| match e {
+            Error::PoolBusy { .. } => Rejected::Busy(request),
+            other => Rejected::Failed(other),
+        })
+    }
+}
+
+/// Where a session currently is in its lifecycle. With requests in several
+/// stages at once the *latest* stage wins: replies awaiting in-order
+/// delivery (`Replying`) over work in the backend (`Dispatched`) over work
+/// waiting for admission (`Queued`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Idle: no pending work, waiting for the client.
+    Accepting,
+    /// Requests queued in the inbox, not yet admitted to the backend.
+    Queued,
+    /// Requests in flight in the backend.
+    Dispatched,
+    /// Completions buffered, waiting for an in-order delivery gap to fill.
+    Replying,
+    /// Closed by the client; nothing is delivered anymore.
+    Closed,
+}
+
+/// One client session, owned by its reactor's table.
+struct Session {
+    /// In-order reply channel to the client; `None` once closed.
+    out: Option<mpsc::Sender<Result<Response>>>,
+    /// Submitted but not yet admitted: `(seq, request)` in arrival order.
+    inbox: VecDeque<(u64, Request)>,
+    /// Requests currently dispatched into the backend.
+    inflight: usize,
+    /// Completed out of submission order, awaiting their delivery gap.
+    /// Bounded by `inflight_per_session`.
+    ready: BTreeMap<u64, Result<Response>>,
+    /// Next sequence number assigned at submit.
+    next_seq: u64,
+    /// Next sequence to deliver to the client.
+    next_deliver: u64,
+    /// Derived lifecycle label (see [`SessionState`]).
+    state: SessionState,
+    /// Currently a member of the readiness ring?
+    ringed: bool,
+}
+
+impl Session {
+    fn new(out: mpsc::Sender<Result<Response>>) -> Session {
+        Session {
+            out: Some(out),
+            inbox: VecDeque::new(),
+            inflight: 0,
+            ready: BTreeMap::new(),
+            next_seq: 0,
+            next_deliver: 0,
+            state: SessionState::Accepting,
+            ringed: false,
+        }
+    }
+
+    fn refresh_state(&mut self) {
+        self.state = if self.out.is_none() {
+            SessionState::Closed
+        } else if !self.ready.is_empty() {
+            SessionState::Replying
+        } else if self.inflight > 0 {
+            SessionState::Dispatched
+        } else if !self.inbox.is_empty() {
+            SessionState::Queued
+        } else {
+            SessionState::Accepting
+        };
+    }
+}
+
+/// One reactor's session table, behind its mutex.
+struct Table {
+    sessions: HashMap<u64, Session>,
+    /// Ticket → (session, seq) for every request this reactor dispatched.
+    inflight: HashMap<Ticket, (u64, u64)>,
+    /// Readiness ring: sessions with admissible work, in fairness order.
+    ring: VecDeque<u64>,
+    /// Requests sitting in session inboxes (all sessions).
+    queued_total: usize,
+    /// Completions dropped undelivered because their session closed —
+    /// arrived after the close, or sitting gap-buffered in the reorder
+    /// buffer when the close cleared it. Per reactor,
+    /// `delivered + late_replies == completions drained`.
+    late_replies: u64,
+    /// Set once by shutdown, under this lock: submissions observe it (and
+    /// fail) in the same critical section where the reactor's exit
+    /// decision reads the queue state, so an accepted request can never
+    /// outlive the last poll.
+    stopped: bool,
+}
+
+impl Table {
+    fn ring_session(&mut self, sid: u64) {
+        if let Some(s) = self.sessions.get_mut(&sid) {
+            if !s.ringed && s.out.is_some() && !s.inbox.is_empty() {
+                s.ringed = true;
+                self.ring.push_back(sid);
+            }
+        }
+    }
+}
+
+/// State shared by a reactor's thread, its session handles, and the
+/// frontend that built it.
+struct ReactorShared {
+    /// The reactor's event source: worker completions plus bare wakeups
+    /// from submits/closes/shutdown.
+    completions: Arc<CompletionQueue>,
+    table: Mutex<Table>,
+}
+
+impl ReactorShared {
+    fn lock(&self) -> MutexGuard<'_, Table> {
+        self.table.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Stop accepting submissions (idempotent) and wake the reactor.
+    fn signal_stop(&self) {
+        self.lock().stopped = true;
+        self.completions.wake();
+    }
+}
+
+/// What one [`Reactor::poll_once`] accomplished. Drives the run loop's
+/// parking decision and the test harness's quiescence check.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PollStats {
+    /// Completions drained from the shared queue.
+    pub completions: usize,
+    /// Replies delivered to clients in order.
+    pub delivered: usize,
+    /// Requests admitted into the backend.
+    pub admitted: usize,
+    /// Admissions deferred (caps or a busy backend).
+    pub admission_rejections: usize,
+    /// Requests still queued in session inboxes after the poll.
+    pub queued: usize,
+    /// Requests dispatched-but-uncompleted via this reactor after the poll.
+    pub inflight: usize,
+    /// Shutdown was requested, read in the same critical section as
+    /// `queued`/`inflight` — together they form the run loop's consistent
+    /// exit condition (no submission can slip between them).
+    pub stopped: bool,
+}
+
+impl PollStats {
+    /// Did this poll move anything?
+    pub fn progressed(&self) -> bool {
+        self.completions + self.delivered + self.admitted > 0
+    }
+
+    /// No progress and no outstanding work: the reactor is quiescent.
+    pub fn idle(&self) -> bool {
+        !self.progressed() && self.queued == 0 && self.inflight == 0
+    }
+}
+
+/// A stepper over one reactor's event loop. The production thread calls
+/// [`Reactor::run`]; deterministic tests call [`Reactor::poll_once`]
+/// directly, interleaved with a scripted engine.
+pub struct Reactor<B: Dispatch> {
+    shared: Arc<ReactorShared>,
+    backend: Arc<B>,
+    metrics: Arc<AtomicMetrics>,
+    cfg: FrontendConfig,
+    /// Front-end-wide in-flight count, shared across reactors.
+    total_inflight: Arc<AtomicUsize>,
+}
+
+impl<B: Dispatch> Reactor<B> {
+    /// One full event-loop iteration: drain completions, admit queued work
+    /// fairly, deliver in-order replies. Never blocks.
+    pub fn poll_once(&self) -> PollStats {
+        let mut stats = PollStats::default();
+        let completed = self.shared.completions.drain();
+        let mut guard = self.shared.lock();
+        let t = &mut *guard;
+        // sessions whose reorder buffer gained entries this poll — only
+        // they can have become deliverable
+        let mut touched: Vec<u64> = Vec::new();
+
+        // 1) route completions to their sessions
+        for c in completed {
+            stats.completions += 1;
+            let Some((sid, seq)) = t.inflight.remove(&c.ticket) else {
+                continue; // foreign ticket: not ours, ignore
+            };
+            self.total_inflight.fetch_sub(1, Ordering::Relaxed);
+            let Some(s) = t.sessions.get_mut(&sid) else { continue };
+            s.inflight -= 1;
+            if s.out.is_some() {
+                s.ready.insert(seq, c.result);
+                touched.push(sid);
+            } else {
+                t.late_replies += 1;
+                if s.inflight == 0 {
+                    t.sessions.remove(&sid);
+                }
+            }
+        }
+
+        // 2) admission with fairness rotation: one request per session per
+        // ring turn, until every ready session is blocked or drained.
+        // Freed in-flight slots from step 1 are already visible here.
+        let mut blocked: Vec<u64> = Vec::new();
+        while let Some(sid) = t.ring.pop_front() {
+            let Some(s) = t.sessions.get_mut(&sid) else { continue };
+            s.ringed = false;
+            if s.out.is_none() || s.inbox.is_empty() {
+                s.refresh_state();
+                continue;
+            }
+            if s.inflight >= self.cfg.inflight_per_session {
+                stats.admission_rejections += 1;
+                blocked.push(sid);
+                continue;
+            }
+            // reserve the front-end-wide slot atomically: a check-then-add
+            // would let two reactors race past the cap together
+            let reserved = self
+                .total_inflight
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                    (n < self.cfg.max_inflight).then_some(n + 1)
+                })
+                .is_ok();
+            if !reserved {
+                stats.admission_rejections += 1;
+                blocked.push(sid);
+                continue;
+            }
+            let (seq, request) = s.inbox.pop_front().expect("nonempty inbox");
+            match self.backend.submit_async(request, &self.shared.completions) {
+                Ok(ticket) => {
+                    s.inflight += 1;
+                    s.refresh_state();
+                    let more = !s.inbox.is_empty();
+                    if more {
+                        s.ringed = true;
+                    }
+                    t.queued_total -= 1;
+                    t.inflight.insert(ticket, (sid, seq));
+                    stats.admitted += 1;
+                    if more {
+                        t.ring.push_back(sid); // fairness: back of the line
+                    }
+                }
+                Err(Rejected::Busy(request)) => {
+                    self.total_inflight.fetch_sub(1, Ordering::Relaxed);
+                    s.inbox.push_front((seq, request));
+                    s.refresh_state();
+                    stats.admission_rejections += 1;
+                    blocked.push(sid);
+                }
+                Err(Rejected::Failed(e)) => {
+                    self.total_inflight.fetch_sub(1, Ordering::Relaxed);
+                    // the request is consumed: the error is its one reply,
+                    // delivered in order like any completion
+                    s.ready.insert(seq, Err(e));
+                    s.refresh_state();
+                    let more = !s.inbox.is_empty();
+                    if more {
+                        s.ringed = true;
+                    }
+                    t.queued_total -= 1;
+                    touched.push(sid);
+                    if more {
+                        t.ring.push_back(sid);
+                    }
+                }
+            }
+        }
+        // blocked sessions rejoin the ring (in order) for the next poll
+        for sid in blocked {
+            if let Some(s) = t.sessions.get_mut(&sid) {
+                if !s.ringed {
+                    s.ringed = true;
+                    t.ring.push_back(sid);
+                }
+            }
+        }
+
+        // 3) in-order delivery for sessions whose buffers changed
+        for sid in touched {
+            let Some(s) = t.sessions.get_mut(&sid) else { continue };
+            while let Some(result) = s.ready.remove(&s.next_deliver) {
+                s.next_deliver += 1;
+                stats.delivered += 1;
+                if let Some(out) = &s.out {
+                    // a hung-up client is not a reactor error
+                    let _ = out.send(result);
+                }
+            }
+            s.refresh_state();
+        }
+
+        stats.queued = t.queued_total;
+        stats.inflight = t.inflight.len();
+        stats.stopped = t.stopped;
+        drop(guard);
+        self.metrics.record(&Metrics {
+            completions: stats.completions as u64,
+            reactor_polls: 1,
+            admission_rejections: stats.admission_rejections as u64,
+            ..Default::default()
+        });
+        stats
+    }
+
+    /// The production event loop: poll, park when idle, exit once stopped
+    /// *and* drained. `stopped`/`queued`/`inflight` come from one critical
+    /// section, and submissions check `stopped` under the same lock — so a
+    /// request either lands before the exit-deciding poll (which then sees
+    /// it queued) or is rejected; none can be accepted and never served.
+    pub fn run(&self) {
+        loop {
+            let stats = self.poll_once();
+            if stats.stopped && stats.queued == 0 && stats.inflight == 0 {
+                return;
+            }
+            if !stats.progressed() {
+                self.shared.completions.wait(REACTOR_PARK);
+            }
+        }
+    }
+
+    /// Completions dropped undelivered because their session closed.
+    pub fn late_replies(&self) -> u64 {
+        self.shared.lock().late_replies
+    }
+
+    /// Sessions currently tracked by this reactor (closed sessions linger
+    /// only while they still have requests in flight).
+    pub fn session_count(&self) -> usize {
+        self.shared.lock().sessions.len()
+    }
+}
+
+/// A client's handle to one session: submit requests, receive replies in
+/// submission order, close. Handles are independent — one per client —
+/// and their cost is one channel per *session*, not per request.
+pub struct SessionHandle {
+    id: u64,
+    shared: Arc<ReactorShared>,
+    replies: mpsc::Receiver<Result<Response>>,
+}
+
+impl SessionHandle {
+    /// This session's id (unique within its front end).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Queue one request. Returns an error if the session is closed or the
+    /// front end is shutting down; otherwise the request WILL get exactly
+    /// one reply, in submission order.
+    pub fn submit(&self, request: Request) -> Result<()> {
+        let mut guard = self.shared.lock();
+        let t = &mut *guard;
+        // checked under the table lock: either this request lands before
+        // the reactor's exit-deciding poll (which then sees it queued and
+        // serves it), or it is rejected here — never accepted-and-dropped
+        if t.stopped {
+            return Err(Error::Runtime("front end is shutting down".into()));
+        }
+        let s = t
+            .sessions
+            .get_mut(&self.id)
+            .ok_or_else(|| Error::Runtime("session is closed".into()))?;
+        if s.out.is_none() {
+            return Err(Error::Runtime("session is closed".into()));
+        }
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.inbox.push_back((seq, request));
+        s.refresh_state();
+        t.queued_total += 1;
+        t.ring_session(self.id);
+        drop(guard);
+        self.shared.completions.wake();
+        Ok(())
+    }
+
+    /// Block for the next in-order reply. Errors when the session's reply
+    /// stream is gone (closed, or the front end shut down).
+    pub fn recv(&self) -> Result<Response> {
+        self.replies
+            .recv()
+            .map_err(|_| Error::Runtime("front end dropped the session".into()))?
+    }
+
+    /// Non-blocking receive: `None` when nothing is currently deliverable.
+    pub fn try_recv(&self) -> Option<Result<Response>> {
+        self.replies.try_recv().ok()
+    }
+
+    /// The session's current lifecycle state (`Closed` once it is gone).
+    pub fn state(&self) -> SessionState {
+        self.shared
+            .lock()
+            .sessions
+            .get(&self.id)
+            .map(|s| s.state)
+            .unwrap_or(SessionState::Closed)
+    }
+
+    /// Close the session: pending inbox requests are cancelled, in-flight
+    /// completions are dropped on arrival (counted as late replies), and
+    /// nothing is delivered anymore — the reply stream disconnects.
+    pub fn close(&self) {
+        let mut guard = self.shared.lock();
+        let t = &mut *guard;
+        if let Some(s) = t.sessions.get_mut(&self.id) {
+            s.out = None;
+            t.queued_total -= s.inbox.len();
+            s.inbox.clear();
+            // gap-buffered completions die undelivered with the session:
+            // account them, or delivered + late would undercount drains
+            t.late_replies += s.ready.len() as u64;
+            s.ready.clear();
+            s.refresh_state();
+            if s.inflight == 0 {
+                t.sessions.remove(&self.id);
+            }
+        }
+        drop(guard);
+        self.shared.completions.wake();
+    }
+}
+
+/// The session front end: builds sessions, hands out reactor steppers, and
+/// spawns the production reactor threads.
+pub struct Frontend<B: Dispatch> {
+    backend: Arc<B>,
+    cfg: FrontendConfig,
+    metrics: Arc<AtomicMetrics>,
+    reactors: Vec<Arc<ReactorShared>>,
+    total_inflight: Arc<AtomicUsize>,
+    next_session: AtomicU64,
+}
+
+impl<B: Dispatch> Frontend<B> {
+    /// Build a front end over `backend`. `metrics` receives the reactor
+    /// counters (sessions, completions, polls, admission rejections) — pass
+    /// the pool's own aggregate to fold them into one snapshot.
+    pub fn new(
+        backend: Arc<B>,
+        cfg: FrontendConfig,
+        metrics: Arc<AtomicMetrics>,
+    ) -> Result<Frontend<B>> {
+        cfg.validate()?;
+        let reactors = (0..cfg.reactors)
+            .map(|_| {
+                Arc::new(ReactorShared {
+                    completions: Arc::new(CompletionQueue::new()),
+                    table: Mutex::new(Table {
+                        sessions: HashMap::new(),
+                        inflight: HashMap::new(),
+                        ring: VecDeque::new(),
+                        queued_total: 0,
+                        late_replies: 0,
+                        stopped: false,
+                    }),
+                })
+            })
+            .collect();
+        Ok(Frontend {
+            backend,
+            cfg,
+            metrics,
+            reactors,
+            total_inflight: Arc::new(AtomicUsize::new(0)),
+            next_session: AtomicU64::new(0),
+        })
+    }
+
+    /// Open a session, assigned round-robin to a reactor.
+    pub fn open_session(&self) -> SessionHandle {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let shared = self.reactors[(id % self.reactors.len() as u64) as usize].clone();
+        let (tx, rx) = mpsc::channel();
+        shared.lock().sessions.insert(id, Session::new(tx));
+        self.metrics.record(&Metrics { sessions: 1, ..Default::default() });
+        SessionHandle { id, shared, replies: rx }
+    }
+
+    /// A stepper for reactor `i` (deterministic tests drive this directly).
+    pub fn reactor(&self, i: usize) -> Reactor<B> {
+        Reactor {
+            shared: self.reactors[i].clone(),
+            backend: self.backend.clone(),
+            metrics: self.metrics.clone(),
+            cfg: self.cfg.clone(),
+            total_inflight: self.total_inflight.clone(),
+        }
+    }
+
+    /// Number of reactors.
+    pub fn reactor_count(&self) -> usize {
+        self.reactors.len()
+    }
+
+    /// Completions dropped undelivered because their session closed,
+    /// summed across reactors.
+    pub fn late_replies(&self) -> u64 {
+        self.reactors.iter().map(|r| r.lock().late_replies).sum()
+    }
+
+    /// Spawn one thread per reactor; the returned handle shuts them down.
+    pub fn spawn(&self) -> Result<FrontendThreads>
+    where
+        B: Send + Sync + 'static,
+    {
+        let mut handles = Vec::with_capacity(self.reactors.len());
+        for i in 0..self.reactors.len() {
+            let reactor = self.reactor(i);
+            let spawned = std::thread::Builder::new()
+                .name(format!("overlay-reactor-{i}"))
+                .spawn(move || reactor.run())
+                .map_err(Error::from);
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // stop the reactors already running before surfacing
+                    for r in &self.reactors {
+                        r.signal_stop();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(FrontendThreads { shareds: self.reactors.clone(), handles })
+    }
+}
+
+/// Running reactor threads. Dropping without [`FrontendThreads::shutdown`]
+/// still stops the reactors (without joining them).
+pub struct FrontendThreads {
+    shareds: Vec<Arc<ReactorShared>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl FrontendThreads {
+    /// Stop accepting new submissions, drain what is queued and in flight,
+    /// and join every reactor thread.
+    pub fn shutdown(mut self) {
+        self.signal_stop();
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+    }
+
+    fn signal_stop(&self) {
+        for r in &self.shareds {
+            r.signal_stop();
+        }
+    }
+}
+
+impl Drop for FrontendThreads {
+    fn drop(&mut self) {
+        self.signal_stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverlayConfig;
+    use crate::patterns::Composition;
+    use crate::testkit::ScriptedEngine;
+    use crate::workload;
+
+    fn vmul_req(n: usize, seed: u64) -> Request {
+        Request::dynamic(
+            Composition::vmul_reduce(n),
+            vec![workload::vector(n, seed, 0.1, 1.0), workload::vector(n, seed + 1, 0.1, 1.0)],
+        )
+    }
+
+    fn front(
+        capacity: usize,
+        cfg: FrontendConfig,
+    ) -> (Frontend<ScriptedEngine>, Reactor<ScriptedEngine>, Arc<ScriptedEngine>) {
+        let engine = Arc::new(
+            ScriptedEngine::constant(OverlayConfig::default(), capacity, 1).unwrap(),
+        );
+        let fe =
+            Frontend::new(engine.clone(), cfg, Arc::new(AtomicMetrics::default())).unwrap();
+        let reactor = fe.reactor(0);
+        (fe, reactor, engine)
+    }
+
+    #[test]
+    fn invalid_config_is_rejected_at_construction() {
+        let engine =
+            Arc::new(ScriptedEngine::constant(OverlayConfig::default(), 4, 1).unwrap());
+        let cfg = FrontendConfig { reactors: 0, ..Default::default() };
+        assert!(Frontend::new(engine, cfg, Arc::new(AtomicMetrics::default())).is_err());
+    }
+
+    #[test]
+    fn submit_after_close_errors_and_close_is_idempotent() {
+        let (fe, reactor, _engine) = front(4, FrontendConfig::default());
+        let s = fe.open_session();
+        assert_eq!(s.state(), SessionState::Accepting);
+        s.close();
+        s.close();
+        assert_eq!(s.state(), SessionState::Closed);
+        assert!(s.submit(vmul_req(64, 1)).is_err());
+        assert!(reactor.poll_once().idle());
+        assert_eq!(reactor.session_count(), 0);
+    }
+
+    #[test]
+    fn sessions_partition_round_robin_across_reactors() {
+        let engine =
+            Arc::new(ScriptedEngine::constant(OverlayConfig::default(), 4, 1).unwrap());
+        let cfg = FrontendConfig { reactors: 2, ..Default::default() };
+        let fe = Frontend::new(engine, cfg, Arc::new(AtomicMetrics::default())).unwrap();
+        assert_eq!(fe.reactor_count(), 2);
+        let handles: Vec<SessionHandle> = (0..4).map(|_| fe.open_session()).collect();
+        for h in &handles {
+            h.submit(vmul_req(64, h.id())).unwrap();
+        }
+        // each reactor sees exactly its own two sessions
+        assert_eq!(fe.reactor(0).session_count(), 2);
+        assert_eq!(fe.reactor(1).session_count(), 2);
+        // ... and the other reactor's poll never touches them
+        let stats = fe.reactor(0).poll_once();
+        assert_eq!(stats.admitted, 2);
+    }
+}

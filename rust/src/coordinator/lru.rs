@@ -343,4 +343,93 @@ mod tests {
         fn assert_sync<T: Sync + Send>() {}
         assert_sync::<ClockLru<u64>>();
     }
+
+    /// Satellite (ISSUE 5): an eviction batch larger than the capacity must
+    /// clamp to the map size — never panic, never evict the incoming entry,
+    /// and still respect the cap.
+    #[test]
+    fn evict_batch_larger_than_capacity_clamps() {
+        let m: ClockLru<u64> = ClockLru::with_evict_batch(2, 8);
+        m.insert_if_absent(1, 1, |_| ());
+        m.insert_if_absent(2, 2, |_| ());
+        // at capacity with batch 8 > len 2: the pass clears the whole map,
+        // then the new entry lands — it must never evict itself
+        let (won, evicted) = m.insert_if_absent(3, 3, |v| *v);
+        assert_eq!((won, evicted), (3, 2), "batch clamps to the 2 evictable entries");
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(3, |v| *v), Some(3));
+        // same clamp on the overwrite path
+        let m: ClockLru<u64> = ClockLru::with_evict_batch(1, 100);
+        assert_eq!(m.put(1, 1), 0);
+        assert_eq!(m.put(2, 2), 1);
+        assert_eq!(m.get(2, |v| *v), Some(2));
+        assert_eq!(m.len(), 1);
+    }
+
+    /// Satellite (ISSUE 5): `insert_if_absent` under thread contention —
+    /// exactly one value wins per key and every racer observes the winner
+    /// (the shared-cache "racing compilers converge" guarantee).
+    #[test]
+    fn insert_if_absent_converges_under_contention() {
+        const THREADS: usize = 8;
+        const KEYS: u64 = 16;
+        let m: ClockLru<u64> = ClockLru::new(0);
+        let observed: Vec<Vec<u64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS as u64)
+                .map(|tid| {
+                    let m = &m;
+                    scope.spawn(move || {
+                        (0..KEYS)
+                            .map(|key| {
+                                // each thread proposes its own value; the
+                                // read sees whoever won
+                                let (winner, _) = m.insert_if_absent(
+                                    key,
+                                    tid * 1000 + key,
+                                    |v| *v,
+                                );
+                                winner
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("racer")).collect()
+        });
+        assert_eq!(m.len(), KEYS as usize);
+        for key in 0..KEYS {
+            let final_value = m.peek(key, |v| *v).expect("key present");
+            for per_thread in &observed {
+                assert_eq!(
+                    per_thread[key as usize], final_value,
+                    "a racer observed a value that did not win key {key}"
+                );
+            }
+        }
+    }
+
+    /// Satellite (ISSUE 5): `most_recent` stays coherent after a full
+    /// eviction cycle replaces every original entry.
+    #[test]
+    fn most_recent_after_a_full_eviction_cycle() {
+        const K: u64 = 4;
+        let m: ClockLru<u64> = ClockLru::new(K as usize);
+        for key in 0..K {
+            m.insert_if_absent(key, key * 10, |_| ());
+        }
+        assert_eq!(m.most_recent(|v| *v), Some((K - 1) * 10));
+        // a full cycle: K fresh keys evict all K originals one by one
+        for key in K..2 * K {
+            m.insert_if_absent(key, key * 10, |_| ());
+        }
+        assert_eq!(m.len(), K as usize);
+        for key in 0..K {
+            assert!(m.peek(key, |_| ()).is_none(), "original {key} must be evicted");
+        }
+        // the newest insert is the most recent …
+        assert_eq!(m.most_recent(|v| *v), Some((2 * K - 1) * 10));
+        // … until a survivor is *hit*, which retakes the crown
+        assert!(m.get(K, |_| ()).is_some());
+        assert_eq!(m.most_recent(|v| *v), Some(K * 10));
+    }
 }

@@ -59,6 +59,19 @@ pub struct Metrics {
     pub rejected: u64,
     /// Entries evicted from the LRU-capped accelerator cache.
     pub lru_evictions: u64,
+    /// Client sessions opened on the reactor front end.
+    pub sessions: u64,
+    /// Completions drained from the shared completion queue by reactors
+    /// (equals async requests finished; the blocking channel path does not
+    /// count here).
+    pub completions: u64,
+    /// Reactor poll iterations (one drain + deliver + admit pass each).
+    pub reactor_polls: u64,
+    /// Admission attempts deferred by the front end: a session at its
+    /// in-flight cap, the front-end-wide in-flight cap reached, or the pool
+    /// answering `PoolBusy`. A deferred request stays queued in its session
+    /// and is retried — this counts pressure events, not lost requests.
+    pub admission_rejections: u64,
 }
 
 impl Metrics {
@@ -106,6 +119,10 @@ impl Metrics {
         self.steals += other.steals;
         self.rejected += other.rejected;
         self.lru_evictions += other.lru_evictions;
+        self.sessions += other.sessions;
+        self.completions += other.completions;
+        self.reactor_polls += other.reactor_polls;
+        self.admission_rejections += other.admission_rejections;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
@@ -131,13 +148,17 @@ impl Metrics {
             steals: self.steals - earlier.steals,
             rejected: self.rejected - earlier.rejected,
             lru_evictions: self.lru_evictions - earlier.lru_evictions,
+            sessions: self.sessions - earlier.sessions,
+            completions: self.completions - earlier.completions,
+            reactor_polls: self.reactor_polls - earlier.reactor_polls,
+            admission_rejections: self.admission_rejections - earlier.admission_rejections,
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -155,6 +176,10 @@ impl Metrics {
             self.steals,
             self.rejected,
             self.lru_evictions,
+            self.sessions,
+            self.completions,
+            self.reactor_polls,
+            self.admission_rejections,
         )
     }
 }
@@ -180,6 +205,10 @@ pub struct AtomicMetrics {
     steals: AtomicU64,
     rejected: AtomicU64,
     lru_evictions: AtomicU64,
+    sessions: AtomicU64,
+    completions: AtomicU64,
+    reactor_polls: AtomicU64,
+    admission_rejections: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -208,6 +237,10 @@ impl AtomicMetrics {
         self.steals.fetch_add(d.steals, Ordering::Relaxed);
         self.rejected.fetch_add(d.rejected, Ordering::Relaxed);
         self.lru_evictions.fetch_add(d.lru_evictions, Ordering::Relaxed);
+        self.sessions.fetch_add(d.sessions, Ordering::Relaxed);
+        self.completions.fetch_add(d.completions, Ordering::Relaxed);
+        self.reactor_polls.fetch_add(d.reactor_polls, Ordering::Relaxed);
+        self.admission_rejections.fetch_add(d.admission_rejections, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -235,6 +268,10 @@ impl AtomicMetrics {
             steals: self.steals.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             lru_evictions: self.lru_evictions.load(Ordering::Relaxed),
+            sessions: self.sessions.load(Ordering::Relaxed),
+            completions: self.completions.load(Ordering::Relaxed),
+            reactor_polls: self.reactor_polls.load(Ordering::Relaxed),
+            admission_rejections: self.admission_rejections.load(Ordering::Relaxed),
         }
     }
 }
@@ -291,6 +328,10 @@ mod tests {
             steals: 1,
             rejected: 4,
             lru_evictions: 2,
+            sessions: 3,
+            completions: 5,
+            reactor_polls: 9,
+            admission_rejections: 2,
         };
         let mut b = a;
         b.merge(&a);
@@ -304,6 +345,10 @@ mod tests {
         assert_eq!(d.steals, a.steals);
         assert_eq!(d.rejected, a.rejected);
         assert_eq!(d.lru_evictions, a.lru_evictions);
+        assert_eq!(d.sessions, a.sessions);
+        assert_eq!(d.completions, a.completions);
+        assert_eq!(d.reactor_polls, a.reactor_polls);
+        assert_eq!(d.admission_rejections, a.admission_rejections);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
     }
 
@@ -328,6 +373,10 @@ mod tests {
             steals: 1,
             rejected: 3,
             lru_evictions: 1,
+            sessions: 1,
+            completions: 2,
+            reactor_polls: 4,
+            admission_rejections: 1,
         };
         agg.record(&d);
         agg.record(&d);
@@ -343,6 +392,10 @@ mod tests {
         assert_eq!(s.steals, 2);
         assert_eq!(s.rejected, 6);
         assert_eq!(s.lru_evictions, 2);
+        assert_eq!(s.sessions, 2);
+        assert_eq!(s.completions, 4);
+        assert_eq!(s.reactor_polls, 8);
+        assert_eq!(s.admission_rejections, 2);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

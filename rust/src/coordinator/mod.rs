@@ -16,15 +16,20 @@
 //! scales it out to N workers — each owning its own fabric — behind an
 //! affinity scheduler with bounded queues, reconfiguration-aware burst
 //! draining ([`Coordinator::serve_burst`]) and work-stealing (used by
-//! `repro serve --workers N`).
+//! `repro serve --workers N`). In front of the pool, [`frontend`] is the
+//! event-driven session layer: a fixed set of reactor threads multiplexes
+//! many client sessions over a shared completion queue with admission
+//! control and fairness rotation (`repro serve --frontend reactor`).
 
+pub mod frontend;
 pub mod lru;
 pub mod metrics;
 pub mod pool;
 
+pub use frontend::{Dispatch, Frontend, FrontendThreads, Reactor, Rejected, SessionState};
 pub use lru::ClockLru;
 pub use metrics::{AtomicMetrics, Metrics};
-pub use pool::{PoolReport, WorkerPool};
+pub use pool::{Completion, CompletionQueue, PoolReport, ReplySink, Ticket, WorkerPool};
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -484,16 +489,17 @@ impl Coordinator {
     }
 }
 
-/// A request plus its reply channel.
+/// A request plus its reply sink (a per-request channel or a shared
+/// completion queue — see [`pool::ReplySink`]).
 pub struct Job {
     pub request: Request,
-    pub reply: std::sync::mpsc::Sender<Result<Response>>,
+    pub reply: pool::ReplySink,
 }
 
 /// What [`Coordinator::serve_burst`] hands back: each served job's reply
-/// channel with its response, in served (reordered) order, for the caller
+/// sink with its response, in served (reordered) order, for the caller
 /// to deliver after folding metrics.
-pub type BurstReplies = Vec<(std::sync::mpsc::Sender<Result<Response>>, Result<Response>)>;
+pub type BurstReplies = Vec<(pool::ReplySink, Result<Response>)>;
 
 /// Request loop: drain jobs from `rx`, serve them on this thread, return
 /// the final metrics when all senders hang up.
@@ -504,7 +510,7 @@ pub type BurstReplies = Vec<(std::sync::mpsc::Sender<Result<Response>>, Result<R
 pub fn serve(mut coord: Coordinator, rx: std::sync::mpsc::Receiver<Job>) -> Metrics {
     while let Ok(job) = rx.recv() {
         let resp = coord.submit(&job.request);
-        let _ = job.reply.send(resp);
+        job.reply.deliver(resp);
     }
     coord.metrics
 }
@@ -686,7 +692,8 @@ mod tests {
     fn threaded_serve_loop_round_trips() {
         let (tx, handle) = spawn_service(coord());
         let (rtx, rrx) = std::sync::mpsc::channel();
-        tx.send(Job { request: vmul_req(256, 1.0), reply: rtx }).unwrap();
+        tx.send(Job { request: vmul_req(256, 1.0), reply: pool::ReplySink::channel(rtx) })
+            .unwrap();
         let resp = rrx.recv().unwrap().unwrap();
         assert_eq!(resp.run.output.as_scalar(), Some(512.0));
         drop(tx);
@@ -701,13 +708,14 @@ mod tests {
         let (rtx, rrx) = std::sync::mpsc::channel();
         tx.send(Job {
             request: Request::dynamic(Composition::vmul_reduce(64), vec![vec![0.0; 64]]),
-            reply: rtx,
+            reply: pool::ReplySink::channel(rtx),
         })
         .unwrap();
         assert!(rrx.recv().unwrap().is_err());
         // service still alive for a good request
         let (rtx2, rrx2) = std::sync::mpsc::channel();
-        tx.send(Job { request: vmul_req(64, 1.0), reply: rtx2 }).unwrap();
+        tx.send(Job { request: vmul_req(64, 1.0), reply: pool::ReplySink::channel(rtx2) })
+            .unwrap();
         assert!(rrx2.recv().unwrap().is_ok());
         drop(tx);
         handle.join().unwrap();
@@ -851,7 +859,7 @@ mod tests {
             .map(|request| {
                 let (rtx, rrx) = std::sync::mpsc::channel();
                 rxs.push(rrx);
-                Job { request, reply: rtx }
+                Job { request, reply: pool::ReplySink::channel(rtx) }
             })
             .collect();
         let replies = c.serve_burst(jobs);
@@ -859,8 +867,8 @@ mod tests {
         assert_eq!(c.metrics.bursts, 1);
         // [A, B, A, B] regroups to [A, A, B, B]: exactly one switch
         assert_eq!(c.metrics.burst_group_switches, 1);
-        for (tx, resp) in replies {
-            tx.send(resp).unwrap();
+        for (sink, resp) in replies {
+            sink.deliver(resp);
         }
         // replies pair with their own request channels despite reordering
         let r0 = rxs[0].recv().unwrap().unwrap();

@@ -48,6 +48,14 @@
 //!   totals equal the sum of worker records (`rejected` excepted — it is
 //!   pool-level, accounted by the submit path).
 //!
+//! * **two reply paths** — every job carries a [`ReplySink`]: the blocking
+//!   `submit`/`submit_wait` API replies over a per-request channel, while
+//!   [`WorkerPool::submit_async`] returns a [`Ticket`] and replies through
+//!   a single shared [`CompletionQueue`] that one consumer (the reactor
+//!   front end, [`crate::coordinator::frontend`]) drains for *all*
+//!   in-flight requests — no per-request channel, no per-request blocked
+//!   `recv`.
+//!
 //! For deterministic batching experiments, [`WorkerPool::new_paused`]
 //! spawns workers held at a start gate: enqueue a full backlog, then
 //! [`WorkerPool::start`] (or [`WorkerPool::start_worker`]) and measure the
@@ -70,6 +78,183 @@ use crate::error::{Error, Result};
 /// busy pool steals within ~0.5 ms but an idle pool settles at ~50
 /// wakeups/s per worker instead of 2000.
 const IDLE_POLL: Duration = Duration::from_micros(500);
+
+/// Identifier pairing an async submission with its eventual [`Completion`].
+/// Allocated by [`CompletionQueue::next_ticket`] — monotonic per queue, so
+/// a ticket is unique within the queue its submission named.
+pub type Ticket = u64;
+
+/// One finished request, delivered through a [`CompletionQueue`].
+#[derive(Debug)]
+pub struct Completion {
+    /// The ticket returned by the `submit_async` that started the request.
+    pub ticket: Ticket,
+    /// The request's outcome — a served response or its error.
+    pub result: Result<Response>,
+}
+
+/// The pool's shared completion path: workers push every async reply here
+/// and a single consumer (the reactor front end) drains them in batches —
+/// the inversion of the one-`mpsc::Receiver`-per-request model, where each
+/// pending request cost its own channel and its own blocked `recv`.
+///
+/// The queue doubles as the consumer's event source: [`CompletionQueue::wake`]
+/// posts a bare wakeup (a client submitted, a session closed, shutdown), and
+/// [`CompletionQueue::wait`] parks until a completion or a wakeup is pending.
+#[derive(Debug)]
+pub struct CompletionQueue {
+    inner: Mutex<CqInner>,
+    cv: Condvar,
+    tickets: AtomicU64,
+}
+
+#[derive(Debug)]
+struct CqInner {
+    completions: VecDeque<Completion>,
+    /// Pending bare wakeups, consumed by [`CompletionQueue::wait`].
+    wakes: usize,
+}
+
+impl CompletionQueue {
+    pub fn new() -> CompletionQueue {
+        CompletionQueue {
+            inner: Mutex::new(CqInner { completions: VecDeque::new(), wakes: 0 }),
+            cv: Condvar::new(),
+            tickets: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, CqInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Allocate the next ticket (1, 2, 3, …).
+    pub fn next_ticket(&self) -> Ticket {
+        self.tickets.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Push one completion and notify the consumer.
+    pub fn push(&self, completion: Completion) {
+        let mut g = self.lock();
+        g.completions.push_back(completion);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Take every queued completion (possibly none), without blocking.
+    pub fn drain(&self) -> Vec<Completion> {
+        let mut g = self.lock();
+        g.completions.drain(..).collect()
+    }
+
+    /// Post a bare wakeup: [`CompletionQueue::wait`] returns even though no
+    /// completion arrived (new client work, session close, shutdown).
+    pub fn wake(&self) {
+        let mut g = self.lock();
+        g.wakes += 1;
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Park until a completion or a wakeup is pending, or `timeout` passes.
+    /// Consumes every pending wakeup (a burst of submissions costs one
+    /// extra poll, not one per submission); queued completions are left
+    /// for [`CompletionQueue::drain`].
+    pub fn wait(&self, timeout: Duration) {
+        let mut g = self.lock();
+        while g.completions.is_empty() && g.wakes == 0 {
+            let (woken, to) =
+                self.cv.wait_timeout(g, timeout).unwrap_or_else(|p| p.into_inner());
+            g = woken;
+            if to.timed_out() {
+                return;
+            }
+        }
+        g.wakes = 0;
+    }
+
+    /// Completions currently queued.
+    pub fn len(&self) -> usize {
+        self.lock().completions.len()
+    }
+
+    /// True when no completion is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for CompletionQueue {
+    fn default() -> CompletionQueue {
+        CompletionQueue::new()
+    }
+}
+
+/// Where a [`Job`]'s reply goes: a per-request channel (the blocking
+/// `submit`/`submit_wait` path) or a shared [`CompletionQueue`] tagged with
+/// the request's [`Ticket`] (the async front-end path).
+///
+/// A sink dropped without delivering — a worker died with the job queued,
+/// a panic unwound the serving path — fails safe: the queue variant pushes
+/// an error completion so no session waits forever on a ticket that can no
+/// longer complete, and the channel variant disconnects its receiver by
+/// dropping the sender (the PR 3 behavior, unchanged).
+#[derive(Debug)]
+pub struct ReplySink {
+    kind: Option<SinkKind>,
+}
+
+#[derive(Debug)]
+enum SinkKind {
+    Channel(mpsc::Sender<Result<Response>>),
+    Queue { completions: Arc<CompletionQueue>, ticket: Ticket },
+}
+
+impl ReplySink {
+    /// Reply through a dedicated per-request channel.
+    pub fn channel(tx: mpsc::Sender<Result<Response>>) -> ReplySink {
+        ReplySink { kind: Some(SinkKind::Channel(tx)) }
+    }
+
+    /// Reply through a shared completion queue under `ticket`.
+    pub fn queue(completions: Arc<CompletionQueue>, ticket: Ticket) -> ReplySink {
+        ReplySink { kind: Some(SinkKind::Queue { completions, ticket }) }
+    }
+
+    /// Deliver the reply. A hung-up channel receiver is not an error.
+    pub fn deliver(mut self, result: Result<Response>) {
+        self.send(result);
+    }
+
+    /// Disarm the sink without delivering anything: the submission failed
+    /// and its error went back to the caller directly, so no completion
+    /// must ever surface for this ticket.
+    pub(crate) fn defuse(mut self) {
+        self.kind = None;
+    }
+
+    fn send(&mut self, result: Result<Response>) {
+        match self.kind.take() {
+            Some(SinkKind::Channel(tx)) => {
+                let _ = tx.send(result);
+            }
+            Some(SinkKind::Queue { completions, ticket }) => {
+                completions.push(Completion { ticket, result });
+            }
+            None => {}
+        }
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if matches!(self.kind, Some(SinkKind::Queue { .. })) {
+            self.send(Err(Error::Runtime("pool worker dropped the reply".into())));
+        }
+        // Channel: dropping the sender disconnects the receiver — exactly
+        // the signal blocking clients already interpret as a dead worker.
+    }
+}
 
 /// Idle-poll backoff ceiling (worst-case added steal latency).
 const IDLE_POLL_MAX: Duration = Duration::from_millis(20);
@@ -268,9 +453,10 @@ impl JobQueue {
     }
 
     /// Close the queue *and discard* anything still queued. Dropping the
-    /// jobs drops their reply senders, so clients blocked in `recv` observe
-    /// a disconnect instead of hanging forever — the fate queued work met
-    /// in PR 1 when a worker's `mpsc::Receiver` died with it. Zeroing the
+    /// jobs fires each [`ReplySink`]'s fail-safe: channel clients blocked
+    /// in `recv` observe a disconnect, and async submissions get an error
+    /// completion pushed to their queue — nobody waits forever on a worker
+    /// that died with their job queued. Zeroing the
     /// depth mirror also keeps [`JobQueue::try_push`]'s lock-free full
     /// check from reporting a dead-at-capacity queue as `Full` (which would
     /// surface as `PoolBusy` instead of failing over). The load counter is
@@ -713,22 +899,80 @@ impl WorkerPool {
     /// composition (disable them via `max_queue_skew` / `steal_min_depth`
     /// if required).
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
-        self.submit_inner(request, true)
+        self.submit_channel(request, true)
     }
 
     /// Enqueue a request without blocking: a full queue returns
     /// [`Error::PoolBusy`] (counted in `Metrics::rejected`) and the caller
     /// decides — retry, shed, or drain replies first.
     pub fn try_submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
-        self.submit_inner(request, false)
+        self.submit_channel(request, false)
     }
 
-    fn submit_inner(
+    /// Async submission: enqueue a request whose reply is pushed onto the
+    /// shared `completions` queue instead of a dedicated channel, and
+    /// return the [`Ticket`] that names it there. Never blocks — a full
+    /// queue returns [`Error::PoolBusy`] (counted in `Metrics::rejected`).
+    /// On any error no completion is ever delivered for the (discarded)
+    /// ticket: the submission simply did not happen.
+    ///
+    /// This is the pool half of the reactor front end
+    /// ([`crate::coordinator::frontend`]): one consumer drains one queue
+    /// for *all* in-flight requests, where `submit` costs one channel and
+    /// one blocked `recv` per request.
+    pub fn submit_async(
+        &self,
+        request: Request,
+        completions: &Arc<CompletionQueue>,
+    ) -> Result<Ticket> {
+        self.submit_async_reclaim(request, completions).map_err(|(_request, e)| e)
+    }
+
+    /// [`WorkerPool::submit_async`] that hands the request back on failure
+    /// — the reactor's retry path resubmits it without a clone. Keeps the
+    /// ticket/defuse lifecycle in exactly one place: a failed submission
+    /// must never surface a completion for its (discarded) ticket.
+    pub(crate) fn submit_async_reclaim(
+        &self,
+        request: Request,
+        completions: &Arc<CompletionQueue>,
+    ) -> std::result::Result<Ticket, (Request, Error)> {
+        let ticket = completions.next_ticket();
+        let job = Job { request, reply: ReplySink::queue(completions.clone(), ticket) };
+        match self.route_and_enqueue(job, false) {
+            Ok(()) => Ok(ticket),
+            Err((job, e)) => {
+                // never let the sink's drop deliver an error completion for
+                // a submission whose error the caller got synchronously
+                let Job { request, reply } = job;
+                reply.defuse();
+                Err((request, e))
+            }
+        }
+    }
+
+    fn submit_channel(
         &self,
         request: Request,
         block: bool,
     ) -> Result<mpsc::Receiver<Result<Response>>> {
-        let key = request.comp.cache_key();
+        let (rtx, rrx) = mpsc::channel();
+        let job = Job { request, reply: ReplySink::channel(rtx) };
+        // dropping the failed job drops the sender; the receiver is dropped
+        // by the caller along with this error
+        self.route_and_enqueue(job, block).map_err(|(_job, e)| e)?;
+        Ok(rrx)
+    }
+
+    /// Route a job and enqueue it, failing over past dead workers. On
+    /// failure the job is handed back intact (with its reply sink unfired)
+    /// so the caller decides: surface the error, retry later, or both.
+    pub(crate) fn route_and_enqueue(
+        &self,
+        mut job: Job,
+        block: bool,
+    ) -> std::result::Result<(), (Job, Error)> {
+        let key = job.request.comp.cache_key();
         // the routing table is written only when the decision changed — the
         // steady state (repeat composition, stable route) stays on the read
         // path and never serializes submitters
@@ -736,11 +980,9 @@ impl WorkerPool {
         if stale {
             self.shared.route.set(key, w);
         }
-        let (rtx, rrx) = mpsc::channel();
-        let mut job = Job { request, reply: rtx };
         match self.enqueue(w, job, block) {
-            Ok(()) => return Ok(rrx),
-            Err(PushError::Full(_)) => return Err(self.reject(w)),
+            Ok(()) => return Ok(()),
+            Err(PushError::Full(j)) => return Err((j, self.reject(w))),
             Err(PushError::Closed(j)) => job = j,
         }
         // worker `w` is gone (its queue closed, e.g. a panicked thread).
@@ -756,7 +998,7 @@ impl WorkerPool {
             match self.enqueue(c, job, block) {
                 Ok(()) => {
                     self.shared.route.set(key, c);
-                    return Ok(rrx);
+                    return Ok(());
                 }
                 Err(PushError::Full(j)) => {
                     full_candidate = Some(c);
@@ -767,8 +1009,8 @@ impl WorkerPool {
         }
         match full_candidate {
             // at least one live worker exists, it is just saturated
-            Some(c) => Err(self.reject(c)),
-            None => Err(Error::Runtime("every pool worker is gone".into())),
+            Some(c) => Err((job, self.reject(c))),
+            None => Err((job, Error::Runtime("every pool worker is gone".into()))),
         }
     }
 
@@ -923,7 +1165,7 @@ fn worker_loop(
         queue.clear_inflight();
         for (reply, resp) in replies {
             // a hung-up client is not a worker error
-            let _ = reply.send(resp);
+            reply.deliver(resp);
         }
     }
     let (resident_tiles, total_tiles) = coord.engine.residency();
@@ -1092,6 +1334,81 @@ mod tests {
         assert_eq!(report.aggregate.rejected, 1);
         // rejected is pool-level: it appears in no worker record
         assert_eq!(report.worker_sum().rejected, 0);
+    }
+
+    #[test]
+    fn submit_async_replies_through_the_shared_completion_queue() {
+        let service = ServiceConfig::with_workers(2).without_stealing();
+        let pool = WorkerPool::new_paused(OverlayConfig::default(), service).unwrap();
+        let cq = Arc::new(CompletionQueue::new());
+        let mut tickets = Vec::new();
+        for k in 0..4 {
+            tickets.push(pool.submit_async(vmul_req(256, k), &cq).unwrap());
+        }
+        assert_eq!(tickets, vec![1, 2, 3, 4], "tickets are monotonic per queue");
+        assert!(cq.is_empty(), "paused pool must not have completed anything");
+        pool.start();
+        // drain until every ticket completed — the single consumer loop
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < tickets.len() {
+            cq.wait(Duration::from_millis(50));
+            for c in cq.drain() {
+                assert!(seen.insert(c.ticket), "duplicate completion {}", c.ticket);
+                c.result.expect("request served");
+            }
+        }
+        assert!(tickets.iter().all(|t| seen.contains(t)));
+        let report = pool.shutdown();
+        assert_eq!(report.aggregate.requests, 4);
+    }
+
+    #[test]
+    fn failed_submit_async_delivers_no_completion() {
+        let service = ServiceConfig {
+            queue_capacity: 1,
+            ..ServiceConfig::with_workers(1).without_stealing()
+        };
+        let pool = WorkerPool::new_paused(OverlayConfig::default(), service).unwrap();
+        let cq = Arc::new(CompletionQueue::new());
+        let accepted = pool.submit_async(vmul_req(128, 1), &cq).unwrap();
+        match pool.submit_async(vmul_req(128, 2), &cq) {
+            Err(Error::PoolBusy { worker: 0, capacity: 1 }) => {}
+            other => panic!("expected PoolBusy, got {other:?}"),
+        }
+        assert_eq!(pool.snapshot().rejected, 1);
+        pool.start();
+        cq.wait(Duration::from_millis(500));
+        let mut done = cq.drain();
+        while done.is_empty() {
+            cq.wait(Duration::from_millis(50));
+            done = cq.drain();
+        }
+        assert_eq!(done.len(), 1, "the rejected ticket must never complete");
+        assert_eq!(done[0].ticket, accepted);
+        let report = pool.shutdown();
+        assert!(cq.is_empty(), "shutdown must not surface the defused sink");
+        assert_eq!(report.aggregate.requests, 1);
+    }
+
+    #[test]
+    fn dropped_async_job_fails_safe_with_an_error_completion() {
+        let cq = Arc::new(CompletionQueue::new());
+        let ticket = cq.next_ticket();
+        let sink = ReplySink::queue(cq.clone(), ticket);
+        drop(sink); // a worker died with the job queued
+        let done = cq.drain();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].ticket, ticket);
+        assert!(done[0].result.is_err(), "dropped sink must surface an error");
+    }
+
+    #[test]
+    fn completion_queue_wake_unblocks_wait() {
+        let cq = Arc::new(CompletionQueue::new());
+        cq.wake();
+        // a pending wakeup makes wait return immediately (consumed once)
+        cq.wait(Duration::from_secs(5));
+        assert!(cq.is_empty());
     }
 
     #[test]

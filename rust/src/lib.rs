@@ -36,7 +36,13 @@
 //!   where its accelerator is already compiled and resident, whose workers
 //!   drain their queues in scheduler-reordered bursts, and whose idle
 //!   workers steal whole composition groups from the deepest queue
-//!   (`repro serve --workers N --drain-window W --steal-depth D`).
+//!   (`repro serve --workers N --drain-window W --steal-depth D`), and
+//!   fronted by [`coordinator::frontend`], an event-driven session layer
+//!   multiplexing many clients over a shared completion queue
+//!   (`repro serve --frontend reactor --sessions S --inflight I`);
+//! * [`testkit`] — deterministic service-layer test harness: a virtual
+//!   clock plus a scripted-latency engine shim, so ordering, fairness and
+//!   starvation properties are proven without sleeps.
 //!
 //! The crate is dependency-free by design: PRNG ([`workload`]), bench
 //! harness ([`benchkit`]), error type ([`error`]) and CLI parsing are all
@@ -57,8 +63,9 @@ pub mod reconfig;
 pub mod report;
 pub mod route;
 pub mod runtime;
+pub mod testkit;
 pub mod timing;
 pub mod workload;
 
-pub use config::{OverlayConfig, ServiceConfig};
+pub use config::{FrontendConfig, OverlayConfig, ServiceConfig};
 pub use error::{Error, Result};

@@ -18,7 +18,7 @@
 //! boxed-error shim — the workspace builds offline without clap or anyhow.
 
 use jit_overlay::bitstream::OperatorKind;
-use jit_overlay::coordinator::{Coordinator, Request, WorkerPool};
+use jit_overlay::coordinator::{Coordinator, Frontend, Request, WorkerPool};
 use jit_overlay::exec::Engine;
 use jit_overlay::isa::{asm, Category, Opcode};
 use jit_overlay::jit::Jit;
@@ -27,7 +27,7 @@ use jit_overlay::place::StaticScenario;
 use jit_overlay::report::{ms, speedup, Table};
 use jit_overlay::runtime::{default_artifacts_dir, Runtime};
 use jit_overlay::timing::Target;
-use jit_overlay::{workload, OverlayConfig, ServiceConfig};
+use jit_overlay::{workload, FrontendConfig, OverlayConfig, ServiceConfig};
 
 /// CLI-local result over a boxed error (the anyhow stand-in).
 type Result<T, E = Box<dyn std::error::Error>> = std::result::Result<T, E>;
@@ -358,22 +358,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => usize::MAX,
         d => d,
     };
+    let frontend = args.str("frontend", "direct");
+    let sessions = args.usize("sessions", 8)?.max(1);
+    let inflight =
+        args.usize("inflight", FrontendConfig::default().inflight_per_session)?.max(1);
+    let reactors = args.usize("reactors", 1)?.max(1);
     let pool = WorkerPool::new(OverlayConfig::default(), service)?;
     let comps = workload::mixed_compositions(requests, n, seed);
+    let reqs: Vec<Request> = comps
+        .into_iter()
+        .enumerate()
+        .map(|(k, comp)| {
+            let inputs = workload::request_inputs(&comp, k as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect();
 
+    // each arm measures its own wall window: submission through the last
+    // drained reply, excluding pool/front-end teardown
     let t0 = std::time::Instant::now();
-    // enqueue everything up front (the pool pipelines per worker), then drain
-    let mut pending = Vec::with_capacity(requests);
-    for (k, comp) in comps.into_iter().enumerate() {
-        let inputs = workload::request_inputs(&comp, k as u64);
-        pending.push(pool.submit(Request::dynamic(comp, inputs))?);
-    }
-    for rx in pending {
-        rx.recv().context("pool worker dropped a reply")??;
-    }
-    let dt = t0.elapsed().as_secs_f64();
+    let (report, dt) = match frontend.as_str() {
+        // legacy single pipelined submitter straight into the pool
+        "direct" => {
+            let mut pending = Vec::with_capacity(requests);
+            for r in reqs {
+                pending.push(pool.submit(r)?);
+            }
+            for rx in pending {
+                rx.recv().context("pool worker dropped a reply")??;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            (pool.shutdown(), dt)
+        }
+        // thread-per-client: one OS thread + one channel per session
+        "threads" => {
+            let pool = std::sync::Arc::new(pool);
+            let mut buckets: Vec<Vec<Request>> = (0..sessions).map(|_| Vec::new()).collect();
+            for (k, r) in reqs.into_iter().enumerate() {
+                buckets[k % sessions].push(r);
+            }
+            let mut joins = Vec::with_capacity(sessions);
+            for bucket in buckets {
+                let p = pool.clone();
+                joins.push(std::thread::spawn(move || -> Result<(), String> {
+                    let pending: Vec<_> = bucket
+                        .into_iter()
+                        .map(|r| p.submit(r).map_err(|e| e.to_string()))
+                        .collect::<Result<_, _>>()?;
+                    for rx in pending {
+                        rx.recv()
+                            .map_err(|_| "pool worker dropped a reply".to_string())?
+                            .map_err(|e| e.to_string())?;
+                    }
+                    Ok(())
+                }));
+            }
+            for j in joins {
+                let served = j.join().map_err(|_| anyhow!("client thread panicked"))?;
+                served.map_err(|e| anyhow!("{e}"))?;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let report = std::sync::Arc::try_unwrap(pool)
+                .map_err(|_| anyhow!("client thread leaked the pool"))?
+                .shutdown();
+            (report, dt)
+        }
+        // reactor: a fixed set of reactor threads multiplexes all sessions
+        "reactor" => {
+            let pool = std::sync::Arc::new(pool);
+            let fcfg = FrontendConfig {
+                reactors,
+                inflight_per_session: inflight,
+                max_inflight: (sessions * inflight).max(1),
+            };
+            let front = Frontend::new(pool.clone(), fcfg, pool.metrics.clone())
+                .map_err(|e| anyhow!("{e}"))?;
+            let threads = front.spawn().map_err(|e| anyhow!("{e}"))?;
+            let handles: Vec<_> = (0..sessions).map(|_| front.open_session()).collect();
+            let mut counts = vec![0usize; sessions];
+            for (k, r) in reqs.into_iter().enumerate() {
+                handles[k % sessions].submit(r).map_err(|e| anyhow!("{e}"))?;
+                counts[k % sessions] += 1;
+            }
+            for (h, count) in handles.iter().zip(&counts) {
+                for _ in 0..*count {
+                    h.recv().map_err(|e| anyhow!("{e}"))?;
+                }
+                h.close();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            threads.shutdown();
+            drop(front);
+            let report = std::sync::Arc::try_unwrap(pool)
+                .map_err(|_| anyhow!("front end leaked the pool"))?
+                .shutdown();
+            (report, dt)
+        }
+        other => bail!("unknown --frontend `{other}` (direct, threads, reactor)"),
+    };
 
-    let report = pool.shutdown();
+    println!(
+        "front end: {frontend} (sessions={sessions} inflight/session={inflight} reactors={reactors})"
+    );
     for (w, (m, (res, total))) in report
         .per_worker
         .iter()
@@ -397,6 +483,8 @@ const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve>
   serve: --requests K --workers N --n LEN --seed S (multi-fabric pool)
          --drain-window W (burst size; 1 = FIFO)  --queue-capacity C (backpressure)
          --steal-depth D (work-stealing threshold; 0 = off)  --skew S (spill threshold)
+         --frontend direct|threads|reactor (session layer; default direct)
+         --sessions S --inflight I --reactors R (threads/reactor front ends)
   see crate docs / README for per-command flags";
 
 fn main() -> Result<()> {

@@ -170,7 +170,10 @@ mod tests {
         if dir.join("manifest.tsv").exists() {
             Some(Runtime::new(dir).unwrap())
         } else {
-            None // artifacts not built in this environment
+            // same loud marker as tests/pjrt_roundtrip.rs: a skip must be
+            // visible, never silent
+            println!("skipped: artifacts missing (run make artifacts)");
+            None
         }
     }
 

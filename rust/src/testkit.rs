@@ -1,0 +1,280 @@
+//! Deterministic test harness for the service layer: a virtual clock and a
+//! scripted-latency engine shim.
+//!
+//! Wall-clock-sleep tests cannot pin down ordering, fairness or starvation
+//! properties — they only sample one scheduling of many. This module makes
+//! the whole front-end pipeline single-threaded and virtual-timed instead:
+//!
+//! * [`VirtualClock`] — a monotonic `u64` tick counter. Nothing sleeps;
+//!   time moves only when the harness advances it.
+//! * [`ScriptedEngine`] — a [`Dispatch`] backend standing in for the
+//!   worker pool. Dispatches are *scheduled* at `now + latency(i, req)`
+//!   (the scripted latency decides completion **order**), and served on an
+//!   embedded single-fabric [`Coordinator`] when their due time is reached
+//!   — so replies carry real computed values tests can fingerprint, while
+//!   completion order is an exact function of the script. A bounded
+//!   `capacity` models a saturated pool: excess dispatches are rejected
+//!   with [`Rejected::Busy`], exercising the reactor's retry path
+//!   deterministically.
+//! * [`drive`] — the canonical loop: alternate one reactor poll with one
+//!   engine advance until the front end is quiescent, panicking after
+//!   `max_steps` (the liveness bound — a starved session shows up as a
+//!   panic here, not as a hang).
+//!
+//! The module is compiled unconditionally (no `cfg(test)`) so integration
+//! tests, benches and downstream harnesses can use it; it is never on the
+//! request path.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::config::OverlayConfig;
+use crate::coordinator::frontend::{Dispatch, Reactor, Rejected};
+use crate::coordinator::pool::{Completion, CompletionQueue, Ticket};
+use crate::coordinator::{Coordinator, Request};
+use crate::error::{Error, Result};
+
+/// A monotonic virtual clock: ticks advance only when told to.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: 0 }
+    }
+
+    /// The current virtual time.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Advance to `t` (monotonic: never moves backwards).
+    pub fn advance_to(&mut self, t: u64) {
+        self.now = self.now.max(t);
+    }
+}
+
+/// The latency script: virtual ticks between dispatch and completion, as a
+/// function of the dispatch index (0, 1, 2, …) and the request.
+pub type LatencyFn = Box<dyn FnMut(u64, &Request) -> u64 + Send>;
+
+/// One scheduled (dispatched, not yet completed) request.
+struct Scheduled {
+    ticket: Ticket,
+    request: Request,
+    completions: Arc<CompletionQueue>,
+}
+
+struct EngineInner {
+    coord: Coordinator,
+    clock: VirtualClock,
+    /// Pending completions keyed by `(due tick, dispatch order)` — ties in
+    /// due time complete in dispatch order, deterministically.
+    pending: BTreeMap<(u64, u64), Scheduled>,
+    order: u64,
+    dispatched: u64,
+    capacity: usize,
+    latency: LatencyFn,
+    high_water: usize,
+}
+
+/// A deterministic [`Dispatch`] backend with scripted completion latency.
+pub struct ScriptedEngine {
+    inner: Mutex<EngineInner>,
+}
+
+impl ScriptedEngine {
+    /// Build an engine over one fabric. `capacity` bounds concurrently
+    /// scheduled requests (beyond it, dispatch answers [`Rejected::Busy`]);
+    /// `latency` maps `(dispatch index, request)` to virtual ticks.
+    pub fn new(
+        cfg: OverlayConfig,
+        capacity: usize,
+        latency: impl FnMut(u64, &Request) -> u64 + Send + 'static,
+    ) -> Result<ScriptedEngine> {
+        if capacity == 0 {
+            return Err(Error::Config("scripted engine needs capacity for one request".into()));
+        }
+        Ok(ScriptedEngine {
+            inner: Mutex::new(EngineInner {
+                coord: Coordinator::new(cfg)?,
+                clock: VirtualClock::new(),
+                pending: BTreeMap::new(),
+                order: 0,
+                dispatched: 0,
+                capacity,
+                latency: Box::new(latency),
+                high_water: 0,
+            }),
+        })
+    }
+
+    /// [`ScriptedEngine::new`] with a constant latency.
+    pub fn constant(cfg: OverlayConfig, capacity: usize, ticks: u64) -> Result<ScriptedEngine> {
+        Self::new(cfg, capacity, move |_, _| ticks)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, EngineInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> u64 {
+        self.lock().clock.now()
+    }
+
+    /// Requests scheduled but not yet completed.
+    pub fn in_service(&self) -> usize {
+        self.lock().pending.len()
+    }
+
+    /// High-water mark of concurrently scheduled requests — what the
+    /// admission caps are supposed to bound.
+    pub fn high_water(&self) -> usize {
+        self.lock().high_water
+    }
+
+    /// Total dispatches accepted so far.
+    pub fn dispatched(&self) -> u64 {
+        self.lock().dispatched
+    }
+
+    /// Advance the clock to the next due completion, serve that request on
+    /// the embedded coordinator, and push its [`Completion`]. Returns
+    /// `false` when nothing is in service.
+    pub fn advance_next(&self) -> bool {
+        let mut g = self.lock();
+        let Some((&key, _)) = g.pending.iter().next() else {
+            return false;
+        };
+        let s = g.pending.remove(&key).expect("key just observed");
+        g.clock.advance_to(key.0);
+        let result = g.coord.submit(&s.request);
+        s.completions.push(Completion { ticket: s.ticket, result });
+        true
+    }
+}
+
+impl Dispatch for ScriptedEngine {
+    fn submit_async(
+        &self,
+        request: Request,
+        completions: &Arc<CompletionQueue>,
+    ) -> std::result::Result<Ticket, Rejected> {
+        let mut g = self.lock();
+        if g.pending.len() >= g.capacity {
+            return Err(Rejected::Busy(request));
+        }
+        let idx = g.dispatched;
+        let now = g.clock.now();
+        let ticks = (g.latency)(idx, &request);
+        let due = now + ticks;
+        g.dispatched += 1;
+        let order = g.order;
+        g.order += 1;
+        let ticket = completions.next_ticket();
+        g.pending.insert(
+            (due, order),
+            Scheduled { ticket, request, completions: completions.clone() },
+        );
+        let depth = g.pending.len();
+        g.high_water = g.high_water.max(depth);
+        Ok(ticket)
+    }
+}
+
+/// Drive a reactor against a scripted engine to quiescence: one poll, one
+/// completion, repeat. Returns the number of polls. Panics after
+/// `max_steps` polls — the deterministic stand-in for "this would have
+/// hung": starvation, a lost reply, or an admission livelock all trip it.
+pub fn drive<B: Dispatch>(
+    reactor: &Reactor<B>,
+    engine: &ScriptedEngine,
+    max_steps: usize,
+) -> usize {
+    let mut polls = 0;
+    loop {
+        let stats = reactor.poll_once();
+        polls += 1;
+        assert!(
+            polls <= max_steps,
+            "front end failed to quiesce within {max_steps} polls \
+             (queued={} inflight={} in_service={})",
+            stats.queued,
+            stats.inflight,
+            engine.in_service()
+        );
+        if engine.advance_next() {
+            continue;
+        }
+        if stats.idle() {
+            return polls;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::Composition;
+    use crate::workload;
+
+    fn req(n: usize, seed: u64) -> Request {
+        Request::dynamic(
+            Composition::vmul_reduce(n),
+            vec![workload::vector(n, seed, 0.1, 1.0), workload::vector(n, seed + 1, 0.1, 1.0)],
+        )
+    }
+
+    #[test]
+    fn virtual_clock_is_monotonic() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance_to(5);
+        c.advance_to(3);
+        assert_eq!(c.now(), 5);
+    }
+
+    #[test]
+    fn scripted_engine_completes_in_due_order_with_real_values() {
+        // reversed latencies: the second dispatch completes first
+        let engine = ScriptedEngine::new(OverlayConfig::default(), 8, |i, _| 10 - i).unwrap();
+        let cq = Arc::new(CompletionQueue::new());
+        let t0 = engine.submit_async(req(64, 1), &cq).unwrap();
+        let t1 = engine.submit_async(req(64, 2), &cq).unwrap();
+        assert_eq!(engine.in_service(), 2);
+        assert!(engine.advance_next());
+        assert!(engine.advance_next());
+        assert!(!engine.advance_next());
+        assert_eq!(engine.now(), 10, "clock lands on the last due tick");
+        let done = cq.drain();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].ticket, t1, "shorter latency completes first");
+        assert_eq!(done[1].ticket, t0);
+        for c in done {
+            c.result.expect("served for real");
+        }
+    }
+
+    #[test]
+    fn scripted_engine_rejects_beyond_capacity() {
+        let engine = ScriptedEngine::constant(OverlayConfig::default(), 1, 5).unwrap();
+        let cq = Arc::new(CompletionQueue::new());
+        engine.submit_async(req(64, 1), &cq).unwrap();
+        match engine.submit_async(req(64, 2), &cq) {
+            Err(Rejected::Busy(r)) => assert_eq!(r.inputs.len(), 2, "request handed back"),
+            other => panic!("expected Busy, got {:?}", other.map(|_| ())),
+        }
+        assert_eq!(engine.high_water(), 1);
+        assert!(engine.advance_next());
+        engine.submit_async(req(64, 2), &cq).unwrap();
+        assert_eq!(engine.dispatched(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        assert!(ScriptedEngine::constant(OverlayConfig::default(), 0, 1).is_err());
+    }
+}

@@ -56,6 +56,18 @@ impl Rng {
     }
 }
 
+/// Base seed for property-style tests: `$JIT_OVERLAY_SEED` when set (the
+/// CI seed matrix), else `default`. Tests mix it into their own fixed
+/// stream seeds, so every matrix entry explores a distinct deterministic
+/// universe and failures still reproduce exactly (re-run with the same
+/// env).
+pub fn env_seed(default: u64) -> u64 {
+    std::env::var("JIT_OVERLAY_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
 /// A reproducible random f32 vector in `[lo, hi)`.
 pub fn vector(n: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
     let mut rng = Rng::new(seed);

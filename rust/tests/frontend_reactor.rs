@@ -1,0 +1,504 @@
+//! Deterministic front-end tests: the reactor session layer proven under
+//! virtual time (no sleeps, no wall clock).
+//!
+//! Technique: `testkit::ScriptedEngine` replaces the worker pool with a
+//! virtual-clock backend whose completion *order* is an exact function of
+//! a latency script, and `Reactor::poll_once` is stepped by the test
+//! thread itself — the whole pipeline is single-threaded, so ordering,
+//! fairness and starvation-freedom are checked as exact assertions, not
+//! sampled from one lucky scheduling. `testkit::drive` bounds liveness:
+//! a starved session fails the poll budget instead of hanging CI.
+//!
+//! The last two tests run the same invariants against the real
+//! `WorkerPool` — through the reactor front end and through the
+//! thread-per-client path (`--frontend reactor|threads`) — where
+//! completion order is genuinely nondeterministic but the properties
+//! (exactly one reply, in-session FIFO, nothing after close) must hold
+//! for every interleaving.
+
+use std::sync::Arc;
+
+use jit_overlay::coordinator::frontend::{Frontend, Reactor, SessionHandle, SessionState};
+use jit_overlay::coordinator::{AtomicMetrics, Request, WorkerPool};
+use jit_overlay::exec::cpu::{self, Value};
+use jit_overlay::patterns::Composition;
+use jit_overlay::testkit::{drive, ScriptedEngine};
+use jit_overlay::workload::{self, Rng};
+use jit_overlay::{FrontendConfig, OverlayConfig, ServiceConfig};
+
+/// A vmul request whose scalar result fingerprints `seed` — reply/request
+/// pairing is then value-checkable.
+fn vmul_req(n: usize, seed: u64) -> Request {
+    Request::dynamic(
+        Composition::vmul_reduce(n),
+        vec![workload::vector(n, seed, 0.1, 1.0), workload::vector(n, seed + 1, 0.1, 1.0)],
+    )
+}
+
+fn expected(req: &Request) -> Value {
+    cpu::eval(&req.comp, &req.inputs).unwrap()
+}
+
+fn agree(a: &Value, b: &Value) -> bool {
+    const TOL: f32 = 1e-3;
+    match (a, b) {
+        (Value::Scalar(x), Value::Scalar(y)) => (x - y).abs() <= TOL * (1.0 + y.abs()),
+        (Value::Vector(x), Value::Vector(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| (p - q).abs() <= TOL * (1.0 + q.abs()))
+        }
+        _ => false,
+    }
+}
+
+type ScriptedFront = (
+    Frontend<ScriptedEngine>,
+    Reactor<ScriptedEngine>,
+    Arc<ScriptedEngine>,
+    Arc<AtomicMetrics>,
+);
+
+fn scripted_front(
+    capacity: usize,
+    cfg: FrontendConfig,
+    latency: impl FnMut(u64, &Request) -> u64 + Send + 'static,
+) -> ScriptedFront {
+    let engine =
+        Arc::new(ScriptedEngine::new(OverlayConfig::default(), capacity, latency).unwrap());
+    let metrics = Arc::new(AtomicMetrics::default());
+    let fe = Frontend::new(engine.clone(), cfg, metrics.clone()).unwrap();
+    let reactor = fe.reactor(0);
+    (fe, reactor, engine, metrics)
+}
+
+/// The session walks Accepting → Queued → Dispatched → Replying-implied →
+/// Accepting → Closed, one observable transition per step.
+#[test]
+fn session_walks_the_state_machine() {
+    let cfg = FrontendConfig::default();
+    let (fe, reactor, engine, metrics) = scripted_front(8, cfg, |_, _| 10);
+    let s = fe.open_session();
+    assert_eq!(s.state(), SessionState::Accepting);
+
+    let req = vmul_req(128, 7);
+    let want = expected(&req);
+    s.submit(req).unwrap();
+    assert_eq!(s.state(), SessionState::Queued);
+
+    let stats = reactor.poll_once();
+    assert_eq!(stats.admitted, 1);
+    assert_eq!(s.state(), SessionState::Dispatched);
+    assert_eq!(engine.in_service(), 1);
+
+    assert!(engine.advance_next());
+    assert_eq!(engine.now(), 10, "virtual time, not wall time");
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (1, 1));
+    // gap-free completion delivers immediately: Replying collapses back to
+    // Accepting within the same poll
+    assert_eq!(s.state(), SessionState::Accepting);
+    let got = s.recv().unwrap();
+    assert!(agree(&got.run.output, &want));
+
+    s.close();
+    assert_eq!(s.state(), SessionState::Closed);
+    let m = metrics.snapshot();
+    assert_eq!((m.sessions, m.completions), (1, 1));
+    assert!(m.reactor_polls >= 2);
+}
+
+/// Completions scripted in *reverse* submission order must still be
+/// delivered to the client in submission order — the reorder buffer at
+/// work, observable only because completion order is deterministic.
+#[test]
+fn in_session_fifo_holds_under_reversed_completions() {
+    const K: u64 = 4;
+    let cfg = FrontendConfig {
+        inflight_per_session: K as usize,
+        ..FrontendConfig::default()
+    };
+    // dispatch i completes at tick 100 - 20*i: strictly reversed
+    let (fe, reactor, engine, _) = scripted_front(8, cfg, |i, _| 100 - 20 * i);
+    let s = fe.open_session();
+    let wants: Vec<Value> = (0..K)
+        .map(|k| {
+            let req = vmul_req(128, 1000 + k);
+            let want = expected(&req);
+            s.submit(req).unwrap();
+            want
+        })
+        .collect();
+
+    let stats = reactor.poll_once();
+    assert_eq!(stats.admitted, K as usize, "all K fit the in-flight budget");
+    // complete everything (reverse order), then poll once: the reactor must
+    // hold the early completions until the gap (seq 0, slowest) fills
+    for _ in 0..K {
+        assert!(engine.advance_next());
+    }
+    let stats = reactor.poll_once();
+    assert_eq!(stats.completions, K as usize);
+    assert_eq!(stats.delivered, K as usize, "gap filled: everything flushes in order");
+    for want in &wants {
+        let got = s.recv().unwrap();
+        assert!(agree(&got.run.output, want), "replies out of submission order");
+    }
+    assert!(s.try_recv().is_none());
+    assert!(reactor.poll_once().idle());
+}
+
+/// A partially-completed window stays buffered: with the *first* request
+/// slowest, nothing is deliverable until it lands, and the session reads
+/// `Replying` while the buffer holds out-of-order completions.
+#[test]
+fn replying_state_buffers_until_the_gap_fills() {
+    let cfg = FrontendConfig { inflight_per_session: 3, ..FrontendConfig::default() };
+    let (fe, reactor, engine, _) = scripted_front(8, cfg, |i, _| if i == 0 { 50 } else { i });
+    let s = fe.open_session();
+    for k in 0..3 {
+        s.submit(vmul_req(128, 2000 + k)).unwrap();
+    }
+    assert_eq!(reactor.poll_once().admitted, 3);
+    // two fast completions land; the slow head (seq 0) is still in service
+    assert!(engine.advance_next());
+    assert!(engine.advance_next());
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (2, 0));
+    assert_eq!(s.state(), SessionState::Replying);
+    assert!(s.try_recv().is_none(), "no out-of-order delivery, ever");
+    // the gap fills: all three flush, in order
+    assert!(engine.advance_next());
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (1, 3));
+    assert_eq!(s.state(), SessionState::Accepting);
+}
+
+/// Starvation-freedom under an adversarial session mix: one flooding
+/// session vs. two light ones, with the backend capacity *and* the
+/// front-end budget far below the flood. Fairness rotation must finish
+/// the light sessions long before the flood drains, and every session
+/// completes within the liveness budget.
+#[test]
+fn starvation_freedom_under_adversarial_mix() {
+    const HEAVY: u64 = 40;
+    const LIGHT: u64 = 3;
+    let cfg = FrontendConfig {
+        inflight_per_session: 2,
+        max_inflight: 4,
+        ..FrontendConfig::default()
+    };
+    let (fe, reactor, engine, metrics) = scripted_front(4, cfg, |_, _| 3);
+    let heavy = fe.open_session();
+    let light_a = fe.open_session();
+    let light_b = fe.open_session();
+    // the flood is fully queued before the light sessions even submit —
+    // the worst arrival order for them
+    for k in 0..HEAVY {
+        heavy.submit(vmul_req(128, 10_000 + k)).unwrap();
+    }
+    for k in 0..LIGHT {
+        light_a.submit(vmul_req(128, 20_000 + k)).unwrap();
+        light_b.submit(vmul_req(128, 30_000 + k)).unwrap();
+    }
+
+    let mut polls = 0usize;
+    let mut heavy_done = None;
+    let mut light_done = None;
+    let (mut got_heavy, mut got_light) = (0u64, 0u64);
+    while heavy_done.is_none() || light_done.is_none() {
+        reactor.poll_once();
+        polls += 1;
+        assert!(polls < 2_000, "front end failed to drain the adversarial mix");
+        engine.advance_next();
+        while heavy.try_recv().is_some() {
+            got_heavy += 1;
+        }
+        while light_a.try_recv().is_some() || light_b.try_recv().is_some() {
+            got_light += 1;
+        }
+        if got_light == 2 * LIGHT && light_done.is_none() {
+            light_done = Some(polls);
+        }
+        if got_heavy == HEAVY && heavy_done.is_none() {
+            heavy_done = Some(polls);
+        }
+    }
+    let (light_done, heavy_done) = (light_done.unwrap(), heavy_done.unwrap());
+    assert!(
+        light_done < heavy_done / 2,
+        "light sessions starved: done at poll {light_done} vs heavy at {heavy_done}"
+    );
+    // the caps were genuinely binding: admission pressure was recorded and
+    // the backend never saw more than the front-end-wide budget
+    assert!(metrics.snapshot().admission_rejections > 0);
+    assert!(engine.high_water() <= 4);
+}
+
+/// Seeded property, ≥ 4 seeds per run: every submitted request gets
+/// exactly one reply, in-session FIFO order holds, and no reply is
+/// delivered after session close. `$JIT_OVERLAY_SEED` shifts the seed
+/// universe (the CI matrix); each universe is fully deterministic.
+#[test]
+fn exactly_one_reply_in_order_over_seeds() {
+    let base = workload::env_seed(0);
+    for round in 0..4u64 {
+        let mut rng = Rng::new(0xF0_0D ^ base.wrapping_mul(0x9E37).wrapping_add(round));
+        let capacity = 2 + rng.below(5);
+        let cfg = FrontendConfig {
+            inflight_per_session: 1 + rng.below(4),
+            max_inflight: 2 + rng.below(8),
+            ..FrontendConfig::default()
+        };
+        let max_lat = 1 + rng.below(20) as u64;
+        let mut lat_rng = Rng::new(rng.next_u64());
+        let (fe, reactor, engine, metrics) = scripted_front(capacity, cfg, move |_, _| {
+            lat_rng.below(max_lat as usize) as u64
+        });
+
+        let n_sessions = 2 + rng.below(4);
+        struct Script {
+            handle: SessionHandle,
+            wants: Vec<Option<Value>>, // None = request built to fail
+            /// Close once at least this many replies were received and the
+            /// reply buffer is drained (None = drain everything).
+            close_cue: Option<usize>,
+            /// Replies received when the close actually fired.
+            closed_at: Option<usize>,
+            received: usize,
+        }
+        let mut scripts: Vec<Script> = (0..n_sessions)
+            .map(|si| {
+                let handle = fe.open_session();
+                let count = rng.below(10);
+                let wants = (0..count)
+                    .map(|k| {
+                        if rng.below(12) == 0 {
+                            // malformed: wrong channel count → its one
+                            // reply is an error, still in order
+                            let comp = Composition::vmul_reduce(64);
+                            handle
+                                .submit(Request::dynamic(comp, vec![vec![0.0; 64]]))
+                                .unwrap();
+                            None
+                        } else {
+                            let req = vmul_req(64, (si as u64) * 1000 + k as u64);
+                            let want = expected(&req);
+                            handle.submit(req).unwrap();
+                            Some(want)
+                        }
+                    })
+                    .collect::<Vec<_>>();
+                let close_cue = (rng.below(4) == 0 && count > 0).then(|| rng.below(count));
+                Script { handle, wants, close_cue, closed_at: None, received: 0 }
+            })
+            .collect();
+
+        // drive to quiescence, executing each script's close at its cue.
+        // Between polls nothing runs concurrently, so a close always
+        // happens with the reply buffer drained — the cut is exact.
+        let mut steps = 0usize;
+        loop {
+            let stats = reactor.poll_once();
+            steps += 1;
+            assert!(steps < 10_000, "round {round}: failed to quiesce");
+            for s in scripts.iter_mut() {
+                while let Some(got) = s.handle.try_recv() {
+                    assert!(
+                        s.closed_at.is_none(),
+                        "round {round}: reply delivered after session close"
+                    );
+                    let want = &s.wants[s.received];
+                    match (got, want) {
+                        (Ok(resp), Some(w)) => assert!(
+                            agree(&resp.run.output, w),
+                            "round {round}: reply out of order or cross-wired"
+                        ),
+                        (Err(_), None) => {}
+                        (got, want) => panic!(
+                            "round {round}: reply {} kind mismatch: got ok={} want ok={}",
+                            s.received,
+                            got.is_ok(),
+                            want.is_some()
+                        ),
+                    }
+                    s.received += 1;
+                }
+                if let Some(cut) = s.close_cue {
+                    if s.closed_at.is_none() && s.received >= cut {
+                        s.handle.close();
+                        s.closed_at = Some(s.received);
+                    }
+                }
+            }
+            if engine.advance_next() {
+                continue;
+            }
+            if stats.idle() {
+                break;
+            }
+        }
+
+        // exactly one reply per request on every session left open; closed
+        // sessions received exactly their pre-close prefix and then the
+        // stream disconnected with nothing in between
+        let mut expected_total = 0u64;
+        for s in &mut scripts {
+            match s.closed_at {
+                None => {
+                    assert_eq!(
+                        s.received,
+                        s.wants.len(),
+                        "round {round}: open session missing replies"
+                    );
+                    s.handle.close();
+                }
+                Some(at) => {
+                    assert_eq!(
+                        s.received, at,
+                        "round {round}: reply delivered after session close"
+                    );
+                }
+            }
+            assert!(s.handle.try_recv().is_none());
+            assert_eq!(s.handle.state(), SessionState::Closed);
+            expected_total += s.received as u64;
+        }
+        // conservation: the reactor drained exactly what the backend
+        // completed, and undelivered completions are all accounted as late
+        let m = metrics.snapshot();
+        assert_eq!(m.sessions, n_sessions as u64);
+        assert_eq!(m.completions, engine.dispatched());
+        assert_eq!(
+            expected_total + fe.late_replies(),
+            m.completions,
+            "round {round}: a reply was lost or duplicated"
+        );
+    }
+}
+
+/// The admission caps actually bound backend concurrency, and a backend
+/// answering Busy (capacity below the front-end budget) only defers —
+/// never drops — work.
+#[test]
+fn admission_caps_bound_the_backend() {
+    // caps bind: high-water never exceeds min(frontend budget, capacity)
+    let cfg = FrontendConfig {
+        inflight_per_session: 2,
+        max_inflight: 3,
+        ..FrontendConfig::default()
+    };
+    let (fe, reactor, engine, _) = scripted_front(100, cfg, |_, _| 2);
+    let sessions: Vec<_> = (0..4).map(|_| fe.open_session()).collect();
+    for (i, s) in sessions.iter().enumerate() {
+        for k in 0..5u64 {
+            s.submit(vmul_req(64, (i as u64) * 100 + k)).unwrap();
+        }
+    }
+    drive(&reactor, &engine, 10_000);
+    assert!(engine.high_water() <= 3, "front-end budget exceeded: {}", engine.high_water());
+    for s in &sessions {
+        for _ in 0..5 {
+            s.recv().unwrap();
+        }
+    }
+
+    // backend capacity below the budget: Busy path defers, all complete
+    let cfg = FrontendConfig {
+        inflight_per_session: 4,
+        max_inflight: 64,
+        ..FrontendConfig::default()
+    };
+    let (fe, reactor, engine, metrics) = scripted_front(2, cfg, |_, _| 1);
+    let s = fe.open_session();
+    for k in 0..12u64 {
+        s.submit(vmul_req(64, 500 + k)).unwrap();
+    }
+    drive(&reactor, &engine, 10_000);
+    assert!(metrics.snapshot().admission_rejections > 0, "Busy path never exercised");
+    assert!(engine.high_water() <= 2);
+    for _ in 0..12 {
+        s.recv().unwrap();
+    }
+}
+
+/// The reactor front end over the *real* worker pool (threaded, scheduling
+/// nondeterministic): the invariants — exactly one reply per request, in
+/// submission order, correct values — must hold for every interleaving.
+/// CI smoke-runs the same path via `repro serve --frontend reactor`.
+#[test]
+fn reactor_over_real_pool_preserves_reply_integrity() {
+    const SESSIONS: u64 = 6;
+    const PER_SESSION: u64 = 8;
+    let service = ServiceConfig { queue_capacity: 64, ..ServiceConfig::with_workers(2) };
+    let pool = Arc::new(WorkerPool::new(OverlayConfig::default(), service).unwrap());
+    let fe = Frontend::new(
+        pool.clone(),
+        FrontendConfig { inflight_per_session: 4, max_inflight: 32, ..Default::default() },
+        pool.metrics.clone(),
+    )
+    .unwrap();
+    let threads = fe.spawn().unwrap();
+
+    let handles: Vec<_> = (0..SESSIONS).map(|_| fe.open_session()).collect();
+    let mut wants: Vec<Vec<Value>> = Vec::new();
+    for (i, h) in handles.iter().enumerate() {
+        let mut w = Vec::new();
+        for k in 0..PER_SESSION {
+            let req = vmul_req(256, (i as u64) * 1000 + k);
+            w.push(expected(&req));
+            h.submit(req).unwrap();
+        }
+        wants.push(w);
+    }
+    for (h, w) in handles.iter().zip(&wants) {
+        for want in w {
+            let got = h.recv().expect("request served");
+            assert!(agree(&got.run.output, want), "reply out of order or cross-wired");
+        }
+        assert!(h.try_recv().is_none());
+        h.close();
+    }
+    threads.shutdown();
+    assert_eq!(fe.late_replies(), 0);
+    drop(fe); // releases the front end's Arc on the pool
+    let report = Arc::try_unwrap(pool).ok().expect("front end gone").shutdown();
+    assert_eq!(report.aggregate.requests, SESSIONS * PER_SESSION);
+    assert_eq!(report.aggregate.completions, SESSIONS * PER_SESSION);
+    assert_eq!(report.aggregate.sessions, SESSIONS);
+    assert!(report.panicked_workers.is_empty());
+}
+
+/// The same invariants through the thread-per-client mode (`--frontend
+/// threads`): one client thread per session over the blocking channel
+/// path. The two modes must agree on every observable property.
+#[test]
+fn thread_per_client_mode_preserves_reply_integrity() {
+    const SESSIONS: u64 = 6;
+    const PER_SESSION: u64 = 8;
+    let base = workload::env_seed(0);
+    let service = ServiceConfig { queue_capacity: 64, ..ServiceConfig::with_workers(2) };
+    let pool = Arc::new(WorkerPool::new(OverlayConfig::default(), service).unwrap());
+    let mut joins = Vec::new();
+    for i in 0..SESSIONS {
+        let p = pool.clone();
+        joins.push(std::thread::spawn(move || {
+            let reqs: Vec<Request> = (0..PER_SESSION)
+                .map(|k| vmul_req(256, base.wrapping_mul(77) + i * 1000 + k))
+                .collect();
+            let wants: Vec<Value> = reqs.iter().map(expected).collect();
+            let rxs: Vec<_> = reqs.into_iter().map(|r| p.submit(r).unwrap()).collect();
+            for (rx, want) in rxs.into_iter().zip(&wants) {
+                let got = rx.recv().expect("worker alive").expect("request served");
+                assert!(agree(&got.run.output, want), "reply out of order or cross-wired");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let report = Arc::try_unwrap(pool).ok().expect("clients done").shutdown();
+    assert_eq!(report.aggregate.requests, SESSIONS * PER_SESSION);
+    // the channel path never touches the reactor counters
+    assert_eq!(report.aggregate.completions, 0);
+    assert_eq!(report.aggregate.sessions, 0);
+}

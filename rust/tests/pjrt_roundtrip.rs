@@ -2,8 +2,12 @@
 //! Pallas, AOT-lowered to HLO text) executed through the Rust PJRT runtime
 //! must agree with the overlay interpreter and the CPU reference.
 //!
-//! These tests skip silently when `artifacts/` has not been built — CI runs
-//! them after `make artifacts`.
+//! Without `artifacts/` these tests skip — *loudly*: each prints an
+//! explicit `skipped:` marker (visible with `--nocapture`), and the CI
+//! `pjrt-skip-visibility` job asserts the marker so a silently-missing
+//! artifact build can never masquerade as a passing roundtrip suite.
+//! Build the artifacts with `make artifacts` (repo root) to run them for
+//! real.
 
 use jit_overlay::bitstream::OperatorKind;
 use jit_overlay::exec::{cpu, Engine};
@@ -15,7 +19,13 @@ use jit_overlay::{workload, OverlayConfig};
 
 fn runtime() -> Option<Runtime> {
     let dir = default_artifacts_dir();
-    dir.join("manifest.tsv").exists().then(|| Runtime::new(dir).unwrap())
+    if !dir.join("manifest.tsv").exists() {
+        // keep this string in sync with .github/workflows/ci.yml, which
+        // greps for it to prove the skip is visible, not silent
+        println!("skipped: artifacts missing (run make artifacts)");
+        return None;
+    }
+    Some(Runtime::new(dir).unwrap())
 }
 
 #[test]
