@@ -37,6 +37,7 @@
 
 use std::sync::Arc;
 
+use jit_overlay::benchkit::{write_bench_json, JsonArray, JsonObject};
 use jit_overlay::coordinator::{Coordinator, Frontend, Metrics, Request, WorkerPool};
 use jit_overlay::patterns::Composition;
 use jit_overlay::report::Table;
@@ -215,6 +216,27 @@ fn bench_stream(
     }
     print!("{}", t.render());
     cells
+}
+
+/// Render one stream's (workers × mode) cells as a JSON array for the
+/// machine-readable `BENCH_*.json` companion to the printed table.
+fn stream_cells_json(requests: usize, cells: &[(usize, &'static str, f64, Metrics)]) -> String {
+    let mut arr = JsonArray::new();
+    for (workers, mode, dt, m) in cells {
+        let mut o = JsonObject::new();
+        o.int("workers", *workers as u64)
+            .str("mode", mode)
+            .num("wall_s", *dt)
+            .num("req_per_s", requests as f64 / dt)
+            .num("pr_dl_per_req", m.pr_downloads as f64 / requests as f64)
+            .num("pr_hit_rate", m.pr_hit_rate())
+            .int("burst_group_switches", m.burst_group_switches)
+            .int("steals", m.steals)
+            .int("placement_respecializations", m.placement_respecializations)
+            .int("residency_clobbers_avoided", m.residency_clobbers_avoided);
+        arr.raw(&o.finish());
+    }
+    arr.finish()
 }
 
 fn cell<'a>(
@@ -419,8 +441,47 @@ fn main() {
     assert_eq!(threads_served, reactor_served, "both modes must serve the whole stream");
     let threads_rate = *threads_served as f64 / threads_dt;
     let reactor_rate = *reactor_served as f64 / reactor_dt;
+    let ok_reactor = reactor_rate >= threads_rate * 0.95;
     println!(
         "{accept_at}-session acceptance: reactor {reactor_rate:.0} req/s vs thread-per-client {threads_rate:.0} req/s (reactor no worse: {})",
-        if reactor_rate >= threads_rate * 0.95 { "PASS" } else { "MISS" },
+        if ok_reactor { "PASS" } else { "MISS" },
     );
+
+    // Machine-readable companion to the tables above, per the repo's
+    // `BENCH_*.json` convention ($BENCH_JSON_DIR or the CWD).
+    let stream_reqs = requests as usize;
+    let mut streams = JsonObject::new();
+    streams
+        .raw("mixed", &stream_cells_json(stream_reqs, &mixed))
+        .raw("adversarial", &stream_cells_json(stream_reqs, &adversarial))
+        .raw("spill_heavy", &stream_cells_json(stream_reqs, &spill));
+    let mut fronts = JsonArray::new();
+    for (sessions, mode, dt, served) in &fcells {
+        let mut o = JsonObject::new();
+        o.int("sessions", *sessions as u64)
+            .str("front_end", mode)
+            .num("wall_s", *dt)
+            .int("requests", *served)
+            .num("req_per_s", *served as f64 / dt);
+        fronts.raw(&o.finish());
+    }
+    let mut accept = JsonObject::new();
+    accept
+        .str("mixed_rate", if ok_rate { "PASS" } else { "MISS" })
+        .str("adversarial_downloads", if ok_dpr { "PASS" } else { "MISS" })
+        .str(
+            "spill_respecializations",
+            if spill_m.placement_respecializations > 0 { "PASS" } else { "MISS" },
+        )
+        .str("reactor_rate", if ok_reactor { "PASS" } else { "MISS" });
+    let mut root = JsonObject::new();
+    root.str("group", "service_throughput")
+        .int("requests_per_stream", requests as u64)
+        .raw("streams", &streams.finish())
+        .raw("frontends", &fronts.finish())
+        .raw("acceptance", &accept.finish());
+    match write_bench_json("service_throughput", &root.finish()) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH json not written: {e}"),
+    }
 }

@@ -87,6 +87,31 @@ impl Bench {
         stats
     }
 
+    /// Render the group's results as one JSON object, following the
+    /// repo's `BENCH_*.json` convention (see `write_json`).
+    pub fn to_json(&self) -> String {
+        let mut arr = JsonArray::new();
+        for (name, s) in &self.results {
+            let mut r = JsonObject::new();
+            r.str("name", name)
+                .int("samples", s.samples as u64)
+                .num("mean_ns", s.mean_ns)
+                .num("p50_ns", s.p50_ns)
+                .num("p95_ns", s.p95_ns)
+                .num("min_ns", s.min_ns);
+            arr.raw(&r.finish());
+        }
+        let mut o = JsonObject::new();
+        o.str("group", &self.group).raw("results", &arr.finish());
+        o.finish()
+    }
+
+    /// Write `BENCH_<group>.json` into `$BENCH_JSON_DIR` (or the CWD), so
+    /// CI can harvest machine-readable results next to the printed table.
+    pub fn write_json(&self) -> std::io::Result<std::path::PathBuf> {
+        write_bench_json(&self.group, &self.to_json())
+    }
+
     /// Print the group's results table. Call once per group.
     pub fn finish(&self) {
         println!("\n== bench group: {} ==", self.group);
@@ -105,6 +130,129 @@ impl Bench {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON emitter (the crate is dependency-free by design)
+// ---------------------------------------------------------------------------
+
+/// Incremental JSON object builder. Only what the bench convention needs:
+/// strings, integers, floats (non-finite values become `null` — JSON has
+/// no NaN/inf), and pre-rendered nested values via [`JsonObject::raw`].
+#[derive(Default)]
+pub struct JsonObject {
+    buf: String,
+    any: bool,
+}
+
+impl JsonObject {
+    pub fn new() -> JsonObject {
+        JsonObject::default()
+    }
+
+    fn key(&mut self, k: &str) -> &mut Self {
+        if self.any {
+            self.buf.push(',');
+        }
+        self.any = true;
+        self.buf.push('"');
+        self.buf.push_str(&json_escape(k));
+        self.buf.push_str("\":");
+        self
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&json_escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    pub fn int(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Finite floats render as numbers; NaN and ±inf render as `null`.
+    pub fn num(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// Splice an already-rendered JSON value (object or array) under `k`.
+    pub fn raw(&mut self, k: &str, json: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(json);
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        format!("{{{}}}", self.buf)
+    }
+}
+
+/// Incremental JSON array of pre-rendered values.
+#[derive(Default)]
+pub struct JsonArray {
+    buf: String,
+    any: bool,
+}
+
+impl JsonArray {
+    pub fn new() -> JsonArray {
+        JsonArray::default()
+    }
+
+    pub fn raw(&mut self, json: &str) -> &mut Self {
+        if self.any {
+            self.buf.push(',');
+        }
+        self.any = true;
+        self.buf.push_str(json);
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        format!("[{}]", self.buf)
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Where `BENCH_<name>.json` lands: `$BENCH_JSON_DIR` when set, else CWD.
+pub fn bench_json_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&dir).join(format!("BENCH_{name}.json"))
+}
+
+/// Write one machine-readable result file per the `BENCH_*.json`
+/// convention and return its path.
+pub fn write_bench_json(name: &str, json: &str) -> std::io::Result<std::path::PathBuf> {
+    let path = bench_json_path(name);
+    std::fs::write(&path, format!("{json}\n"))?;
+    Ok(path)
 }
 
 /// Human-format nanoseconds.
@@ -148,5 +296,54 @@ mod tests {
     #[test]
     fn black_box_passes_through() {
         assert_eq!(black_box(42), 42);
+    }
+
+    #[test]
+    fn json_objects_escape_and_null_non_finite() {
+        let mut o = JsonObject::new();
+        o.str("name", "a\"b\\c\nd\u{1}")
+            .int("count", 3)
+            .num("p50", 1.5)
+            .num("bad", f64::NAN)
+            .num("worse", f64::INFINITY);
+        assert_eq!(
+            o.finish(),
+            r#"{"name":"a\"b\\c\nd\u0001","count":3,"p50":1.5,"bad":null,"worse":null}"#
+        );
+    }
+
+    #[test]
+    fn json_arrays_nest_in_objects() {
+        let mut arr = JsonArray::new();
+        arr.raw("1").raw(r#"{"x":2}"#);
+        let mut o = JsonObject::new();
+        o.raw("items", &arr.finish());
+        assert_eq!(o.finish(), r#"{"items":[1,{"x":2}]}"#);
+        assert_eq!(JsonArray::new().finish(), "[]");
+        assert_eq!(JsonObject::new().finish(), "{}");
+    }
+
+    #[test]
+    fn bench_to_json_lists_every_result() {
+        let mut b = Bench::new("unit");
+        b.measure_time = Duration::from_millis(1);
+        b.min_samples = 2;
+        b.warmup_iters = 0;
+        b.bench("one", || 1);
+        b.bench("two", || 2);
+        let j = b.to_json();
+        assert!(j.starts_with(r#"{"group":"unit","results":["#), "{j}");
+        assert!(j.contains(r#""name":"one""#) && j.contains(r#""name":"two""#), "{j}");
+        assert!(j.contains(r#""p50_ns":"#), "{j}");
+    }
+
+    #[test]
+    fn bench_json_path_defaults_to_cwd() {
+        if std::env::var("BENCH_JSON_DIR").is_err() {
+            assert_eq!(
+                bench_json_path("service"),
+                std::path::Path::new(".").join("BENCH_service.json")
+            );
+        }
     }
 }

@@ -190,6 +190,67 @@ impl FrontendConfig {
     }
 }
 
+/// Socket serving-tier configuration (see [`crate::coordinator::net`]).
+///
+/// Separate from [`FrontendConfig`] because it describes the *network
+/// boundary* in front of the session layer — framing limits, timeouts,
+/// per-connection pipelining — not the reactors behind it.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Cap on a single wire frame's payload, bytes (≥ 64). A hostile
+    /// length prefix above this is rejected before any payload is
+    /// buffered and the connection is closed.
+    pub max_frame: usize,
+    /// Cap on a request's vector length `n` (elements). Bounds the memory
+    /// a single wire request can make the server synthesize.
+    pub max_n: usize,
+    /// Requests one connection may have outstanding (submitted, reply not
+    /// yet written) before further frames answer `BUSY` (≥ 1) — the
+    /// connection-level face of the admission caps.
+    pub max_pending_per_conn: usize,
+    /// Idle read timeout, milliseconds: a connection that sends no
+    /// complete frame for this long is shed (`0` = never). Slow-loris
+    /// partial frames count as idle — only a *complete* frame resets the
+    /// clock.
+    pub idle_timeout_ms: u64,
+    /// Honor a wire `SHUTDOWN` message (loadgen-driven CI teardown).
+    /// Off by default: a remote peer must not be able to stop the server
+    /// unless the operator opted in.
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: 1 << 20,
+            max_n: 1 << 20,
+            max_pending_per_conn: 32,
+            idle_timeout_ms: 30_000,
+            allow_remote_shutdown: false,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Validate invariants. Call after deserializing user-supplied configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_frame < 64 {
+            return Err(Error::Config(
+                "max_frame must hold at least one small message (64 bytes)".into(),
+            ));
+        }
+        if self.max_n == 0 {
+            return Err(Error::Config("max_n must admit at least one element".into()));
+        }
+        if self.max_pending_per_conn == 0 {
+            return Err(Error::Config(
+                "connections need a pending budget of at least one request".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Complete overlay configuration.
 #[derive(Debug, Clone)]
 pub struct OverlayConfig {
@@ -378,6 +439,19 @@ mod tests {
             .validate()
             .is_err());
         assert!(FrontendConfig { max_inflight: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn net_config_defaults_validate_and_zeroes_reject() {
+        NetConfig::default().validate().unwrap();
+        assert!(NetConfig { max_frame: 0, ..Default::default() }.validate().is_err());
+        assert!(NetConfig { max_frame: 63, ..Default::default() }.validate().is_err());
+        assert!(NetConfig { max_n: 0, ..Default::default() }.validate().is_err());
+        assert!(NetConfig { max_pending_per_conn: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        // idle_timeout_ms = 0 (never shed) is a valid operator choice
+        NetConfig { idle_timeout_ms: 0, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

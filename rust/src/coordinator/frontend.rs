@@ -282,7 +282,14 @@ impl<B: Dispatch> Reactor<B> {
                 continue; // foreign ticket: not ours, ignore
             };
             self.total_inflight.fetch_sub(1, Ordering::Relaxed);
-            let Some(s) = t.sessions.get_mut(&sid) else { continue };
+            let Some(s) = t.sessions.get_mut(&sid) else {
+                // defensive: a tracked ticket whose session vanished must
+                // still be accounted, or the completion disappears with
+                // neither a delivery nor a late count and the conservation
+                // law `delivered + late_replies == completions` breaks
+                t.late_replies += 1;
+                continue;
+            };
             s.inflight -= 1;
             if s.out.is_some() {
                 s.ready.insert(seq, c.result);
@@ -434,21 +441,81 @@ impl<B: Dispatch> Reactor<B> {
 /// A client's handle to one session: submit requests, receive replies in
 /// submission order, close. Handles are independent — one per client —
 /// and their cost is one channel per *session*, not per request.
+///
+/// Dropping the handle (or its [`SessionSubmitter`] half after
+/// [`SessionHandle::split`]) closes the session — a client that walks away
+/// without calling [`SessionHandle::close`] must not leak its session in
+/// the reactor table forever, silently "delivering" every future
+/// completion into a disconnected channel.
 pub struct SessionHandle {
-    id: u64,
-    shared: Arc<ReactorShared>,
+    sub: SessionSubmitter,
     replies: mpsc::Receiver<Result<Response>>,
 }
 
 impl SessionHandle {
     /// This session's id (unique within its front end).
     pub fn id(&self) -> u64 {
-        self.id
+        self.sub.id()
     }
 
     /// Queue one request. Returns an error if the session is closed or the
     /// front end is shutting down; otherwise the request WILL get exactly
     /// one reply, in submission order.
+    pub fn submit(&self, request: Request) -> Result<()> {
+        self.sub.submit(request)
+    }
+
+    /// Block for the next in-order reply. Errors when the session's reply
+    /// stream is gone (closed, or the front end shut down).
+    pub fn recv(&self) -> Result<Response> {
+        self.replies
+            .recv()
+            .map_err(|_| Error::Runtime("front end dropped the session".into()))?
+    }
+
+    /// Non-blocking receive: `None` when nothing is currently deliverable.
+    pub fn try_recv(&self) -> Option<Result<Response>> {
+        self.replies.try_recv().ok()
+    }
+
+    /// The session's current lifecycle state (`Closed` once it is gone).
+    pub fn state(&self) -> SessionState {
+        self.sub.state()
+    }
+
+    /// Close the session: pending inbox requests are cancelled, in-flight
+    /// completions are dropped on arrival (counted as late replies), and
+    /// nothing is delivered anymore — the reply stream disconnects.
+    pub fn close(&self) {
+        self.sub.close()
+    }
+
+    /// Split into independent submit and receive halves, so one thread can
+    /// feed the session while another blocks on its replies (the socket
+    /// tier's reader/writer pair). Closing remains tied to the submit
+    /// half: dropping the [`SessionSubmitter`] closes the session, which
+    /// disconnects the reply half and unblocks its `recv`.
+    pub fn split(self) -> (SessionSubmitter, SessionReplies) {
+        let SessionHandle { sub, replies } = self;
+        (sub, SessionReplies { replies })
+    }
+}
+
+/// The submit half of a split [`SessionHandle`]: queue requests, observe
+/// state, close. Owns the session's lifetime — dropping it closes the
+/// session.
+pub struct SessionSubmitter {
+    id: u64,
+    shared: Arc<ReactorShared>,
+}
+
+impl SessionSubmitter {
+    /// This session's id (unique within its front end).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Queue one request (see [`SessionHandle::submit`]).
     pub fn submit(&self, request: Request) -> Result<()> {
         let mut guard = self.shared.lock();
         let t = &mut *guard;
@@ -476,19 +543,6 @@ impl SessionHandle {
         Ok(())
     }
 
-    /// Block for the next in-order reply. Errors when the session's reply
-    /// stream is gone (closed, or the front end shut down).
-    pub fn recv(&self) -> Result<Response> {
-        self.replies
-            .recv()
-            .map_err(|_| Error::Runtime("front end dropped the session".into()))?
-    }
-
-    /// Non-blocking receive: `None` when nothing is currently deliverable.
-    pub fn try_recv(&self) -> Option<Result<Response>> {
-        self.replies.try_recv().ok()
-    }
-
     /// The session's current lifecycle state (`Closed` once it is gone).
     pub fn state(&self) -> SessionState {
         self.shared
@@ -499,9 +553,7 @@ impl SessionHandle {
             .unwrap_or(SessionState::Closed)
     }
 
-    /// Close the session: pending inbox requests are cancelled, in-flight
-    /// completions are dropped on arrival (counted as late replies), and
-    /// nothing is delivered anymore — the reply stream disconnects.
+    /// Close the session (idempotent; see [`SessionHandle::close`]).
     pub fn close(&self) {
         let mut guard = self.shared.lock();
         let t = &mut *guard;
@@ -520,6 +572,54 @@ impl SessionHandle {
         }
         drop(guard);
         self.shared.completions.wake();
+    }
+}
+
+impl Drop for SessionSubmitter {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// What [`SessionReplies::recv_timeout`] observed. A delivered
+/// per-request error ([`SessionRecv::Reply`] holding `Err`) is that one
+/// request's reply; [`SessionRecv::Disconnected`] means the session itself
+/// is gone — the two must not be conflated, or a serving tier would
+/// misreport a dead session as a request failure.
+pub enum SessionRecv {
+    /// One in-order reply: the request's response, or its error.
+    Reply(Result<Response>),
+    /// Nothing became deliverable within the timeout.
+    Timeout,
+    /// The session is gone (closed, or the front end shut down).
+    Disconnected,
+}
+
+/// The receive half of a split [`SessionHandle`].
+pub struct SessionReplies {
+    replies: mpsc::Receiver<Result<Response>>,
+}
+
+impl SessionReplies {
+    /// Block for the next in-order reply (see [`SessionHandle::recv`]).
+    pub fn recv(&self) -> Result<Response> {
+        self.replies
+            .recv()
+            .map_err(|_| Error::Runtime("front end dropped the session".into()))?
+    }
+
+    /// Block up to `timeout` for the next in-order reply.
+    pub fn recv_timeout(&self, timeout: Duration) -> SessionRecv {
+        match self.replies.recv_timeout(timeout) {
+            Ok(r) => SessionRecv::Reply(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => SessionRecv::Timeout,
+            Err(mpsc::RecvTimeoutError::Disconnected) => SessionRecv::Disconnected,
+        }
+    }
+
+    /// Non-blocking receive: `None` when nothing is currently deliverable.
+    pub fn try_recv(&self) -> Option<Result<Response>> {
+        self.replies.try_recv().ok()
     }
 }
 
@@ -576,7 +676,7 @@ impl<B: Dispatch> Frontend<B> {
         let (tx, rx) = mpsc::channel();
         shared.lock().sessions.insert(id, Session::new(tx));
         self.metrics.record(&Metrics { sessions: 1, ..Default::default() });
-        SessionHandle { id, shared, replies: rx }
+        SessionHandle { sub: SessionSubmitter { id, shared }, replies: rx }
     }
 
     /// A stepper for reactor `i` (deterministic tests drive this directly).

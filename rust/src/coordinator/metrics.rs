@@ -72,6 +72,17 @@ pub struct Metrics {
     /// answering `PoolBusy`. A deferred request stays queued in its session
     /// and is retried — this counts pressure events, not lost requests.
     pub admission_rejections: u64,
+    /// Socket connections accepted by the serving tier.
+    pub connections: u64,
+    /// Connections shed by the serving tier: idle/read timeouts, framing
+    /// violations (oversized or malformed frames), or a mid-frame
+    /// disconnect. Clean closes do not count.
+    pub conns_shed: u64,
+    /// Wire requests answered `BUSY` without being served: the
+    /// per-connection pending cap, or a request rejected at the network
+    /// boundary (bad pattern / oversized `n`) — the connection-level face
+    /// of the pool's backpressure.
+    pub net_rejections: u64,
 }
 
 impl Metrics {
@@ -123,6 +134,9 @@ impl Metrics {
         self.completions += other.completions;
         self.reactor_polls += other.reactor_polls;
         self.admission_rejections += other.admission_rejections;
+        self.connections += other.connections;
+        self.conns_shed += other.conns_shed;
+        self.net_rejections += other.net_rejections;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
@@ -152,13 +166,16 @@ impl Metrics {
             completions: self.completions - earlier.completions,
             reactor_polls: self.reactor_polls - earlier.reactor_polls,
             admission_rejections: self.admission_rejections - earlier.admission_rejections,
+            connections: self.connections - earlier.connections,
+            conns_shed: self.conns_shed - earlier.conns_shed,
+            net_rejections: self.net_rejections - earlier.net_rejections,
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -180,6 +197,9 @@ impl Metrics {
             self.completions,
             self.reactor_polls,
             self.admission_rejections,
+            self.connections,
+            self.conns_shed,
+            self.net_rejections,
         )
     }
 }
@@ -209,6 +229,9 @@ pub struct AtomicMetrics {
     completions: AtomicU64,
     reactor_polls: AtomicU64,
     admission_rejections: AtomicU64,
+    connections: AtomicU64,
+    conns_shed: AtomicU64,
+    net_rejections: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -241,6 +264,9 @@ impl AtomicMetrics {
         self.completions.fetch_add(d.completions, Ordering::Relaxed);
         self.reactor_polls.fetch_add(d.reactor_polls, Ordering::Relaxed);
         self.admission_rejections.fetch_add(d.admission_rejections, Ordering::Relaxed);
+        self.connections.fetch_add(d.connections, Ordering::Relaxed);
+        self.conns_shed.fetch_add(d.conns_shed, Ordering::Relaxed);
+        self.net_rejections.fetch_add(d.net_rejections, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -272,6 +298,9 @@ impl AtomicMetrics {
             completions: self.completions.load(Ordering::Relaxed),
             reactor_polls: self.reactor_polls.load(Ordering::Relaxed),
             admission_rejections: self.admission_rejections.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            conns_shed: self.conns_shed.load(Ordering::Relaxed),
+            net_rejections: self.net_rejections.load(Ordering::Relaxed),
         }
     }
 }
@@ -332,6 +361,9 @@ mod tests {
             completions: 5,
             reactor_polls: 9,
             admission_rejections: 2,
+            connections: 7,
+            conns_shed: 2,
+            net_rejections: 3,
         };
         let mut b = a;
         b.merge(&a);
@@ -349,6 +381,9 @@ mod tests {
         assert_eq!(d.completions, a.completions);
         assert_eq!(d.reactor_polls, a.reactor_polls);
         assert_eq!(d.admission_rejections, a.admission_rejections);
+        assert_eq!(d.connections, a.connections);
+        assert_eq!(d.conns_shed, a.conns_shed);
+        assert_eq!(d.net_rejections, a.net_rejections);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
     }
 
@@ -377,6 +412,9 @@ mod tests {
             completions: 2,
             reactor_polls: 4,
             admission_rejections: 1,
+            connections: 5,
+            conns_shed: 1,
+            net_rejections: 2,
         };
         agg.record(&d);
         agg.record(&d);
@@ -396,6 +434,9 @@ mod tests {
         assert_eq!(s.completions, 4);
         assert_eq!(s.reactor_polls, 8);
         assert_eq!(s.admission_rejections, 2);
+        assert_eq!(s.connections, 10);
+        assert_eq!(s.conns_shed, 2);
+        assert_eq!(s.net_rejections, 4);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

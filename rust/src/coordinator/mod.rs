@@ -24,12 +24,19 @@
 pub mod frontend;
 pub mod lru;
 pub mod metrics;
+pub mod net;
 pub mod pool;
+pub mod wire;
 
-pub use frontend::{Dispatch, Frontend, FrontendThreads, Reactor, Rejected, SessionState};
+pub use frontend::{
+    Dispatch, Frontend, FrontendThreads, Reactor, Rejected, SessionHandle, SessionRecv,
+    SessionReplies, SessionState, SessionSubmitter,
+};
 pub use lru::ClockLru;
 pub use metrics::{AtomicMetrics, Metrics};
+pub use net::{ConnDriver, NetServer, ServerStats, WireStep};
 pub use pool::{Completion, CompletionQueue, PoolReport, ReplySink, Ticket, WorkerPool};
+pub use wire::{ClientMsg, FrameDecoder, ServerMsg};
 
 use std::collections::HashMap;
 use std::sync::Arc;

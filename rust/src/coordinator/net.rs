@@ -1,0 +1,666 @@
+//! Socket serving tier: a TCP / Unix-socket acceptor speaking the
+//! length-prefixed [`wire`](super::wire) protocol in front of the reactor
+//! front end ([`Frontend`]).
+//!
+//! Layering mirrors the rest of the coordinator: all protocol *decisions*
+//! live in [`ConnDriver`], a deterministic state machine fed complete
+//! frames and caller-supplied milliseconds — unit-testable without a
+//! socket, a thread, or a real clock. The I/O shell around it is thin:
+//! one acceptor thread plus a reader/writer thread pair per connection.
+//!
+//! Lifecycle rules enforced here:
+//!
+//! - **Backpressure**: each connection may have at most
+//!   `max_pending_per_conn` requests awaiting replies; excess requests are
+//!   answered `BUSY` immediately (counted in `net_rejections`) instead of
+//!   being queued without bound. Session-level admission caps
+//!   (`inflight_per_session`, `max_inflight`) still apply underneath.
+//! - **Shedding**: idle connections (no complete frame within
+//!   `idle_timeout_ms` — partial frames do *not* reset the clock), framing
+//!   violations (oversized prefix, malformed payload) and mid-frame
+//!   disconnects are shed: the session closes, undelivered completions are
+//!   accounted as late replies, and `conns_shed` increments. A clean EOF
+//!   at a frame boundary is a polite hangup and is not counted.
+//! - **Reply pairing**: the reactor delivers session replies in submission
+//!   order, so wire ids are paired to replies through a per-connection
+//!   FIFO — no id needs to travel through the backend.
+//! - **Shutdown**: a `SHUTDOWN` frame stops the whole server only when
+//!   [`NetConfig::allow_remote_shutdown`] is set; otherwise the sender is
+//!   shed as a protocol violation.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::frontend::{Dispatch, Frontend, SessionRecv, SessionReplies, SessionSubmitter};
+use super::metrics::{AtomicMetrics, Metrics};
+use super::wire::{write_frame, ClientMsg, FrameDecoder, ServerMsg};
+use super::Request;
+use crate::config::NetConfig;
+use crate::error::{Error, Result};
+use crate::patterns::parse_pattern;
+use crate::workload;
+
+/// How often blocked reads and reply waits wake to check deadlines and
+/// the server stop flag. Bounds shutdown latency, not correctness.
+const TICK_MS: u64 = 50;
+
+/// Stack size for per-connection reader/writer threads. They hold a few
+/// KB of live state; the default 8 MB stack would cap connection counts
+/// long before anything else does.
+const CONN_STACK: usize = 128 * 1024;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// ConnDriver: the per-connection protocol state machine
+// ---------------------------------------------------------------------------
+
+/// What the I/O shell must do next, as decided by [`ConnDriver`].
+#[derive(Debug)]
+pub enum WireStep {
+    /// Submit into the session; the reply is written when it arrives.
+    Submit { id: u64, request: Request },
+    /// Write this rejection immediately (`BUSY` on the pending cap, `ERR`
+    /// on a boundary-invalid request). Counted in `net_rejections`.
+    Reject(ServerMsg),
+    /// Honored remote shutdown: stop the server, close this connection
+    /// cleanly.
+    Shutdown,
+    /// Protocol violation: shed the connection (counted in `conns_shed`).
+    Shed(String),
+}
+
+/// Deterministic per-connection protocol logic. Time is injected as
+/// milliseconds-since-accept so tests can replay any interleaving of
+/// frames, silence, and backpressure without sockets or clocks.
+pub struct ConnDriver {
+    cfg: NetConfig,
+    last_frame_ms: u64,
+}
+
+impl ConnDriver {
+    /// `now_ms` starts the idle clock: a freshly accepted connection has
+    /// `idle_timeout_ms` to produce its first complete frame.
+    pub fn new(cfg: NetConfig, now_ms: u64) -> ConnDriver {
+        ConnDriver { cfg, last_frame_ms: now_ms }
+    }
+
+    /// True once no *complete* frame has arrived for `idle_timeout_ms`.
+    /// Partial frames never reset the clock, so a peer trickling one byte
+    /// per tick cannot hold a session open (`idle_timeout_ms == 0`
+    /// disables the deadline).
+    pub fn idle_exceeded(&self, now_ms: u64) -> bool {
+        self.cfg.idle_timeout_ms != 0
+            && now_ms.saturating_sub(self.last_frame_ms) >= self.cfg.idle_timeout_ms
+    }
+
+    /// Decide what one complete frame means. `pending` is the number of
+    /// requests currently awaiting replies on this connection.
+    pub fn on_frame(&mut self, payload: &[u8], now_ms: u64, pending: usize) -> WireStep {
+        self.last_frame_ms = now_ms;
+        let msg = match ClientMsg::decode(payload) {
+            Ok(m) => m,
+            Err(e) => return WireStep::Shed(format!("malformed frame: {e}")),
+        };
+        match msg {
+            ClientMsg::Shutdown => {
+                if self.cfg.allow_remote_shutdown {
+                    WireStep::Shutdown
+                } else {
+                    WireStep::Shed("remote shutdown not permitted".into())
+                }
+            }
+            ClientMsg::Request { id, n, seed, pattern } => {
+                if n as usize > self.cfg.max_n {
+                    let message = format!("n={} exceeds the server cap {}", n, self.cfg.max_n);
+                    return WireStep::Reject(ServerMsg::Err { id, message });
+                }
+                if pending >= self.cfg.max_pending_per_conn {
+                    return WireStep::Reject(ServerMsg::Busy { id });
+                }
+                match parse_pattern(&pattern, n as usize) {
+                    Ok(comp) => {
+                        // requests name inputs by (n, seed); synthesize the
+                        // channels server-side so frames stay tiny — same
+                        // 0.1..2.0 domain as workload::request_inputs, safe
+                        // for every operator
+                        let inputs: Vec<Vec<f32>> = (0..comp.inputs)
+                            .map(|c| {
+                                workload::vector(n as usize, seed.wrapping_add(c as u64), 0.1, 2.0)
+                            })
+                            .collect();
+                        WireStep::Submit { id, request: Request::dynamic(comp, inputs) }
+                    }
+                    Err(e) => WireStep::Reject(ServerMsg::Err { id, message: e.to_string() }),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stream / listener shims: one code path for TCP and Unix sockets
+// ---------------------------------------------------------------------------
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn shutdown_both(&self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.shutdown(Shutdown::Both),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.shutdown(Shutdown::Both),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// `"unix:<path>"` binds a Unix socket (replacing a stale file);
+    /// anything else is a TCP address like `127.0.0.1:7000` (`:0` picks a
+    /// free port — read it back via [`NetServer::local_addr`]).
+    fn bind(addr: &str) -> Result<(Listener, String, Option<String>)> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                return Ok((Listener::Unix(l), addr.to_string(), Some(path.to_string())));
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(Error::Config(format!(
+                    "unix sockets are unavailable on this platform: {addr}"
+                )));
+            }
+        }
+        let l = TcpListener::bind(addr)?;
+        let local = l.local_addr()?.to_string();
+        Ok((Listener::Tcp(l), local, None))
+    }
+
+    fn set_nonblocking(&self) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true),
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when no peer is waiting.
+    fn poll_accept(&self) -> io::Result<Option<Conn>> {
+        let r = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        };
+        match r {
+            Ok(c) => Ok(Some(c)),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NetServer: acceptor + per-connection thread pairs
+// ---------------------------------------------------------------------------
+
+/// Counter snapshot for the serving tier (drawn from the shared metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub connections: u64,
+    pub conns_shed: u64,
+    pub net_rejections: u64,
+}
+
+/// A running socket server in front of a [`Frontend`]. Sessions shard
+/// across the front end's reactors exactly as in-process sessions do
+/// (round-robin by session id), so `--reactors N` scales the socket tier
+/// with no extra plumbing here.
+pub struct NetServer {
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    metrics: Arc<AtomicMetrics>,
+    local_addr: String,
+    unix_path: Option<String>,
+}
+
+impl NetServer {
+    /// Bind `addr` and start accepting. The front end's reactors must be
+    /// running (see [`Frontend::spawn`]) or sessions will queue forever.
+    pub fn bind<B>(
+        addr: &str,
+        front: Arc<Frontend<B>>,
+        cfg: NetConfig,
+        metrics: Arc<AtomicMetrics>,
+    ) -> Result<NetServer>
+    where
+        B: Dispatch + Send + Sync + 'static,
+    {
+        cfg.validate()?;
+        let (listener, local_addr, unix_path) = Listener::bind(addr)?;
+        listener.set_nonblocking()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (stop, conns, metrics) = (stop.clone(), conns.clone(), metrics.clone());
+            std::thread::Builder::new()
+                .name("overlay-acceptor".into())
+                .spawn(move || accept_loop(listener, front, cfg, stop, conns, metrics))
+                .map_err(Error::Io)?
+        };
+        Ok(NetServer {
+            stop,
+            accept: Some(accept),
+            conns,
+            metrics,
+            local_addr,
+            unix_path,
+        })
+    }
+
+    /// The bound address: the actual `ip:port` for TCP (resolving `:0`),
+    /// the `unix:<path>` string for Unix sockets.
+    pub fn local_addr(&self) -> &str {
+        &self.local_addr
+    }
+
+    /// True once a stop was requested (locally or by an authorized remote
+    /// `SHUTDOWN` frame).
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Serving-tier counters so far.
+    pub fn stats(&self) -> ServerStats {
+        let m = self.metrics.snapshot();
+        ServerStats {
+            connections: m.connections,
+            conns_shed: m.conns_shed,
+            net_rejections: m.net_rejections,
+        }
+    }
+
+    /// Ask the acceptor and every connection to wind down. Returns
+    /// immediately; pair with [`NetServer::join`].
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the server stops: the acceptor exits once the stop
+    /// flag is set (locally via [`NetServer::request_stop`], or remotely
+    /// via an authorized `SHUTDOWN` frame), then every connection thread
+    /// is joined. Connections notice the flag within one tick.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = lock(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(p) = &self.unix_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    /// `request_stop` + `join`.
+    pub fn stop(self) {
+        self.request_stop();
+        self.join();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // a dropped-without-join server must not pin its threads forever
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn accept_loop<B>(
+    listener: Listener,
+    front: Arc<Frontend<B>>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    metrics: Arc<AtomicMetrics>,
+) where
+    B: Dispatch + Send + Sync + 'static,
+{
+    while !stop.load(Ordering::Relaxed) {
+        match listener.poll_accept() {
+            Ok(Some(conn)) => serve_conn(conn, &front, &cfg, &stop, &conns, &metrics),
+            // no peer waiting (or a transient accept error): nap one beat
+            Ok(None) | Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Wire one accepted stream to a fresh session: a reader thread (frames
+/// in, protocol decisions, submissions) and a writer thread (in-order
+/// replies out). The reader owns the connection's fate; the writer exits
+/// when the reader is done and the reply FIFO has drained.
+fn serve_conn<B>(
+    conn: Conn,
+    front: &Arc<Frontend<B>>,
+    cfg: &NetConfig,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    metrics: &Arc<AtomicMetrics>,
+) where
+    B: Dispatch + Send + Sync + 'static,
+{
+    let write_half = match conn.try_clone() {
+        Ok(c) => Arc::new(Mutex::new(c)),
+        Err(_) => return, // peer already gone
+    };
+    metrics.record(&Metrics { connections: 1, ..Default::default() });
+    let (sub, replies) = front.open_session().split();
+    let pending: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let reader_done = Arc::new(AtomicBool::new(false));
+
+    let writer = {
+        let (write_half, pending, reader_done) =
+            (write_half.clone(), pending.clone(), reader_done.clone());
+        std::thread::Builder::new()
+            .name("overlay-net-w".into())
+            .stack_size(CONN_STACK)
+            .spawn(move || run_writer(replies, write_half, pending, reader_done))
+    };
+    let reader = {
+        let (cfg, stop, metrics) = (cfg.clone(), stop.clone(), metrics.clone());
+        std::thread::Builder::new()
+            .name("overlay-net-r".into())
+            .stack_size(CONN_STACK)
+            .spawn(move || run_reader(conn, write_half, sub, pending, reader_done, stop, cfg, metrics))
+    };
+    // a failed spawn drops its closure: the submitter drop closes the
+    // session, which disconnects the writer — nothing leaks
+    let mut g = lock(conns);
+    g.extend(writer.ok());
+    g.extend(reader.ok());
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_reader(
+    mut stream: Conn,
+    write_half: Arc<Mutex<Conn>>,
+    sub: SessionSubmitter,
+    pending: Arc<Mutex<VecDeque<u64>>>,
+    reader_done: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    cfg: NetConfig,
+    metrics: Arc<AtomicMetrics>,
+) {
+    let start = Instant::now();
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(TICK_MS)));
+    let mut dec = FrameDecoder::new(cfg.max_frame);
+    let mut driver = ConnDriver::new(cfg, 0);
+    let mut buf = [0u8; 8192];
+    let mut shed = false;
+    'conn: loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let now = start.elapsed().as_millis() as u64;
+        if driver.idle_exceeded(now) {
+            shed = true;
+            break;
+        }
+        let k = match stream.read(&mut buf) {
+            Ok(0) => {
+                shed = dec.is_mid_frame();
+                break;
+            }
+            Ok(k) => k,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => {
+                shed = true;
+                break;
+            }
+        };
+        dec.push(&buf[..k]);
+        loop {
+            let payload = match dec.next_frame() {
+                Ok(Some(p)) => p,
+                Ok(None) => break,
+                Err(_) => {
+                    shed = true;
+                    break 'conn;
+                }
+            };
+            let now = start.elapsed().as_millis() as u64;
+            let pending_now = lock(&pending).len();
+            match driver.on_frame(&payload, now, pending_now) {
+                WireStep::Submit { id, request } => {
+                    lock(&pending).push_back(id);
+                    if sub.submit(request).is_err() {
+                        // front end is shutting down: no completion will
+                        // come, so take the id back and answer directly
+                        lock(&pending).pop_back();
+                        let msg = ServerMsg::Err { id, message: "server shutting down".into() };
+                        let _ = send(&write_half, &msg);
+                        break 'conn;
+                    }
+                }
+                WireStep::Reject(msg) => {
+                    metrics.record(&Metrics { net_rejections: 1, ..Default::default() });
+                    if send(&write_half, &msg).is_err() {
+                        shed = true;
+                        break 'conn;
+                    }
+                }
+                WireStep::Shutdown => {
+                    stop.store(true, Ordering::Relaxed);
+                    break 'conn;
+                }
+                WireStep::Shed(_reason) => {
+                    shed = true;
+                    break 'conn;
+                }
+            }
+        }
+    }
+    if shed {
+        metrics.record(&Metrics { conns_shed: 1, ..Default::default() });
+    }
+    reader_done.store(true, Ordering::Relaxed);
+    // closing the session disconnects the reply stream, unblocking the
+    // writer; in-flight completions are accounted late by the reactor
+    drop(sub);
+    let _ = stream.shutdown_both();
+}
+
+fn run_writer(
+    replies: SessionReplies,
+    write_half: Arc<Mutex<Conn>>,
+    pending: Arc<Mutex<VecDeque<u64>>>,
+    reader_done: Arc<AtomicBool>,
+) {
+    loop {
+        match replies.recv_timeout(Duration::from_millis(TICK_MS)) {
+            SessionRecv::Reply(result) => {
+                // in-session replies arrive in submission order, so the
+                // oldest pending wire id is this reply's id
+                let Some(id) = lock(&pending).pop_front() else { return };
+                let msg = match result {
+                    Ok(resp) => ServerMsg::Ok {
+                        id,
+                        cached: resp.cached,
+                        jit_nanos: (resp.jit_seconds * 1e9) as u64,
+                        value: resp.run.output,
+                    },
+                    Err(Error::PoolBusy { .. }) => ServerMsg::Busy { id },
+                    Err(e) => ServerMsg::Err { id, message: e.to_string() },
+                };
+                if send(&write_half, &msg).is_err() {
+                    return;
+                }
+            }
+            SessionRecv::Timeout => {
+                if reader_done.load(Ordering::Relaxed) && lock(&pending).is_empty() {
+                    return;
+                }
+            }
+            SessionRecv::Disconnected => return,
+        }
+    }
+}
+
+fn send(write_half: &Mutex<Conn>, msg: &ServerMsg) -> io::Result<()> {
+    let frame = msg.to_frame();
+    write_frame(&mut *lock(write_half), &frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_frame(id: u64, n: u32, seed: u64, pattern: &str) -> Vec<u8> {
+        let f = ClientMsg::Request { id, n, seed, pattern: pattern.into() }.to_frame();
+        f[4..].to_vec() // payload only, as the decoder hands it over
+    }
+
+    fn driver(cfg: NetConfig) -> ConnDriver {
+        ConnDriver::new(cfg, 0)
+    }
+
+    #[test]
+    fn driver_submits_a_valid_request_with_synthesized_inputs() {
+        let mut d = driver(NetConfig::default());
+        match d.on_frame(&req_frame(7, 64, 3, "vmul-reduce"), 10, 0) {
+            WireStep::Submit { id, request } => {
+                assert_eq!(id, 7);
+                assert_eq!(request.inputs.len(), 2);
+                assert_eq!(request.inputs[0].len(), 64);
+                assert_ne!(request.inputs[0], request.inputs[1], "per-channel seeds differ");
+            }
+            other => panic!("expected Submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn driver_rejects_over_cap_and_bad_patterns_without_shedding() {
+        let cfg = NetConfig { max_n: 128, max_pending_per_conn: 2, ..NetConfig::default() };
+        let mut d = driver(cfg);
+        assert!(matches!(
+            d.on_frame(&req_frame(1, 129, 0, "vmul-reduce"), 0, 0),
+            WireStep::Reject(ServerMsg::Err { id: 1, .. })
+        ));
+        assert!(matches!(
+            d.on_frame(&req_frame(2, 64, 0, "map:add"), 0, 0),
+            WireStep::Reject(ServerMsg::Err { id: 2, .. })
+        ));
+        // pending at the cap: BUSY, below it: Submit
+        assert!(matches!(
+            d.on_frame(&req_frame(3, 64, 0, "vmul-reduce"), 0, 2),
+            WireStep::Reject(ServerMsg::Busy { id: 3 })
+        ));
+        assert!(matches!(
+            d.on_frame(&req_frame(4, 64, 0, "vmul-reduce"), 0, 1),
+            WireStep::Submit { id: 4, .. }
+        ));
+    }
+
+    #[test]
+    fn driver_idle_clock_resets_only_on_complete_frames() {
+        let cfg = NetConfig { idle_timeout_ms: 100, ..NetConfig::default() };
+        let mut d = driver(cfg);
+        assert!(!d.idle_exceeded(99));
+        assert!(d.idle_exceeded(100), "deadline is inclusive");
+        // a frame at t=90 pushes the deadline to t=190
+        let _ = d.on_frame(&req_frame(1, 8, 0, "vmul-reduce"), 90, 0);
+        assert!(!d.idle_exceeded(189));
+        assert!(d.idle_exceeded(190));
+        // idle_timeout_ms == 0 disables the deadline entirely
+        let d = driver(NetConfig { idle_timeout_ms: 0, ..NetConfig::default() });
+        assert!(!d.idle_exceeded(u64::MAX));
+    }
+
+    #[test]
+    fn driver_gates_remote_shutdown_on_config() {
+        let payload = ClientMsg::Shutdown.to_frame()[4..].to_vec();
+        let mut open = driver(NetConfig { allow_remote_shutdown: true, ..NetConfig::default() });
+        assert!(matches!(open.on_frame(&payload, 0, 0), WireStep::Shutdown));
+        let mut closed = driver(NetConfig::default());
+        assert!(matches!(closed.on_frame(&payload, 0, 0), WireStep::Shed(_)));
+    }
+
+    #[test]
+    fn driver_sheds_malformed_payloads() {
+        let mut d = driver(NetConfig::default());
+        assert!(matches!(d.on_frame(&[0x7F, 0, 1], 0, 0), WireStep::Shed(_)));
+    }
+}

@@ -65,7 +65,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::{
     AcceleratorCache, AtomicMetrics, ClockLru, Coordinator, Job, Metrics, Request, Response,
@@ -160,15 +160,32 @@ impl CompletionQueue {
     /// Consumes every pending wakeup (a burst of submissions costs one
     /// extra poll, not one per submission); queued completions are left
     /// for [`CompletionQueue::drain`].
+    ///
+    /// The timeout is an **absolute deadline**: the remaining wait is
+    /// recomputed on every loop iteration. Re-arming the full timeout per
+    /// condvar wakeup — the previous behavior — let wakeup churn (spurious
+    /// wakeups, or a completion observed by the notified waiter only after
+    /// a racing `drain` emptied the queue) park the caller far beyond the
+    /// timeout it asked for.
     pub fn wait(&self, timeout: Duration) {
+        // `checked_add` guards pathological `Duration::MAX`-style timeouts;
+        // an unrepresentable deadline degrades to hour-long re-arms.
+        let deadline = Instant::now().checked_add(timeout);
         let mut g = self.lock();
         while g.completions.is_empty() && g.wakes == 0 {
-            let (woken, to) =
-                self.cv.wait_timeout(g, timeout).unwrap_or_else(|p| p.into_inner());
+            let remaining = match deadline {
+                Some(d) => {
+                    let r = d.saturating_duration_since(Instant::now());
+                    if r.is_zero() {
+                        return;
+                    }
+                    r
+                }
+                None => Duration::from_secs(3600),
+            };
+            let (woken, _) =
+                self.cv.wait_timeout(g, remaining).unwrap_or_else(|p| p.into_inner());
             g = woken;
-            if to.timed_out() {
-                return;
-            }
         }
         g.wakes = 0;
     }
@@ -1409,6 +1426,56 @@ mod tests {
         // a pending wakeup makes wait return immediately (consumed once)
         cq.wait(Duration::from_secs(5));
         assert!(cq.is_empty());
+    }
+
+    #[test]
+    fn wait_returns_near_its_timeout_when_nothing_arrives() {
+        let cq = CompletionQueue::new();
+        let t0 = Instant::now();
+        cq.wait(Duration::from_millis(50));
+        let elapsed = t0.elapsed();
+        // lower bound: the wait genuinely parked (allow coarse clocks)
+        assert!(elapsed >= Duration::from_millis(40), "returned early: {elapsed:?}");
+        // upper bound: generous slack for CI schedulers, but nowhere near
+        // the unbounded park the re-armed timeout allowed
+        assert!(elapsed <= Duration::from_secs(5), "overslept: {elapsed:?}");
+    }
+
+    #[test]
+    fn wait_deadline_bounds_park_under_wakeup_churn() {
+        // A churn thread pushes a completion and immediately drains it
+        // back, so the waiter's condvar keeps firing while the predicate is
+        // frequently already false again — the exact pattern that made the
+        // re-armed timeout restart from zero on every wakeup. The absolute
+        // deadline must bound the total park regardless.
+        let cq = Arc::new(CompletionQueue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let churn = {
+            let cq = cq.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    cq.push(Completion {
+                        ticket: cq.next_ticket(),
+                        result: Err(Error::Runtime("churn".into())),
+                    });
+                    cq.drain();
+                }
+            })
+        };
+        let t0 = Instant::now();
+        // several waits back-to-back: each must individually respect its
+        // deadline (early returns on an observed completion are fine)
+        for _ in 0..20 {
+            cq.wait(Duration::from_millis(20));
+        }
+        let elapsed = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+        assert!(
+            elapsed <= Duration::from_secs(20),
+            "wait parked {elapsed:?}: deadline not honored under churn"
+        );
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Length-prefixed wire protocol for the socket serving tier.
+//!
+//! Framing: every message is a `u32` little-endian payload length followed
+//! by the payload; the payload's first byte is a message tag. Client tags
+//! sit below `0x80`, server tags at or above it, so a misdirected frame is
+//! caught at decode rather than misparsed.
+//!
+//! ```text
+//! REQUEST  0x01  id:u64  n:u32  seed:u64  pattern:str     (client → server)
+//! SHUTDOWN 0x02                                           (client → server)
+//! OK       0x81  id:u64  cached:u8  jit_nanos:u64  value  (server → client)
+//! ERR      0x82  id:u64  message:str                      (server → client)
+//! BUSY     0x83  id:u64                                   (server → client)
+//! ```
+//!
+//! `str` is a `u32` length + UTF-8 bytes; `value` is a kind byte (`0` =
+//! scalar, `1` = vector) followed by one `f32` or a `u32` count + that
+//! many `f32`s. A request names its inputs by `(n, seed)` instead of
+//! shipping vectors: the server synthesizes them with
+//! [`crate::workload::vector`], so a loadgen driving thousands of
+//! connections moves tens of bytes per request, not kilobytes, and the
+//! reply value is still checkable by recomputing from the same seed.
+//!
+//! Decoding is split in two layers so it is testable without sockets:
+//! [`FrameDecoder`] turns an arbitrary byte-chunk stream into complete
+//! payloads (rejecting oversized lengths *from the prefix alone*, before
+//! buffering a hostile frame), and [`ClientMsg::decode`] /
+//! [`ServerMsg::decode`] parse one payload. The blocking helpers
+//! [`read_frame`] / [`write_frame`] wrap the same framing over
+//! `std::io` streams for the serving tier and the loadgen.
+
+use std::io::{self, Read, Write};
+
+use crate::error::{Error, Result};
+use crate::exec::cpu::Value;
+
+/// Default cap on a single frame's payload (1 MiB): large enough for a
+/// 200k-element vector reply, small enough that a hostile length prefix
+/// cannot balloon a connection's buffer.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 20;
+
+const TAG_REQUEST: u8 = 0x01;
+const TAG_SHUTDOWN: u8 = 0x02;
+const TAG_OK: u8 = 0x81;
+const TAG_ERR: u8 = 0x82;
+const TAG_BUSY: u8 = 0x83;
+
+/// What a client sends.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// One request: `id` is echoed verbatim in the reply; `pattern` is a
+    /// composition in the CLI grammar (see [`crate::patterns::parse_pattern`]);
+    /// inputs are synthesized server-side from `(n, seed)`.
+    Request { id: u64, n: u32, seed: u64, pattern: String },
+    /// Ask the server to stop (honored only when enabled at serve time).
+    Shutdown,
+}
+
+/// What the server sends. Every `Request` gets exactly one of these, with
+/// the request's `id` echoed back — the id, not arrival order, pairs
+/// replies to requests, so a client may pipeline freely.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// Served: the computed value plus cache/JIT accounting.
+    Ok { id: u64, cached: bool, jit_nanos: u64, value: Value },
+    /// Failed: the error message is this request's one reply.
+    Err { id: u64, message: String },
+    /// Shed: admission caps or pool backpressure rejected the request
+    /// without serving it. The client may retry later.
+    Busy { id: u64 },
+}
+
+impl ClientMsg {
+    /// Encode as a complete frame (length prefix included).
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(32);
+        match self {
+            ClientMsg::Request { id, n, seed, pattern } => {
+                p.push(TAG_REQUEST);
+                put_u64(&mut p, *id);
+                put_u32(&mut p, *n);
+                put_u64(&mut p, *seed);
+                put_str(&mut p, pattern);
+            }
+            ClientMsg::Shutdown => p.push(TAG_SHUTDOWN),
+        }
+        frame(p)
+    }
+
+    /// Decode one payload (as produced by [`FrameDecoder`] / [`read_frame`]).
+    pub fn decode(payload: &[u8]) -> Result<ClientMsg> {
+        let mut r = Reader::new(payload);
+        let msg = match r.u8("tag")? {
+            TAG_REQUEST => ClientMsg::Request {
+                id: r.u64("id")?,
+                n: r.u32("n")?,
+                seed: r.u64("seed")?,
+                pattern: r.str("pattern")?,
+            },
+            TAG_SHUTDOWN => ClientMsg::Shutdown,
+            t => return Err(Error::Parse(format!("unknown client message tag 0x{t:02x}"))),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+impl ServerMsg {
+    /// Encode as a complete frame (length prefix included).
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(32);
+        match self {
+            ServerMsg::Ok { id, cached, jit_nanos, value } => {
+                p.push(TAG_OK);
+                put_u64(&mut p, *id);
+                p.push(u8::from(*cached));
+                put_u64(&mut p, *jit_nanos);
+                match value {
+                    Value::Scalar(x) => {
+                        p.push(0);
+                        put_f32(&mut p, *x);
+                    }
+                    Value::Vector(v) => {
+                        p.push(1);
+                        put_u32(&mut p, v.len() as u32);
+                        for x in v {
+                            put_f32(&mut p, *x);
+                        }
+                    }
+                }
+            }
+            ServerMsg::Err { id, message } => {
+                p.push(TAG_ERR);
+                put_u64(&mut p, *id);
+                put_str(&mut p, message);
+            }
+            ServerMsg::Busy { id } => {
+                p.push(TAG_BUSY);
+                put_u64(&mut p, *id);
+            }
+        }
+        frame(p)
+    }
+
+    /// Decode one payload (as produced by [`FrameDecoder`] / [`read_frame`]).
+    pub fn decode(payload: &[u8]) -> Result<ServerMsg> {
+        let mut r = Reader::new(payload);
+        let msg = match r.u8("tag")? {
+            TAG_OK => {
+                let id = r.u64("id")?;
+                let cached = match r.u8("cached")? {
+                    0 => false,
+                    1 => true,
+                    b => return Err(Error::Parse(format!("bad cached flag {b}"))),
+                };
+                let jit_nanos = r.u64("jit_nanos")?;
+                let value = match r.u8("value kind")? {
+                    0 => Value::Scalar(r.f32("scalar")?),
+                    1 => {
+                        let len = r.u32("vector length")? as usize;
+                        let mut v = Vec::with_capacity(len.min(DEFAULT_MAX_FRAME / 4));
+                        for i in 0..len {
+                            v.push(r.f32(&format!("vector[{i}]"))?);
+                        }
+                        Value::Vector(v)
+                    }
+                    k => return Err(Error::Parse(format!("unknown value kind {k}"))),
+                };
+                ServerMsg::Ok { id, cached, jit_nanos, value }
+            }
+            TAG_ERR => ServerMsg::Err { id: r.u64("id")?, message: r.str("message")? },
+            TAG_BUSY => ServerMsg::Busy { id: r.u64("id")? },
+            t => return Err(Error::Parse(format!("unknown server message tag 0x{t:02x}"))),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Prepend the `u32` LE length prefix to a payload.
+fn frame(payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// A strict little-endian payload reader: every read names the field it is
+/// for (so truncation errors say *what* was cut off), and [`Reader::finish`]
+/// rejects trailing garbage.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            return Err(Error::Parse(format!(
+                "frame truncated reading {what}: need {len} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        let b = self.take(4, what)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        let b = self.take(len, what)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Parse(format!("{what} is not valid UTF-8")))
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Parse(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Incremental frame extractor over an arbitrary byte-chunk stream.
+///
+/// Feed whatever a socket read returned with [`FrameDecoder::push`]; pull
+/// complete payloads with [`FrameDecoder::next_frame`]. Frames split
+/// across pushes reassemble; multiple frames in one push come out one by
+/// one. A length prefix above `max_frame` is rejected *before* any of
+/// that frame's payload is buffered — the error is sticky, because after
+/// a framing violation the stream has no recoverable sync point.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    max_frame: usize,
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    /// `max_frame` caps a single payload's length (`0` = use
+    /// [`DEFAULT_MAX_FRAME`]).
+    pub fn new(max_frame: usize) -> FrameDecoder {
+        FrameDecoder {
+            buf: Vec::new(),
+            max_frame: if max_frame == 0 { DEFAULT_MAX_FRAME } else { max_frame },
+            poisoned: false,
+        }
+    }
+
+    /// Append raw bytes from the stream.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Extract the next complete payload, if one is buffered. `Ok(None)`
+    /// means "need more bytes"; an error means the stream is framing-broken
+    /// (oversized prefix) and every later call repeats the error.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.poisoned {
+            return Err(Error::Parse("frame stream already failed".into()));
+        }
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > self.max_frame {
+            self.poisoned = true;
+            return Err(Error::Parse(format!(
+                "frame length {len} exceeds cap {}",
+                self.max_frame
+            )));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let payload = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(payload))
+    }
+
+    /// True when a partial frame (or prefix) is buffered — a disconnect
+    /// now is a mid-frame cut, not a clean close.
+    pub fn is_mid_frame(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Bytes currently buffered (diagnostics).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Write one frame (length prefix + payload) to a blocking stream.
+pub fn write_frame(w: &mut impl Write, frame_bytes: &[u8]) -> io::Result<()> {
+    w.write_all(frame_bytes)
+}
+
+/// Read one frame from a blocking stream. `Ok(None)` is a clean EOF at a
+/// frame boundary; EOF inside a prefix or payload is
+/// [`io::ErrorKind::UnexpectedEof`], and an oversized prefix is
+/// [`io::ErrorKind::InvalidData`] — raised before the payload is read.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> io::Result<Option<Vec<u8>>> {
+    let max_frame = if max_frame == 0 { DEFAULT_MAX_FRAME } else { max_frame };
+    let mut prefix = [0u8; 4];
+    match read_exact_or_eof(r, &mut prefix)? {
+        Filled::CleanEof => return Ok(None),
+        Filled::Full => {}
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {max_frame}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+enum Filled {
+    Full,
+    CleanEof,
+}
+
+/// `read_exact`, except EOF *before the first byte* is reported as clean.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<Filled> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(Filled::CleanEof),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("stream cut {got} bytes into a frame prefix"),
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Filled::Full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reader_rejects_trailing_and_truncated() {
+        let mut p = Vec::new();
+        p.push(TAG_BUSY);
+        put_u64(&mut p, 7);
+        p.push(0xFF); // trailing garbage
+        assert!(ServerMsg::decode(&p).is_err());
+        assert!(ServerMsg::decode(&p[..4]).is_err(), "truncated id");
+    }
+
+    #[test]
+    fn frame_prefix_matches_payload_len() {
+        let f = ClientMsg::Shutdown.to_frame();
+        assert_eq!(f.len(), 5);
+        assert_eq!(u32::from_le_bytes([f[0], f[1], f[2], f[3]]), 1);
+        assert_eq!(f[4], TAG_SHUTDOWN);
+    }
+}

@@ -39,7 +39,12 @@
 //!   (`repro serve --workers N --drain-window W --steal-depth D`), and
 //!   fronted by [`coordinator::frontend`], an event-driven session layer
 //!   multiplexing many clients over a shared completion queue
-//!   (`repro serve --frontend reactor --sessions S --inflight I`);
+//!   (`repro serve --frontend reactor --sessions S --inflight I`), and
+//!   exposed over TCP/Unix sockets by [`coordinator::net`], a socket
+//!   serving tier speaking the length-prefixed [`coordinator::wire`]
+//!   protocol with per-connection backpressure and idle shedding
+//!   (`repro serve --listen ADDR --reactors N`, load-driven by
+//!   `repro loadgen`);
 //! * [`testkit`] — deterministic service-layer test harness: a virtual
 //!   clock plus a scripted-latency engine shim, so ordering, fairness and
 //!   starvation properties are proven without sleeps.
@@ -67,5 +72,5 @@ pub mod testkit;
 pub mod timing;
 pub mod workload;
 
-pub use config::{FrontendConfig, OverlayConfig, ServiceConfig};
+pub use config::{FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
 pub use error::{Error, Result};

@@ -12,22 +12,29 @@
 //!   repro isa                   print the 42-instruction opcode table
 //!   repro inspect --pattern P   show placement + disassembled program
 //!   repro serve --requests K --workers N   multi-fabric pool service demo
+//!   repro serve --listen ADDR --reactors N socket serving tier (wire protocol)
+//!   repro loadgen --addr ADDR --conns C    closed/open-loop load + BENCH JSON
 //! ```
 //!
 //! Arg parsing is hand-rolled (`--flag value` pairs) and errors ride a
 //! boxed-error shim — the workspace builds offline without clap or anyhow.
 
-use jit_overlay::bitstream::OperatorKind;
-use jit_overlay::coordinator::{Coordinator, Frontend, Request, WorkerPool};
+use std::io::{Read, Write};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use jit_overlay::benchkit::{write_bench_json, JsonObject};
+use jit_overlay::coordinator::wire::{read_frame, write_frame, ClientMsg, ServerMsg};
+use jit_overlay::coordinator::{Coordinator, Frontend, NetServer, Request, WorkerPool};
 use jit_overlay::exec::Engine;
 use jit_overlay::isa::{asm, Category, Opcode};
 use jit_overlay::jit::Jit;
-use jit_overlay::patterns::Composition;
+use jit_overlay::patterns::{parse_pattern, Composition};
 use jit_overlay::place::StaticScenario;
 use jit_overlay::report::{ms, speedup, Table};
 use jit_overlay::runtime::{default_artifacts_dir, Runtime};
 use jit_overlay::timing::Target;
-use jit_overlay::{workload, FrontendConfig, OverlayConfig, ServiceConfig};
+use jit_overlay::{workload, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
 
 /// CLI-local result over a boxed error (the anyhow stand-in).
 type Result<T, E = Box<dyn std::error::Error>> = std::result::Result<T, E>;
@@ -100,41 +107,6 @@ impl Args {
     fn str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
-}
-
-fn parse_pattern(s: &str, n: usize) -> Result<Composition> {
-    let parse_op = |name: &str| -> Result<OperatorKind> {
-        OperatorKind::from_name(name).ok_or_else(|| anyhow!("unknown operator `{name}`"))
-    };
-    if s == "vmul-reduce" {
-        return Ok(Composition::vmul_reduce(n));
-    }
-    if let Some(op) = s.strip_prefix("map:") {
-        return Ok(Composition::map(parse_op(op)?, n));
-    }
-    if let Some(ops) = s.strip_prefix("chain:") {
-        let ops: Vec<OperatorKind> = ops.split(',').map(parse_op).collect::<Result<_>>()?;
-        return Ok(Composition::chain(&ops, n)?);
-    }
-    if let Some(t) = s.strip_prefix("filter-reduce:") {
-        return Ok(Composition::filter_reduce(t.parse()?, n));
-    }
-    if let Some(a) = s.strip_prefix("axpy:") {
-        return Ok(Composition::axpy(a.parse()?, n));
-    }
-    if let Some(rest) = s.strip_prefix("branch:") {
-        let parts: Vec<&str> = rest.split(',').collect();
-        if parts.len() != 3 {
-            bail!("branch needs <t>,<then>,<else>");
-        }
-        return Ok(Composition::branch(
-            parts[0].parse()?,
-            parse_op(parts[1])?,
-            parse_op(parts[2])?,
-            n,
-        ));
-    }
-    bail!("unknown pattern `{s}` (try vmul-reduce, map:sqrt, chain:abs,sqrt, filter-reduce:0.5, axpy:2.0, branch:0.0,sqrt,square)")
 }
 
 fn parse_target(s: &str) -> Result<Target> {
@@ -345,6 +317,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("listen") {
+        return cmd_serve_listen(args, &addr.to_string());
+    }
     let requests = args.usize("requests", 64)?;
     let n = args.usize("n", 1024)?;
     let workers = args.usize("workers", 1)?;
@@ -479,12 +454,394 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve> [--flag value ...]
+/// `repro serve --listen ADDR`: the socket serving tier. Blocks until an
+/// authorized remote `SHUTDOWN` frame arrives (`--allow-remote-shutdown 1`
+/// — which `repro loadgen --stop-server 1` sends when it is done).
+fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
+    let workers = args.usize("workers", 2)?.max(1);
+    let reactors = args.usize("reactors", 2)?.max(1);
+    let inflight = args.usize("inflight", FrontendConfig::default().inflight_per_session)?.max(1);
+    let max_inflight = args.usize("max-inflight", 1024)?.max(1);
+    let mut service = ServiceConfig::with_workers(workers);
+    service.queue_capacity = args.usize("queue-capacity", service.queue_capacity)?;
+    let defaults = NetConfig::default();
+    let net = NetConfig {
+        idle_timeout_ms: args.u64("idle-timeout-ms", defaults.idle_timeout_ms)?,
+        max_pending_per_conn: args.usize("max-pending", defaults.max_pending_per_conn)?,
+        max_n: args.usize("max-n", defaults.max_n)?,
+        allow_remote_shutdown: args.str("allow-remote-shutdown", "0") == "1",
+        ..defaults
+    };
+
+    let pool = std::sync::Arc::new(WorkerPool::new(OverlayConfig::default(), service)?);
+    let fcfg = FrontendConfig { reactors, inflight_per_session: inflight, max_inflight };
+    let front = std::sync::Arc::new(
+        Frontend::new(pool.clone(), fcfg, pool.metrics.clone()).map_err(|e| anyhow!("{e}"))?,
+    );
+    let threads = front.spawn().map_err(|e| anyhow!("{e}"))?;
+    let server = NetServer::bind(addr, front.clone(), net.clone(), pool.metrics.clone())
+        .map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "listening on {} ({reactors} reactors, {workers} workers, max {} pending/conn)",
+        server.local_addr(),
+        net.max_pending_per_conn
+    );
+    if !net.allow_remote_shutdown {
+        println!("remote shutdown disabled; stop with Ctrl-C (--allow-remote-shutdown 1 to enable)");
+    }
+    server.join(); // until an authorized SHUTDOWN frame flips the stop flag
+    threads.shutdown();
+    drop(front);
+    let report = std::sync::Arc::try_unwrap(pool)
+        .map_err(|_| anyhow!("serving tier leaked the pool"))?
+        .shutdown();
+    let m = &report.aggregate;
+    println!(
+        "served {} connections ({} shed, {} wire rejections)",
+        m.connections, m.conns_shed, m.net_rejections
+    );
+    println!("pool ({workers} workers): {}", m.summary());
+    Ok(())
+}
+
+/// A loadgen client connection: TCP, or a Unix socket via `unix:<path>`.
+enum ClientStream {
+    Tcp(std::net::TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl ClientStream {
+    fn connect(addr: &str) -> std::io::Result<ClientStream> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            return std::os::unix::net::UnixStream::connect(path).map(ClientStream::Unix);
+            #[cfg(not(unix))]
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "unix sockets are unavailable on this platform",
+            ));
+        }
+        std::net::TcpStream::connect(addr).map(ClientStream::Tcp)
+    }
+
+    fn try_clone(&self) -> std::io::Result<ClientStream> {
+        match self {
+            ClientStream::Tcp(s) => s.try_clone().map(ClientStream::Tcp),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.try_clone().map(ClientStream::Unix),
+        }
+    }
+}
+
+impl Read for ClientStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ClientStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            ClientStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Per-connection loadgen outcome.
+#[derive(Default)]
+struct ConnResult {
+    latencies_ns: Vec<u64>,
+    ok: u64,
+    busy: u64,
+    err: u64,
+}
+
+/// One closed-loop connection: send, await the reply, repeat.
+fn loadgen_closed(
+    addr: &str,
+    conn_id: u64,
+    requests: usize,
+    n: u32,
+    pattern: &str,
+    max_frame: usize,
+) -> Result<ConnResult, String> {
+    let mut stream = ClientStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut out = ConnResult::default();
+    for k in 0..requests as u64 {
+        let req = ClientMsg::Request {
+            id: k,
+            n,
+            seed: conn_id * 10_000 + k,
+            pattern: pattern.to_string(),
+        };
+        let t0 = Instant::now();
+        write_frame(&mut stream, &req.to_frame()).map_err(|e| format!("send: {e}"))?;
+        let payload = read_frame(&mut stream, max_frame)
+            .map_err(|e| format!("recv: {e}"))?
+            .ok_or("server closed mid-run")?;
+        out.latencies_ns.push(t0.elapsed().as_nanos() as u64);
+        match ServerMsg::decode(&payload).map_err(|e| format!("decode: {e}"))? {
+            ServerMsg::Ok { id, .. } if id == k => out.ok += 1,
+            ServerMsg::Ok { id, .. } => return Err(format!("reply id {id} for request {k}")),
+            ServerMsg::Busy { .. } => out.busy += 1,
+            ServerMsg::Err { .. } => out.err += 1,
+        }
+    }
+    Ok(out)
+}
+
+/// One open-loop connection: a writer fires at a fixed interval without
+/// waiting, a reader pairs replies to send times by wire id. The reader
+/// only blocks on the socket while `answered < sent` — the server answers
+/// every complete frame exactly once, so a reply is then guaranteed in
+/// flight and the blocking read always returns.
+fn loadgen_open(
+    addr: &str,
+    conn_id: u64,
+    interval: Duration,
+    duration: Duration,
+    n: u32,
+    pattern: &str,
+    max_frame: usize,
+) -> Result<ConnResult, String> {
+    let reader_stream = ClientStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut writer_stream = reader_stream.try_clone().map_err(|e| format!("clone: {e}"))?;
+    let sent: Arc<Mutex<std::collections::HashMap<u64, Instant>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let sent_total = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let pattern = pattern.to_string();
+
+    let writer = {
+        let (sent, sent_total) = (sent.clone(), sent_total.clone());
+        std::thread::spawn(move || -> Result<(), String> {
+            let t0 = Instant::now();
+            let mut id = 0u64;
+            while t0.elapsed() < duration {
+                let req = ClientMsg::Request {
+                    id,
+                    n,
+                    seed: conn_id * 10_000 + id,
+                    pattern: pattern.clone(),
+                };
+                sent.lock().unwrap().insert(id, Instant::now());
+                write_frame(&mut writer_stream, &req.to_frame())
+                    .map_err(|e| format!("send: {e}"))?;
+                // counted only after the frame is fully on the wire: the
+                // reader treats every counted send as an owed reply
+                sent_total.fetch_add(1, std::sync::atomic::Ordering::Release);
+                id += 1;
+                std::thread::sleep(interval);
+            }
+            Ok(())
+        })
+    };
+
+    let mut out = ConnResult::default();
+    let mut stream = reader_stream;
+    let mut answered = 0u64;
+    loop {
+        if answered < sent_total.load(std::sync::atomic::Ordering::Acquire) {
+            match read_frame(&mut stream, max_frame).map_err(|e| format!("recv: {e}"))? {
+                Some(p) => {
+                    record_open_reply(&p, &sent, &mut out)?;
+                    answered += 1;
+                }
+                None => return Err("server closed mid-run".into()),
+            }
+        } else if writer.is_finished() {
+            writer.join().map_err(|_| "writer panicked".to_string())??;
+            // the writer may have sent one last frame between the two
+            // checks above; the total is final now, so drain to it
+            while answered < sent_total.load(std::sync::atomic::Ordering::Acquire) {
+                match read_frame(&mut stream, max_frame).map_err(|e| format!("recv: {e}"))? {
+                    Some(p) => {
+                        record_open_reply(&p, &sent, &mut out)?;
+                        answered += 1;
+                    }
+                    None => return Err("server closed before draining replies".into()),
+                }
+            }
+            break;
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    Ok(out)
+}
+
+fn record_open_reply(
+    payload: &[u8],
+    sent: &Mutex<std::collections::HashMap<u64, Instant>>,
+    out: &mut ConnResult,
+) -> Result<(), String> {
+    let msg = ServerMsg::decode(payload).map_err(|e| format!("decode: {e}"))?;
+    let id = match &msg {
+        ServerMsg::Ok { id, .. } | ServerMsg::Err { id, .. } | ServerMsg::Busy { id } => *id,
+    };
+    let t0 = sent
+        .lock()
+        .unwrap()
+        .remove(&id)
+        .ok_or_else(|| format!("reply for unknown id {id}"))?;
+    out.latencies_ns.push(t0.elapsed().as_nanos() as u64);
+    match msg {
+        ServerMsg::Ok { .. } => out.ok += 1,
+        ServerMsg::Busy { .. } => out.busy += 1,
+        ServerMsg::Err { .. } => out.err += 1,
+    }
+    Ok(())
+}
+
+fn percentile(sorted_ns: &[u64], p: f64) -> u64 {
+    if sorted_ns.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_ns.len() - 1) as f64 * p).round() as usize;
+    sorted_ns[idx.min(sorted_ns.len() - 1)]
+}
+
+/// `repro loadgen`: closed- or open-loop socket load against
+/// `repro serve --listen`, reporting p50/p95/p99 and writing
+/// `BENCH_<name>.json` per the repo convention.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7700");
+    let conns = args.usize("conns", 64)?.max(1);
+    let requests = args.usize("requests", 32)?.max(1);
+    let n = args.usize("n", 1024)? as u32;
+    let pattern = args.str("pattern", "vmul-reduce");
+    let mode = args.str("mode", "closed");
+    let rate = args.usize("rate", 200)?.max(1); // open loop: req/s per conn
+    let duration = Duration::from_millis(args.u64("duration-ms", 2000)?);
+    let bench = args.str("bench", "service");
+    // vector replies carry n floats; keep the client cap comfortably above
+    let max_frame = (n as usize * 4 + 4096).max(1 << 20);
+
+    let t_wall = Instant::now();
+    let mut joins = Vec::with_capacity(conns);
+    for c in 0..conns as u64 {
+        let (addr, pattern, mode) = (addr.clone(), pattern.clone(), mode.clone());
+        joins.push(std::thread::Builder::new().stack_size(256 * 1024).spawn(
+            move || -> Result<ConnResult, String> {
+                match mode.as_str() {
+                    "closed" => loadgen_closed(&addr, c, requests, n, &pattern, max_frame),
+                    "open" => {
+                        let interval = Duration::from_nanos(1_000_000_000 / rate as u64);
+                        loadgen_open(&addr, c, interval, duration, n, &pattern, max_frame)
+                    }
+                    other => Err(format!("unknown --mode `{other}` (closed, open)")),
+                }
+            },
+        )?);
+    }
+    let mut all = ConnResult::default();
+    let mut conn_errors = 0usize;
+    let mut first_error = String::new();
+    for j in joins {
+        match j.join().map_err(|_| anyhow!("loadgen connection thread panicked"))? {
+            Ok(r) => {
+                all.latencies_ns.extend(r.latencies_ns);
+                all.ok += r.ok;
+                all.busy += r.busy;
+                all.err += r.err;
+            }
+            Err(e) => {
+                conn_errors += 1;
+                if first_error.is_empty() {
+                    first_error = e;
+                }
+            }
+        }
+    }
+    let wall_s = t_wall.elapsed().as_secs_f64();
+
+    if args.str("stop-server", "0") == "1" {
+        let mut s = ClientStream::connect(&addr).context("connect for shutdown")?;
+        write_frame(&mut s, &ClientMsg::Shutdown.to_frame()).context("send shutdown")?;
+    }
+
+    all.latencies_ns.sort_unstable();
+    let total = all.ok + all.busy + all.err;
+    let (p50, p95, p99) = (
+        percentile(&all.latencies_ns, 0.50),
+        percentile(&all.latencies_ns, 0.95),
+        percentile(&all.latencies_ns, 0.99),
+    );
+    let mean = if all.latencies_ns.is_empty() {
+        0.0
+    } else {
+        all.latencies_ns.iter().sum::<u64>() as f64 / all.latencies_ns.len() as f64
+    };
+    println!("loadgen: mode={mode} conns={conns} pattern={pattern} n={n} addr={addr}");
+    println!(
+        "replies: {total} ({} ok, {} busy, {} err) in {:.2} s ({:.0} req/s); conn errors: {conn_errors}",
+        all.ok, all.busy, all.err, wall_s, total as f64 / wall_s
+    );
+    println!(
+        "latency: p50 {} p95 {} p99 {} mean {}",
+        jit_overlay::benchkit::fmt_ns(p50 as f64),
+        jit_overlay::benchkit::fmt_ns(p95 as f64),
+        jit_overlay::benchkit::fmt_ns(p99 as f64),
+        jit_overlay::benchkit::fmt_ns(mean),
+    );
+    if conn_errors > 0 {
+        println!("first connection error: {first_error}");
+    }
+
+    let mut o = JsonObject::new();
+    o.str("group", "loadgen")
+        .str("mode", &mode)
+        .str("pattern", &pattern)
+        .str("addr", &addr)
+        .int("conns", conns as u64)
+        .int("n", n as u64)
+        .int("replies", total)
+        .int("ok", all.ok)
+        .int("busy", all.busy)
+        .int("err", all.err)
+        .int("conn_errors", conn_errors as u64)
+        .num("wall_s", wall_s)
+        .num("req_per_s", total as f64 / wall_s)
+        .int("p50_ns", p50)
+        .int("p95_ns", p95)
+        .int("p99_ns", p99)
+        .num("mean_ns", mean);
+    let path = write_bench_json(&bench, &o.finish()).context("writing bench json")?;
+    println!("wrote {}", path.display());
+    if total == 0 {
+        bail!("loadgen received no replies ({conn_errors} connection errors: {first_error})");
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve|loadgen> [--flag value ...]
   serve: --requests K --workers N --n LEN --seed S (multi-fabric pool)
          --drain-window W (burst size; 1 = FIFO)  --queue-capacity C (backpressure)
          --steal-depth D (work-stealing threshold; 0 = off)  --skew S (spill threshold)
          --frontend direct|threads|reactor (session layer; default direct)
          --sessions S --inflight I --reactors R (threads/reactor front ends)
+         --listen ADDR (socket tier; ADDR is ip:port or unix:/path)
+           with --reactors R --workers N --max-pending P --idle-timeout-ms T
+           --max-n N --allow-remote-shutdown 0|1
+  loadgen: --addr ADDR --conns C --mode closed|open --pattern P --n LEN
+           closed: --requests K (per connection, one outstanding)
+           open:   --rate R (req/s per conn) --duration-ms D
+           --bench NAME (BENCH_<NAME>.json; $BENCH_JSON_DIR or CWD)
+           --stop-server 1 (send SHUTDOWN when done)
   see crate docs / README for per-command flags";
 
 fn main() -> Result<()> {
@@ -503,6 +860,7 @@ fn main() -> Result<()> {
         "isa" => cmd_isa(),
         "inspect" => cmd_inspect(&args)?,
         "serve" => cmd_serve(&args)?,
+        "loadgen" => cmd_loadgen(&args)?,
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
     Ok(())

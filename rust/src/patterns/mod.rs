@@ -188,6 +188,69 @@ impl Composition {
     }
 }
 
+/// Parse the CLI/wire pattern grammar into a [`Composition`]:
+///
+/// ```text
+/// vmul-reduce | map:OP | chain:OP,OP,.. | filter-reduce:T | axpy:A | branch:T,THEN,ELSE
+/// ```
+///
+/// Shared by `repro run`/`repro inspect` and the socket serving tier,
+/// where it is the *whole* untrusted-request surface: a hostile pattern
+/// string must come back as an [`Error::Pattern`], never a panic.
+pub fn parse_pattern(s: &str, n: usize) -> Result<Composition> {
+    let parse_op = |name: &str| -> Result<OperatorKind> {
+        OperatorKind::from_name(name)
+            .ok_or_else(|| Error::Pattern(format!("unknown operator `{name}`")))
+    };
+    let parse_f32 = |v: &str, what: &str| -> Result<f32> {
+        v.parse().map_err(|_| Error::Pattern(format!("{what}: bad number `{v}`")))
+    };
+    // the convenience constructors expect() their validation (their shapes
+    // are static); parsed input goes through Composition::new so a bad op
+    // arity or n == 0 surfaces as Err, not a panic
+    if n == 0 {
+        return Err(Error::Pattern("workload length must be positive".into()));
+    }
+    if s == "vmul-reduce" {
+        return Ok(Composition::vmul_reduce(n));
+    }
+    if let Some(op) = s.strip_prefix("map:") {
+        return Composition::new(
+            Expr::Map { op: parse_op(op)?, x: Box::new(Expr::Input(0)) },
+            n,
+        );
+    }
+    if let Some(ops) = s.strip_prefix("chain:") {
+        let ops: Vec<OperatorKind> = ops.split(',').map(parse_op).collect::<Result<_>>()?;
+        return Composition::chain(&ops, n);
+    }
+    if let Some(t) = s.strip_prefix("filter-reduce:") {
+        return Ok(Composition::filter_reduce(parse_f32(t, "filter-reduce")?, n));
+    }
+    if let Some(a) = s.strip_prefix("axpy:") {
+        return Ok(Composition::axpy(parse_f32(a, "axpy")?, n));
+    }
+    if let Some(rest) = s.strip_prefix("branch:") {
+        let parts: Vec<&str> = rest.split(',').collect();
+        if parts.len() != 3 {
+            return Err(Error::Pattern("branch needs <t>,<then>,<else>".into()));
+        }
+        return Composition::new(
+            Expr::Branch {
+                t: parse_f32(parts[0], "branch")?,
+                then_op: parse_op(parts[1])?,
+                else_op: parse_op(parts[2])?,
+                x: Box::new(Expr::Input(0)),
+            },
+            n,
+        );
+    }
+    Err(Error::Pattern(format!(
+        "unknown pattern `{s}` (try vmul-reduce, map:sqrt, chain:abs,sqrt, \
+         filter-reduce:0.5, axpy:2.0, branch:0.0,sqrt,square)"
+    )))
+}
+
 fn check(e: &Expr, max_input: &mut i32, scalar_pos: bool) -> Result<()> {
     match e {
         Expr::Input(c) => {
@@ -463,6 +526,49 @@ mod tests {
         assert_ne!(a.cache_key(), b.cache_key());
         assert_ne!(a.cache_key(), c.cache_key());
         assert_eq!(a.cache_key(), Composition::vmul_reduce(4096).cache_key());
+    }
+
+    #[test]
+    fn parse_pattern_covers_the_grammar() {
+        assert!(parse_pattern("vmul-reduce", 64).unwrap().scalar_result());
+        assert_eq!(parse_pattern("map:abs", 64).unwrap().ops(), vec![OperatorKind::Abs]);
+        assert_eq!(
+            parse_pattern("chain:abs,sqrt", 64).unwrap().ops(),
+            vec![OperatorKind::Abs, OperatorKind::Sqrt]
+        );
+        assert!(parse_pattern("filter-reduce:0.5", 64).unwrap().scalar_result());
+        assert_eq!(parse_pattern("axpy:2.0", 64).unwrap().inputs, 2);
+        assert_eq!(parse_pattern("branch:0.0,sqrt,square", 64).unwrap().stages().len(), 4);
+        // parsed == constructed: the wire path hits the same cache keys
+        assert_eq!(
+            parse_pattern("vmul-reduce", 256).unwrap().cache_key(),
+            Composition::vmul_reduce(256).cache_key()
+        );
+    }
+
+    /// Untrusted-surface property: every malformed pattern is an `Err`,
+    /// never a panic — the serving tier feeds this straight from the wire.
+    #[test]
+    fn parse_pattern_rejects_hostile_input_without_panicking() {
+        for s in [
+            "",
+            "nope",
+            "map:",
+            "map:nope",
+            "map:add",                // binary op where unary is required
+            "chain:",
+            "chain:abs,nope",
+            "filter-reduce:",
+            "filter-reduce:xyz",
+            "axpy:NaN-ish",
+            "branch:0.0",
+            "branch:0.0,sqrt",
+            "branch:x,sqrt,square",
+            "branch:0.0,add,mul",     // binary arms
+        ] {
+            assert!(parse_pattern(s, 64).is_err(), "`{s}` must not parse");
+        }
+        assert!(parse_pattern("vmul-reduce", 0).is_err(), "n = 0 must not panic");
     }
 
     #[test]

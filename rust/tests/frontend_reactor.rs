@@ -421,6 +421,126 @@ fn admission_caps_bound_the_backend() {
     }
 }
 
+/// Satellite (ISSUE 6): the close-vs-completion race, cut exactly. A
+/// session closes while its completion sits in the shared queue, already
+/// pushed by the backend but not yet drained by a poll. The completion
+/// must be accounted exactly once — late, never delivered, never lost —
+/// and the closed session must not linger in the table.
+#[test]
+fn close_while_completion_queued_accounts_late_exactly_once() {
+    let (fe, reactor, engine, metrics) = scripted_front(8, FrontendConfig::default(), |_, _| 5);
+    let s = fe.open_session();
+    s.submit(vmul_req(64, 42)).unwrap();
+    assert_eq!(reactor.poll_once().admitted, 1);
+    // the backend completes: the reply is now queued in the completion
+    // queue — and the client closes before the reactor drains it
+    assert!(engine.advance_next());
+    s.close();
+    assert_eq!(s.state(), SessionState::Closed);
+    assert_eq!(reactor.session_count(), 1, "in-flight work pins the closed session");
+
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (1, 0), "closed: nothing delivered");
+    assert!(s.try_recv().is_none(), "no reply after close, ever");
+    assert_eq!(reactor.session_count(), 0, "last completion releases the session");
+    // exactly-one-accounting: the completion is late XOR delivered
+    let m = metrics.snapshot();
+    assert_eq!(m.completions, 1);
+    assert_eq!(fe.late_replies(), 1);
+}
+
+/// Satellite (ISSUE 6): close with the reorder buffer non-empty — two
+/// fast completions gap-buffered behind a slow head when the close lands.
+/// Every completion (buffered at close time or arriving after) must be
+/// counted late exactly once: `delivered + late == completions` with zero
+/// delivered.
+#[test]
+fn close_with_gap_buffered_replies_accounts_each_exactly_once() {
+    let cfg = FrontendConfig { inflight_per_session: 3, ..FrontendConfig::default() };
+    let (fe, reactor, engine, metrics) =
+        scripted_front(8, cfg, |i, _| if i == 0 { 50 } else { i });
+    let s = fe.open_session();
+    for k in 0..3 {
+        s.submit(vmul_req(64, 300 + k)).unwrap();
+    }
+    assert_eq!(reactor.poll_once().admitted, 3);
+    // the two fast completions land and buffer behind the slow seq 0
+    assert!(engine.advance_next());
+    assert!(engine.advance_next());
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (2, 0));
+    assert_eq!(s.state(), SessionState::Replying);
+    // close clears the buffer (2 late); the slow head is still in flight
+    s.close();
+    assert_eq!(fe.late_replies(), 2, "gap-buffered replies die with the close");
+    assert_eq!(reactor.session_count(), 1);
+    // the head completes into a closed session: late, and the table frees
+    assert!(engine.advance_next());
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (1, 0));
+    assert_eq!(reactor.session_count(), 0);
+    assert!(s.try_recv().is_none());
+    let m = metrics.snapshot();
+    assert_eq!(m.completions, 3);
+    assert_eq!(fe.late_replies(), 3, "each completion late exactly once, none lost");
+}
+
+/// Satellite (ISSUE 6): a handle dropped without `close()` must release
+/// its session — before the fix it leaked in the reactor table forever,
+/// "delivering" every future completion into a disconnected channel. Both
+/// drop timings: quiescent, and with a request still in flight (where the
+/// straggler must be counted late, not lost).
+#[test]
+fn dropping_a_handle_without_close_releases_the_session() {
+    let (fe, reactor, engine, metrics) = scripted_front(8, FrontendConfig::default(), |_, _| 5);
+    // quiescent drop: served to completion, then the client walks away
+    let a = fe.open_session();
+    a.submit(vmul_req(64, 7)).unwrap();
+    reactor.poll_once();
+    assert!(engine.advance_next());
+    assert_eq!(reactor.poll_once().delivered, 1);
+    a.recv().unwrap();
+    drop(a);
+    assert_eq!(reactor.session_count(), 0, "dropped handle leaked its session");
+    assert_eq!(fe.late_replies(), 0);
+
+    // mid-flight drop: the straggling completion is late, exactly once
+    let b = fe.open_session();
+    b.submit(vmul_req(64, 8)).unwrap();
+    reactor.poll_once();
+    drop(b);
+    assert_eq!(reactor.session_count(), 1, "in-flight work pins the dropped session");
+    assert!(engine.advance_next());
+    let stats = reactor.poll_once();
+    assert_eq!((stats.completions, stats.delivered), (1, 0));
+    assert_eq!(reactor.session_count(), 0);
+    let m = metrics.snapshot();
+    assert_eq!(m.completions, 2);
+    assert_eq!(fe.late_replies(), 1, "delivered (1) + late (1) == completions (2)");
+}
+
+/// The split-handle API: the submit and reply halves work from different
+/// threads (the socket tier's reader/writer shape), and dropping the
+/// submit half closes the session and disconnects the reply half.
+#[test]
+fn split_handle_halves_work_independently_and_drop_closes() {
+    let (fe, reactor, engine, _) = scripted_front(8, FrontendConfig::default(), |_, _| 2);
+    let (sub, replies) = fe.open_session().split();
+    let req = vmul_req(64, 99);
+    let want = expected(&req);
+    sub.submit(req).unwrap();
+    assert_eq!(sub.state(), SessionState::Queued);
+    reactor.poll_once();
+    assert!(engine.advance_next());
+    reactor.poll_once();
+    let got = replies.recv().unwrap();
+    assert!(agree(&got.run.output, &want));
+    assert!(replies.try_recv().is_none());
+    drop(sub);
+    assert_eq!(reactor.session_count(), 0, "dropping the submit half closes the session");
+    assert!(replies.recv().is_err(), "reply stream disconnects with the session");
+}
+
 /// The reactor front end over the *real* worker pool (threaded, scheduling
 /// nondeterministic): the invariants — exactly one reply per request, in
 /// submission order, correct values — must hold for every interleaving.

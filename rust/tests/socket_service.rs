@@ -1,0 +1,301 @@
+//! Serving-tier tests in two registers.
+//!
+//! The lifecycle properties — slow-client shedding, pending-cap
+//! backpressure — are proven deterministically: [`ConnDriver`] is a pure
+//! state machine over injected milliseconds, and the reactor is stepped
+//! manually against a `ScriptedEngine`, so "a half-dead client must not
+//! stall its neighbors" is an exact assertion, not a sampled race.
+//!
+//! The socket shell itself (accept loop, reader/writer pair, FIFO reply
+//! pairing, metrics, remote shutdown) is then exercised end-to-end over
+//! real localhost TCP with the real worker pool.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jit_overlay::coordinator::net::{ConnDriver, NetServer, WireStep};
+use jit_overlay::coordinator::wire::{read_frame, write_frame, ClientMsg, FrameDecoder, ServerMsg};
+use jit_overlay::coordinator::{AtomicMetrics, Frontend, Metrics, WorkerPool};
+use jit_overlay::exec::cpu::{self, Value};
+use jit_overlay::patterns::Composition;
+use jit_overlay::testkit::ScriptedEngine;
+use jit_overlay::workload;
+use jit_overlay::{FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
+
+fn agree(a: &Value, b: &Value) -> bool {
+    const TOL: f32 = 1e-3;
+    match (a, b) {
+        (Value::Scalar(x), Value::Scalar(y)) => (x - y).abs() <= TOL * (1.0 + y.abs()),
+        (Value::Vector(x), Value::Vector(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| (p - q).abs() <= TOL * (1.0 + q.abs()))
+        }
+        _ => false,
+    }
+}
+
+/// A REQUEST frame's payload, as the decoder hands it to the driver.
+fn req_payload(id: u64, n: u32, seed: u64, pattern: &str) -> Vec<u8> {
+    ClientMsg::Request { id, n, seed, pattern: pattern.into() }.to_frame()[4..].to_vec()
+}
+
+/// The value the server must compute for a wire request: inputs are
+/// synthesized from `(n, seed)` exactly as the serving tier does.
+fn expected_for(n: usize, seed: u64, pattern: &str) -> Value {
+    let comp = jit_overlay::patterns::parse_pattern(pattern, n).unwrap();
+    let inputs: Vec<Vec<f32>> = (0..comp.inputs)
+        .map(|c| workload::vector(n, seed.wrapping_add(c as u64), 0.1, 2.0))
+        .collect();
+    cpu::eval(&comp, &inputs).unwrap()
+}
+
+/// A slow (half-dead) client is shed on the idle deadline while a healthy
+/// session on the same reactor keeps flowing; the shed session's in-flight
+/// completion is accounted late, never delivered, never lost:
+/// `delivered + late == completions` across both connections.
+#[test]
+fn slow_client_is_shed_while_healthy_sessions_proceed() {
+    let net = NetConfig { idle_timeout_ms: 100, ..NetConfig::default() };
+    // A's request (n=48) never completes within the test; B's (n=64) are
+    // one-tick — keyed on the request so dispatch order cannot matter
+    let engine = Arc::new(
+        ScriptedEngine::new(OverlayConfig::default(), 16, |_, r| {
+            if r.comp.n == 48 {
+                1_000_000
+            } else {
+                1
+            }
+        })
+        .unwrap(),
+    );
+    let metrics = Arc::new(AtomicMetrics::default());
+    let cfg = FrontendConfig { reactors: 1, inflight_per_session: 4, max_inflight: 64 };
+    let fe = Frontend::new(engine.clone(), cfg, metrics.clone()).unwrap();
+    let reactor = fe.reactor(0);
+
+    // connection A: one request, then silence
+    let (sub_a, replies_a) = fe.open_session().split();
+    let mut driver_a = ConnDriver::new(net.clone(), 0);
+    match driver_a.on_frame(&req_payload(0, 48, 1, "vmul-reduce"), 0, 0) {
+        WireStep::Submit { id: 0, request } => sub_a.submit(request).unwrap(),
+        other => panic!("expected Submit, got {other:?}"),
+    }
+
+    // connection B: a healthy client, one frame every 10 ms
+    let (sub_b, replies_b) = fe.open_session().split();
+    let mut driver_b = ConnDriver::new(net.clone(), 0);
+    let mut reqs_b = Vec::new();
+    for k in 0..10u64 {
+        let now = k * 10;
+        assert!(!driver_b.idle_exceeded(now), "B's frames keep resetting its idle clock");
+        match driver_b.on_frame(&req_payload(k, 64, 100 + k, "vmul-reduce"), now, 0) {
+            WireStep::Submit { id, request } => {
+                assert_eq!(id, k);
+                reqs_b.push(request.clone());
+                sub_b.submit(request).unwrap();
+            }
+            other => panic!("expected Submit, got {other:?}"),
+        }
+    }
+
+    // drive until B's ten replies are delivered — A's stuck request must
+    // not stall them
+    let (mut completions, mut delivered) = (0usize, 0usize);
+    let mut got = Vec::new();
+    for _ in 0..200 {
+        let stats = reactor.poll_once();
+        completions += stats.completions;
+        delivered += stats.delivered;
+        while let Some(r) = replies_b.try_recv() {
+            got.push(r.unwrap().run.output);
+        }
+        if got.len() == 10 {
+            break;
+        }
+        engine.advance_next();
+    }
+    assert_eq!(got.len(), 10, "healthy session starved behind a slow peer");
+    for (req, v) in reqs_b.iter().zip(&got) {
+        assert!(agree(&cpu::eval(&req.comp, &req.inputs).unwrap(), v), "reply pairing broke");
+    }
+
+    // A has been silent past the idle deadline: the shell sheds it (B,
+    // whose last frame landed at t=90, is nowhere near its deadline)
+    assert!(driver_a.idle_exceeded(150));
+    assert!(!driver_b.idle_exceeded(150));
+    metrics.record(&Metrics { conns_shed: 1, ..Default::default() });
+    drop(sub_a); // close-on-drop: the session ends with work in flight
+    assert!(replies_a.recv().is_err(), "shed reply stream disconnects");
+    assert_eq!(reactor.session_count(), 2, "in-flight work pins the shed session");
+
+    // A's completion finally lands — on a closed session: late, not lost
+    assert!(engine.advance_next());
+    let stats = reactor.poll_once();
+    completions += stats.completions;
+    delivered += stats.delivered;
+    assert_eq!(reactor.session_count(), 1, "only B's session remains");
+    assert_eq!((completions, delivered), (11, 10));
+    assert_eq!(fe.late_replies(), 1);
+    assert_eq!(metrics.snapshot().conns_shed, 1);
+    sub_b.close();
+}
+
+/// Overload on one connection degrades to `BUSY` frames at the pending
+/// cap — deterministically, straight from wire bytes — and capacity
+/// freed by replies re-admits new requests.
+#[test]
+fn wire_pending_cap_turns_overload_into_busy_frames() {
+    let net = NetConfig { max_pending_per_conn: 2, ..NetConfig::default() };
+    let metrics = AtomicMetrics::default();
+    let mut driver = ConnDriver::new(net.clone(), 0);
+    let mut dec = FrameDecoder::new(net.max_frame);
+    for id in 0..4u64 {
+        let msg = ClientMsg::Request { id, n: 32, seed: id, pattern: "vmul-reduce".into() };
+        dec.push(&msg.to_frame());
+    }
+
+    let mut pending = 0usize;
+    let (mut submitted, mut busy) = (Vec::new(), Vec::new());
+    while let Some(p) = dec.next_frame().unwrap() {
+        match driver.on_frame(&p, 0, pending) {
+            WireStep::Submit { id, .. } => {
+                pending += 1;
+                submitted.push(id);
+            }
+            WireStep::Reject(ServerMsg::Busy { id }) => {
+                metrics.record(&Metrics { net_rejections: 1, ..Default::default() });
+                busy.push(id);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(submitted, vec![0, 1]);
+    assert_eq!(busy, vec![2, 3]);
+    assert_eq!(metrics.snapshot().net_rejections, 2);
+
+    // one reply drains: the next frame submits again
+    pending -= 1;
+    let msg = ClientMsg::Request { id: 9, n: 32, seed: 9, pattern: "vmul-reduce".into() };
+    dec.push(&msg.to_frame());
+    let p = dec.next_frame().unwrap().unwrap();
+    assert!(matches!(driver.on_frame(&p, 0, pending), WireStep::Submit { id: 9, .. }));
+}
+
+/// End-to-end over real localhost TCP: pipelined requests come back in
+/// submission order with correct values (in-session FIFO holds across the
+/// socket), a clean EOF is a polite hangup, a malformed frame is shed, and
+/// teardown returns the pool intact.
+#[test]
+fn tcp_round_trip_pipelines_in_order_with_clean_teardown() {
+    let pool =
+        Arc::new(WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(2)).unwrap());
+    let fcfg = FrontendConfig { reactors: 2, inflight_per_session: 4, max_inflight: 64 };
+    let front = Arc::new(Frontend::new(pool.clone(), fcfg, pool.metrics.clone()).unwrap());
+    let threads = front.spawn().unwrap();
+    let server =
+        NetServer::bind("127.0.0.1:0", front.clone(), NetConfig::default(), pool.metrics.clone())
+            .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let n = 64u32;
+    let mut s = TcpStream::connect(&addr).unwrap();
+    for id in 0..3u64 {
+        let msg = ClientMsg::Request { id, n, seed: 40 + id, pattern: "vmul-reduce".into() };
+        write_frame(&mut s, &msg.to_frame()).unwrap();
+    }
+    for id in 0..3u64 {
+        let payload = read_frame(&mut s, 0).unwrap().expect("a reply per request");
+        match ServerMsg::decode(&payload).unwrap() {
+            ServerMsg::Ok { id: got, value, .. } => {
+                assert_eq!(got, id, "replies must come back in submission order");
+                let want = expected_for(n as usize, 40 + id, "vmul-reduce");
+                assert!(agree(&want, &value), "request {id}: wrong value");
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+    drop(s); // clean EOF at a frame boundary: not a shed
+
+    // a malformed frame on a second connection is shed (connection closed)
+    let mut bad = TcpStream::connect(&addr).unwrap();
+    let mut frame = 3u32.to_le_bytes().to_vec();
+    frame.extend_from_slice(&[0x7F, 0, 1]); // unknown tag
+    write_frame(&mut bad, &frame).unwrap();
+    let mut rest = Vec::new();
+    let _ = bad.read_to_end(&mut rest); // server hangs up on us
+    assert!(rest.is_empty(), "no reply to a malformed frame");
+
+    // both lifecycle outcomes are observable in the metrics
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = pool.metrics.snapshot();
+        if m.connections == 2 && m.conns_shed == 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "lifecycle counters never settled: connections={} shed={}",
+            m.connections,
+            m.conns_shed
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    server.stop();
+    threads.shutdown();
+    drop(front);
+    let report = Arc::try_unwrap(pool).ok().expect("serving tier leaked the pool").shutdown();
+    let m = &report.aggregate;
+    assert_eq!((m.connections, m.conns_shed), (2, 1));
+    assert_eq!(m.completions, 3, "three served requests drained exactly once");
+}
+
+/// `SHUTDOWN` is honored only with `allow_remote_shutdown`: an
+/// unauthorized sender is shed and the server keeps serving; an authorized
+/// one flips the stop flag and `join` returns.
+#[test]
+fn remote_shutdown_is_honored_only_when_enabled() {
+    let pool =
+        Arc::new(WorkerPool::new(OverlayConfig::default(), ServiceConfig::with_workers(1)).unwrap());
+    let front = Arc::new(
+        Frontend::new(pool.clone(), FrontendConfig::default(), pool.metrics.clone()).unwrap(),
+    );
+    let threads = front.spawn().unwrap();
+
+    // phase 1: shutdown NOT allowed — the sender is shed, service continues
+    let server =
+        NetServer::bind("127.0.0.1:0", front.clone(), NetConfig::default(), pool.metrics.clone())
+            .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut s, &ClientMsg::Shutdown.to_frame()).unwrap();
+    let mut rest = Vec::new();
+    let _ = s.read_to_end(&mut rest); // shed: EOF, no reply
+    assert!(!server.stop_requested(), "unauthorized SHUTDOWN must not stop the server");
+    let mut ok = TcpStream::connect(&addr).unwrap();
+    let msg = ClientMsg::Request { id: 1, n: 32, seed: 5, pattern: "vmul-reduce".into() };
+    write_frame(&mut ok, &msg.to_frame()).unwrap();
+    let payload = read_frame(&mut ok, 0).unwrap().expect("still serving after shed SHUTDOWN");
+    assert!(matches!(ServerMsg::decode(&payload).unwrap(), ServerMsg::Ok { id: 1, .. }));
+    drop(ok);
+    server.stop();
+
+    // phase 2: shutdown allowed — the flag flips and join returns
+    let net = NetConfig { allow_remote_shutdown: true, ..NetConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", front.clone(), net, pool.metrics.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut s, &ClientMsg::Shutdown.to_frame()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !server.stop_requested() {
+        assert!(Instant::now() < deadline, "authorized SHUTDOWN never honored");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.join();
+
+    threads.shutdown();
+    drop(front);
+    Arc::try_unwrap(pool).ok().expect("serving tier leaked the pool").shutdown();
+}

@@ -1,0 +1,239 @@
+//! Deterministic wire-codec tests: every byte path is exercised on byte
+//! slices — no sockets. Partial delivery is simulated by pushing a frame
+//! into the [`FrameDecoder`] one byte (or one odd-sized chunk) at a time,
+//! and mid-frame disconnects by cutting the byte stream at every possible
+//! offset.
+
+use std::io::Cursor;
+
+use jit_overlay::coordinator::wire::{
+    read_frame, ClientMsg, FrameDecoder, ServerMsg, DEFAULT_MAX_FRAME,
+};
+use jit_overlay::exec::cpu::Value;
+
+fn sample_client_msgs() -> Vec<ClientMsg> {
+    vec![
+        ClientMsg::Request { id: 0, n: 0, seed: 0, pattern: String::new() },
+        ClientMsg::Request {
+            id: u64::MAX,
+            n: 1 << 20,
+            seed: 0xDEAD_BEEF,
+            pattern: "chain:abs,neg,square".into(),
+        },
+        ClientMsg::Request { id: 7, n: 256, seed: 42, pattern: "vmul-reduce".into() },
+        ClientMsg::Shutdown,
+    ]
+}
+
+fn sample_server_msgs() -> Vec<ServerMsg> {
+    vec![
+        ServerMsg::Ok { id: 1, cached: false, jit_nanos: 12_345, value: Value::Scalar(3.25) },
+        ServerMsg::Ok {
+            id: 2,
+            cached: true,
+            jit_nanos: 0,
+            value: Value::Vector(vec![0.0, -1.5, f32::MAX, 1e-20]),
+        },
+        ServerMsg::Ok { id: 3, cached: true, jit_nanos: 1, value: Value::Vector(vec![]) },
+        ServerMsg::Err { id: u64::MAX, message: "capacité dépassée ✗".into() },
+        ServerMsg::Busy { id: 99 },
+    ]
+}
+
+#[test]
+fn client_messages_roundtrip() {
+    for msg in sample_client_msgs() {
+        let frame = msg.to_frame();
+        let mut dec = FrameDecoder::new(0);
+        dec.push(&frame);
+        let payload = dec.next_frame().unwrap().expect("one whole frame");
+        assert_eq!(ClientMsg::decode(&payload).unwrap(), msg);
+        assert!(!dec.is_mid_frame(), "frame fully consumed");
+    }
+}
+
+#[test]
+fn server_messages_roundtrip() {
+    for msg in sample_server_msgs() {
+        let frame = msg.to_frame();
+        let mut dec = FrameDecoder::new(0);
+        dec.push(&frame);
+        let payload = dec.next_frame().unwrap().expect("one whole frame");
+        assert_eq!(ServerMsg::decode(&payload).unwrap(), msg);
+    }
+}
+
+/// Frames reassemble from arbitrary chunking: byte-at-a-time, and every
+/// split point of a two-frame stream.
+#[test]
+fn partial_reads_reassemble_across_frame_boundaries() {
+    let a = ClientMsg::Request { id: 5, n: 64, seed: 9, pattern: "map:relu".into() };
+    let b = ClientMsg::Shutdown;
+    let mut stream = a.to_frame();
+    stream.extend_from_slice(&b.to_frame());
+
+    // byte at a time: exactly two frames pop out, in order
+    let mut dec = FrameDecoder::new(0);
+    let mut got = Vec::new();
+    for &byte in &stream {
+        dec.push(&[byte]);
+        while let Some(p) = dec.next_frame().unwrap() {
+            got.push(ClientMsg::decode(&p).unwrap());
+        }
+    }
+    assert_eq!(got, vec![a.clone(), b.clone()]);
+    assert!(!dec.is_mid_frame());
+
+    // every split point of the stream, two pushes
+    for cut in 0..=stream.len() {
+        let mut dec = FrameDecoder::new(0);
+        let mut got = Vec::new();
+        dec.push(&stream[..cut]);
+        while let Some(p) = dec.next_frame().unwrap() {
+            got.push(ClientMsg::decode(&p).unwrap());
+        }
+        dec.push(&stream[cut..]);
+        while let Some(p) = dec.next_frame().unwrap() {
+            got.push(ClientMsg::decode(&p).unwrap());
+        }
+        assert_eq!(got, vec![a.clone(), b.clone()], "split at {cut}");
+    }
+}
+
+/// An oversized length prefix is rejected from the prefix alone — before
+/// any payload arrives — and the decoder stays poisoned afterwards.
+#[test]
+fn oversized_length_prefix_is_rejected_before_buffering() {
+    let mut dec = FrameDecoder::new(1024);
+    dec.push(&2048u32.to_le_bytes());
+    assert!(dec.next_frame().is_err(), "oversized prefix must be rejected");
+    dec.push(&[0u8; 8]); // stream keeps talking: still broken
+    assert!(dec.next_frame().is_err(), "framing violations are sticky");
+
+    // a frame exactly at the cap is fine
+    let mut dec = FrameDecoder::new(1024);
+    let payload = vec![0x42u8; 1024];
+    dec.push(&1024u32.to_le_bytes());
+    dec.push(&payload);
+    assert_eq!(dec.next_frame().unwrap().unwrap(), payload);
+}
+
+/// Malformed payloads: unknown tags, bad flags, non-UTF-8 strings,
+/// truncations and trailing bytes all decode to errors, never panics.
+#[test]
+fn malformed_payloads_error_cleanly() {
+    assert!(ClientMsg::decode(&[]).is_err(), "empty payload");
+    assert!(ClientMsg::decode(&[0x7F]).is_err(), "unknown client tag");
+    assert!(ServerMsg::decode(&[0x01]).is_err(), "client tag on the server side");
+    assert!(ClientMsg::decode(&[0x81]).is_err(), "server tag on the client side");
+
+    // REQUEST with a string length pointing past the payload end
+    let mut p = vec![0x01];
+    p.extend_from_slice(&1u64.to_le_bytes()); // id
+    p.extend_from_slice(&8u32.to_le_bytes()); // n
+    p.extend_from_slice(&2u64.to_le_bytes()); // seed
+    p.extend_from_slice(&100u32.to_le_bytes()); // pattern len: 100, but...
+    p.extend_from_slice(b"short"); // ...only 5 bytes follow
+    assert!(ClientMsg::decode(&p).is_err(), "string length past payload end");
+
+    // REQUEST whose pattern bytes are not UTF-8
+    let mut p = vec![0x01];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&8u32.to_le_bytes());
+    p.extend_from_slice(&2u64.to_le_bytes());
+    p.extend_from_slice(&2u32.to_le_bytes());
+    p.extend_from_slice(&[0xFF, 0xFE]);
+    assert!(ClientMsg::decode(&p).is_err(), "non-UTF-8 pattern");
+
+    // OK with a bad cached flag, then with a bad value kind
+    let mut p = vec![0x81];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.push(2); // cached must be 0 or 1
+    p.extend_from_slice(&0u64.to_le_bytes());
+    p.push(0);
+    p.extend_from_slice(&1.0f32.to_le_bytes());
+    assert!(ServerMsg::decode(&p).is_err(), "bad cached flag");
+    let mut p = vec![0x81];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.push(0);
+    p.extend_from_slice(&0u64.to_le_bytes());
+    p.push(9); // value kind must be 0 or 1
+    assert!(ServerMsg::decode(&p).is_err(), "bad value kind");
+
+    // BUSY with trailing bytes
+    let mut p = vec![0x83];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.push(0);
+    assert!(ServerMsg::decode(&p).is_err(), "trailing bytes");
+
+    // vector whose declared count exceeds the remaining bytes
+    let mut p = vec![0x81];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.push(1);
+    p.extend_from_slice(&0u64.to_le_bytes());
+    p.push(1); // vector
+    p.extend_from_slice(&1000u32.to_le_bytes()); // count 1000, zero floats follow
+    assert!(ServerMsg::decode(&p).is_err(), "vector count past payload end");
+}
+
+/// Mid-frame disconnects: cut the byte stream at every offset. A cut at a
+/// frame boundary is clean; anywhere else the decoder reports a partial
+/// frame buffered ([`FrameDecoder::is_mid_frame`]), which is how the
+/// serving tier distinguishes a polite hangup from a broken peer.
+#[test]
+fn mid_frame_disconnects_are_detectable_at_every_cut() {
+    let msg = ServerMsg::Ok {
+        id: 11,
+        cached: true,
+        jit_nanos: 500,
+        value: Value::Vector(vec![1.0, 2.0, 3.0]),
+    };
+    let stream = msg.to_frame();
+    for cut in 0..=stream.len() {
+        let mut dec = FrameDecoder::new(0);
+        dec.push(&stream[..cut]);
+        let complete = dec.next_frame().unwrap();
+        if cut == stream.len() {
+            assert!(complete.is_some(), "full stream must decode");
+            assert!(!dec.is_mid_frame(), "boundary cut is clean");
+        } else {
+            assert!(complete.is_none(), "cut at {cut} must not yield a frame");
+            assert_eq!(dec.is_mid_frame(), cut > 0, "cut at {cut}");
+            assert_eq!(dec.buffered(), cut);
+        }
+    }
+}
+
+/// The blocking-stream helpers agree with the incremental decoder: clean
+/// EOF at a boundary is `None`, EOF inside a frame is `UnexpectedEof`,
+/// and an oversized prefix is `InvalidData` before the payload is read.
+#[test]
+fn blocking_read_frame_matches_the_decoder_semantics() {
+    let msg = ClientMsg::Request { id: 3, n: 128, seed: 77, pattern: "axpy:2.5".into() };
+    let frame = msg.to_frame();
+
+    // two frames back to back, then clean EOF
+    let mut stream = frame.clone();
+    stream.extend_from_slice(&frame);
+    let mut cur = Cursor::new(stream);
+    for _ in 0..2 {
+        let p = read_frame(&mut cur, 0).unwrap().expect("whole frame");
+        assert_eq!(ClientMsg::decode(&p).unwrap(), msg);
+    }
+    assert!(read_frame(&mut cur, 0).unwrap().is_none(), "clean EOF at boundary");
+
+    // EOF inside the prefix and inside the payload
+    for cut in [2usize, frame.len() - 1] {
+        let mut cur = Cursor::new(frame[..cut].to_vec());
+        let err = read_frame(&mut cur, 0).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut at {cut}");
+    }
+
+    // oversized prefix: InvalidData, without consuming the payload
+    let mut bytes = (DEFAULT_MAX_FRAME as u32 + 1).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[0u8; 16]);
+    let mut cur = Cursor::new(bytes);
+    let err = read_frame(&mut cur, 0).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert_eq!(cur.position(), 4, "payload must not be read after a hostile prefix");
+}
