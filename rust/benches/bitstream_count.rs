@@ -58,5 +58,9 @@ fn main() {
     bench.bench("variant_counting", || {
         (lib.dynamic_variants_for(&ops), lib.static_variants_for(&ops, 9))
     });
-    bench.finish();
+        bench.finish();
+    match bench.write_json() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH json not written: {e}"),
+    }
 }

@@ -44,5 +44,9 @@ fn main() {
     );
     coord.submit(&req).unwrap(); // warm
     bench.bench("cache_hit_lookup", || coord.accelerator(&req.comp).unwrap().2);
-    bench.finish();
+        bench.finish();
+    match bench.write_json() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH json not written: {e}"),
+    }
 }

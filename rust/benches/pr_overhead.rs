@@ -76,5 +76,9 @@ fn main() {
             .unwrap()
             .cache_hits
     });
-    bench.finish();
+        bench.finish();
+    match bench.write_json() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH json not written: {e}"),
+    }
 }

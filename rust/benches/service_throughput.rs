@@ -251,6 +251,97 @@ fn cell<'a>(
 }
 
 // ---------------------------------------------------------------------------
+// Fusion dimension (ISSUE 7): the same 4-worker burst pool with the JIT
+// fusion pass off vs on. The chain-heavy stream is the interleaved
+// conflicting-chain pair — every composition is a 5-stage map chain whose
+// adjacent pairs fuse 5 → 3 tiles, so the pass directly removes PR
+// downloads; the mixed stream shows it does no harm where there is little
+// to fuse.
+// ---------------------------------------------------------------------------
+
+/// Mean JIT front-end stage count (= tiles requested per composition)
+/// across the stream's distinct compositions, under one fusion policy.
+fn tiles_per_composition(reqs: &[Request], fuse: bool) -> f64 {
+    let cfg = OverlayConfig::default();
+    let lib = jit_overlay::bitstream::BitstreamLibrary::standard(&cfg);
+    let mut seen = std::collections::HashSet::new();
+    let (mut tiles, mut comps) = (0usize, 0usize);
+    for r in reqs {
+        if seen.insert(r.comp.cache_key()) {
+            let spec = jit_overlay::jit::Jit
+                .frontend_with(&lib, &r.comp, fuse)
+                .expect("frontend");
+            tiles += spec.stages.len();
+            comps += 1;
+        }
+    }
+    tiles as f64 / comps as f64
+}
+
+/// Burst-drain pool with an explicit fusion policy (same paused-backlog
+/// methodology as [`run_pool`]).
+fn run_fusion_pool(workers: usize, fuse: bool, reqs: &[Request]) -> (f64, Metrics) {
+    let mut service =
+        Mode::Burst.service(workers, reqs.len(), ServiceConfig::default().max_queue_skew);
+    service.fuse = fuse;
+    let pool = WorkerPool::new_paused(OverlayConfig::default(), service).expect("pool spawn");
+    let pending: Vec<_> = reqs
+        .iter()
+        .map(|r| pool.submit(r.clone()).expect("submit"))
+        .collect();
+    let t0 = std::time::Instant::now();
+    pool.start();
+    for rx in pending {
+        rx.recv().expect("worker alive").expect("request served");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (dt, pool.shutdown().aggregate)
+}
+
+fn bench_fusion(
+    streams: &[(&'static str, &[Request])],
+) -> Vec<(&'static str, &'static str, f64, Metrics, f64)> {
+    const WORKERS: usize = 4;
+    let mut t = Table::new(
+        "fusion — unfused vs fused (4 workers, burst drain)",
+        &[
+            "stream",
+            "fusion",
+            "tiles/comp",
+            "wall (ms)",
+            "req/s",
+            "PR dl/req",
+            "fused",
+            "dl-avoid",
+            "fuse-fb",
+            "cpu-fb",
+        ],
+    );
+    let mut cells = Vec::new();
+    for &(label, reqs) in streams {
+        for fuse in [false, true] {
+            let tpc = tiles_per_composition(reqs, fuse);
+            let (dt, m) = run_fusion_pool(WORKERS, fuse, reqs);
+            t.row(&[
+                label.into(),
+                if fuse { "on" } else { "off" }.into(),
+                format!("{tpc:.2}"),
+                format!("{:.1}", dt * 1e3),
+                format!("{:.0}", reqs.len() as f64 / dt),
+                format!("{:.3}", m.pr_downloads as f64 / reqs.len() as f64),
+                m.stages_fused.to_string(),
+                m.downloads_avoided.to_string(),
+                m.fusion_fallbacks.to_string(),
+                m.cpu_fallbacks.to_string(),
+            ]);
+            cells.push((label, if fuse { "on" } else { "off" }, dt, m, tpc));
+        }
+    }
+    print!("{}", t.render());
+    cells
+}
+
+// ---------------------------------------------------------------------------
 // Front-end dimension (ISSUE 5): reactor vs thread-per-client by session
 // count. Same 4-worker pool, same per-session stream; what varies is the
 // serving layer — S client threads each with per-request channels, or a
@@ -425,6 +516,33 @@ fn main() {
         if spill_m.placement_respecializations > 0 { "PASS" } else { "MISS" },
     );
 
+    // ISSUE 7: fusion off vs on over a chain-heavy stream (the adversarial
+    // conflicting-chain interleave — every composition fuses 5 → 3 tiles)
+    // and the mixed stream. Acceptance: on the chain-heavy stream, fusion
+    // must request strictly fewer tiles per composition and issue no more
+    // PR downloads than the unfused baseline.
+    let chain_reqs = adversarial_stream(requests as usize);
+    let mixed_reqs = mixed_stream(requests as usize, n);
+    let fusion_cells =
+        bench_fusion(&[("chain-heavy", &chain_reqs), ("mixed", &mixed_reqs)]);
+    let fusion_cell = |stream: &str, fuse: &str| {
+        fusion_cells
+            .iter()
+            .find(|(s, f, _, _, _)| *s == stream && *f == fuse)
+            .expect("fusion cell present")
+    };
+    let (_, _, _, fuse_off_m, fuse_off_tpc) = fusion_cell("chain-heavy", "off");
+    let (_, _, _, fuse_on_m, fuse_on_tpc) = fusion_cell("chain-heavy", "on");
+    let ok_fuse_tiles = fuse_on_tpc < fuse_off_tpc;
+    let ok_fuse_dl = fuse_on_m.pr_downloads <= fuse_off_m.pr_downloads;
+    println!(
+        "chain-heavy fusion acceptance: tiles/comp {fuse_on_tpc:.2} vs {fuse_off_tpc:.2} (strictly fewer: {}), PR downloads {} vs {} (no more: {})",
+        if ok_fuse_tiles { "PASS" } else { "MISS" },
+        fuse_on_m.pr_downloads,
+        fuse_off_m.pr_downloads,
+        if ok_fuse_dl { "PASS" } else { "MISS" },
+    );
+
     // ISSUE 5: session-count dimension — the reactor front end must match
     // or beat thread-per-client at 256 sessions (64/256/1024 full sweep)
     let (session_counts, per_session, accept_at): (&[usize], usize, usize) =
@@ -465,6 +583,21 @@ fn main() {
             .num("req_per_s", *served as f64 / dt);
         fronts.raw(&o.finish());
     }
+    let mut fusion = JsonArray::new();
+    for (stream, fuse, dt, m, tpc) in &fusion_cells {
+        let mut o = JsonObject::new();
+        o.str("stream", stream)
+            .str("fusion", fuse)
+            .num("tiles_per_comp", *tpc)
+            .num("wall_s", *dt)
+            .num("req_per_s", stream_reqs as f64 / dt)
+            .num("pr_dl_per_req", m.pr_downloads as f64 / stream_reqs as f64)
+            .int("stages_fused", m.stages_fused)
+            .int("downloads_avoided", m.downloads_avoided)
+            .int("fusion_fallbacks", m.fusion_fallbacks)
+            .int("cpu_fallbacks", m.cpu_fallbacks);
+        fusion.raw(&o.finish());
+    }
     let mut accept = JsonObject::new();
     accept
         .str("mixed_rate", if ok_rate { "PASS" } else { "MISS" })
@@ -473,11 +606,14 @@ fn main() {
             "spill_respecializations",
             if spill_m.placement_respecializations > 0 { "PASS" } else { "MISS" },
         )
-        .str("reactor_rate", if ok_reactor { "PASS" } else { "MISS" });
+        .str("reactor_rate", if ok_reactor { "PASS" } else { "MISS" })
+        .str("fusion_tiles", if ok_fuse_tiles { "PASS" } else { "MISS" })
+        .str("fusion_downloads", if ok_fuse_dl { "PASS" } else { "MISS" });
     let mut root = JsonObject::new();
     root.str("group", "service_throughput")
         .int("requests_per_stream", requests as u64)
         .raw("streams", &streams.finish())
+        .raw("fusion", &fusion.finish())
         .raw("frontends", &fronts.finish())
         .raw("acceptance", &accept.finish());
     match write_bench_json("service_throughput", &root.finish()) {

@@ -25,6 +25,12 @@ impl Footprint {
         self.dsp <= budget.dsp && self.ff <= budget.ff && self.lut <= budget.lut
     }
 
+    /// Component-wise sum — the footprint of two operators sharing one
+    /// region (the fusion pass: head + tail datapaths side by side).
+    pub fn plus(&self, other: &Footprint) -> Footprint {
+        Footprint::new(self.dsp + other.dsp, self.ff + other.ff, self.lut + other.lut)
+    }
+
     /// Fraction of the budget left unused, averaged over the three resource
     /// kinds — the internal-fragmentation metric of the T-FRAG study.
     pub fn fragmentation_in(&self, budget: &Footprint) -> f64 {

@@ -200,6 +200,9 @@ impl OperatorKind {
 pub struct Bitstream {
     pub op: OperatorKind,
     pub class: RegionClass,
+    /// Fused tail operator sharing the region (`None` for the standard
+    /// library; `Some` only for on-demand fused descriptors).
+    pub tail: Option<OperatorKind>,
     pub footprint: Footprint,
     /// Configuration-frame byte count (drives ICAP download time).
     pub frame_bytes: usize,
@@ -215,25 +218,59 @@ impl Bitstream {
         cfg: &crate::config::OverlayConfig,
     ) -> Bitstream {
         let footprint = Footprint::for_operator(op);
-        let frame_bytes = match class {
+        Bitstream {
+            op,
+            class,
+            tail: None,
+            footprint,
+            frame_bytes: Self::frame_bytes_for(class, cfg),
+            id: Self::content_hash(op.name(), class),
+        }
+    }
+
+    /// Derive the descriptor for a fused `tail(op(..))` pair in one region.
+    ///
+    /// Fused descriptors are synthesized on demand (the PR manager asks for
+    /// them when a fused assignment misses residency) and never enter the
+    /// standard library catalogue: the fusion pass only produces a pair
+    /// after checking the combined footprint fits `class`, so the catalogue
+    /// stays the paper's per-(operator × class) inventory.
+    pub fn synthesize_fused(
+        op: OperatorKind,
+        tail: OperatorKind,
+        class: RegionClass,
+        cfg: &crate::config::OverlayConfig,
+    ) -> Bitstream {
+        let footprint = Footprint::for_operator(op).plus(&Footprint::for_operator(tail));
+        Bitstream {
+            op,
+            class,
+            tail: Some(tail),
+            footprint,
+            frame_bytes: Self::frame_bytes_for(class, cfg),
+            id: Self::content_hash(&format!("{}+{}", op.name(), tail.name()), class),
+        }
+    }
+
+    fn frame_bytes_for(class: RegionClass, cfg: &crate::config::OverlayConfig) -> usize {
+        match class {
             RegionClass::Small => cfg.small_bitstream_bytes,
             RegionClass::Large => cfg.large_bitstream_bytes,
-        };
-        // FNV-1a over (op, class) — stable across runs, collision-free for
-        // our 21×2 catalogue.
+        }
+    }
+
+    /// FNV-1a over (name, class) — stable across runs, collision-free for
+    /// the 21×2 catalogue plus the fused "head+tail" names.
+    fn content_hash(name: &str, class: RegionClass) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for byte in op
-            .name()
-            .bytes()
-            .chain(std::iter::once(match class {
-                RegionClass::Small => b's',
-                RegionClass::Large => b'l',
-            }))
-        {
+        for byte in name.bytes().chain(std::iter::once(match class {
+            RegionClass::Small => b's',
+            RegionClass::Large => b'l',
+        })) {
             h ^= byte as u64;
             h = h.wrapping_mul(0x1000_0000_01b3);
         }
-        Bitstream { op, class, footprint, frame_bytes, id: h }
+        h
     }
 }
 
@@ -290,5 +327,28 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a.id, c.id);
         assert!(c.frame_bytes > a.frame_bytes);
+    }
+
+    #[test]
+    fn synthesize_fused_sums_footprints_and_hashes_distinctly() {
+        let cfg = OverlayConfig::default();
+        let f = Bitstream::synthesize_fused(
+            OperatorKind::Neg,
+            OperatorKind::Abs,
+            RegionClass::Small,
+            &cfg,
+        );
+        assert_eq!(f.tail, Some(OperatorKind::Abs));
+        assert_eq!(f.footprint, Footprint::new(0, 60, 80));
+        let plain = Bitstream::synthesize(OperatorKind::Neg, RegionClass::Small, &cfg);
+        assert_ne!(f.id, plain.id);
+        // order matters: neg∘abs and abs∘neg are different datapaths
+        let swapped = Bitstream::synthesize_fused(
+            OperatorKind::Abs,
+            OperatorKind::Neg,
+            RegionClass::Small,
+            &cfg,
+        );
+        assert_ne!(f.id, swapped.id);
     }
 }

@@ -88,6 +88,12 @@ pub struct ServiceConfig {
     /// sticky route only forgets affinity: the composition falls back to
     /// its home-hash worker on its next request.
     pub route_capacity: usize,
+    /// Fusion policy for every pool worker: compile compositions with the
+    /// JIT fusion pass (adjacent map∘map / map∘reduce pairs share a tile),
+    /// falling back to the unfused shape — and finally CPU interpretation —
+    /// when placement runs out of room. Off by default: the paper's
+    /// one-operator-per-tile baseline.
+    pub fuse: bool,
 }
 
 impl Default for ServiceConfig {
@@ -101,6 +107,7 @@ impl Default for ServiceConfig {
             steal_min_depth: 2,
             cache_capacity: 256,
             route_capacity: 1024,
+            fuse: false,
         }
     }
 }

@@ -83,6 +83,22 @@ pub struct Metrics {
     /// boundary (bad pattern / oversized `n`) — the connection-level face
     /// of the pool's backpressure.
     pub net_rejections: u64,
+    /// Adjacent stage pairs collapsed by the JIT fusion pass (counted per
+    /// full compile; a fused cache hit re-counts nothing).
+    pub stages_fused: u64,
+    /// PR downloads the fusion pass removed from requests that actually
+    /// reconfigured the fabric: one per fused pair on every submit whose
+    /// run issued at least one download (upper bound — some avoided tiles
+    /// might have been residency hits unfused).
+    pub downloads_avoided: u64,
+    /// Fused placements that failed for capacity and fell back to the
+    /// unfused pipeline shape (the first rung of the fallback ladder).
+    pub fusion_fallbacks: u64,
+    /// Requests no pipeline shape could place even on an empty fabric,
+    /// served by CPU interpretation instead of an error (the ladder's
+    /// bottom rung; excluded from the hits+respecs+compiles==requests
+    /// conservation law).
+    pub cpu_fallbacks: u64,
 }
 
 impl Metrics {
@@ -137,6 +153,10 @@ impl Metrics {
         self.connections += other.connections;
         self.conns_shed += other.conns_shed;
         self.net_rejections += other.net_rejections;
+        self.stages_fused += other.stages_fused;
+        self.downloads_avoided += other.downloads_avoided;
+        self.fusion_fallbacks += other.fusion_fallbacks;
+        self.cpu_fallbacks += other.cpu_fallbacks;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
@@ -169,13 +189,17 @@ impl Metrics {
             connections: self.connections - earlier.connections,
             conns_shed: self.conns_shed - earlier.conns_shed,
             net_rejections: self.net_rejections - earlier.net_rejections,
+            stages_fused: self.stages_fused - earlier.stages_fused,
+            downloads_avoided: self.downloads_avoided - earlier.downloads_avoided,
+            fusion_fallbacks: self.fusion_fallbacks - earlier.fusion_fallbacks,
+            cpu_fallbacks: self.cpu_fallbacks - earlier.cpu_fallbacks,
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -200,6 +224,10 @@ impl Metrics {
             self.connections,
             self.conns_shed,
             self.net_rejections,
+            self.stages_fused,
+            self.downloads_avoided,
+            self.fusion_fallbacks,
+            self.cpu_fallbacks,
         )
     }
 }
@@ -232,6 +260,10 @@ pub struct AtomicMetrics {
     connections: AtomicU64,
     conns_shed: AtomicU64,
     net_rejections: AtomicU64,
+    stages_fused: AtomicU64,
+    downloads_avoided: AtomicU64,
+    fusion_fallbacks: AtomicU64,
+    cpu_fallbacks: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -267,6 +299,10 @@ impl AtomicMetrics {
         self.connections.fetch_add(d.connections, Ordering::Relaxed);
         self.conns_shed.fetch_add(d.conns_shed, Ordering::Relaxed);
         self.net_rejections.fetch_add(d.net_rejections, Ordering::Relaxed);
+        self.stages_fused.fetch_add(d.stages_fused, Ordering::Relaxed);
+        self.downloads_avoided.fetch_add(d.downloads_avoided, Ordering::Relaxed);
+        self.fusion_fallbacks.fetch_add(d.fusion_fallbacks, Ordering::Relaxed);
+        self.cpu_fallbacks.fetch_add(d.cpu_fallbacks, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -301,6 +337,10 @@ impl AtomicMetrics {
             connections: self.connections.load(Ordering::Relaxed),
             conns_shed: self.conns_shed.load(Ordering::Relaxed),
             net_rejections: self.net_rejections.load(Ordering::Relaxed),
+            stages_fused: self.stages_fused.load(Ordering::Relaxed),
+            downloads_avoided: self.downloads_avoided.load(Ordering::Relaxed),
+            fusion_fallbacks: self.fusion_fallbacks.load(Ordering::Relaxed),
+            cpu_fallbacks: self.cpu_fallbacks.load(Ordering::Relaxed),
         }
     }
 }
@@ -364,6 +404,10 @@ mod tests {
             connections: 7,
             conns_shed: 2,
             net_rejections: 3,
+            stages_fused: 4,
+            downloads_avoided: 3,
+            fusion_fallbacks: 2,
+            cpu_fallbacks: 1,
         };
         let mut b = a;
         b.merge(&a);
@@ -384,6 +428,10 @@ mod tests {
         assert_eq!(d.connections, a.connections);
         assert_eq!(d.conns_shed, a.conns_shed);
         assert_eq!(d.net_rejections, a.net_rejections);
+        assert_eq!(d.stages_fused, a.stages_fused);
+        assert_eq!(d.downloads_avoided, a.downloads_avoided);
+        assert_eq!(d.fusion_fallbacks, a.fusion_fallbacks);
+        assert_eq!(d.cpu_fallbacks, a.cpu_fallbacks);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
     }
 
@@ -415,6 +463,10 @@ mod tests {
             connections: 5,
             conns_shed: 1,
             net_rejections: 2,
+            stages_fused: 2,
+            downloads_avoided: 2,
+            fusion_fallbacks: 1,
+            cpu_fallbacks: 1,
         };
         agg.record(&d);
         agg.record(&d);
@@ -437,6 +489,10 @@ mod tests {
         assert_eq!(s.connections, 10);
         assert_eq!(s.conns_shed, 2);
         assert_eq!(s.net_rejections, 4);
+        assert_eq!(s.stages_fused, 4);
+        assert_eq!(s.downloads_avoided, 4);
+        assert_eq!(s.fusion_fallbacks, 2);
+        assert_eq!(s.cpu_fallbacks, 2);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

@@ -45,7 +45,7 @@ use std::time::Instant;
 use crate::config::{OverlayConfig, ServiceConfig};
 use crate::error::Result;
 use crate::exec::{Engine, RunResult};
-use crate::jit::{AcceleratorProgram, CompiledAccelerator, Jit, PlacementPlan};
+use crate::jit::{AcceleratorProgram, CompiledAccelerator, Jit, PlacementPlan, FUSED_KEY_SALT};
 use crate::patterns::Composition;
 use crate::timing::Target;
 
@@ -272,6 +272,11 @@ pub struct Coordinator {
     jit: Jit,
     cache: Arc<AcceleratorCache>,
     pub metrics: Metrics,
+    /// Fusion policy: compile with the fusion pass first, falling back to
+    /// the unfused shape (and finally CPU interpretation) when placement
+    /// runs out of room. Off by default — the paper's one-operator-per-tile
+    /// baseline.
+    fuse: bool,
 }
 
 impl Coordinator {
@@ -283,7 +288,25 @@ impl Coordinator {
 
     /// Build a coordinator serving from a shared (pool-wide) cache.
     pub fn with_cache(cfg: OverlayConfig, cache: Arc<AcceleratorCache>) -> Result<Coordinator> {
-        Ok(Coordinator { engine: Engine::new(cfg)?, jit: Jit, cache, metrics: Metrics::default() })
+        Ok(Coordinator {
+            engine: Engine::new(cfg)?,
+            jit: Jit,
+            cache,
+            metrics: Metrics::default(),
+            fuse: false,
+        })
+    }
+
+    /// Turn the fusion pass on or off for subsequent requests. Fused and
+    /// unfused compiles live under different (salted) cache keys, so
+    /// flipping the policy never serves the wrong shape from cache.
+    pub fn set_fusion(&mut self, on: bool) {
+        self.fuse = on;
+    }
+
+    /// Current fusion policy.
+    pub fn fusion(&self) -> bool {
+        self.fuse
     }
 
     /// Compile (or fetch) the accelerator for a composition, specialized to
@@ -313,7 +336,31 @@ impl Coordinator {
         &mut self,
         comp: &Composition,
     ) -> Result<(CompiledAccelerator, f64, bool)> {
-        let key = comp.cache_key();
+        if self.fuse {
+            // resource-aware ladder, rung 1: the fused shape. On a capacity
+            // refusal, fall through to the unfused shape against the
+            // *current* occupancy — less destructive than evicting the
+            // whole fabric to force the fused one in.
+            match self.accelerator_shaped(comp, true) {
+                Err(e) if e.is_capacity() => self.metrics.fusion_fallbacks += 1,
+                other => return other,
+            }
+        }
+        self.accelerator_shaped(comp, false)
+    }
+
+    /// [`Coordinator::accelerator`] for one explicit shape (fused or not).
+    ///
+    /// The unfused shape is the last accelerator rung: on a capacity
+    /// refusal it evicts the whole fabric and retries against empty tiles.
+    /// The fused shape instead *returns* the capacity error so the ladder
+    /// can try the (differently shaped) unfused pipeline first.
+    fn accelerator_shaped(
+        &mut self,
+        comp: &Composition,
+        fuse: bool,
+    ) -> Result<(CompiledAccelerator, f64, bool)> {
+        let key = comp.cache_key() ^ if fuse { FUSED_KEY_SALT } else { 0 };
         let fabric = self.engine.fabric.id;
         if let Some(hit) = self.cache.lookup(key, fabric) {
             if let Some(plan) = hit.plan {
@@ -354,7 +401,7 @@ impl Coordinator {
                     }
                     (plan, dt)
                 }
-                Err(e) if e.is_capacity() => {
+                Err(e) if e.is_capacity() && !fuse => {
                     // no clean fit anywhere: evict everything and place on
                     // the empty fabric, as a full compile would
                     self.metrics.evictions += 1;
@@ -366,18 +413,20 @@ impl Coordinator {
             return Ok(self.publish_plan(hit.spec, plan, dt));
         }
         let t0 = Instant::now();
-        let compiled = match self.jit.compile(&self.engine.fabric, &self.engine.lib, comp) {
-            Ok(acc) => acc,
-            Err(e) if e.is_capacity() => {
-                self.metrics.evictions += 1;
-                self.engine.fabric.reset_full();
-                self.jit.compile(&self.engine.fabric, &self.engine.lib, comp)?
-            }
-            Err(e) => return Err(e),
-        };
+        let compiled =
+            match self.jit.compile_with(&self.engine.fabric, &self.engine.lib, comp, fuse) {
+                Ok(acc) => acc,
+                Err(e) if e.is_capacity() && !fuse => {
+                    self.metrics.evictions += 1;
+                    self.engine.fabric.reset_full();
+                    self.jit.compile_with(&self.engine.fabric, &self.engine.lib, comp, fuse)?
+                }
+                Err(e) => return Err(e),
+            };
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.jit_compiles += 1;
         self.metrics.jit_seconds += dt;
+        self.metrics.stages_fused += compiled.spec.fused_pairs as u64;
         // first writer wins; a racing worker's duplicate compile converges
         let (acc, evicted) = self.cache.insert(key, compiled.spec, compiled.plan);
         self.metrics.lru_evictions += evicted as u64;
@@ -409,7 +458,15 @@ impl Coordinator {
 
     /// Serve one request.
     pub fn submit(&mut self, req: &Request) -> Result<Response> {
-        let (acc, jit_seconds, cached) = self.accelerator(&req.comp)?;
+        let (acc, jit_seconds, cached) = match self.accelerator(&req.comp) {
+            Ok(triaged) => triaged,
+            // The bottom rung of the resource-aware ladder: no shape of
+            // this composition places on any occupancy (even an empty
+            // fabric), so answer from the CPU reference instead of
+            // surfacing a placement error to the client.
+            Err(e) if e.is_capacity() => return self.submit_cpu_fallback(req),
+            Err(e) => return Err(e),
+        };
         let run = self.engine.run(&acc, &req.inputs, req.target)?;
         self.metrics.requests += 1;
         if let Some(r) = run.reconfig {
@@ -417,9 +474,26 @@ impl Coordinator {
             self.metrics.pr_region_hits += r.cache_hits as u64;
             self.metrics.pr_replaced += r.replaced as u64;
             self.metrics.pr_seconds += r.seconds;
+            if r.downloads > 0 {
+                // each fused pair is one tile (hence one download) the
+                // unfused shape would have paid on this reconfiguration —
+                // an upper-bound indicator (residency hits discount it)
+                self.metrics.downloads_avoided += acc.spec.fused_pairs as u64;
+            }
         }
         self.metrics.busy_seconds += run.timing.total();
         Ok(Response { run, jit_seconds, cached })
+    }
+
+    /// Serve a request by CPU interpretation ([`Engine::run_cpu`]): no
+    /// accelerator, no placement, no fabric state touched. Counted in
+    /// `cpu_fallbacks`; `cached` is false and no JIT time is charged.
+    fn submit_cpu_fallback(&mut self, req: &Request) -> Result<Response> {
+        let run = self.engine.run_cpu(&req.comp, &req.inputs)?;
+        self.metrics.requests += 1;
+        self.metrics.cpu_fallbacks += 1;
+        self.metrics.busy_seconds += run.timing.total();
+        Ok(Response { run, jit_seconds: 0.0, cached: false })
     }
 
     /// Reconfiguration-aware batch schedule: stable-group requests by
@@ -641,6 +715,105 @@ mod tests {
         }
         assert_eq!(c.metrics.evictions, 0);
         assert_eq!(c.metrics.pr_downloads, 3); // 2 (vmul) + 1 (map), once
+    }
+
+    #[test]
+    fn fusion_cuts_chain_tiles_and_downloads() {
+        let mut plain = coord();
+        let r_plain = plain.submit(&chain_a_req(512)).unwrap();
+        let mut fused = coord();
+        fused.set_fusion(true);
+        let r_fused = fused.submit(&chain_a_req(512)).unwrap();
+        // (neg+abs)(square+relu)(neg): 5 tiles → 3, 5 downloads → 3
+        assert_eq!(plain.metrics.pr_downloads, 5);
+        assert_eq!(fused.metrics.pr_downloads, 3);
+        assert_eq!(fused.metrics.stages_fused, 2);
+        assert_eq!(fused.metrics.downloads_avoided, 2);
+        assert_eq!(fused.metrics.fusion_fallbacks, 0);
+        assert_eq!(fused.metrics.cpu_fallbacks, 0);
+        // same answers, bit for bit
+        let (u, f) = (
+            r_plain.run.output.as_vector().unwrap(),
+            r_fused.run.output.as_vector().unwrap(),
+        );
+        assert_eq!(u.len(), f.len());
+        for i in 0..u.len() {
+            assert_eq!(u[i].to_bits(), f[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn fused_capacity_falls_back_to_unfused_shape() {
+        // occupy both Large tiles: the fused vmul (mul+acc_sum needs a
+        // Large region) cannot place, but the unfused 2×Small shape can —
+        // the ladder must take it without evicting the Large residents.
+        let mut c = coord();
+        c.set_fusion(true);
+        let bs = c
+            .engine
+            .lib
+            .get(OperatorKind::Sin, crate::bitstream::RegionClass::Large)
+            .unwrap()
+            .clone();
+        c.engine.fabric.load_bitstream(3, &bs).unwrap();
+        c.engine.fabric.load_bitstream(7, &bs).unwrap();
+        let r = c.submit(&vmul_req(512, 1.0)).unwrap();
+        assert_eq!(r.run.output.as_scalar(), Some(1024.0));
+        assert_eq!(c.metrics.fusion_fallbacks, 1);
+        assert_eq!(c.metrics.cpu_fallbacks, 0);
+        assert_eq!(c.metrics.evictions, 0);
+        assert_eq!(c.engine.fabric.tiles[3].resident, Some(OperatorKind::Sin));
+        assert_eq!(c.engine.fabric.tiles[7].resident, Some(OperatorKind::Sin));
+    }
+
+    #[test]
+    fn unplaceable_composition_degrades_to_cpu() {
+        // three Large-only operators on a fabric with two Large tiles: no
+        // shape places even on an empty fabric. The ladder bottoms out at
+        // CPU interpretation instead of surfacing a placement error.
+        use OperatorKind::*;
+        let mut c = coord();
+        c.set_fusion(true);
+        let n = 256;
+        let comp = Composition::chain(&[Sin, Exp, Log], n).unwrap();
+        let x = vec![0.5f32; n];
+        let r = c.submit(&Request::dynamic(comp, vec![x.clone()])).unwrap();
+        assert!(matches!(r.run.target, Target::ArmSoftware));
+        assert!(!r.cached);
+        assert_eq!(r.jit_seconds, 0.0);
+        assert_eq!(c.metrics.cpu_fallbacks, 1);
+        assert_eq!(c.metrics.fusion_fallbacks, 1);
+        assert_eq!(c.metrics.requests, 1);
+        let got = r.run.output.as_vector().unwrap();
+        let want = 0.5f32.sin().exp().ln();
+        assert_eq!(got[0].to_bits(), want.to_bits());
+        // CPU fallbacks sit outside the hit/respec/compile conservation law
+        assert_eq!(
+            c.metrics.cache_hits
+                + c.metrics.placement_respecializations
+                + c.metrics.jit_compiles,
+            0
+        );
+    }
+
+    #[test]
+    fn fusion_policies_do_not_share_cache_entries() {
+        let cache = Arc::new(AcceleratorCache::new(2));
+        let mut c = Coordinator::with_cache(OverlayConfig::default(), cache.clone()).unwrap();
+        assert!(!c.fusion());
+        c.submit(&vmul_req(512, 1.0)).unwrap();
+        c.set_fusion(true);
+        assert!(c.fusion());
+        let r = c.submit(&vmul_req(512, 1.0)).unwrap();
+        assert!(!r.cached, "fused compile must not reuse the unfused entry");
+        assert_eq!(cache.len(), 2);
+        assert_eq!(c.metrics.jit_compiles, 2);
+        // a repeat under the same policy is a full hit
+        let r2 = c.submit(&vmul_req(512, 2.0)).unwrap();
+        assert!(r2.cached);
+        assert_eq!(r2.jit_seconds, 0.0);
+        assert_eq!(c.metrics.cache_hits, 1);
+        assert_eq!(r2.run.output.as_scalar(), Some(2.0 * 2.0 * 512.0));
     }
 
     #[test]

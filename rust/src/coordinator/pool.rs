@@ -783,7 +783,9 @@ impl WorkerPool {
         // construction then simply returns before any thread exists
         let mut coords = Vec::with_capacity(service.workers);
         for _ in 0..service.workers {
-            coords.push(Coordinator::with_cache(cfg.clone(), cache.clone())?);
+            let mut c = Coordinator::with_cache(cfg.clone(), cache.clone())?;
+            c.set_fusion(service.fuse);
+            coords.push(c);
         }
         let shared = Arc::new(PoolShared {
             queues: (0..service.workers).map(|_| JobQueue::new(service.queue_capacity)).collect(),

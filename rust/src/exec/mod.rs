@@ -17,6 +17,7 @@ use crate::config::OverlayConfig;
 use crate::error::{Error, Result};
 use crate::jit::{AcceleratorProgram, CompiledAccelerator, PlacementPlan};
 use crate::overlay::{Controller, ExecStats, ExternalIo, Fabric};
+use crate::patterns::Composition;
 use crate::place::{DynamicPlacer, StaticScenario};
 use crate::reconfig::{PrManager, ReconfigStats};
 use crate::timing::{arm::ArmModel, hls::HlsModel, overlay as otiming, Target, TimingBreakdown};
@@ -178,11 +179,19 @@ impl Engine {
     }
 
     fn run_arm(&self, acc: &CompiledAccelerator, inputs: &[Vec<f32>]) -> Result<RunResult> {
-        let output = cpu::eval(acc.composition(), inputs)?;
-        let stages = acc.stages().len();
+        self.run_cpu(acc.composition(), inputs)
+    }
+
+    /// Software (ARM-model) evaluation straight from the composition — no
+    /// compiled accelerator, no placement, no fabric state. This is the
+    /// floor of the resource-aware fallback ladder: when neither the fused
+    /// nor the unfused shape places, the coordinator answers from here
+    /// instead of surfacing a placement error.
+    pub fn run_cpu(&self, comp: &Composition, inputs: &[Vec<f32>]) -> Result<RunResult> {
+        let output = cpu::eval(comp, inputs)?;
         let timing = self
             .arm
-            .pattern_time(&self.fabric.cfg.clocks, stages, acc.composition().n);
+            .pattern_time(&self.fabric.cfg.clocks, comp.stages().len(), comp.n);
         Ok(RunResult { target: Target::ArmSoftware, output, timing, reconfig: None, stats: None })
     }
 
@@ -209,10 +218,12 @@ impl Engine {
     /// this fabric? (Downloading into an empty tile, or re-downloading the
     /// operator already resident, is never a clobber.)
     pub fn plan_clobbers(&self, plan: &PlacementPlan) -> bool {
-        plan.placement
-            .assignments
-            .iter()
-            .any(|a| self.fabric.tiles[a.tile].resident.map_or(false, |r| r != a.op))
+        plan.placement.assignments.iter().any(|a| {
+            let t = &self.fabric.tiles[a.tile];
+            // a fused pair and its bare head are different datapaths, so
+            // the comparison covers the whole (head, tail) residency
+            t.resident.map_or(false, |r| r != a.op || t.resident_tail != a.tail)
+        })
     }
 
     /// The residency-guard predicate: would replaying `acc`'s plan
@@ -502,6 +513,58 @@ mod tests {
         // free for its 5 stages — allowed (and counted as pr_replaced)
         assert!(!full.plan_is_stale(&acc_a));
         full.run(&acc_a, &[vec![1.0; n]], Target::DynamicOverlay).unwrap();
+    }
+
+    /// Tentpole invariant: fused execution is bit-identical to unfused
+    /// execution and to the CPU reference, on both map chains and reduces.
+    #[test]
+    fn fused_execution_matches_unfused_bitwise() {
+        let n = 2048;
+        let chain = Composition::chain(
+            &[
+                OperatorKind::Neg,
+                OperatorKind::Abs,
+                OperatorKind::Square,
+                OperatorKind::Relu,
+                OperatorKind::Neg,
+            ],
+            n,
+        )
+        .unwrap();
+        for comp in [chain, Composition::vmul_reduce(n), Composition::filter_reduce(0.25, n)] {
+            let inputs: Vec<Vec<f32>> =
+                (0..comp.inputs).map(|k| ramp(n, 19 + k as u32)).collect();
+            let mut plain = engine();
+            let acc = compile(&plain, &comp);
+            let unfused = plain.run(&acc, &inputs, Target::DynamicOverlay).unwrap();
+
+            let mut fused_e = engine();
+            let fused_acc =
+                Jit.compile_with(&fused_e.fabric, &fused_e.lib, &comp, true).unwrap();
+            assert!(fused_acc.spec.fused_pairs > 0, "{comp:?} should fuse");
+            assert!(fused_acc.stages().len() < acc.stages().len());
+            let fused = fused_e.run(&fused_acc, &inputs, Target::DynamicOverlay).unwrap();
+
+            let cpu = plain.run_cpu(&comp, &inputs).unwrap();
+            match (&unfused.output, &fused.output, &cpu.output) {
+                (Value::Scalar(u), Value::Scalar(f), Value::Scalar(c)) => {
+                    assert_eq!(u.to_bits(), f.to_bits(), "{comp:?}");
+                    assert_eq!(u.to_bits(), c.to_bits(), "{comp:?}");
+                }
+                (Value::Vector(u), Value::Vector(f), Value::Vector(c)) => {
+                    for i in 0..n {
+                        assert_eq!(u[i].to_bits(), f[i].to_bits(), "{comp:?} i={i}");
+                        assert_eq!(u[i].to_bits(), c[i].to_bits(), "{comp:?} i={i}");
+                    }
+                }
+                _ => panic!("output shape mismatch for {comp:?}"),
+            }
+            // and the point of it all: fewer PR downloads
+            assert!(
+                fused.reconfig.unwrap().downloads < unfused.reconfig.unwrap().downloads,
+                "{comp:?}"
+            );
+        }
     }
 
     #[test]

@@ -30,13 +30,18 @@ pub mod codegen;
 
 use std::sync::Arc;
 
-use crate::bitstream::{BitstreamLibrary, OperatorKind, RegionClass};
+use crate::bitstream::{BitstreamLibrary, Footprint, OperatorKind, RegionClass};
 use crate::error::{Error, Result};
 use crate::isa::Program;
 use crate::overlay::Fabric;
 use crate::patterns::{Composition, Source, Stage};
 use crate::place::{Assignment, DynamicPlacer, Placement};
 use crate::route::{shortest_route, Route};
+
+/// Salt XOR'd into [`AcceleratorProgram::key`] when the front end runs with
+/// fusion enabled, so fused and unfused compiles of the same composition
+/// never collide in the accelerator cache.
+pub const FUSED_KEY_SALT: u64 = 0xA5F0_5EDC_0DE5_A17E;
 
 /// The fabric-independent half of a compiled accelerator: what the JIT
 /// front end produces before any fabric is chosen. Shared pool-wide.
@@ -47,8 +52,13 @@ pub struct AcceleratorProgram {
     pub stages: Vec<Stage>,
     /// Bitstream region class selected for each stage (same order).
     pub classes: Vec<RegionClass>,
-    /// [`Composition::cache_key`], precomputed.
+    /// [`Composition::cache_key`], precomputed — XOR'd with
+    /// [`FUSED_KEY_SALT`] when compiled by [`Jit::frontend_with`] with
+    /// fusion on.
     pub key: u64,
+    /// Stage pairs the fusion pass collapsed (0 when fusion was off or
+    /// found nothing fusible).
+    pub fused_pairs: usize,
 }
 
 /// The fabric-dependent half: a placement (plus its routes and the placed
@@ -136,7 +146,18 @@ impl Jit {
         lib: &BitstreamLibrary,
         comp: &Composition,
     ) -> Result<CompiledAccelerator> {
-        let spec = Arc::new(self.frontend(lib, comp)?);
+        self.compile_with(fabric, lib, comp, false)
+    }
+
+    /// [`Jit::compile`] with an explicit fusion policy.
+    pub fn compile_with(
+        &self,
+        fabric: &Fabric,
+        lib: &BitstreamLibrary,
+        comp: &Composition,
+        fuse: bool,
+    ) -> Result<CompiledAccelerator> {
+        let spec = Arc::new(self.frontend_with(lib, comp, fuse)?);
         let plan = Arc::new(self.place_onto(fabric, &spec)?);
         Ok(CompiledAccelerator { spec, plan })
     }
@@ -149,17 +170,38 @@ impl Jit {
         lib: &BitstreamLibrary,
         comp: &Composition,
     ) -> Result<AcceleratorProgram> {
+        self.frontend_with(lib, comp, false)
+    }
+
+    /// [`Jit::frontend`] with an explicit fusion policy. With `fuse` on,
+    /// adjacent map∘map and map∘reduce stage pairs whose combined footprint
+    /// fits a region class collapse into single fused stages — fewer tiles,
+    /// fewer PR downloads, identical results (the tail applies element-wise
+    /// inside the tile). The cache key is salted so the two policies never
+    /// share cache entries.
+    pub fn frontend_with(
+        &self,
+        lib: &BitstreamLibrary,
+        comp: &Composition,
+        fuse: bool,
+    ) -> Result<AcceleratorProgram> {
         let stages = comp.stages();
         if stages.is_empty() {
             return Err(Error::Pattern("composition produced no stages".into()));
         }
-        let classes: Vec<RegionClass> =
-            stages.iter().map(|s| lib.preferred_class(s.op)).collect::<Result<_>>()?;
+        let (stages, classes, fused_pairs) = if fuse {
+            fuse_stages(lib, stages)?
+        } else {
+            let classes: Vec<RegionClass> =
+                stages.iter().map(|s| lib.preferred_class(s.op)).collect::<Result<_>>()?;
+            (stages, classes, 0)
+        };
         Ok(AcceleratorProgram {
             composition: comp.clone(),
             stages,
             classes,
-            key: comp.cache_key(),
+            key: comp.cache_key() ^ if fuse { FUSED_KEY_SALT } else { 0 },
+            fused_pairs,
         })
     }
 
@@ -170,7 +212,13 @@ impl Jit {
     /// a cached plan. Needs no bitstream library: the front end already
     /// selected every stage's region class into `spec.classes`.
     pub fn place_onto(&self, fabric: &Fabric, spec: &AcceleratorProgram) -> Result<PlacementPlan> {
-        let placement = place_stages(fabric, &spec.stages, &spec.classes)?;
+        let mut placement = place_stages(fabric, &spec.stages, &spec.classes)?;
+        // both placers emit assignments in stage order; carry each stage's
+        // fused tail into its assignment so the PR manager downloads the
+        // fused bitstream (and residency tracks the pair, not just the head)
+        for (a, s) in placement.assignments.iter_mut().zip(&spec.stages) {
+            a.tail = s.fused;
+        }
         let routes = route_stages(fabric, &spec.stages, &placement)?;
         let (program, scalar_channels, chunk) = codegen::generate(
             &fabric.cfg,
@@ -189,6 +237,112 @@ impl Jit {
             chunk,
         })
     }
+}
+
+/// The fusion pass: one left-to-right scan collapsing adjacent (producer,
+/// consumer) stage pairs into single fused stages.
+///
+/// A pair `(a, b)` fuses when every one of these holds:
+///
+///  * `b`'s only input is `a`'s stream (slot 0), and `b` is `a`'s only
+///    consumer — fusing must not steal a stream someone else reads;
+///  * `a` is a plain map (not a reduce, not stateful, not `Select`/`Route`);
+///  * `b` is either the reduce stage (a stateful fold — map∘reduce fusion,
+///    e.g. `mul+acc_sum`) or a unary stateless map (map∘map fusion);
+///  * the combined footprint fits *some* region class — the resource-aware
+///    gate: `neg+abs` shares a Small region, `square+relu` needs Large,
+///    `sin+exp` fuses nowhere and stays two tiles.
+///
+/// The fused stage keeps `a`'s operator and sources, takes `b`'s reduce
+/// role, and records `b`'s operator as its tail; later stage references are
+/// remapped over the removed index. Fused stages never re-fuse (pair-only —
+/// region budgets rarely hold three datapaths, and pairs keep residency
+/// churn analyzable).
+///
+/// Returns the rewritten stages, their region classes (fused stages get the
+/// smallest class holding the *combined* footprint), and the pair count.
+fn fuse_stages(
+    lib: &BitstreamLibrary,
+    mut stages: Vec<Stage>,
+) -> Result<(Vec<Stage>, Vec<RegionClass>, usize)> {
+    fn can_fuse(stages: &[Stage], i: usize) -> bool {
+        let (a, b) = (&stages[i], &stages[i + 1]);
+        if a.fused.is_some() || b.fused.is_some() {
+            return false;
+        }
+        if a.is_reduce || a.op.is_stateful() {
+            return false;
+        }
+        if matches!(a.op, OperatorKind::Select | OperatorKind::Route)
+            || matches!(b.op, OperatorKind::Select | OperatorKind::Route)
+        {
+            return false;
+        }
+        if b.sources.len() != 1 || b.sources[0] != (Source::Stage { index: i, slot: 0 }) {
+            return false;
+        }
+        let other_consumer = stages.iter().enumerate().any(|(k, s)| {
+            k != i + 1
+                && s.sources
+                    .iter()
+                    .any(|src| matches!(src, Source::Stage { index, .. } if *index == i))
+        });
+        if other_consumer {
+            return false;
+        }
+        let tail_ok = if b.is_reduce {
+            b.op.is_stateful()
+        } else {
+            b.op.arity() == 1 && !b.op.is_stateful()
+        };
+        if !tail_ok {
+            return false;
+        }
+        let fp = Footprint::for_operator(a.op).plus(&Footprint::for_operator(b.op));
+        RegionClass::smallest_fitting(&fp).is_some()
+    }
+
+    let mut fused_pairs = 0;
+    let mut i = 0;
+    while i + 1 < stages.len() {
+        if can_fuse(&stages, i) {
+            let b = stages.remove(i + 1);
+            stages[i].fused = Some(b.op);
+            stages[i].is_reduce = b.is_reduce;
+            fused_pairs += 1;
+            // close the index gap left by `b`
+            for s in stages.iter_mut() {
+                for src in s.sources.iter_mut() {
+                    if let Source::Stage { index, .. } = src {
+                        if *index == i + 1 {
+                            *index = i;
+                        } else if *index > i + 1 {
+                            *index -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+
+    let classes: Vec<RegionClass> = stages
+        .iter()
+        .map(|s| match s.fused {
+            Some(t) => {
+                let fp = Footprint::for_operator(s.op).plus(&Footprint::for_operator(t));
+                RegionClass::smallest_fitting(&fp).ok_or_else(|| {
+                    Error::Pattern(format!(
+                        "fused {}+{} fits no region class",
+                        s.op.name(),
+                        t.name()
+                    ))
+                })
+            }
+            None => lib.preferred_class(s.op),
+        })
+        .collect::<Result<_>>()?;
+    Ok((stages, classes, fused_pairs))
 }
 
 /// Place stages: linear pipelines go through the dynamic placer; the
@@ -278,7 +432,12 @@ fn place_diamond(
                     "diamond placement only supports pred/then/else/select stages".into(),
                 ));
             };
-            assignments.push(Assignment { op: s.op, tile, class: fabric.tiles[tile].class });
+            assignments.push(Assignment {
+                op: s.op,
+                tile,
+                class: fabric.tiles[tile].class,
+                tail: None,
+            });
         }
         return Ok(Placement { assignments });
     }
@@ -399,6 +558,86 @@ mod tests {
         let (f, lib) = setup();
         let acc = Jit.compile(&f, &lib, &Composition::filter_reduce(0.75, 512)).unwrap();
         assert_eq!(acc.scalar_channels(), &[0.75]);
+    }
+
+    #[test]
+    fn fusion_collapses_vmul_reduce_to_one_tile() {
+        let (f, lib) = setup();
+        let comp = Composition::vmul_reduce(1024);
+        let acc = Jit.compile_with(&f, &lib, &comp, true).unwrap();
+        assert_eq!(acc.stages().len(), 1);
+        assert_eq!(acc.spec.fused_pairs, 1);
+        let s = &acc.stages()[0];
+        assert_eq!(s.op, OperatorKind::Mul);
+        assert_eq!(s.fused, Some(OperatorKind::AccSum));
+        assert!(s.is_reduce);
+        // mul+acc_sum = (5, 270, 340): over the Small budget, fits Large
+        assert_eq!(acc.spec.classes, vec![RegionClass::Large]);
+        let a = &acc.placement().assignments[0];
+        assert_eq!(a.tail, Some(OperatorKind::AccSum));
+        assert_eq!(a.class, RegionClass::Large);
+        assert_eq!(acc.total_hops(), 0);
+    }
+
+    #[test]
+    fn fusion_pairs_up_a_map_chain() {
+        let (f, lib) = setup();
+        let ops = [
+            OperatorKind::Neg,
+            OperatorKind::Abs,
+            OperatorKind::Square,
+            OperatorKind::Relu,
+            OperatorKind::Neg,
+        ];
+        let comp = Composition::chain(&ops, 1024).unwrap();
+        let spec = Jit.frontend_with(&lib, &comp, true).unwrap();
+        // pair-only scan: (neg+abs)(square+relu)(neg) — 5 tiles become 3
+        assert_eq!(spec.stages.len(), 3);
+        assert_eq!(spec.fused_pairs, 2);
+        assert_eq!(spec.stages[0].fused, Some(OperatorKind::Abs));
+        assert_eq!(spec.stages[1].fused, Some(OperatorKind::Relu));
+        assert_eq!(spec.stages[2].fused, None);
+        // neg+abs = (0,60,80) fits Small; square+relu = (3,200,240) needs Large
+        assert_eq!(
+            spec.classes,
+            vec![RegionClass::Small, RegionClass::Large, RegionClass::Small]
+        );
+        // sources were remapped over the removed indices
+        assert_eq!(spec.stages[1].sources, vec![Source::Stage { index: 0, slot: 0 }]);
+        assert_eq!(spec.stages[2].sources, vec![Source::Stage { index: 1, slot: 0 }]);
+        // and the whole thing still places and routes
+        let plan = Jit.place_onto(&f, &spec).unwrap();
+        assert_eq!(plan.placement.assignments.len(), 3);
+        assert_eq!(plan.placement.assignments[1].tail, Some(OperatorKind::Relu));
+    }
+
+    #[test]
+    fn fusion_skips_pairs_that_fit_no_region() {
+        let (_, lib) = setup();
+        // sin+exp = (15, 1830, 2280): over even the Large budget — no fuse
+        let comp =
+            Composition::chain(&[OperatorKind::Sin, OperatorKind::Exp], 1024).unwrap();
+        let spec = Jit.frontend_with(&lib, &comp, true).unwrap();
+        assert_eq!(spec.stages.len(), 2);
+        assert_eq!(spec.fused_pairs, 0);
+    }
+
+    #[test]
+    fn fused_and_unfused_keys_differ() {
+        let (_, lib) = setup();
+        let comp = Composition::vmul_reduce(1024);
+        let unfused = Jit.frontend(&lib, &comp).unwrap();
+        let fused = Jit.frontend_with(&lib, &comp, true).unwrap();
+        assert_eq!(unfused.key, comp.cache_key());
+        assert_eq!(fused.key, comp.cache_key() ^ FUSED_KEY_SALT);
+        assert_ne!(unfused.key, fused.key);
+        // fusion-on with nothing fusible still salts: the policy, not the
+        // outcome, decides the cache namespace (lookups must predict keys
+        // without running the pass)
+        let single = Composition::map(OperatorKind::Sqrt, 512);
+        let spec = Jit.frontend_with(&lib, &single, true).unwrap();
+        assert_eq!(spec.fused_pairs, 0);
+        assert_eq!(spec.key, single.cache_key() ^ FUSED_KEY_SALT);
     }
 
     /// The split itself: the front end is fabric-blind, and placement-only

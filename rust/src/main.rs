@@ -121,6 +121,14 @@ fn parse_target(s: &str) -> Result<Target> {
     })
 }
 
+fn parse_fuse(s: &str) -> Result<bool> {
+    Ok(match s {
+        "on" => true,
+        "off" => false,
+        other => bail!("--fuse takes `on` or `off`, got `{other}`"),
+    })
+}
+
 fn cmd_fig2(n: usize) -> Result<()> {
     let mut engine = Engine::new(OverlayConfig::default())?;
     let comp = Composition::vmul_reduce(n);
@@ -218,6 +226,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let target = parse_target(&args.str("target", "dynamic"))?;
     let seed = args.u64("seed", 42)?;
     let mut coord = Coordinator::new(OverlayConfig::default())?;
+    coord.set_fusion(parse_fuse(&args.str("fuse", "off"))?);
     let inputs: Vec<Vec<f32>> = (0..comp.inputs)
         .map(|k| workload::vector(n, seed + k as u64, -2.0, 2.0))
         .collect();
@@ -333,6 +342,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => usize::MAX,
         d => d,
     };
+    service.fuse = parse_fuse(&args.str("fuse", "off"))?;
     let frontend = args.str("frontend", "direct");
     let sessions = args.usize("sessions", 8)?.max(1);
     let inflight =
@@ -464,6 +474,7 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
     let max_inflight = args.usize("max-inflight", 1024)?.max(1);
     let mut service = ServiceConfig::with_workers(workers);
     service.queue_capacity = args.usize("queue-capacity", service.queue_capacity)?;
+    service.fuse = parse_fuse(&args.str("fuse", "off"))?;
     let defaults = NetConfig::default();
     let net = NetConfig {
         idle_timeout_ms: args.u64("idle-timeout-ms", defaults.idle_timeout_ms)?,
@@ -829,7 +840,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve|loadgen> [--flag value ...]
+  run:   --pattern P --n LEN --target dynamic|static|arm --fuse on|off
   serve: --requests K --workers N --n LEN --seed S (multi-fabric pool)
+         --fuse on|off (JIT fusion pass + fallback ladder; default off)
          --drain-window W (burst size; 1 = FIFO)  --queue-capacity C (backpressure)
          --steal-depth D (work-stealing threshold; 0 = off)  --skew S (spill threshold)
          --frontend direct|threads|reactor (session layer; default direct)

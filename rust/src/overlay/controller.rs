@@ -355,11 +355,16 @@ impl Controller {
             pc: 0,
             reason: format!("vec op on tile {idx} with no resident operator"),
         })?;
+        // fused datapath: the tail operator applies to the head's output
+        // inside the same tile (no extra stream, no extra hop).
+        let tail = fabric.tiles[idx].resident_tail;
 
         // ---- gather operand streams: parked inboxes by slot, then BRAMs --
         let parked = fabric.tiles[idx].drain_inbox_by_slot();
         let mut operands: Vec<Vec<f32>> = parked.into_iter().map(|p| p.data).collect();
-        let arity = if i.op == Opcode::VecAcc { 1 } else { op.arity() };
+        // a fused vec.acc streams the *head*'s operands (e.g. mul+acc_sum
+        // reads two vectors); a plain vec.acc folds one stream.
+        let arity = if i.op == Opcode::VecAcc && tail.is_none() { 1 } else { op.arity() };
         // remember which operand came out of which BRAM so buffers can be
         // handed back afterwards, preserving their capacity across the
         // chunk loop (perf §Perf-3: no per-chunk reallocation).
@@ -403,6 +408,11 @@ impl Controller {
         // ---- cycle accounting -------------------------------------------------
         stats.elements += len as u64;
         stats.vector_cycles += op.latency_cycles() + (len as u64) * op.initiation_interval();
+        if let Some(t) = tail {
+            // the fused tail deepens the pipeline by its own fill latency;
+            // streaming still overlaps (II stays 1), so no extra len·II.
+            stats.vector_cycles += t.latency_cycles();
+        }
 
         let mut state = fabric.tiles[idx].acc;
 
@@ -410,7 +420,18 @@ impl Controller {
         // (perf §Perf-1) and leaves the scalar in R[b] and BRAM[imm&1][0] ----
         if i.op == Opcode::VecAcc {
             let mut fold = 0.0f32;
-            if op == OperatorKind::AccSum {
+            if let Some(t) = tail {
+                // fused map∘reduce: the head computes each element, the
+                // stateful tail (acc_sum) folds it — sequentially, the same
+                // association as the unfused two-tile path (bit-identical).
+                let mut head_state = 0.0f32;
+                for k in 0..len {
+                    let a = operands[0][k];
+                    let b = operands.get(1).map_or(0.0, |o| o[k]);
+                    let hv = op.apply(a, b, &mut head_state);
+                    fold = t.apply(hv, 0.0, &mut state);
+                }
+            } else if op == OperatorKind::AccSum {
                 // hot reduce path: plain sequential accumulate (same
                 // association as the generic path — bit-identical)
                 for &v in &operands[0][..len] {
@@ -423,8 +444,9 @@ impl Controller {
                     fold += op.apply(a, b, &mut state);
                 }
             }
-            let scalar = if op.is_stateful() {
-                // stateful ops (AccSum) carry the fold in their feedback reg
+            let scalar = if tail.map_or(op.is_stateful(), OperatorKind::is_stateful) {
+                // stateful ops (AccSum, fused or not) carry the fold in
+                // their feedback reg
                 state
             } else {
                 // stateless op output folded by the adder feedback
@@ -484,6 +506,13 @@ impl Controller {
         } else {
             for r in result.iter_mut().take(len) {
                 *r = op.apply(*r, 0.0, &mut state);
+            }
+        }
+        if let Some(t) = tail {
+            // fused map∘map: the unary stateless tail transforms the head's
+            // output element-wise before delivery.
+            for r in result.iter_mut() {
+                *r = t.apply(*r, 0.0, &mut state);
             }
         }
         fabric.tiles[idx].acc = state;
@@ -656,6 +685,83 @@ mod tests {
         assert_eq!(
             stats.cycles_store_forward() - stats.cycles_pipelined(),
             (n - 1) as u64
+        );
+    }
+
+    #[test]
+    fn fused_vmul_reduce_on_one_tile() {
+        // mul+acc_sum fused into large tile 3: two DMA'd vectors, one
+        // vec.acc, dot product out — no inter-tile stream at all.
+        let mut f = setup(&[]);
+        let bs = crate::bitstream::Bitstream::synthesize_fused(
+            OperatorKind::Mul,
+            OperatorKind::AccSum,
+            RegionClass::Large,
+            &f.cfg,
+        );
+        f.load_bitstream(3, &bs).unwrap();
+        use Opcode::*;
+        let n = 256;
+        let p = prog(
+            &f.cfg,
+            vec![
+                Instr::ldi(3, 1, n),
+                Instr::op(ConnectPr, 3),
+                Instr { op: DmaIn, tile: 3, a: 1, b: 0, imm: 0 },
+                Instr { op: DmaIn, tile: 3, a: 1, b: 0, imm: 0b11 },
+                Instr { op: VecAcc, tile: 3, a: 1, b: 2, imm: 0 },
+                Instr::ldi(3, 3, 1),
+                Instr { op: DmaOut, tile: 3, a: 3, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        let a: Vec<f32> = (0..n).map(|i| i as f32 / 16.0).collect();
+        let b: Vec<f32> = (0..n).map(|i| 0.5 + (i % 7) as f32).collect();
+        // reference association: sequential sum of products, like the
+        // unfused mul-tile → acc-tile pipeline
+        let mut want = 0.0f32;
+        for (x, y) in a.iter().zip(&b) {
+            want += x * y;
+        }
+        let chans = vec![a, b];
+        let mut io = ExternalIo::with_inputs(&chans);
+        Controller::default().run(&mut f, &p, &mut io).unwrap();
+        assert_eq!(io.outputs[0][0].to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn fused_map_applies_tail_elementwise() {
+        // neg+abs fused: abs(neg(x)) == abs(x)
+        let mut f = setup(&[]);
+        let bs = crate::bitstream::Bitstream::synthesize_fused(
+            OperatorKind::Neg,
+            OperatorKind::Abs,
+            RegionClass::Small,
+            &f.cfg,
+        );
+        f.load_bitstream(0, &bs).unwrap();
+        use Opcode::*;
+        let n = 4;
+        let p = prog(
+            &f.cfg,
+            vec![
+                Instr::ldi(0, 1, n),
+                Instr { op: DmaIn, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr { op: VecRun, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr { op: DmaOut, tile: 0, a: 1, b: 0, imm: 0 },
+                Instr::halt(),
+            ],
+        );
+        let chans = vec![vec![-1.5f32, 2.0, -0.25, 0.0]];
+        let mut io = ExternalIo::with_inputs(&chans);
+        let stats = Controller::default().run(&mut f, &p, &mut io).unwrap();
+        assert_eq!(io.outputs[0], vec![1.5, 2.0, 0.25, 0.0]);
+        // the tail adds its fill latency to the vector account
+        assert_eq!(
+            stats.vector_cycles,
+            OperatorKind::Neg.latency_cycles()
+                + OperatorKind::Abs.latency_cycles()
+                + n as u64
         );
     }
 

@@ -30,6 +30,10 @@ pub struct Tile {
     pub class: RegionClass,
     /// The operator currently resident in the PR region, if any.
     pub resident: Option<OperatorKind>,
+    /// Fused tail operator sharing the PR region (set only when a fused
+    /// bitstream was downloaded; the tile then computes `tail(resident(..))`
+    /// element-wise).
+    pub resident_tail: Option<OperatorKind>,
     /// Scalar register file (controller-visible; f64 so it can carry both
     /// loop counters and operand scalars like filter thresholds).
     pub regs: Vec<f64>,
@@ -48,6 +52,7 @@ impl Tile {
         Tile {
             class,
             resident: None,
+            resident_tail: None,
             regs: vec![0.0; cfg.regs_per_tile],
             bram: [Vec::new(), Vec::new()],
             acc: 0.0,
@@ -152,6 +157,7 @@ impl Fabric {
             )));
         }
         tile.resident = Some(bs.op);
+        tile.resident_tail = bs.tail;
         tile.acc = 0.0;
         Ok(())
     }
@@ -163,6 +169,7 @@ impl Fabric {
             .get_mut(idx)
             .ok_or_else(|| Error::Reconfig(format!("tile {idx} out of range")))?;
         tile.resident = None;
+        tile.resident_tail = None;
         Ok(())
     }
 
@@ -188,6 +195,7 @@ impl Fabric {
             t.reset_data();
             t.switch.clear();
             t.resident = None;
+            t.resident_tail = None;
         }
     }
 

@@ -43,6 +43,10 @@ pub struct Stage {
     pub sources: Vec<Source>,
     /// True for the reduce stage (VecAcc instead of VecRun).
     pub is_reduce: bool,
+    /// Fused tail operator: applied element-wise after `op` inside the
+    /// same tile. `None` everywhere except stages produced by the JIT's
+    /// fusion pass (`Jit::frontend_with`); linearization never sets it.
+    pub fused: Option<OperatorKind>,
 }
 
 /// Where a stage operand comes from.
@@ -319,6 +323,7 @@ fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
                 op: OperatorKind::Route,
                 sources: vec![Source::External { chan: *c }],
                 is_reduce: false,
+                fused: None,
             });
             out.len() - 1
         }
@@ -327,18 +332,19 @@ fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
                 op: OperatorKind::Route,
                 sources: vec![Source::scalar(*v)],
                 is_reduce: false,
+                fused: None,
             });
             out.len() - 1
         }
         Expr::Map { op, x } => {
             let src = flowing_source(x, out);
-            out.push(Stage { op: *op, sources: vec![src], is_reduce: false });
+            out.push(Stage { op: *op, sources: vec![src], is_reduce: false, fused: None });
             out.len() - 1
         }
         Expr::Zip { op, x, y } => {
             let xs = flowing_source(x, out);
             let ys = leaf_source(y);
-            out.push(Stage { op: *op, sources: vec![xs, ys], is_reduce: false });
+            out.push(Stage { op: *op, sources: vec![xs, ys], is_reduce: false, fused: None });
             out.len() - 1
         }
         Expr::Reduce { x } => {
@@ -347,6 +353,7 @@ fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
                 op: OperatorKind::AccSum,
                 sources: vec![src],
                 is_reduce: true,
+                fused: None,
             });
             out.len() - 1
         }
@@ -356,6 +363,7 @@ fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
                 op: OperatorKind::FilterGt,
                 sources: vec![src, Source::scalar(*t)],
                 is_reduce: false,
+                fused: None,
             });
             out.len() - 1
         }
@@ -369,18 +377,21 @@ fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
                 op: OperatorKind::Sub,
                 sources: vec![Source::External { chan }, Source::scalar(*t)],
                 is_reduce: false,
+                fused: None,
             });
             let pred = out.len() - 1;
             out.push(Stage {
                 op: *then_op,
                 sources: vec![Source::External { chan }],
                 is_reduce: false,
+                fused: None,
             });
             let then_i = out.len() - 1;
             out.push(Stage {
                 op: *else_op,
                 sources: vec![Source::External { chan }],
                 is_reduce: false,
+                fused: None,
             });
             let else_i = out.len() - 1;
             out.push(Stage {
@@ -391,6 +402,7 @@ fn linearize(e: &Expr, out: &mut Vec<Stage>) -> usize {
                     Source::Stage { index: else_i, slot: 2 },
                 ],
                 is_reduce: false,
+                fused: None,
             });
             out.len() - 1
         }

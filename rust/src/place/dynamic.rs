@@ -113,6 +113,7 @@ impl DynamicPlacer {
                     op,
                     tile,
                     class: fabric.tiles[tile].class,
+                    tail: None,
                 })
                 .collect(),
         })

@@ -76,7 +76,7 @@ mod tests {
             assignments: ops
                 .iter()
                 .enumerate()
-                .map(|(i, &(op, class))| Assignment { op, tile: i, class })
+                .map(|(i, &(op, class))| Assignment { op, tile: i, class, tail: None })
                 .collect(),
         }
     }

@@ -24,6 +24,9 @@ pub struct Assignment {
     pub op: OperatorKind,
     pub tile: usize,
     pub class: RegionClass,
+    /// Fused tail operator resident in the same tile (fusion pass): the
+    /// tile computes `tail(op(..))` element-wise. `None` for plain stages.
+    pub tail: Option<OperatorKind>,
 }
 
 /// A complete placement: assignments in dataflow (stage) order.

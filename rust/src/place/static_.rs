@@ -93,8 +93,8 @@ impl StaticPlacer {
         };
         Ok(Placement {
             assignments: vec![
-                Assignment { op: producer, tile: p, class: RegionClass::Small },
-                Assignment { op: consumer, tile: c, class: RegionClass::Small },
+                Assignment { op: producer, tile: p, class: RegionClass::Small, tail: None },
+                Assignment { op: consumer, tile: c, class: RegionClass::Small, tail: None },
             ],
         })
     }

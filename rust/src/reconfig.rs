@@ -62,14 +62,32 @@ impl PrManager {
     ) -> Result<ReconfigStats> {
         let mut stats = ReconfigStats::default();
         for a in &placement.assignments {
-            if fabric.tiles[a.tile].resident == Some(a.op) {
+            let tile = &fabric.tiles[a.tile];
+            // a residency hit needs the whole fused pair to match: a plain
+            // `mul` resident cannot stand in for `mul+acc_sum` (or vice
+            // versa) — they are different datapaths.
+            if tile.resident == Some(a.op) && tile.resident_tail == a.tail {
                 stats.cache_hits += 1;
                 continue;
             }
-            if fabric.tiles[a.tile].resident.is_some() {
+            if tile.resident.is_some() {
                 stats.replaced += 1;
             }
-            let bs = lib.select(a.op, fabric.tiles[a.tile].class)?;
+            // fused pairs are synthesized on demand (they never enter the
+            // standard catalogue); plain assignments come from the library
+            let owned;
+            let bs = match a.tail {
+                None => lib.select(a.op, tile.class)?,
+                Some(t) => {
+                    owned = crate::bitstream::Bitstream::synthesize_fused(
+                        a.op,
+                        t,
+                        tile.class,
+                        &fabric.cfg,
+                    );
+                    &owned
+                }
+            };
             fabric.load_bitstream(a.tile, bs)?;
             stats.downloads += 1;
             stats.bytes += bs.frame_bytes;
@@ -92,6 +110,7 @@ impl PrManager {
         for t in 0..fabric.tiles.len() {
             if !keep.contains(&t) && fabric.tiles[t].resident.is_some() {
                 fabric.tiles[t].resident = None;
+                fabric.tiles[t].resident_tail = None;
             }
         }
     }
@@ -158,6 +177,7 @@ mod tests {
                     op: ops[t],
                     tile: t,
                     class: f.tiles[t].class,
+                    tail: None,
                 })
                 .collect(),
         };
@@ -202,6 +222,38 @@ mod tests {
         assert_eq!(s2.downloads, 2);
         assert_eq!(s2.replaced, 2);
         assert_eq!(pr.lifetime.replaced, 2);
+    }
+
+    #[test]
+    fn fused_assignment_is_its_own_residency_entry() {
+        let (mut f, lib, mut pr) = setup();
+        let fused = Placement {
+            assignments: vec![crate::place::Assignment {
+                op: OperatorKind::Mul,
+                tile: 3, // large tile: mul+acc_sum needs the large budget
+                class: f.tiles[3].class,
+                tail: Some(OperatorKind::AccSum),
+            }],
+        };
+        let cold = pr.apply(&mut f, &lib, &fused).unwrap();
+        assert_eq!(cold.downloads, 1);
+        assert_eq!(f.tiles[3].resident, Some(OperatorKind::Mul));
+        assert_eq!(f.tiles[3].resident_tail, Some(OperatorKind::AccSum));
+        // same fused pair again: residency hit
+        let warm = pr.apply(&mut f, &lib, &fused).unwrap();
+        assert_eq!(warm.cache_hits, 1);
+        assert_eq!(warm.downloads, 0);
+        // a *plain* mul on the same tile is a different datapath: re-download
+        let plain = Placement {
+            assignments: vec![crate::place::Assignment {
+                tail: None,
+                ..fused.assignments[0]
+            }],
+        };
+        let s = pr.apply(&mut f, &lib, &plain).unwrap();
+        assert_eq!(s.downloads, 1);
+        assert_eq!(s.replaced, 1);
+        assert_eq!(f.tiles[3].resident_tail, None);
     }
 
     #[test]

@@ -327,6 +327,56 @@ fn prop_spills_never_clobber_when_free_tiles_suffice() {
 // ---------------------------------------------------------------------------
 
 #[test]
+fn prop_fusion_is_bit_identical_to_unfused_and_cpu() {
+    use jit_overlay::coordinator::{Coordinator, Request};
+    use jit_overlay::exec::Value;
+
+    // every stream shape the service benches throw at the pool: the
+    // mixed 80/20 skew, the spill-heavy distinct-key churn, the
+    // adversarial conflicting-chain interleave — plus the map∘reduce
+    // patterns whose fused datapath reassociates nothing by construction
+    let mut comps: Vec<Composition> = Vec::new();
+    comps.extend(jit_overlay::workload::mixed_compositions(24, 256, seed(0xF05E)));
+    comps.extend(jit_overlay::workload::spill_heavy_compositions(24, 12, seed(0xD1FF)));
+    let [a, b, c] = jit_overlay::workload::conflicting_chains(512);
+    comps.extend(jit_overlay::workload::interleaved_stream(&[a, b, c], 4));
+    comps.push(Composition::vmul_reduce(2048));
+    comps.push(Composition::filter_reduce(0.25, 1024));
+
+    let mut fused = Coordinator::new(OverlayConfig::default()).unwrap();
+    fused.set_fusion(true);
+    let mut plain = Coordinator::new(OverlayConfig::default()).unwrap();
+    for (k, comp) in comps.into_iter().enumerate() {
+        let inputs = jit_overlay::workload::request_inputs(&comp, seed(k as u64));
+        let want = cpu::eval(&comp, &inputs).unwrap();
+        let rf = fused
+            .submit(&Request::dynamic(comp.clone(), inputs.clone()))
+            .unwrap();
+        let ru = plain.submit(&Request::dynamic(comp, inputs)).unwrap();
+        for (label, got) in [("fused", &rf.run.output), ("unfused", &ru.run.output)] {
+            match (got, &want) {
+                (Value::Scalar(g), Value::Scalar(w)) => {
+                    assert_eq!(g.to_bits(), w.to_bits(), "case {k} {label}");
+                }
+                (Value::Vector(g), Value::Vector(w)) => {
+                    assert_eq!(g.len(), w.len(), "case {k} {label}");
+                    for i in 0..g.len() {
+                        assert_eq!(g[i].to_bits(), w[i].to_bits(), "case {k} {label} i={i}");
+                    }
+                }
+                _ => panic!("case {k} {label}: output shape mismatch"),
+            }
+        }
+    }
+    assert!(fused.metrics.stages_fused > 0, "stream must exercise the fusion pass");
+    assert_eq!(plain.metrics.stages_fused, 0, "fusion must stay off by default");
+}
+
+// ---------------------------------------------------------------------------
+// Composition cache keys: random equal compositions hash equal, mutants differ
+// ---------------------------------------------------------------------------
+
+#[test]
 fn prop_cache_key_stability() {
     use OperatorKind::*;
     let pool = [Abs, Neg, Square, Relu];
