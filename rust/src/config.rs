@@ -94,6 +94,16 @@ pub struct ServiceConfig {
     /// when placement runs out of room. Off by default: the paper's
     /// one-operator-per-tile baseline.
     pub fuse: bool,
+    /// Deterministic fault-injection schedule shared by every worker (see
+    /// [`crate::faults`]). The default (all-off) spec collapses to
+    /// [`crate::faults::FaultPlane::NoFaults`], which costs nothing on the
+    /// request path.
+    pub faults: crate::faults::FaultSpec,
+    /// Retry budget for transiently failed PR downloads: a faulted ICAP
+    /// transfer is re-armed up to this many times (each retry re-pays the
+    /// transfer bytes) before the request errors out. Counted in
+    /// `Metrics::download_retries`.
+    pub download_retries: u32,
 }
 
 impl Default for ServiceConfig {
@@ -108,6 +118,8 @@ impl Default for ServiceConfig {
             cache_capacity: 256,
             route_capacity: 1024,
             fuse: false,
+            faults: crate::faults::FaultSpec::default(),
+            download_retries: 3,
         }
     }
 }
@@ -428,6 +440,9 @@ mod tests {
         let s = ServiceConfig::with_workers(4);
         assert_eq!(s.workers, 4);
         s.validate().unwrap();
+        // faults are off by default, with a small positive retry budget
+        assert!(s.faults.is_off());
+        assert!(s.download_retries > 0);
     }
 
     #[test]

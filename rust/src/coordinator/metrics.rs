@@ -99,6 +99,21 @@ pub struct Metrics {
     /// bottom rung; excluded from the hits+respecs+compiles==requests
     /// conservation law).
     pub cpu_fallbacks: u64,
+    /// PR download attempts re-armed after a transient fault: ICAP
+    /// transfers that aborted and were retried within the
+    /// [`crate::config::ServiceConfig::download_retries`] budget, plus one
+    /// per transient tile-fault re-submit (the wrong-bits clear +
+    /// re-download rung).
+    pub download_retries: u64,
+    /// Tiles permanently quarantined after a region fault (capacity lost
+    /// for the fabric's lifetime; the placer routes around them).
+    pub tiles_quarantined: u64,
+    /// Worker threads respawned by pool supervision after a panic.
+    pub workers_restarted: u64,
+    /// Jobs whose burst was replayed after an injected worker panic
+    /// (supervision caught the crash before the burst was consumed, so
+    /// every job still got exactly one reply).
+    pub jobs_replayed: u64,
 }
 
 impl Metrics {
@@ -157,6 +172,10 @@ impl Metrics {
         self.downloads_avoided += other.downloads_avoided;
         self.fusion_fallbacks += other.fusion_fallbacks;
         self.cpu_fallbacks += other.cpu_fallbacks;
+        self.download_retries += other.download_retries;
+        self.tiles_quarantined += other.tiles_quarantined;
+        self.workers_restarted += other.workers_restarted;
+        self.jobs_replayed += other.jobs_replayed;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
@@ -193,13 +212,17 @@ impl Metrics {
             downloads_avoided: self.downloads_avoided - earlier.downloads_avoided,
             fusion_fallbacks: self.fusion_fallbacks - earlier.fusion_fallbacks,
             cpu_fallbacks: self.cpu_fallbacks - earlier.cpu_fallbacks,
+            download_retries: self.download_retries - earlier.download_retries,
+            tiles_quarantined: self.tiles_quarantined - earlier.tiles_quarantined,
+            workers_restarted: self.workers_restarted - earlier.workers_restarted,
+            jobs_replayed: self.jobs_replayed - earlier.jobs_replayed,
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={} dl_retry={} quar={} w_restart={} replay={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -228,6 +251,10 @@ impl Metrics {
             self.downloads_avoided,
             self.fusion_fallbacks,
             self.cpu_fallbacks,
+            self.download_retries,
+            self.tiles_quarantined,
+            self.workers_restarted,
+            self.jobs_replayed,
         )
     }
 }
@@ -264,6 +291,10 @@ pub struct AtomicMetrics {
     downloads_avoided: AtomicU64,
     fusion_fallbacks: AtomicU64,
     cpu_fallbacks: AtomicU64,
+    download_retries: AtomicU64,
+    tiles_quarantined: AtomicU64,
+    workers_restarted: AtomicU64,
+    jobs_replayed: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -303,6 +334,10 @@ impl AtomicMetrics {
         self.downloads_avoided.fetch_add(d.downloads_avoided, Ordering::Relaxed);
         self.fusion_fallbacks.fetch_add(d.fusion_fallbacks, Ordering::Relaxed);
         self.cpu_fallbacks.fetch_add(d.cpu_fallbacks, Ordering::Relaxed);
+        self.download_retries.fetch_add(d.download_retries, Ordering::Relaxed);
+        self.tiles_quarantined.fetch_add(d.tiles_quarantined, Ordering::Relaxed);
+        self.workers_restarted.fetch_add(d.workers_restarted, Ordering::Relaxed);
+        self.jobs_replayed.fetch_add(d.jobs_replayed, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -341,6 +376,10 @@ impl AtomicMetrics {
             downloads_avoided: self.downloads_avoided.load(Ordering::Relaxed),
             fusion_fallbacks: self.fusion_fallbacks.load(Ordering::Relaxed),
             cpu_fallbacks: self.cpu_fallbacks.load(Ordering::Relaxed),
+            download_retries: self.download_retries.load(Ordering::Relaxed),
+            tiles_quarantined: self.tiles_quarantined.load(Ordering::Relaxed),
+            workers_restarted: self.workers_restarted.load(Ordering::Relaxed),
+            jobs_replayed: self.jobs_replayed.load(Ordering::Relaxed),
         }
     }
 }
@@ -373,8 +412,20 @@ mod tests {
 
     #[test]
     fn summary_contains_key_fields() {
-        let m = Metrics { requests: 5, ..Default::default() };
-        assert!(m.summary().contains("requests=5"));
+        let m = Metrics {
+            requests: 5,
+            download_retries: 2,
+            tiles_quarantined: 1,
+            workers_restarted: 3,
+            jobs_replayed: 4,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("requests=5"));
+        assert!(s.contains("dl_retry=2"));
+        assert!(s.contains("quar=1"));
+        assert!(s.contains("w_restart=3"));
+        assert!(s.contains("replay=4"));
     }
 
     #[test]
@@ -408,6 +459,10 @@ mod tests {
             downloads_avoided: 3,
             fusion_fallbacks: 2,
             cpu_fallbacks: 1,
+            download_retries: 5,
+            tiles_quarantined: 1,
+            workers_restarted: 2,
+            jobs_replayed: 6,
         };
         let mut b = a;
         b.merge(&a);
@@ -432,6 +487,10 @@ mod tests {
         assert_eq!(d.downloads_avoided, a.downloads_avoided);
         assert_eq!(d.fusion_fallbacks, a.fusion_fallbacks);
         assert_eq!(d.cpu_fallbacks, a.cpu_fallbacks);
+        assert_eq!(d.download_retries, a.download_retries);
+        assert_eq!(d.tiles_quarantined, a.tiles_quarantined);
+        assert_eq!(d.workers_restarted, a.workers_restarted);
+        assert_eq!(d.jobs_replayed, a.jobs_replayed);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
     }
 
@@ -467,6 +526,10 @@ mod tests {
             downloads_avoided: 2,
             fusion_fallbacks: 1,
             cpu_fallbacks: 1,
+            download_retries: 3,
+            tiles_quarantined: 1,
+            workers_restarted: 1,
+            jobs_replayed: 4,
         };
         agg.record(&d);
         agg.record(&d);
@@ -493,6 +556,10 @@ mod tests {
         assert_eq!(s.downloads_avoided, 4);
         assert_eq!(s.fusion_fallbacks, 2);
         assert_eq!(s.cpu_fallbacks, 2);
+        assert_eq!(s.download_retries, 6);
+        assert_eq!(s.tiles_quarantined, 2);
+        assert_eq!(s.workers_restarted, 2);
+        assert_eq!(s.jobs_replayed, 8);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

@@ -43,8 +43,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{OverlayConfig, ServiceConfig};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::exec::{Engine, RunResult};
+use crate::faults::FaultPlane;
 use crate::jit::{AcceleratorProgram, CompiledAccelerator, Jit, PlacementPlan, FUSED_KEY_SALT};
 use crate::patterns::Composition;
 use crate::timing::Target;
@@ -277,6 +278,9 @@ pub struct Coordinator {
     /// runs out of room. Off by default — the paper's one-operator-per-tile
     /// baseline.
     fuse: bool,
+    /// Quarantined-tile count already billed to `metrics.tiles_quarantined`
+    /// (the fabric count is a level; the metric is its increments).
+    quarantined_seen: usize,
 }
 
 impl Coordinator {
@@ -294,7 +298,17 @@ impl Coordinator {
             cache,
             metrics: Metrics::default(),
             fuse: false,
+            quarantined_seen: 0,
         })
+    }
+
+    /// Install a fault-injection plane (shared across the pool so every
+    /// site draws ordinals from one schedule) and the transient-download
+    /// retry budget. [`FaultPlane::NoFaults`] restores the zero-cost
+    /// default.
+    pub fn set_faults(&mut self, plane: Arc<FaultPlane>, download_retries: u32) {
+        self.engine.faults = plane;
+        self.engine.download_retries = download_retries;
     }
 
     /// Turn the fusion pass on or off for subsequent requests. Fused and
@@ -364,7 +378,11 @@ impl Coordinator {
         let fabric = self.engine.fabric.id;
         if let Some(hit) = self.cache.lookup(key, fabric) {
             if let Some(plan) = hit.plan {
-                if !self.engine.plan_clobbers(&plan) {
+                // a plan assigning a stage to a quarantined tile can never
+                // replay (the download would be refused) — treat it like a
+                // stale plan and respecialize around the dead region
+                let dead = self.engine.plan_touches_quarantine(&plan);
+                if !dead && !self.engine.plan_clobbers(&plan) {
                     self.metrics.cache_hits += 1;
                     return Ok((CompiledAccelerator { spec: hit.spec, plan }, 0.0, true));
                 }
@@ -378,10 +396,15 @@ impl Coordinator {
                 // legitimate capacity thrash the batcher amortizes.
                 return match self.place_fresh(&hit.spec) {
                     Ok((new_plan, dt)) => {
-                        self.metrics.residency_clobbers_avoided += 1;
+                        if !dead {
+                            self.metrics.residency_clobbers_avoided += 1;
+                        }
                         Ok(self.publish_plan(hit.spec, new_plan, dt))
                     }
-                    Err(e) if e.is_capacity() => {
+                    // replaying a dead plan is pointless (the quarantined
+                    // tile refuses the download): surface the capacity
+                    // miss so the ladder degrades instead of spinning
+                    Err(e) if e.is_capacity() && !dead => {
                         self.metrics.cache_hits += 1;
                         Ok((CompiledAccelerator { spec: hit.spec, plan }, 0.0, true))
                     }
@@ -456,8 +479,53 @@ impl Coordinator {
         (CompiledAccelerator { spec, plan }, dt, true)
     }
 
-    /// Serve one request.
+    /// Serve one request, riding the tile-fault recovery ladder.
+    ///
+    /// A transient [`Error::TileFault`] (wrong bits — the engine already
+    /// cleared the corrupt region) re-submits, paying one clean
+    /// re-download (`download_retries`). A permanent one (the engine
+    /// quarantined the region) re-submits too: the plan now reads as dead,
+    /// so the cache respecializes around the quarantined tile — the
+    /// "re-place elsewhere" rung between the fused→unfused ladder and the
+    /// CPU floor. Attempts are bounded by the tile count (each permanent
+    /// fault consumes a tile, so the ladder cannot spin), after which the
+    /// request degrades to CPU interpretation like any other capacity
+    /// exhaustion.
     pub fn submit(&mut self, req: &Request) -> Result<Response> {
+        let max_attempts = self.engine.fabric.tiles.len() + 1;
+        let mut attempt = 0;
+        loop {
+            match self.submit_inner(req) {
+                Err(Error::TileFault { permanent, .. }) => {
+                    self.note_quarantines();
+                    attempt += 1;
+                    if attempt >= max_attempts {
+                        return self.submit_cpu_fallback(req);
+                    }
+                    if !permanent {
+                        // the cleared region re-downloads on the retry —
+                        // bill the extra transfer like a download re-arm
+                        self.metrics.download_retries += 1;
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Account any tiles quarantined since the last fault (the fabric
+    /// count is a level; `tiles_quarantined` bills its increments once).
+    fn note_quarantines(&mut self) {
+        let now = self.engine.fabric.quarantined_tiles();
+        if now > self.quarantined_seen {
+            self.metrics.tiles_quarantined += (now - self.quarantined_seen) as u64;
+            self.quarantined_seen = now;
+        }
+    }
+
+    /// One serving attempt (no tile-fault recovery — [`Coordinator::submit`]
+    /// wraps this in the retry ladder).
+    fn submit_inner(&mut self, req: &Request) -> Result<Response> {
         let (acc, jit_seconds, cached) = match self.accelerator(&req.comp) {
             Ok(triaged) => triaged,
             // The bottom rung of the resource-aware ladder: no shape of
@@ -474,6 +542,7 @@ impl Coordinator {
             self.metrics.pr_region_hits += r.cache_hits as u64;
             self.metrics.pr_replaced += r.replaced as u64;
             self.metrics.pr_seconds += r.seconds;
+            self.metrics.download_retries += r.retries as u64;
             if r.downloads > 0 {
                 // each fused pair is one tile (hence one download) the
                 // unfused shape would have paid on this reconfiguration —
@@ -866,6 +935,75 @@ mod tests {
         assert_eq!(c.metrics.jit_compiles, 1);
         assert_eq!(c.metrics.cache_hits, 1);
         assert!(c.metrics.busy_seconds > 0.0);
+    }
+
+    /// Recovery ladder, transient rung: wrong bits clear the region, the
+    /// re-submit re-downloads clean, and the client never sees the fault.
+    #[test]
+    fn transient_tile_fault_retries_and_serves() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let mut c = coord();
+        c.set_faults(
+            FaultPlane::from_spec(FaultSpec { wrong_bits: vec![1], ..FaultSpec::default() }),
+            3,
+        );
+        let r = c.submit(&vmul_req(256, 1.0)).unwrap();
+        assert_eq!(r.run.output.as_scalar(), Some(512.0));
+        assert_eq!(c.metrics.requests, 1, "one reply per request despite the retry");
+        assert_eq!(c.metrics.download_retries, 1);
+        assert_eq!(c.metrics.tiles_quarantined, 0);
+        assert_eq!(c.metrics.cpu_fallbacks, 0);
+    }
+
+    /// Recovery ladder, "re-place elsewhere" rung: a dead region is
+    /// quarantined and the cached plan respecializes around it — still
+    /// served on the fabric, not the CPU floor.
+    #[test]
+    fn permanent_tile_fault_re_places_elsewhere() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let mut c = coord();
+        c.set_faults(
+            FaultPlane::from_spec(FaultSpec { region_dead: vec![1], ..FaultSpec::default() }),
+            3,
+        );
+        let r = c.submit(&vmul_req(256, 1.0)).unwrap();
+        assert_eq!(r.run.output.as_scalar(), Some(512.0));
+        assert!(matches!(r.run.target, Target::DynamicOverlay), "served on fabric, not CPU");
+        assert_eq!(c.metrics.tiles_quarantined, 1);
+        assert_eq!(c.engine.fabric.quarantined_tiles(), 1);
+        assert_eq!(c.metrics.cpu_fallbacks, 0);
+        // the moved plan is cached: the repeat is a clean full hit
+        let r2 = c.submit(&vmul_req(256, 2.0)).unwrap();
+        assert_eq!(r2.run.output.as_scalar(), Some(1024.0));
+        assert!(r2.cached);
+        assert_eq!(r2.jit_seconds, 0.0);
+    }
+
+    /// Recovery ladder, floor: cascading permanent faults eat the fabric
+    /// tile by tile until placement is infeasible, then the request
+    /// degrades to CPU interpretation instead of erroring or spinning.
+    #[test]
+    fn cascading_permanent_faults_bottom_out_at_cpu() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let mut c = coord();
+        c.set_faults(
+            FaultPlane::from_spec(FaultSpec {
+                region_dead: (1..=20).collect(),
+                ..FaultSpec::default()
+            }),
+            3,
+        );
+        let r = c.submit(&vmul_req(256, 1.0)).unwrap();
+        assert_eq!(r.run.output.as_scalar(), Some(512.0));
+        assert!(matches!(r.run.target, Target::ArmSoftware));
+        assert_eq!(c.metrics.cpu_fallbacks, 1);
+        assert_eq!(c.metrics.requests, 1);
+        assert!(c.metrics.tiles_quarantined >= 1);
+        assert_eq!(
+            c.metrics.tiles_quarantined as usize,
+            c.engine.fabric.quarantined_tiles(),
+            "metric must mirror the fabric's quarantine level"
+        );
     }
 
     #[test]

@@ -56,6 +56,15 @@
 //!   in-flight requests — no per-request channel, no per-request blocked
 //!   `recv`.
 //!
+//! * **worker supervision** — each burst is served under `catch_unwind`:
+//!   a panicking serving path bills its metrics delta into the aggregate,
+//!   rebuilds the worker's [`Coordinator`] in place on the same thread
+//!   (fresh fabric, same shared cache), and either **replays** the staged
+//!   burst (injected faults fire before the jobs are taken, so they never
+//!   left the staging slot) or lets the consumed jobs' [`ReplySink`] drops
+//!   fail safe — every request still gets exactly one reply. Counted in
+//!   `Metrics::workers_restarted` / `Metrics::jobs_replayed`.
+//!
 //! For deterministic batching experiments, [`WorkerPool::new_paused`]
 //! spawns workers held at a start gate: enqueue a full backlog, then
 //! [`WorkerPool::start`] (or [`WorkerPool::start_worker`]) and measure the
@@ -72,6 +81,7 @@ use super::{
 };
 use crate::config::{OverlayConfig, ServiceConfig};
 use crate::error::{Error, Result};
+use crate::faults::FaultPlane;
 
 /// Shortest idle-worker sleep between checking its own queue and the steal
 /// candidates. Doubles up to [`IDLE_POLL_MAX`] while nothing arrives, so a
@@ -281,6 +291,28 @@ struct WorkerExit {
     metrics: Metrics,
     resident_tiles: usize,
     total_tiles: usize,
+}
+
+/// Everything a worker needs to rebuild its [`Coordinator`] in place after
+/// a panic unwound the serving path — the supervision rung of the recovery
+/// ladder. The fault plane is shared (an `Arc`), so a respawned worker
+/// keeps consuming the same deterministic schedule.
+struct RespawnSpec {
+    cfg: OverlayConfig,
+    fuse: bool,
+    plane: Arc<FaultPlane>,
+    download_retries: u32,
+}
+
+impl RespawnSpec {
+    /// Build a fresh coordinator against the shared cache, wired exactly
+    /// like the one it replaces.
+    fn rebuild(&self, cache: &Arc<AcceleratorCache>) -> Result<Coordinator> {
+        let mut c = Coordinator::with_cache(self.cfg.clone(), cache.clone())?;
+        c.set_fusion(self.fuse);
+        c.set_faults(self.plane.clone(), self.download_retries);
+        Ok(c)
+    }
 }
 
 /// A bounded MPMC job queue: submitters push, the owning worker drains in
@@ -781,10 +813,12 @@ impl WorkerPool {
         // state carries each worker's fabric id (steal-victim scoring), so
         // the ids must all be known up front — and a failed fabric
         // construction then simply returns before any thread exists
+        let plane = FaultPlane::from_spec(service.faults.clone());
         let mut coords = Vec::with_capacity(service.workers);
         for _ in 0..service.workers {
             let mut c = Coordinator::with_cache(cfg.clone(), cache.clone())?;
             c.set_fusion(service.fuse);
+            c.set_faults(plane.clone(), service.download_retries);
             coords.push(c);
         }
         let shared = Arc::new(PoolShared {
@@ -801,9 +835,15 @@ impl WorkerPool {
             let shared_w = shared.clone();
             let agg = metrics.clone();
             let drain_window = service.drain_window;
+            let respawn = RespawnSpec {
+                cfg: cfg.clone(),
+                fuse: service.fuse,
+                plane: plane.clone(),
+                download_retries: service.download_retries,
+            };
             let spawned = std::thread::Builder::new()
                 .name(format!("overlay-worker-{w}"))
-                .spawn(move || worker_loop(coord, w, shared_w, agg, drain_window))
+                .spawn(move || worker_loop(coord, w, shared_w, agg, drain_window, respawn))
                 .map_err(Error::from);
             match spawned {
                 Ok(handle) => handles.push(handle),
@@ -1138,12 +1178,20 @@ impl Drop for CloseOnExit<'_> {
 /// with the reconfiguration-aware scheduler, steal whole composition groups
 /// when idle, fold one metrics delta per burst (before delivering replies),
 /// and report the final fabric occupancy on exit.
+///
+/// Every burst is served under `catch_unwind`. A panicking serving path is
+/// **supervised**: the dead coordinator's metrics delta is billed, a fresh
+/// coordinator is rebuilt in place on this same thread, and the burst is
+/// replayed when its jobs survived (injected faults fire before the staging
+/// slot is taken) or left to the [`ReplySink`] drop fail-safe when they did
+/// not — exactly one reply per request either way.
 fn worker_loop(
     mut coord: Coordinator,
     idx: usize,
     shared: Arc<PoolShared>,
     agg: Arc<AtomicMetrics>,
     drain_window: usize,
+    respawn: RespawnSpec,
 ) -> WorkerExit {
     shared.gates[idx].wait();
     let queue = &shared.queues[idx];
@@ -1152,39 +1200,93 @@ fn worker_loop(
     // a submitter or shutdown notifies
     let polling = shared.steal_min_depth != usize::MAX;
     let mut idle_poll = IDLE_POLL;
+    // a burst carried over from a supervised panic: replayed before the
+    // queue is polled again, so recovery never reorders past it
+    let mut carry: Option<Vec<Job>> = None;
     loop {
-        let popped = match queue.pop_burst(drain_window) {
-            None => break, // closed and drained
-            Some(popped) => popped,
-        };
-        let (burst, stole) = if popped.is_empty() {
-            match shared.steal_into(idx) {
-                // steal_into already marked this queue's inflight key,
-                // before publishing the route repoint
-                Some(stolen) => (stolen, true),
-                None => {
-                    queue.wait_nonempty(polling.then_some(idle_poll));
-                    if polling {
-                        idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);
-                    }
-                    continue;
-                }
-            }
+        let (burst, stole) = if let Some(replayed) = carry.take() {
+            (replayed, false)
         } else {
-            (popped, false)
+            let popped = match queue.pop_burst(drain_window) {
+                None => break, // closed and drained
+                Some(popped) => popped,
+            };
+            if popped.is_empty() {
+                match shared.steal_into(idx) {
+                    // steal_into already marked this queue's inflight key,
+                    // before publishing the route repoint
+                    Some(stolen) => (stolen, true),
+                    None => {
+                        queue.wait_nonempty(polling.then_some(idle_poll));
+                        if polling {
+                            idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);
+                        }
+                        continue;
+                    }
+                }
+            } else {
+                (popped, false)
+            }
         };
         idle_poll = IDLE_POLL;
+        let burst_len = burst.len();
         let before = coord.metrics;
-        if stole {
-            coord.metrics.steals += 1;
-        }
-        let replies = coord.serve_burst(burst);
-        agg.record(&coord.metrics.delta_since(&before));
-        queue.load.fetch_sub(replies.len(), Ordering::SeqCst);
-        queue.clear_inflight();
-        for (reply, resp) in replies {
-            // a hung-up client is not a worker error
-            reply.deliver(resp);
+        // stage the burst in a slot the panic path can inspect: an injected
+        // worker fault fires before the slot is taken (the jobs survive for
+        // replay), while a genuine mid-serve panic finds it already empty —
+        // the consumed jobs' ReplySinks then fail safe from their drops
+        let mut slot = Some(burst);
+        let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            coord.engine.faults.maybe_worker_panic();
+            let burst = slot.take().expect("burst staged for serving");
+            if stole {
+                coord.metrics.steals += 1;
+            }
+            coord.serve_burst(burst)
+        }));
+        match served {
+            Ok(replies) => {
+                agg.record(&coord.metrics.delta_since(&before));
+                queue.load.fetch_sub(replies.len(), Ordering::SeqCst);
+                queue.clear_inflight();
+                for (reply, resp) in replies {
+                    // a hung-up client is not a worker error
+                    reply.deliver(resp);
+                }
+            }
+            Err(_) => {
+                // supervision: bill what the dead coordinator managed to
+                // count, then rebuild it in place on this same thread
+                agg.record(&coord.metrics.delta_since(&before));
+                let replay = slot.take();
+                let replayed = replay.as_ref().map_or(0, Vec::len) as u64;
+                if replay.is_none() {
+                    // the jobs were consumed: their sinks already failed
+                    // safe, so this burst is over — release its load
+                    queue.load.fetch_sub(burst_len, Ordering::SeqCst);
+                    queue.clear_inflight();
+                }
+                coord.metrics.workers_restarted += 1;
+                coord.metrics.jobs_replayed += replayed;
+                agg.record(&Metrics {
+                    workers_restarted: 1,
+                    jobs_replayed: replayed,
+                    ..Metrics::default()
+                });
+                match respawn.rebuild(&shared.cache) {
+                    Ok(mut fresh) => {
+                        // the record travels with the worker, not the fabric:
+                        // worker_sum == aggregate still holds after a restart
+                        fresh.metrics = coord.metrics;
+                        coord = fresh;
+                        carry = replay;
+                    }
+                    // the fabric cannot be rebuilt: exit. CloseOnExit fails
+                    // the queue over, and a carried burst's sinks fail safe
+                    // when `replay` drops here.
+                    Err(_) => break,
+                }
+            }
         }
     }
     let (resident_tiles, total_tiles) = coord.engine.residency();

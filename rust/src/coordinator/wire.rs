@@ -336,9 +336,29 @@ impl FrameDecoder {
     }
 }
 
-/// Write one frame (length prefix + payload) to a blocking stream.
+/// Write one frame (length prefix + payload) to a blocking stream, then
+/// flush it. The loop is explicit rather than `write_all` so the contract
+/// is visible and testable: a short write advances and retries from where
+/// the stream stopped, [`io::ErrorKind::Interrupted`] retries the same
+/// syscall, and a `write` that accepts zero bytes is
+/// [`io::ErrorKind::WriteZero`] — never a silently truncated frame that
+/// would desynchronize every later message on the connection.
 pub fn write_frame(w: &mut impl Write, frame_bytes: &[u8]) -> io::Result<()> {
-    w.write_all(frame_bytes)
+    let mut sent = 0;
+    while sent < frame_bytes.len() {
+        match w.write(&frame_bytes[sent..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    format!("stream accepted {sent} of {} frame bytes", frame_bytes.len()),
+                ))
+            }
+            Ok(n) => sent += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    w.flush()
 }
 
 /// Read one frame from a blocking stream. `Ok(None)` is a clean EOF at a
@@ -360,8 +380,30 @@ pub fn read_frame(r: &mut impl Read, max_frame: usize) -> io::Result<Option<Vec<
         ));
     }
     let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
+    read_payload(r, &mut payload)?;
     Ok(Some(payload))
+}
+
+/// `read_exact` for a frame payload, with the retry contract explicit:
+/// short reads advance, [`io::ErrorKind::Interrupted`] retries the same
+/// syscall, and EOF anywhere inside the payload is
+/// [`io::ErrorKind::UnexpectedEof`] naming how much arrived.
+fn read_payload(r: &mut impl Read, buf: &mut [u8]) -> io::Result<()> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("stream cut {got} bytes into a {}-byte payload", buf.len()),
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 enum Filled {
@@ -409,5 +451,102 @@ mod tests {
         assert_eq!(f.len(), 5);
         assert_eq!(u32::from_le_bytes([f[0], f[1], f[2], f[3]]), 1);
         assert_eq!(f[4], TAG_SHUTDOWN);
+    }
+
+    /// A hostile-scheduler stand-in: reads hand out one byte at a time,
+    /// writes accept one byte at a time, and every `interrupt_every`-th
+    /// operation fails with [`io::ErrorKind::Interrupted`] first — the
+    /// worst legal behavior of a blocking socket under signal delivery.
+    struct ChunkStream {
+        data: Vec<u8>,
+        pos: usize,
+        written: Vec<u8>,
+        ops: usize,
+        interrupt_every: usize,
+    }
+
+    impl ChunkStream {
+        fn reading(data: Vec<u8>, interrupt_every: usize) -> ChunkStream {
+            ChunkStream { data, pos: 0, written: Vec::new(), ops: 0, interrupt_every }
+        }
+
+        fn writing(interrupt_every: usize) -> ChunkStream {
+            ChunkStream::reading(Vec::new(), interrupt_every)
+        }
+
+        fn maybe_interrupt(&mut self) -> io::Result<()> {
+            self.ops += 1;
+            if self.interrupt_every != 0 && self.ops % self.interrupt_every == 0 {
+                return Err(io::Error::new(io::ErrorKind::Interrupted, "signal"));
+            }
+            Ok(())
+        }
+    }
+
+    impl Read for ChunkStream {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.maybe_interrupt()?;
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    impl Write for ChunkStream {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.maybe_interrupt()?;
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            self.written.push(buf[0]);
+            Ok(1)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            self.maybe_interrupt()
+        }
+    }
+
+    #[test]
+    fn read_frame_survives_one_byte_chunks_and_interrupts() {
+        let msg = ClientMsg::Request { id: 9, n: 64, seed: 3, pattern: "vmul|reduce+".into() };
+        let mut stream = ChunkStream::reading(msg.to_frame(), 3);
+        let payload = read_frame(&mut stream, 0).unwrap().expect("one frame");
+        assert_eq!(ClientMsg::decode(&payload).unwrap(), msg);
+        // the next read is a clean EOF at the frame boundary
+        assert!(read_frame(&mut stream, 0).unwrap().is_none());
+    }
+
+    #[test]
+    fn write_frame_survives_one_byte_chunks_and_interrupts() {
+        let msg = ServerMsg::Ok {
+            id: 4,
+            cached: true,
+            jit_nanos: 17,
+            value: Value::Vector(vec![1.0, 2.5, -3.0]),
+        };
+        let frame_bytes = msg.to_frame();
+        let mut stream = ChunkStream::writing(2);
+        write_frame(&mut stream, &frame_bytes).unwrap();
+        assert_eq!(stream.written, frame_bytes, "every byte arrives, in order");
+    }
+
+    #[test]
+    fn read_frame_reports_mid_payload_eof() {
+        let mut f = ClientMsg::Shutdown.to_frame();
+        f.pop(); // cut the stream one byte short of the payload
+        let mut stream = ChunkStream::reading(f, 0);
+        let err = read_frame(&mut stream, 0).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn read_frame_reports_mid_prefix_eof() {
+        let mut stream = ChunkStream::reading(vec![0x01, 0x00], 0);
+        let err = read_frame(&mut stream, 0).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
     }
 }

@@ -57,6 +57,14 @@ pub enum Error {
     /// Retry later, drain replies, or use the blocking submit path.
     PoolBusy { worker: usize, capacity: usize },
 
+    /// A fabric tile faulted. `permanent: false` means the tile's
+    /// configuration was corrupted but the region is healthy (recovery:
+    /// clear and re-download); `permanent: true` means the region is dead
+    /// and has been quarantined (recovery: re-place elsewhere). The
+    /// coordinator's recovery ladder retries both before falling back to
+    /// CPU interpretation.
+    TileFault { tile: usize, permanent: bool },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 
@@ -88,6 +96,11 @@ impl fmt::Display for Error {
             Error::PoolBusy { worker, capacity } => {
                 write!(f, "pool busy: worker {worker} queue at capacity {capacity}")
             }
+            Error::TileFault { tile, permanent } => write!(
+                f,
+                "tile fault at tile {tile} ({})",
+                if *permanent { "permanent: region quarantined" } else { "transient: wrong bits" }
+            ),
             // transparent: I/O errors surface their own message
             Error::Io(e) => fmt::Display::fmt(e, f),
             Error::Parse(m) => write!(f, "parse error: {m}"),
@@ -156,6 +169,20 @@ mod tests {
         assert!(!Error::PoolBusy { worker: 0, capacity: 8 }.is_capacity());
         // a stale plan wants respecialization, not a bigger fabric
         assert!(!Error::StalePlan { fabric: 1, free_tiles: 4 }.is_capacity());
+        // tile faults ride their own recovery ladder, not the capacity one
+        assert!(!Error::TileFault { tile: 3, permanent: true }.is_capacity());
+    }
+
+    #[test]
+    fn tile_fault_renders_both_severities() {
+        assert_eq!(
+            Error::TileFault { tile: 4, permanent: false }.to_string(),
+            "tile fault at tile 4 (transient: wrong bits)"
+        );
+        assert_eq!(
+            Error::TileFault { tile: 7, permanent: true }.to_string(),
+            "tile fault at tile 7 (permanent: region quarantined)"
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub use cpu::Value;
 use crate::bitstream::{BitstreamLibrary, OperatorKind};
 use crate::config::OverlayConfig;
 use crate::error::{Error, Result};
+use crate::faults::{ExecFault, FaultPlane};
 use crate::jit::{AcceleratorProgram, CompiledAccelerator, PlacementPlan};
 use crate::overlay::{Controller, ExecStats, ExternalIo, Fabric};
 use crate::patterns::Composition;
@@ -50,6 +51,12 @@ pub struct Engine {
     pub controller: Controller,
     pub arm: ArmModel,
     pub hls: HlsModel,
+    /// Fault-injection plane arbitrating PR downloads and tile execution
+    /// ([`FaultPlane::NoFaults`] by default — zero hot-path cost).
+    pub faults: std::sync::Arc<FaultPlane>,
+    /// Re-arms allowed per transient download fault before giving up
+    /// ([`crate::config::ServiceConfig::download_retries`]).
+    pub download_retries: u32,
 }
 
 impl Engine {
@@ -62,6 +69,8 @@ impl Engine {
             controller: Controller::default(),
             arm: ArmModel::default(),
             hls: HlsModel::default(),
+            faults: FaultPlane::none(),
+            download_retries: 3,
         })
     }
 
@@ -109,7 +118,32 @@ impl Engine {
                 free_tiles: self.fabric.free_tiles().len(),
             });
         }
-        let reconfig = self.pr.apply(&mut self.fabric, &self.lib, acc.placement())?;
+        let reconfig = self.pr.apply_with(
+            &mut self.fabric,
+            &self.lib,
+            acc.placement(),
+            &self.faults,
+            self.download_retries,
+        )?;
+        // Execution fault site: downloads landed, but the serving region
+        // may hold wrong bits (clear it so the retry re-downloads clean)
+        // or die outright (quarantine + re-place). Either way the run is
+        // refused *before* the interpreter touches data, so no partial
+        // output ever escapes a faulted tile.
+        if let Some(fault) = self.faults.next_exec() {
+            if let Some(a) = acc.placement().assignments.first() {
+                match fault {
+                    ExecFault::WrongBits => {
+                        self.fabric.clear_region(a.tile)?;
+                        return Err(Error::TileFault { tile: a.tile, permanent: false });
+                    }
+                    ExecFault::RegionDead => {
+                        self.fabric.quarantine(a.tile);
+                        return Err(Error::TileFault { tile: a.tile, permanent: true });
+                    }
+                }
+            }
+        }
         self.fabric.reset_data();
         self.fabric.reset_switches(); // stale routes must not leak between accelerators
 
@@ -224,6 +258,17 @@ impl Engine {
             // the comparison covers the whole (head, tail) residency
             t.resident.map_or(false, |r| r != a.op || t.resident_tail != a.tail)
         })
+    }
+
+    /// Does `plan` assign any stage to a quarantined tile? Such a plan can
+    /// never replay successfully (the download would be rejected), so the
+    /// cache treats it like a miss and respecializes around the dead
+    /// region instead of replaying into it forever.
+    pub fn plan_touches_quarantine(&self, plan: &PlacementPlan) -> bool {
+        plan.placement
+            .assignments
+            .iter()
+            .any(|a| self.fabric.tiles.get(a.tile).map_or(true, |t| t.quarantined))
     }
 
     /// The residency-guard predicate: would replaying `acc`'s plan
@@ -565,6 +610,54 @@ mod tests {
                 "{comp:?}"
             );
         }
+    }
+
+    /// Execution faults refuse the run before any output escapes: wrong
+    /// bits clear the region (transient — a re-download heals it), a dead
+    /// region is quarantined (permanent — the plan must move elsewhere).
+    #[test]
+    fn exec_faults_refuse_the_run_and_mark_the_tile() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let n = 256;
+        let comp = Composition::vmul_reduce(n);
+        let inputs = [vec![1.0f32; n], vec![1.0f32; n]];
+
+        // wrong bits on exec 1: region cleared, tile stays healthy
+        let mut e = engine();
+        let acc = compile(&e, &comp);
+        e.faults =
+            FaultPlane::from_spec(FaultSpec { wrong_bits: vec![1], ..FaultSpec::default() });
+        let victim = acc.placement().assignments[0].tile;
+        let err = e.run(&acc, &inputs, Target::DynamicOverlay).unwrap_err();
+        assert!(
+            matches!(err, Error::TileFault { tile, permanent: false } if tile == victim),
+            "got {err:?}"
+        );
+        assert_eq!(e.fabric.tiles[victim].resident, None, "corrupt region cleared");
+        assert_eq!(e.fabric.quarantined_tiles(), 0);
+        // exec 2 is clean: the retry re-downloads and serves
+        let run = e.run(&acc, &inputs, Target::DynamicOverlay).unwrap();
+        assert_eq!(run.output.as_scalar(), Some(n as f32));
+
+        // region dead on exec 1: tile quarantined for good
+        let mut e = engine();
+        let acc = compile(&e, &comp);
+        e.faults =
+            FaultPlane::from_spec(FaultSpec { region_dead: vec![1], ..FaultSpec::default() });
+        let victim = acc.placement().assignments[0].tile;
+        let err = e.run(&acc, &inputs, Target::DynamicOverlay).unwrap_err();
+        assert!(
+            matches!(err, Error::TileFault { tile, permanent: true } if tile == victim),
+            "got {err:?}"
+        );
+        assert_eq!(e.fabric.quarantined_tiles(), 1);
+        assert!(e.plan_touches_quarantine(&acc.plan), "dead plan must read as a miss");
+        // respecializing around the dead region still serves the request
+        let plan = Jit.place_onto(&e.fabric, &acc.spec).unwrap();
+        let moved = CompiledAccelerator { spec: acc.spec.clone(), plan: plan.into() };
+        assert!(!e.plan_touches_quarantine(&moved.plan));
+        let run = e.run(&moved, &inputs, Target::DynamicOverlay).unwrap();
+        assert_eq!(run.output.as_scalar(), Some(n as f32));
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Deterministic fault-injection plane for the self-healing machinery.
+//!
+//! Real PR downloads fail transiently, fabric regions die, and worker
+//! threads panic; the serving tier recovers from all three (retry,
+//! quarantine + re-place, supervise + replay). This module makes those
+//! failures *injectable and reproducible* so the recovery ladder is proven
+//! by tests instead of waited for in production.
+//!
+//! A [`FaultSpec`] is a declarative schedule: explicit 1-based ordinals per
+//! injection site ("the 3rd download fails transiently", "the worker
+//! panics on its 1st burst") plus an optional seeded per-mille rate for
+//! transient download faults. Every decision is a pure function of
+//! `(seed, site, ordinal)` — no wall clock, no global RNG — so the same
+//! spec replays the same fault sequence on every run and every platform
+//! (the same discipline as [`crate::workload`]'s seeded streams).
+//!
+//! The runtime half is [`FaultPlane`]: [`FaultPlane::NoFaults`] is the
+//! default and costs one enum discriminant check per site — no atomics, no
+//! allocation — so the hot path is unaffected unless faults are explicitly
+//! enabled ([`FaultPlane::from_spec`] with a non-empty spec). Sites:
+//!
+//! * **PR download** ([`crate::reconfig::PrManager::apply_with`]) —
+//!   [`DownloadFault::Transient`] aborts one ICAP transfer (the retry
+//!   budget in [`crate::config::ServiceConfig::download_retries`] decides
+//!   how many re-arms are attempted before giving up);
+//!   [`DownloadFault::Permanent`] kills the region: the tile is
+//!   quarantined and the placer routes around it from then on.
+//! * **tile execution** ([`crate::exec::Engine::run`]) —
+//!   [`ExecFault::WrongBits`] models a corrupted configuration (the region
+//!   is cleared and re-downloaded clean); [`ExecFault::RegionDead`] models
+//!   a hard region fault (quarantine + re-place elsewhere).
+//! * **worker panic** ([`crate::coordinator::pool::WorkerPool`]) — the
+//!   serving thread panics at a scheduled burst ordinal; supervision
+//!   catches it, replays the burst, and respawns the serving state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What an injected PR-download fault does to the transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownloadFault {
+    /// The transfer aborts but the region is healthy: retry it.
+    Transient,
+    /// The region fails to configure at all: quarantine the tile.
+    Permanent,
+}
+
+/// What an injected execution fault does to the serving tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecFault {
+    /// The region holds corrupted configuration bits: its output cannot be
+    /// trusted, but a clean re-download fixes it.
+    WrongBits,
+    /// The region died under load: quarantine the tile and re-place.
+    RegionDead,
+}
+
+/// Declarative, deterministic fault schedule (see the module docs).
+///
+/// All ordinal lists are **1-based** per injection site: the first PR
+/// download anywhere on the fabric is download ordinal 1, the first
+/// executed accelerator run is exec ordinal 1, the first served burst is
+/// burst ordinal 1. Retries consume ordinals too — a transient fault at
+/// download 3 makes the retry download 4 — so a schedule spacing its
+/// ordinals apart injects exactly one fault per recovery.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the rate-based decisions (ignored when every rate is 0).
+    pub seed: u64,
+    /// Per-mille probability that any given PR download faults
+    /// transiently (0 = never, 1000 = always), decided per ordinal from
+    /// `seed` — deterministic across runs.
+    pub transient_download_permille: u32,
+    /// Explicit download ordinals that fault transiently.
+    pub transient_downloads: Vec<u64>,
+    /// Explicit download ordinals that fault permanently (region dead).
+    pub permanent_downloads: Vec<u64>,
+    /// Exec ordinals whose serving tile holds wrong configuration bits.
+    pub wrong_bits: Vec<u64>,
+    /// Exec ordinals whose serving tile dies (permanent).
+    pub region_dead: Vec<u64>,
+    /// Burst ordinals at which the serving worker thread panics.
+    pub worker_panics: Vec<u64>,
+}
+
+impl FaultSpec {
+    /// True when this spec injects nothing — the zero-cost default.
+    pub fn is_off(&self) -> bool {
+        self.transient_download_permille == 0
+            && self.transient_downloads.is_empty()
+            && self.permanent_downloads.is_empty()
+            && self.wrong_bits.is_empty()
+            && self.region_dead.is_empty()
+            && self.worker_panics.is_empty()
+    }
+
+    /// Rate-based transient download faults only (`--faults
+    /// transient-downloads`): every recovery is a pure retry, so outputs
+    /// must stay bit-identical to a fault-free run.
+    pub fn transient(seed: u64, permille: u32) -> FaultSpec {
+        FaultSpec { seed, transient_download_permille: permille, ..FaultSpec::default() }
+    }
+
+    /// The chaos preset (`--faults chaos`): rate-based transient downloads
+    /// plus one permanent region fault and one worker panic early in the
+    /// run — every recovery rung fires at least once.
+    pub fn chaos(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            transient_download_permille: 100,
+            region_dead: vec![2],
+            worker_panics: vec![1],
+            ..FaultSpec::default()
+        }
+    }
+}
+
+/// The runtime fault plane, shared by every engine and worker of a service
+/// ([`Arc`]-cloned so all sites draw ordinals from one schedule).
+#[derive(Debug)]
+pub enum FaultPlane {
+    /// No injection: every site check is a single discriminant test.
+    NoFaults,
+    /// Seeded, schedule-driven injection.
+    Seeded(SeededFaults),
+}
+
+/// Per-site ordinal counters plus the spec they are judged against.
+#[derive(Debug)]
+pub struct SeededFaults {
+    spec: FaultSpec,
+    downloads: AtomicU64,
+    execs: AtomicU64,
+    bursts: AtomicU64,
+}
+
+/// splitmix64 finalizer: the per-ordinal decision hash (same family as
+/// [`crate::workload::Rng`]'s seeding, re-derived here so the fault plane
+/// stays self-contained).
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlane {
+    /// The shared zero-cost default.
+    pub fn none() -> Arc<FaultPlane> {
+        Arc::new(FaultPlane::NoFaults)
+    }
+
+    /// Build the plane for `spec`; an all-off spec collapses to
+    /// [`FaultPlane::NoFaults`] so "configured but empty" costs nothing.
+    pub fn from_spec(spec: FaultSpec) -> Arc<FaultPlane> {
+        if spec.is_off() {
+            FaultPlane::none()
+        } else {
+            Arc::new(FaultPlane::Seeded(SeededFaults {
+                spec,
+                downloads: AtomicU64::new(0),
+                execs: AtomicU64::new(0),
+                bursts: AtomicU64::new(0),
+            }))
+        }
+    }
+
+    /// True when nothing will ever be injected.
+    pub fn is_off(&self) -> bool {
+        matches!(self, FaultPlane::NoFaults)
+    }
+
+    /// Consult the schedule for the next PR download (consumes one
+    /// download ordinal when seeded).
+    pub fn next_download(&self) -> Option<DownloadFault> {
+        let FaultPlane::Seeded(s) = self else {
+            return None;
+        };
+        let ord = s.downloads.fetch_add(1, Ordering::Relaxed) + 1;
+        if s.spec.permanent_downloads.contains(&ord) {
+            return Some(DownloadFault::Permanent);
+        }
+        if s.spec.transient_downloads.contains(&ord) {
+            return Some(DownloadFault::Transient);
+        }
+        let permille = u64::from(s.spec.transient_download_permille);
+        let draw = mix(s.spec.seed ^ ord.wrapping_mul(0x9e37_79b9_7f4a_7c15)) % 1000;
+        if permille > 0 && draw < permille {
+            return Some(DownloadFault::Transient);
+        }
+        None
+    }
+
+    /// Consult the schedule for the next accelerator execution (consumes
+    /// one exec ordinal when seeded).
+    pub fn next_exec(&self) -> Option<ExecFault> {
+        let FaultPlane::Seeded(s) = self else {
+            return None;
+        };
+        let ord = s.execs.fetch_add(1, Ordering::Relaxed) + 1;
+        if s.spec.region_dead.contains(&ord) {
+            return Some(ExecFault::RegionDead);
+        }
+        if s.spec.wrong_bits.contains(&ord) {
+            return Some(ExecFault::WrongBits);
+        }
+        None
+    }
+
+    /// Panic if the next burst ordinal is scheduled to crash the worker.
+    /// Callers invoke this *before* committing to serve a burst, so the
+    /// supervisor can tell an injected crash (burst still intact: replay
+    /// it) from a mid-serve one (reply sinks already fail-safed).
+    pub fn maybe_worker_panic(&self) {
+        let FaultPlane::Seeded(s) = self else {
+            return;
+        };
+        let ord = s.bursts.fetch_add(1, Ordering::Relaxed) + 1;
+        if s.spec.worker_panics.contains(&ord) {
+            panic!("injected fault: worker panic at burst {ord}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_off_and_collapses_to_no_faults() {
+        let spec = FaultSpec::default();
+        assert!(spec.is_off());
+        let plane = FaultPlane::from_spec(spec);
+        assert!(plane.is_off());
+        for _ in 0..100 {
+            assert_eq!(plane.next_download(), None);
+            assert_eq!(plane.next_exec(), None);
+            plane.maybe_worker_panic(); // must never fire
+        }
+    }
+
+    #[test]
+    fn explicit_ordinals_fire_exactly_once_each() {
+        let spec = FaultSpec {
+            transient_downloads: vec![2],
+            permanent_downloads: vec![4],
+            wrong_bits: vec![1],
+            region_dead: vec![3],
+            ..FaultSpec::default()
+        };
+        let plane = FaultPlane::from_spec(spec);
+        assert!(!plane.is_off());
+        let downloads: Vec<_> = (0..5).map(|_| plane.next_download()).collect();
+        assert_eq!(
+            downloads,
+            vec![
+                None,
+                Some(DownloadFault::Transient),
+                None,
+                Some(DownloadFault::Permanent),
+                None
+            ]
+        );
+        let execs: Vec<_> = (0..4).map(|_| plane.next_exec()).collect();
+        assert_eq!(
+            execs,
+            vec![Some(ExecFault::WrongBits), None, Some(ExecFault::RegionDead), None]
+        );
+    }
+
+    #[test]
+    fn rate_decisions_are_deterministic_and_roughly_calibrated() {
+        let draw = |seed: u64| -> Vec<bool> {
+            let plane = FaultPlane::from_spec(FaultSpec::transient(seed, 200));
+            (0..1000).map(|_| plane.next_download().is_some()).collect()
+        };
+        let a = draw(7);
+        assert_eq!(a, draw(7), "same seed must replay the same schedule");
+        assert_ne!(a, draw(8), "different seeds must differ");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!((120..280).contains(&hits), "200‰ drew {hits}/1000");
+    }
+
+    #[test]
+    fn injected_worker_panic_fires_at_its_ordinal() {
+        let plane =
+            FaultPlane::from_spec(FaultSpec { worker_panics: vec![2], ..FaultSpec::default() });
+        plane.maybe_worker_panic(); // burst 1: fine
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plane.maybe_worker_panic() // burst 2: scheduled crash
+        }));
+        assert!(r.is_err(), "burst 2 must panic");
+        plane.maybe_worker_panic(); // burst 3: fine again
+    }
+
+    #[test]
+    fn chaos_preset_covers_every_rung() {
+        let spec = FaultSpec::chaos(1);
+        assert!(!spec.is_off());
+        assert!(spec.transient_download_permille > 0);
+        assert!(!spec.region_dead.is_empty());
+        assert!(!spec.worker_panics.is_empty());
+    }
+}

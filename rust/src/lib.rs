@@ -47,7 +47,12 @@
 //!   `repro loadgen`);
 //! * [`testkit`] — deterministic service-layer test harness: a virtual
 //!   clock plus a scripted-latency engine shim, so ordering, fairness and
-//!   starvation properties are proven without sleeps.
+//!   starvation properties are proven without sleeps;
+//! * [`faults`] — the deterministic fault-injection plane (seeded,
+//!   schedule-driven PR-download / tile-execution / worker-panic faults)
+//!   behind the self-healing recovery ladder: download retry, tile
+//!   quarantine + re-placement, worker supervision with burst replay
+//!   (`repro serve --faults transient-downloads|chaos`).
 //!
 //! The crate is dependency-free by design: PRNG ([`workload`]), bench
 //! harness ([`benchkit`]), error type ([`error`]) and CLI parsing are all
@@ -59,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod exec;
+pub mod faults;
 pub mod isa;
 pub mod jit;
 pub mod overlay;
@@ -74,3 +80,4 @@ pub mod workload;
 
 pub use config::{FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
 pub use error::{Error, Result};
+pub use faults::{DownloadFault, ExecFault, FaultPlane, FaultSpec};

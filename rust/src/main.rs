@@ -34,7 +34,7 @@ use jit_overlay::place::StaticScenario;
 use jit_overlay::report::{ms, speedup, Table};
 use jit_overlay::runtime::{default_artifacts_dir, Runtime};
 use jit_overlay::timing::Target;
-use jit_overlay::{workload, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
+use jit_overlay::{workload, FaultSpec, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
 
 /// CLI-local result over a boxed error (the anyhow stand-in).
 type Result<T, E = Box<dyn std::error::Error>> = std::result::Result<T, E>;
@@ -109,6 +109,51 @@ impl Args {
     }
 }
 
+/// Minimal SIGINT/SIGTERM latch for graceful shutdown, hand-rolled so the
+/// crate stays dependency-free. The handler only sets an atomic flag; the
+/// serve loop polls it and winds the tier down in order (stop accepting,
+/// drain connections, shut the pool down, print the metrics summary).
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handler for SIGINT (2) and SIGTERM (15). `signal(2)`
+    /// semantics are enough here: the handler is one async-signal-safe
+    /// atomic store, and a re-delivered signal before the poll loop
+    /// notices is harmless (the flag is already set).
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(2, on_signal); // SIGINT
+            signal(15, on_signal); // SIGTERM
+        }
+    }
+
+    /// True once SIGINT or SIGTERM was delivered.
+    pub fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix stand-in: no signals to latch, the serve loop only stops on an
+/// authorized remote `SHUTDOWN` frame.
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
 fn parse_target(s: &str) -> Result<Target> {
     Ok(match s {
         "dynamic" => Target::DynamicOverlay,
@@ -127,6 +172,24 @@ fn parse_fuse(s: &str) -> Result<bool> {
         "off" => false,
         other => bail!("--fuse takes `on` or `off`, got `{other}`"),
     })
+}
+
+/// Parse the fault-injection flags shared by both serve modes into the
+/// service config: `--faults off|transient-downloads|chaos` selects a
+/// preset, `--fault-seed` / `--fault-permille` tune it, and
+/// `--download-retries` bounds the transient-download retry budget.
+fn parse_faults(args: &Args, service: &mut ServiceConfig) -> Result<()> {
+    let seed = args.u64("fault-seed", 0xFA117)?;
+    let permille = args.usize("fault-permille", 100)? as u32;
+    service.faults = match args.str("faults", "off").as_str() {
+        "off" => FaultSpec::default(),
+        "transient-downloads" => FaultSpec::transient(seed, permille),
+        "chaos" => FaultSpec::chaos(seed),
+        other => bail!("--faults takes off|transient-downloads|chaos, got `{other}`"),
+    };
+    service.download_retries =
+        args.usize("download-retries", service.download_retries as usize)? as u32;
+    Ok(())
 }
 
 fn cmd_fig2(n: usize) -> Result<()> {
@@ -343,6 +406,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         d => d,
     };
     service.fuse = parse_fuse(&args.str("fuse", "off"))?;
+    parse_faults(args, &mut service)?;
     let frontend = args.str("frontend", "direct");
     let sessions = args.usize("sessions", 8)?.max(1);
     let inflight =
@@ -464,17 +528,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro serve --listen ADDR`: the socket serving tier. Blocks until an
+/// `repro serve --listen ADDR`: the socket serving tier. Runs until an
 /// authorized remote `SHUTDOWN` frame arrives (`--allow-remote-shutdown 1`
-/// — which `repro loadgen --stop-server 1` sends when it is done).
+/// — which `repro loadgen --stop-server 1` sends when it is done) or
+/// SIGINT/SIGTERM is delivered, then stops accepting, drains open
+/// connections within `--drain-ms`, and prints the metrics summary either
+/// way.
 fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
     let workers = args.usize("workers", 2)?.max(1);
     let reactors = args.usize("reactors", 2)?.max(1);
     let inflight = args.usize("inflight", FrontendConfig::default().inflight_per_session)?.max(1);
     let max_inflight = args.usize("max-inflight", 1024)?.max(1);
+    let drain_ms = args.u64("drain-ms", 5000)?;
+    let bench = args.get("bench").map(str::to_string);
     let mut service = ServiceConfig::with_workers(workers);
     service.queue_capacity = args.usize("queue-capacity", service.queue_capacity)?;
     service.fuse = parse_fuse(&args.str("fuse", "off"))?;
+    parse_faults(args, &mut service)?;
     let defaults = NetConfig::default();
     let net = NetConfig {
         idle_timeout_ms: args.u64("idle-timeout-ms", defaults.idle_timeout_ms)?,
@@ -484,6 +554,7 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
         ..defaults
     };
 
+    let service_faults_off = service.faults.is_off();
     let pool = std::sync::Arc::new(WorkerPool::new(OverlayConfig::default(), service)?);
     let fcfg = FrontendConfig { reactors, inflight_per_session: inflight, max_inflight };
     let front = std::sync::Arc::new(
@@ -500,18 +571,69 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
     if !net.allow_remote_shutdown {
         println!("remote shutdown disabled; stop with Ctrl-C (--allow-remote-shutdown 1 to enable)");
     }
-    server.join(); // until an authorized SHUTDOWN frame flips the stop flag
-    threads.shutdown();
-    drop(front);
-    let report = std::sync::Arc::try_unwrap(pool)
-        .map_err(|_| anyhow!("serving tier leaked the pool"))?
-        .shutdown();
-    let m = &report.aggregate;
+    if !service_faults_off {
+        println!("fault injection ACTIVE: {}", args.str("faults", "off"));
+    }
+
+    // run until a stop arrives: an authorized remote SHUTDOWN frame flips
+    // the server's stop flag, SIGINT/SIGTERM flips the process-local latch
+    sig::install();
+    while !sig::requested() && !server.stop_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.request_stop();
+    println!("stop requested; draining (up to {drain_ms} ms) ...");
+
+    // bounded drain: join the server and shut the pool down on a helper
+    // thread so one wedged connection cannot hang the process past the
+    // drain window. On timeout the live aggregate is still reported.
+    let live = pool.metrics.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let drainer = std::thread::spawn(move || {
+        server.join();
+        threads.shutdown();
+        drop(front);
+        let report = std::sync::Arc::try_unwrap(pool)
+            .map(WorkerPool::shutdown)
+            .map_err(|_| "serving tier leaked the pool");
+        let _ = tx.send(report);
+    });
+    let aggregate = match rx.recv_timeout(Duration::from_millis(drain_ms)) {
+        Ok(report) => {
+            let _ = drainer.join();
+            let report = report.map_err(|e| anyhow!("{e}"))?;
+            if !report.panicked_workers.is_empty() {
+                println!("workers lost to panics: {:?}", report.panicked_workers);
+            }
+            report.aggregate
+        }
+        Err(_) => {
+            println!("drain window elapsed with connections still open; reporting live counters");
+            live.snapshot()
+        }
+    };
+    let m = &aggregate;
     println!(
         "served {} connections ({} shed, {} wire rejections)",
         m.connections, m.conns_shed, m.net_rejections
     );
     println!("pool ({workers} workers): {}", m.summary());
+    if let Some(name) = bench {
+        let mut o = JsonObject::new();
+        o.str("group", "serve")
+            .int("workers", workers as u64)
+            .int("reactors", reactors as u64)
+            .int("requests", m.requests)
+            .int("connections", m.connections)
+            .int("rejected", m.rejected)
+            .int("cpu_fallbacks", m.cpu_fallbacks)
+            .int("download_retries", m.download_retries)
+            .int("tiles_quarantined", m.tiles_quarantined)
+            .int("workers_restarted", m.workers_restarted)
+            .int("jobs_replayed", m.jobs_replayed);
+        let path = write_bench_json(&name, &o.finish()).context("writing bench json")?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -847,9 +969,13 @@ const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve|
          --steal-depth D (work-stealing threshold; 0 = off)  --skew S (spill threshold)
          --frontend direct|threads|reactor (session layer; default direct)
          --sessions S --inflight I --reactors R (threads/reactor front ends)
+         --faults off|transient-downloads|chaos (fault injection; default off)
+           with --fault-seed S --fault-permille M --download-retries R
          --listen ADDR (socket tier; ADDR is ip:port or unix:/path)
            with --reactors R --workers N --max-pending P --idle-timeout-ms T
            --max-n N --allow-remote-shutdown 0|1
+           --drain-ms D (bounded drain on SIGINT/SIGTERM/shutdown; default 5000)
+           --bench NAME (write BENCH_<NAME>.json with the final counters)
   loadgen: --addr ADDR --conns C --mode closed|open --pattern P --n LEN
            closed: --requests K (per connection, one outstanding)
            open:   --rate R (req/s per conn) --duration-ms D

@@ -350,6 +350,11 @@ impl Controller {
     /// Execute `vec.run` / `vec.acc` on one tile.
     fn vec_op(&self, fabric: &mut Fabric, i: &Instr, stats: &mut ExecStats) -> Result<()> {
         let idx = i.tile as usize;
+        // a quarantined region must never compute: its output cannot be
+        // trusted, so the fault surfaces before any element is touched
+        if fabric.tiles[idx].quarantined {
+            return Err(Error::TileFault { tile: idx, permanent: true });
+        }
         let len = fabric.tiles[idx].regs[i.a as usize] as usize;
         let op = fabric.tiles[idx].resident.ok_or_else(|| Error::Trap {
             pc: 0,

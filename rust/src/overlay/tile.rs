@@ -45,6 +45,11 @@ pub struct Tile {
     pub switch: SwitchState,
     /// Streams parked on input ports (at most one per port).
     pub inbox: Vec<ParkedStream>,
+    /// True once the PR region has suffered a permanent fault. A
+    /// quarantined tile never hosts an operator again: the placer routes
+    /// around it and `load_bitstream` rejects it. Survives `reset_full`
+    /// — a power cycle does not heal dead silicon.
+    pub quarantined: bool,
 }
 
 impl Tile {
@@ -58,6 +63,7 @@ impl Tile {
             acc: 0.0,
             switch: SwitchState::default(),
             inbox: Vec::new(),
+            quarantined: false,
         }
     }
 
@@ -143,6 +149,9 @@ impl Fabric {
             .tiles
             .get_mut(idx)
             .ok_or_else(|| Error::Reconfig(format!("tile {idx} out of range")))?;
+        if tile.quarantined {
+            return Err(Error::TileFault { tile: idx, permanent: true });
+        }
         if bs.class != tile.class {
             return Err(Error::Reconfig(format!(
                 "bitstream for {:?} region cannot load into {:?} tile {idx}",
@@ -199,11 +208,35 @@ impl Fabric {
         }
     }
 
-    /// Indices of currently-empty tiles.
+    /// Indices of currently-empty, healthy tiles (quarantined regions are
+    /// never free — they can no longer host anything).
     pub fn free_tiles(&self) -> Vec<usize> {
         (0..self.tiles.len())
-            .filter(|&i| self.tiles[i].resident.is_none())
+            .filter(|&i| self.tiles[i].resident.is_none() && !self.tiles[i].quarantined)
             .collect()
+    }
+
+    /// Quarantine tile `idx` after a permanent region fault: any resident
+    /// is evicted (its output can no longer be trusted) and the tile is
+    /// withdrawn from placement forever. Returns `true` when the tile was
+    /// newly quarantined, `false` when it already was (or is out of
+    /// range), so callers can count `tiles_quarantined` without
+    /// double-billing repeated faults on the same region.
+    pub fn quarantine(&mut self, idx: usize) -> bool {
+        match self.tiles.get_mut(idx) {
+            Some(t) if !t.quarantined => {
+                t.quarantined = true;
+                t.resident = None;
+                t.resident_tail = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Number of quarantined tiles (capacity permanently lost).
+    pub fn quarantined_tiles(&self) -> usize {
+        self.tiles.iter().filter(|t| t.quarantined).count()
     }
 }
 
@@ -286,6 +319,34 @@ mod tests {
         assert_eq!(f.free_tiles().len(), 8);
         f.clear_region(2).unwrap();
         assert_eq!(f.free_tiles().len(), 9);
+    }
+
+    #[test]
+    fn quarantine_evicts_and_withdraws_the_tile() {
+        let mut f = fabric();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        f.load_bitstream(2, &bs).unwrap();
+        assert!(f.quarantine(2), "first quarantine is new");
+        assert!(!f.quarantine(2), "repeat quarantine is not counted again");
+        assert!(!f.quarantine(99), "out of range is a no-op");
+        assert_eq!(f.quarantined_tiles(), 1);
+        assert_eq!(f.tiles[2].resident, None, "resident evicted");
+        assert!(!f.free_tiles().contains(&2), "quarantined tile is never free");
+        assert_eq!(f.free_tiles().len(), 8);
+        match f.load_bitstream(2, &bs) {
+            Err(Error::TileFault { tile: 2, permanent: true }) => {}
+            other => panic!("expected permanent tile fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quarantine_survives_full_reset() {
+        let mut f = fabric();
+        assert!(f.quarantine(5));
+        f.reset_full();
+        assert_eq!(f.quarantined_tiles(), 1, "power cycling does not heal dead silicon");
+        assert!(!f.free_tiles().contains(&5));
     }
 
     #[test]

@@ -51,7 +51,7 @@ impl DynamicPlacer {
             .mesh
             .snake_order()
             .into_iter()
-            .filter(|&t| fabric.tiles[t].resident.is_none())
+            .filter(|&t| fabric.tiles[t].resident.is_none() && !fabric.tiles[t].quarantined)
             .collect();
         try_window(fabric, &free, needs).is_some()
     }
@@ -74,7 +74,7 @@ impl DynamicPlacer {
         let free: Vec<usize> = snake
             .iter()
             .copied()
-            .filter(|&t| fabric.tiles[t].resident.is_none())
+            .filter(|&t| fabric.tiles[t].resident.is_none() && !fabric.tiles[t].quarantined)
             .collect();
         if free.len() < ops.len() {
             return Err(Error::Placement(format!(
@@ -242,6 +242,24 @@ mod tests {
             assert!(![0, 1, 2].contains(&a.tile));
         }
         assert!(p.is_contiguous(&f.mesh));
+    }
+
+    #[test]
+    fn quarantined_tiles_are_avoided() {
+        let (mut f, lib) = setup();
+        assert!(f.quarantine(0));
+        assert!(f.quarantine(4));
+        let p = DynamicPlacer
+            .place(&f, &lib, &[OperatorKind::Mul, OperatorKind::AccSum])
+            .unwrap();
+        for a in &p.assignments {
+            assert!(![0, 4].contains(&a.tile), "landed on quarantined tile: {a:?}");
+        }
+        // quarantining both large tiles starves large-region stages
+        assert!(f.quarantine(3));
+        assert!(f.quarantine(7));
+        assert!(!DynamicPlacer::feasible(&f, &[RegionClass::Large]));
+        assert!(DynamicPlacer.place(&f, &lib, &[OperatorKind::Sqrt]).is_err());
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! assembly across repeated requests.
 
 use crate::bitstream::BitstreamLibrary;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::faults::{DownloadFault, FaultPlane};
 use crate::overlay::Fabric;
 use crate::place::Placement;
 
@@ -28,6 +29,10 @@ pub struct ReconfigStats {
     pub bytes: usize,
     /// Wall-clock seconds spent reconfiguring.
     pub seconds: f64,
+    /// Transfers re-armed after a transient download fault (each aborted
+    /// attempt re-pays its frame bytes through the ICAP — the physical
+    /// cost of the retry rung).
+    pub retries: usize,
 }
 
 impl ReconfigStats {
@@ -60,6 +65,25 @@ impl PrManager {
         lib: &BitstreamLibrary,
         placement: &Placement,
     ) -> Result<ReconfigStats> {
+        self.apply_with(fabric, lib, placement, &FaultPlane::NoFaults, 0)
+    }
+
+    /// Like [`PrManager::apply`], but every ICAP transfer is arbitrated by
+    /// the fault plane. A [`DownloadFault::Transient`] aborts one attempt
+    /// (the frame bytes are re-paid and the transfer re-armed, up to
+    /// `retry_budget` re-arms per assignment before giving up); a
+    /// [`DownloadFault::Permanent`] quarantines the target tile and
+    /// surfaces [`Error::TileFault`] so the coordinator re-places
+    /// elsewhere. With [`FaultPlane::NoFaults`] this is byte-identical to
+    /// the plain path.
+    pub fn apply_with(
+        &mut self,
+        fabric: &mut Fabric,
+        lib: &BitstreamLibrary,
+        placement: &Placement,
+        faults: &FaultPlane,
+        retry_budget: u32,
+    ) -> Result<ReconfigStats> {
         let mut stats = ReconfigStats::default();
         for a in &placement.assignments {
             let tile = &fabric.tiles[a.tile];
@@ -70,9 +94,7 @@ impl PrManager {
                 stats.cache_hits += 1;
                 continue;
             }
-            if tile.resident.is_some() {
-                stats.replaced += 1;
-            }
+            let replacing = tile.resident.is_some();
             // fused pairs are synthesized on demand (they never enter the
             // standard catalogue); plain assignments come from the library
             let owned;
@@ -88,9 +110,37 @@ impl PrManager {
                     &owned
                 }
             };
-            fabric.load_bitstream(a.tile, bs)?;
-            stats.downloads += 1;
-            stats.bytes += bs.frame_bytes;
+            let mut rearms: u32 = 0;
+            loop {
+                match faults.next_download() {
+                    Some(DownloadFault::Permanent) => {
+                        fabric.quarantine(a.tile);
+                        return Err(Error::TileFault { tile: a.tile, permanent: true });
+                    }
+                    Some(DownloadFault::Transient) => {
+                        // the aborted transfer still moved its frame
+                        // through the ICAP before failing CRC
+                        stats.bytes += bs.frame_bytes;
+                        stats.retries += 1;
+                        if rearms >= retry_budget {
+                            return Err(Error::Reconfig(format!(
+                                "tile {}: transient download fault persisted past {retry_budget} retries",
+                                a.tile
+                            )));
+                        }
+                        rearms += 1;
+                    }
+                    None => {
+                        fabric.load_bitstream(a.tile, bs)?;
+                        if replacing {
+                            stats.replaced += 1;
+                        }
+                        stats.downloads += 1;
+                        stats.bytes += bs.frame_bytes;
+                        break;
+                    }
+                }
+            }
         }
         stats.seconds = stats.bytes as f64 / fabric.cfg.clocks.icap_bytes_per_sec;
         self.lifetime.downloads += stats.downloads;
@@ -98,6 +148,7 @@ impl PrManager {
         self.lifetime.cache_hits += stats.cache_hits;
         self.lifetime.bytes += stats.bytes;
         self.lifetime.seconds += stats.seconds;
+        self.lifetime.retries += stats.retries;
         Ok(stats)
     }
 
@@ -265,6 +316,63 @@ mod tests {
         let warm = pr.apply(&mut f, &lib, &p).unwrap();
         assert_eq!(warm.hit_rate(), 1.0);
         assert_eq!(ReconfigStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn transient_download_fault_retries_within_budget() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let (mut f, lib, mut pr) = setup();
+        let p = vmul_placement(&f, &lib);
+        // the first download aborts once, then succeeds on the re-arm
+        let plane = FaultPlane::from_spec(FaultSpec {
+            transient_downloads: vec![1],
+            ..FaultSpec::default()
+        });
+        let s = pr.apply_with(&mut f, &lib, &p, &plane, 3).unwrap();
+        assert_eq!(s.downloads, 2);
+        assert_eq!(s.retries, 1);
+        assert_eq!(pr.lifetime.retries, 1);
+        // the aborted attempt re-paid its frame: 3 transfers' bytes for 2 downloads
+        let clean = PrManager::default()
+            .apply(&mut Fabric::new(f.cfg.clone()).unwrap(), &lib, &p)
+            .unwrap();
+        assert!(s.bytes > clean.bytes);
+        assert_eq!(f.tiles[p.assignments[0].tile].resident, Some(OperatorKind::Mul));
+    }
+
+    #[test]
+    fn transient_fault_past_budget_gives_up() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let (mut f, lib, mut pr) = setup();
+        let p = vmul_placement(&f, &lib);
+        // every attempt at the first assignment faults: ordinals 1..=3
+        let plane = FaultPlane::from_spec(FaultSpec {
+            transient_downloads: vec![1, 2, 3],
+            ..FaultSpec::default()
+        });
+        let err = pr.apply_with(&mut f, &lib, &p, &plane, 2).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Reconfig(_)), "got {err:?}");
+        assert_eq!(f.quarantined_tiles(), 0, "transient faults never quarantine");
+    }
+
+    #[test]
+    fn permanent_download_fault_quarantines_the_tile() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let (mut f, lib, mut pr) = setup();
+        let p = vmul_placement(&f, &lib);
+        let plane = FaultPlane::from_spec(FaultSpec {
+            permanent_downloads: vec![1],
+            ..FaultSpec::default()
+        });
+        let err = pr.apply_with(&mut f, &lib, &p, &plane, 3).unwrap_err();
+        let victim = p.assignments[0].tile;
+        let hit = matches!(
+            err,
+            crate::error::Error::TileFault { tile, permanent: true } if tile == victim
+        );
+        assert!(hit, "got {err:?}");
+        assert_eq!(f.quarantined_tiles(), 1);
+        assert!(!f.free_tiles().contains(&victim));
     }
 
     #[test]

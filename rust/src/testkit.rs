@@ -33,6 +33,19 @@ use crate::coordinator::frontend::{Dispatch, Reactor, Rejected};
 use crate::coordinator::pool::{Completion, CompletionQueue, Ticket};
 use crate::coordinator::{Coordinator, Request};
 use crate::error::{Error, Result};
+use crate::exec::Value;
+
+/// Canonical bit-level fingerprint of a computed [`Value`]: every `f32` as
+/// its raw bit pattern, in order. Two runs are bit-identical iff their
+/// fingerprints are equal — `==` on the floats themselves would also
+/// accept `-0.0` for `0.0`, which is too weak for "transient faults must
+/// not perturb the result by even one ulp" assertions (the chaos soak).
+pub fn fingerprint(v: &Value) -> Vec<u32> {
+    match v {
+        Value::Scalar(x) => vec![x.to_bits()],
+        Value::Vector(xs) => xs.iter().map(|x| x.to_bits()).collect(),
+    }
+}
 
 /// A monotonic virtual clock: ticks advance only when told to.
 #[derive(Debug, Default)]
@@ -226,6 +239,14 @@ mod tests {
             Composition::vmul_reduce(n),
             vec![workload::vector(n, seed, 0.1, 1.0), workload::vector(n, seed + 1, 0.1, 1.0)],
         )
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_signed_zero() {
+        assert_eq!(fingerprint(&Value::Scalar(1.5)), fingerprint(&Value::Scalar(1.5)));
+        assert_ne!(fingerprint(&Value::Scalar(0.0)), fingerprint(&Value::Scalar(-0.0)));
+        let v = Value::Vector(vec![1.0, 2.0]);
+        assert_eq!(fingerprint(&v), vec![1.0f32.to_bits(), 2.0f32.to_bits()]);
     }
 
     #[test]

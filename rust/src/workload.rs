@@ -133,6 +133,23 @@ pub fn request_inputs(comp: &Composition, k: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// Chaos-soak stream: `count` compositions round-robining the four hot
+/// compositions of [`mixed_compositions`] (no cold tail, no randomness).
+/// Every key repeats `count/4` times, so a fault injected at any ordinal
+/// is always followed by clean repeats of the same composition — the
+/// pattern the recovery ladder's quarantine/re-place and residency
+/// re-validation rungs are exercised against in the soak tests.
+pub fn soak_compositions(count: usize, n: usize) -> Vec<Composition> {
+    use OperatorKind::*;
+    let hot = [
+        Composition::vmul_reduce(n),
+        Composition::map(Sqrt, n),
+        Composition::filter_reduce(0.25, n),
+        Composition::axpy(1.5, n),
+    ];
+    (0..count).map(|i| hot[i % hot.len()].clone()).collect()
+}
+
 /// Spill-heavy stream: `distinct` small compositions (distinct cache keys,
 /// 1–2 tiles each) drawn uniformly at random. With many keys and a low
 /// `max_queue_skew`, affinity routing constantly migrates compositions
@@ -268,6 +285,22 @@ mod tests {
         .collect();
         let hot_count = keys_a.iter().filter(|k| hot_keys.contains(k)).count();
         assert!(hot_count > 140 && hot_count < 190, "hot share was {hot_count}/200");
+    }
+
+    #[test]
+    fn soak_stream_round_robins_the_hot_mix() {
+        let s = soak_compositions(12, 128);
+        assert_eq!(s.len(), 12);
+        let keys: Vec<u64> = s.iter().map(|c| c.cache_key()).collect();
+        let distinct: std::collections::HashSet<u64> = keys.iter().copied().collect();
+        assert_eq!(distinct.len(), 4, "exactly the four hot compositions");
+        // strict round-robin: the cycle repeats with period 4
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(*k, keys[i % 4]);
+        }
+        let again: Vec<u64> =
+            soak_compositions(12, 128).iter().map(|c| c.cache_key()).collect();
+        assert_eq!(keys, again);
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Chaos soak: the deterministic fault plane driven through every layer of
+//! the serving stack, asserting the recovery ladder's contract end to end.
+//!
+//! Every schedule here is an **explicit ordinal list** (`transient_downloads:
+//! vec![2, 5]`), never a seeded permille rate: the injected faults land at
+//! exact, reproducible points in the stream, so the assertions are exact
+//! counts, not statistical expectations. The properties:
+//!
+//! * transient download faults are retried invisibly — results stay
+//!   **bit-identical** to a fault-free run (fingerprint-compared);
+//! * a permanent region fault quarantines the tile and re-places the
+//!   accelerator elsewhere — correct values, no CPU fallback;
+//! * an injected worker panic is supervised: the coordinator is rebuilt in
+//!   place and the staged burst replayed — no thread dies, no reply is
+//!   lost (the injected panic does print to stderr via the default hook);
+//! * under all three fault kinds at once, over real localhost TCP, every
+//!   request gets **exactly one** reply with the correct value.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use jit_overlay::coordinator::net::NetServer;
+use jit_overlay::coordinator::wire::{read_frame, write_frame, ClientMsg, ServerMsg};
+use jit_overlay::coordinator::{Coordinator, Frontend, Metrics, Request, WorkerPool};
+use jit_overlay::exec::cpu::{self, Value};
+use jit_overlay::patterns::Composition;
+use jit_overlay::testkit::fingerprint;
+use jit_overlay::workload;
+use jit_overlay::{
+    FaultPlane, FaultSpec, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig,
+};
+
+fn agree(a: &Value, b: &Value) -> bool {
+    const TOL: f32 = 1e-3;
+    match (a, b) {
+        (Value::Scalar(x), Value::Scalar(y)) => (x - y).abs() <= TOL * (1.0 + y.abs()),
+        (Value::Vector(x), Value::Vector(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| (p - q).abs() <= TOL * (1.0 + q.abs()))
+        }
+        _ => false,
+    }
+}
+
+/// The value the server must compute for a wire request: inputs are
+/// synthesized from `(n, seed)` exactly as the serving tier does.
+fn expected_for(n: usize, seed: u64, pattern: &str) -> Value {
+    let comp = jit_overlay::patterns::parse_pattern(pattern, n).unwrap();
+    let inputs: Vec<Vec<f32>> = (0..comp.inputs)
+        .map(|c| workload::vector(n, seed.wrapping_add(c as u64), 0.1, 2.0))
+        .collect();
+    cpu::eval(&comp, &inputs).unwrap()
+}
+
+fn one_worker(spec: FaultSpec) -> ServiceConfig {
+    ServiceConfig { faults: spec, ..ServiceConfig::with_workers(1).without_stealing() }
+}
+
+/// Transient download faults are absorbed by the retry budget: the served
+/// values are bit-for-bit identical to a fault-free run of the same
+/// stream, and only the `download_retries` counter betrays the injection.
+#[test]
+fn transient_download_faults_leave_results_bit_identical() {
+    let reqs: Vec<Request> = workload::soak_compositions(12, 256)
+        .into_iter()
+        .enumerate()
+        .map(|(k, comp)| {
+            let inputs = workload::request_inputs(&comp, k as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect();
+    let run = |spec: FaultSpec| -> (Vec<Vec<u32>>, Metrics) {
+        let pool = WorkerPool::new(OverlayConfig::default(), one_worker(spec)).unwrap();
+        let mut prints = Vec::new();
+        for r in &reqs {
+            let resp = pool.submit_wait(r.clone()).unwrap();
+            prints.push(fingerprint(&resp.run.output));
+        }
+        (prints, pool.shutdown().aggregate)
+    };
+
+    let (clean, m_clean) = run(FaultSpec::default());
+    let spec = FaultSpec { transient_downloads: vec![2, 5], ..FaultSpec::default() };
+    let (faulted, m_faulted) = run(spec);
+
+    assert_eq!(clean, faulted, "transient faults must not perturb a single result bit");
+    assert_eq!((m_clean.requests, m_faulted.requests), (12, 12));
+    assert_eq!(m_clean.download_retries, 0);
+    assert!(m_faulted.download_retries >= 1, "the download schedule must actually fire");
+    assert_eq!(m_faulted.tiles_quarantined, 0, "transient severity never quarantines");
+    assert_eq!(m_faulted.workers_restarted, 0);
+}
+
+/// A permanent region fault walks the quarantine rung: the tile is marked
+/// dead, the accelerator re-places around it on the same fabric, and the
+/// repeat request full-hits the re-placed plan — the CPU floor is never
+/// needed for a single dead tile.
+#[test]
+fn permanent_exec_fault_quarantines_and_re_places() {
+    let mut coord = Coordinator::new(OverlayConfig::default()).unwrap();
+    let spec = FaultSpec { region_dead: vec![1], ..FaultSpec::default() };
+    coord.set_faults(FaultPlane::from_spec(spec), 3);
+
+    let comp = Composition::vmul_reduce(256);
+    let inputs = workload::request_inputs(&comp, 1);
+    let want = cpu::eval(&comp, &inputs).unwrap();
+
+    let resp = coord.submit(&Request::dynamic(comp.clone(), inputs.clone())).unwrap();
+    assert!(agree(&want, &resp.run.output), "re-placed run must still be correct");
+    assert_eq!(coord.metrics.tiles_quarantined, 1, "the dead region is quarantined");
+    assert_eq!(coord.metrics.cpu_fallbacks, 0, "one dead tile must not force the CPU floor");
+
+    let again = coord.submit(&Request::dynamic(comp, inputs)).unwrap();
+    assert!(agree(&want, &again.run.output));
+    assert_eq!(coord.metrics.tiles_quarantined, 1, "quarantine is billed once, not per run");
+    assert_eq!(coord.metrics.requests, 2);
+}
+
+/// An injected worker panic is supervised, not fatal: the burst was staged
+/// before the panic fired, so the rebuilt coordinator replays it in full —
+/// every queued client still gets its (correct) reply, the thread never
+/// dies, and both restart counters appear in the worker's own record.
+#[test]
+fn injected_worker_panic_is_supervised_and_the_burst_replayed() {
+    let spec = FaultSpec { worker_panics: vec![1], ..FaultSpec::default() };
+    let pool = WorkerPool::new_paused(OverlayConfig::default(), one_worker(spec)).unwrap();
+    let mut pending = Vec::new();
+    for k in 0..4u64 {
+        let comp = Composition::vmul_reduce(128);
+        let inputs = workload::request_inputs(&comp, k);
+        let want = cpu::eval(&comp, &inputs).unwrap();
+        pending.push((want, pool.submit(Request::dynamic(comp, inputs)).unwrap()));
+    }
+    pool.start(); // the whole backlog drains as one burst — which panics
+
+    for (want, rx) in pending {
+        let resp = rx.recv().expect("worker survived").expect("served after the replay");
+        assert!(agree(&want, &resp.run.output));
+    }
+    let report = pool.shutdown();
+    assert!(report.panicked_workers.is_empty(), "supervision keeps the thread alive");
+    assert_eq!(report.aggregate.workers_restarted, 1);
+    assert_eq!(report.aggregate.jobs_replayed, 4, "the whole staged burst replays");
+    assert_eq!(report.aggregate.requests, 4);
+    let sum = report.worker_sum();
+    assert_eq!(sum.workers_restarted, 1, "the restart rides the worker's own record");
+    assert_eq!(sum.jobs_replayed, 4);
+    assert_eq!(sum.requests, report.aggregate.requests);
+}
+
+/// The full stack under all three fault kinds at once — transient
+/// downloads, one dead region, one worker panic — over real localhost TCP:
+/// a pipelined client gets exactly one `OK` per request id, every value
+/// correct, and the fault counters record each scheduled injection.
+#[test]
+fn chaos_soak_over_the_socket_conserves_exactly_one_reply_per_request() {
+    let spec = FaultSpec {
+        transient_downloads: vec![2, 5],
+        region_dead: vec![2],
+        worker_panics: vec![1],
+        ..FaultSpec::default()
+    };
+    let service = ServiceConfig { faults: spec, ..ServiceConfig::with_workers(2) };
+    let pool = Arc::new(WorkerPool::new(OverlayConfig::default(), service).unwrap());
+    let fcfg = FrontendConfig { reactors: 2, inflight_per_session: 4, max_inflight: 64 };
+    let front = Arc::new(Frontend::new(pool.clone(), fcfg, pool.metrics.clone()).unwrap());
+    let threads = front.spawn().unwrap();
+    let server =
+        NetServer::bind("127.0.0.1:0", front.clone(), NetConfig::default(), pool.metrics.clone())
+            .unwrap();
+    let addr = server.local_addr().to_string();
+
+    const REQUESTS: u64 = 16;
+    let n = 64u32;
+    let mut s = TcpStream::connect(&addr).unwrap();
+    for id in 0..REQUESTS {
+        let msg = ClientMsg::Request { id, n, seed: 70 + id, pattern: "vmul-reduce".into() };
+        write_frame(&mut s, &msg.to_frame()).unwrap();
+    }
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..REQUESTS {
+        let payload = read_frame(&mut s, 0).unwrap().expect("a reply per request");
+        match ServerMsg::decode(&payload).unwrap() {
+            ServerMsg::Ok { id, value, .. } => {
+                assert!(seen.insert(id), "request {id} answered twice");
+                let want = expected_for(n as usize, 70 + id, "vmul-reduce");
+                assert!(agree(&want, &value), "request {id}: wrong value under faults");
+            }
+            other => panic!("the recovery ladder must serve every request, got {other:?}"),
+        }
+    }
+    assert_eq!(seen.len(), REQUESTS as usize, "every id answered exactly once");
+    drop(s); // clean EOF at a frame boundary
+
+    server.stop();
+    threads.shutdown();
+    drop(front);
+    let report = Arc::try_unwrap(pool).ok().expect("serving tier leaked the pool").shutdown();
+    let m = &report.aggregate;
+    assert_eq!(m.requests, REQUESTS, "every request served exactly once");
+    assert_eq!(m.completions, REQUESTS, "every reply drained exactly once");
+    assert_eq!(m.tiles_quarantined, 1, "the one scheduled dead region");
+    assert!(m.workers_restarted >= 1, "the scheduled worker panic was supervised");
+    assert!(m.jobs_replayed >= 1, "the panicked burst was replayed, not dropped");
+    assert!(m.download_retries >= 1, "the transient download schedule fired");
+    assert!(report.panicked_workers.is_empty(), "no worker thread was actually lost");
+}

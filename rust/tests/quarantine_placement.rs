@@ -1,0 +1,92 @@
+//! Quarantine-aware placement properties, seeded by `$JIT_OVERLAY_SEED`
+//! (the CI seed matrix — see [`jit_overlay::workload::env_seed`]).
+//!
+//! Two invariants ride every seed:
+//!
+//! * the dynamic placer never lands an assignment on a quarantined tile —
+//!   for any quarantined subset, a compilation either places entirely on
+//!   live tiles or fails with a capacity-class error (never a wrong
+//!   placement, never a crash);
+//! * quarantining k distinct tiles degrades fabric capacity by exactly k
+//!   free tiles, and a full power-cycle reset does not heal dead silicon.
+
+use jit_overlay::bitstream::OperatorKind;
+use jit_overlay::exec::Engine;
+use jit_overlay::jit::Jit;
+use jit_overlay::patterns::Composition;
+use jit_overlay::workload::{env_seed, Rng};
+use jit_overlay::OverlayConfig;
+
+/// A quarantined random subset never hosts an assignment: whatever the
+/// placer can still place lands entirely on live tiles, and what it
+/// cannot place fails with a capacity error the recovery ladder can act
+/// on (re-place / CPU floor) — never a plan touching dead silicon.
+#[test]
+fn placement_never_lands_on_a_quarantined_tile() {
+    let mut rng = Rng::new(env_seed(0xDEAD) ^ 0x51CA);
+    let comps = [
+        Composition::map(OperatorKind::Abs, 128),
+        Composition::vmul_reduce(128),
+        Composition::map(OperatorKind::Sqrt, 128),
+    ];
+    for _trial in 0..20 {
+        let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+        let tiles = engine.fabric.tiles.len();
+        let k = 1 + rng.below(4);
+        let mut dead = std::collections::HashSet::new();
+        while dead.len() < k {
+            let t = rng.below(tiles);
+            if dead.insert(t) {
+                assert!(engine.fabric.quarantine(t), "first quarantine of {t} must bill");
+            }
+        }
+        for comp in &comps {
+            match Jit.compile(&engine.fabric, &engine.lib, comp) {
+                Ok(acc) => {
+                    for a in &acc.placement().assignments {
+                        assert!(
+                            !dead.contains(&a.tile),
+                            "stage placed on quarantined tile {} (dead set {dead:?})",
+                            a.tile
+                        );
+                    }
+                }
+                Err(e) => assert!(
+                    e.is_capacity(),
+                    "infeasible placement must be a capacity error, got {e}"
+                ),
+            }
+        }
+    }
+}
+
+/// Quarantining k distinct tiles removes exactly k tiles from the free
+/// pool — no more (no collateral eviction of live tiles), no less (the
+/// dead tile really is withdrawn) — and re-quarantining is idempotent.
+#[test]
+fn quarantine_degrades_capacity_by_exactly_k() {
+    let mut rng = Rng::new(env_seed(0xDEAD) ^ 0xCAFE);
+    let mut engine = Engine::new(OverlayConfig::default()).unwrap();
+    let tiles = engine.fabric.tiles.len();
+    assert_eq!(engine.fabric.free_tiles().len(), tiles, "fresh fabric is fully free");
+    let mut dead = Vec::new();
+    for k in 1..=4usize {
+        let t = loop {
+            let t = rng.below(tiles);
+            if !dead.contains(&t) {
+                break t;
+            }
+        };
+        assert!(engine.fabric.quarantine(t));
+        assert!(!engine.fabric.quarantine(t), "re-quarantine must not double-bill");
+        dead.push(t);
+        assert_eq!(engine.fabric.quarantined_tiles(), k);
+        assert_eq!(engine.fabric.free_tiles().len(), tiles - k, "capacity down by exactly k");
+    }
+    // a power cycle clears residency, not quarantine: dead silicon stays dead
+    engine.fabric.reset_full();
+    assert_eq!(engine.fabric.quarantined_tiles(), 4);
+    assert_eq!(engine.fabric.free_tiles().len(), tiles - 4);
+    // out-of-range quarantine is a no-op, not a panic
+    assert!(!engine.fabric.quarantine(tiles + 1));
+}
