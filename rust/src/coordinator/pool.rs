@@ -1200,12 +1200,14 @@ fn worker_loop(
     // a submitter or shutdown notifies
     let polling = shared.steal_min_depth != usize::MAX;
     let mut idle_poll = IDLE_POLL;
-    // a burst carried over from a supervised panic: replayed before the
-    // queue is polled again, so recovery never reorders past it
-    let mut carry: Option<Vec<Job>> = None;
+    // a burst carried over from a supervised panic, with its pending
+    // steal credit: replayed before the queue is polled again, so
+    // recovery never reorders past it, and a steal whose burst panicked
+    // before `steals` was billed is still counted on the replay
+    let mut carry: Option<(Vec<Job>, bool)> = None;
     loop {
         let (burst, stole) = if let Some(replayed) = carry.take() {
-            (replayed, false)
+            replayed
         } else {
             let popped = match queue.pop_burst(drain_window) {
                 None => break, // closed and drained
@@ -1279,7 +1281,7 @@ fn worker_loop(
                         // worker_sum == aggregate still holds after a restart
                         fresh.metrics = coord.metrics;
                         coord = fresh;
-                        carry = replay;
+                        carry = replay.map(|jobs| (jobs, stole));
                     }
                     // the fabric cannot be rebuilt: exit. CloseOnExit fails
                     // the queue over, and a carried burst's sinks fail safe

@@ -358,7 +358,13 @@ pub fn write_frame(w: &mut impl Write, frame_bytes: &[u8]) -> io::Result<()> {
             Err(e) => return Err(e),
         }
     }
-    w.flush()
+    // flush is a syscall too: it can take the same EINTR the writes can
+    loop {
+        match w.flush() {
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            r => return r,
+        }
+    }
 }
 
 /// Read one frame from a blocking stream. `Ok(None)` is a clean EOF at a

@@ -85,6 +85,30 @@ impl PrManager {
         retry_budget: u32,
     ) -> Result<ReconfigStats> {
         let mut stats = ReconfigStats::default();
+        let outcome = Self::transfer_all(fabric, lib, placement, faults, retry_budget, &mut stats);
+        // bytes already moved through the ICAP (including aborted attempts
+        // on a faulted run) are billed to lifetime whether or not the plan
+        // completed — the hardware cost was paid either way
+        stats.seconds = stats.bytes as f64 / fabric.cfg.clocks.icap_bytes_per_sec;
+        self.lifetime.downloads += stats.downloads;
+        self.lifetime.replaced += stats.replaced;
+        self.lifetime.cache_hits += stats.cache_hits;
+        self.lifetime.bytes += stats.bytes;
+        self.lifetime.seconds += stats.seconds;
+        self.lifetime.retries += stats.retries;
+        outcome.map(|()| stats)
+    }
+
+    /// The per-assignment download loop, accumulating into `stats` so the
+    /// caller can bill lifetime counters even when a fault aborts the plan.
+    fn transfer_all(
+        fabric: &mut Fabric,
+        lib: &BitstreamLibrary,
+        placement: &Placement,
+        faults: &FaultPlane,
+        retry_budget: u32,
+        stats: &mut ReconfigStats,
+    ) -> Result<()> {
         for a in &placement.assignments {
             let tile = &fabric.tiles[a.tile];
             // a residency hit needs the whole fused pair to match: a plain
@@ -142,14 +166,7 @@ impl PrManager {
                 }
             }
         }
-        stats.seconds = stats.bytes as f64 / fabric.cfg.clocks.icap_bytes_per_sec;
-        self.lifetime.downloads += stats.downloads;
-        self.lifetime.replaced += stats.replaced;
-        self.lifetime.cache_hits += stats.cache_hits;
-        self.lifetime.bytes += stats.bytes;
-        self.lifetime.seconds += stats.seconds;
-        self.lifetime.retries += stats.retries;
-        Ok(stats)
+        Ok(())
     }
 
     /// Evict every resident operator not used by `placement` (frees tiles
@@ -373,6 +390,23 @@ mod tests {
         assert!(hit, "got {err:?}");
         assert_eq!(f.quarantined_tiles(), 1);
         assert!(!f.free_tiles().contains(&victim));
+    }
+
+    #[test]
+    fn lifetime_is_billed_even_when_the_plan_faults_out() {
+        use crate::faults::{FaultPlane, FaultSpec};
+        let (mut f, lib, mut pr) = setup();
+        let p = vmul_placement(&f, &lib);
+        let plane = FaultPlane::from_spec(FaultSpec {
+            transient_downloads: vec![1, 2, 3],
+            ..FaultSpec::default()
+        });
+        pr.apply_with(&mut f, &lib, &p, &plane, 2).unwrap_err();
+        // budget 2 allows 3 attempts; every aborted one re-paid its frame
+        assert_eq!(pr.lifetime.retries, 3);
+        assert!(pr.lifetime.bytes > 0);
+        assert!(pr.lifetime.seconds > 0.0);
+        assert_eq!(pr.lifetime.downloads, 0, "nothing completed");
     }
 
     #[test]
