@@ -104,6 +104,19 @@ pub struct ServiceConfig {
     /// transfer bytes) before the request errors out. Counted in
     /// `Metrics::download_retries`.
     pub download_retries: u32,
+    /// Predictive reconfiguration: each worker learns a first-order Markov
+    /// chain over its request keys and, in quiet drain windows, prefetches
+    /// the predicted next accelerator's bitstreams into idle healthy tiles
+    /// so the following request pays residency hits instead of critical-path
+    /// PR downloads. Off by default: the paper's purely reactive JIT.
+    /// Counted in `Metrics::prefetch_hits` / `Metrics::prefetch_wasted`.
+    pub predict: bool,
+    /// Online defragmentation: in quiet drain windows each worker migrates
+    /// residents whose footprint fits a Small region off Large tiles,
+    /// freeing the scarce Large regions and strictly reducing internal
+    /// fragmentation (see [`crate::place::compact`]). Off by default.
+    /// Counted in `Metrics::migrations`.
+    pub compact: bool,
 }
 
 impl Default for ServiceConfig {
@@ -120,6 +133,8 @@ impl Default for ServiceConfig {
             fuse: false,
             faults: crate::faults::FaultSpec::default(),
             download_retries: 3,
+            predict: false,
+            compact: false,
         }
     }
 }
@@ -443,6 +458,10 @@ mod tests {
         // faults are off by default, with a small positive retry budget
         assert!(s.faults.is_off());
         assert!(s.download_retries > 0);
+        // speculative maintenance is opt-in: the paper's baseline is
+        // purely reactive
+        assert!(!s.predict);
+        assert!(!s.compact);
     }
 
     #[test]

@@ -246,6 +246,12 @@ impl PollStats {
     }
 
     /// No progress and no outstanding work: the reactor is quiescent.
+    ///
+    /// This is the front end's view of the backend's *quiet window*: an
+    /// idle reactor admits nothing, so pool workers see empty queues and
+    /// spend the window on speculative maintenance
+    /// ([`crate::coordinator::Coordinator::maintain`] — predictive
+    /// prefetch and online defragmentation) instead of parking outright.
     pub fn idle(&self) -> bool {
         !self.progressed() && self.queued == 0 && self.inflight == 0
     }

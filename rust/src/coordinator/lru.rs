@@ -75,6 +75,16 @@ impl<V> ClockLru<V> {
         }
     }
 
+    /// Visit every `(key, value)` pair under the read lock (no recency
+    /// bump). The compactor uses this to find which cached entries must be
+    /// republished after residents migrate — it needs the keys to put the
+    /// remapped values back.
+    pub fn for_each_entry(&self, mut f: impl FnMut(u64, &V)) {
+        for (k, e) in self.read_map().iter() {
+            f(*k, &e.value);
+        }
+    }
+
     fn read_map(&self) -> RwLockReadGuard<'_, HashMap<u64, ClockEntry<V>>> {
         self.map.read().unwrap_or_else(|p| p.into_inner())
     }

@@ -114,6 +114,15 @@ pub struct Metrics {
     /// (supervision caught the crash before the burst was consumed, so
     /// every job still got exactly one reply).
     pub jobs_replayed: u64,
+    /// Requests whose composition the predictor had already prefetched:
+    /// the PR download happened in an idle window, off the critical path.
+    pub prefetch_hits: u64,
+    /// Prefetched plans the next request did not use (mispredictions; the
+    /// speculative download's tiles are reclaimed like any idle resident).
+    pub prefetch_wasted: u64,
+    /// Residents relocated by the background compactor (each migration is
+    /// one PR download into the destination tile plus a source clear).
+    pub migrations: u64,
 }
 
 impl Metrics {
@@ -176,53 +185,72 @@ impl Metrics {
         self.tiles_quarantined += other.tiles_quarantined;
         self.workers_restarted += other.workers_restarted;
         self.jobs_replayed += other.jobs_replayed;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_wasted += other.prefetch_wasted;
+        self.migrations += other.migrations;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
     /// (counters are monotonic, so this is the per-request delta).
+    ///
+    /// Saturating: after a supervised worker restart, the respawned
+    /// coordinator carries the crashed worker's merged counters forward, so
+    /// an `earlier` snapshot taken against the *fresh* record can exceed a
+    /// later one taken before the carry landed. A raw `-` here
+    /// underflow-panics in debug builds; an out-of-order pair now yields
+    /// zero for the affected fields instead.
     pub fn delta_since(&self, earlier: &Metrics) -> Metrics {
         Metrics {
-            requests: self.requests - earlier.requests,
-            jit_compiles: self.jit_compiles - earlier.jit_compiles,
-            cache_hits: self.cache_hits - earlier.cache_hits,
-            placement_respecializations: self.placement_respecializations
-                - earlier.placement_respecializations,
-            residency_clobbers_avoided: self.residency_clobbers_avoided
-                - earlier.residency_clobbers_avoided,
-            jit_seconds: self.jit_seconds - earlier.jit_seconds,
-            pr_downloads: self.pr_downloads - earlier.pr_downloads,
-            pr_region_hits: self.pr_region_hits - earlier.pr_region_hits,
-            pr_replaced: self.pr_replaced - earlier.pr_replaced,
-            pr_seconds: self.pr_seconds - earlier.pr_seconds,
-            busy_seconds: self.busy_seconds - earlier.busy_seconds,
-            evictions: self.evictions - earlier.evictions,
-            bursts: self.bursts - earlier.bursts,
-            burst_group_switches: self.burst_group_switches - earlier.burst_group_switches,
-            steals: self.steals - earlier.steals,
-            rejected: self.rejected - earlier.rejected,
-            lru_evictions: self.lru_evictions - earlier.lru_evictions,
-            sessions: self.sessions - earlier.sessions,
-            completions: self.completions - earlier.completions,
-            reactor_polls: self.reactor_polls - earlier.reactor_polls,
-            admission_rejections: self.admission_rejections - earlier.admission_rejections,
-            connections: self.connections - earlier.connections,
-            conns_shed: self.conns_shed - earlier.conns_shed,
-            net_rejections: self.net_rejections - earlier.net_rejections,
-            stages_fused: self.stages_fused - earlier.stages_fused,
-            downloads_avoided: self.downloads_avoided - earlier.downloads_avoided,
-            fusion_fallbacks: self.fusion_fallbacks - earlier.fusion_fallbacks,
-            cpu_fallbacks: self.cpu_fallbacks - earlier.cpu_fallbacks,
-            download_retries: self.download_retries - earlier.download_retries,
-            tiles_quarantined: self.tiles_quarantined - earlier.tiles_quarantined,
-            workers_restarted: self.workers_restarted - earlier.workers_restarted,
-            jobs_replayed: self.jobs_replayed - earlier.jobs_replayed,
+            requests: self.requests.saturating_sub(earlier.requests),
+            jit_compiles: self.jit_compiles.saturating_sub(earlier.jit_compiles),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            placement_respecializations: self
+                .placement_respecializations
+                .saturating_sub(earlier.placement_respecializations),
+            residency_clobbers_avoided: self
+                .residency_clobbers_avoided
+                .saturating_sub(earlier.residency_clobbers_avoided),
+            jit_seconds: (self.jit_seconds - earlier.jit_seconds).max(0.0),
+            pr_downloads: self.pr_downloads.saturating_sub(earlier.pr_downloads),
+            pr_region_hits: self.pr_region_hits.saturating_sub(earlier.pr_region_hits),
+            pr_replaced: self.pr_replaced.saturating_sub(earlier.pr_replaced),
+            pr_seconds: (self.pr_seconds - earlier.pr_seconds).max(0.0),
+            busy_seconds: (self.busy_seconds - earlier.busy_seconds).max(0.0),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            bursts: self.bursts.saturating_sub(earlier.bursts),
+            burst_group_switches: self
+                .burst_group_switches
+                .saturating_sub(earlier.burst_group_switches),
+            steals: self.steals.saturating_sub(earlier.steals),
+            rejected: self.rejected.saturating_sub(earlier.rejected),
+            lru_evictions: self.lru_evictions.saturating_sub(earlier.lru_evictions),
+            sessions: self.sessions.saturating_sub(earlier.sessions),
+            completions: self.completions.saturating_sub(earlier.completions),
+            reactor_polls: self.reactor_polls.saturating_sub(earlier.reactor_polls),
+            admission_rejections: self
+                .admission_rejections
+                .saturating_sub(earlier.admission_rejections),
+            connections: self.connections.saturating_sub(earlier.connections),
+            conns_shed: self.conns_shed.saturating_sub(earlier.conns_shed),
+            net_rejections: self.net_rejections.saturating_sub(earlier.net_rejections),
+            stages_fused: self.stages_fused.saturating_sub(earlier.stages_fused),
+            downloads_avoided: self.downloads_avoided.saturating_sub(earlier.downloads_avoided),
+            fusion_fallbacks: self.fusion_fallbacks.saturating_sub(earlier.fusion_fallbacks),
+            cpu_fallbacks: self.cpu_fallbacks.saturating_sub(earlier.cpu_fallbacks),
+            download_retries: self.download_retries.saturating_sub(earlier.download_retries),
+            tiles_quarantined: self.tiles_quarantined.saturating_sub(earlier.tiles_quarantined),
+            workers_restarted: self.workers_restarted.saturating_sub(earlier.workers_restarted),
+            jobs_replayed: self.jobs_replayed.saturating_sub(earlier.jobs_replayed),
+            prefetch_hits: self.prefetch_hits.saturating_sub(earlier.prefetch_hits),
+            prefetch_wasted: self.prefetch_wasted.saturating_sub(earlier.prefetch_wasted),
+            migrations: self.migrations.saturating_sub(earlier.migrations),
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={} dl_retry={} quar={} w_restart={} replay={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={} dl_retry={} quar={} w_restart={} replay={} pf_hit={} pf_waste={} migr={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -255,6 +283,9 @@ impl Metrics {
             self.tiles_quarantined,
             self.workers_restarted,
             self.jobs_replayed,
+            self.prefetch_hits,
+            self.prefetch_wasted,
+            self.migrations,
         )
     }
 }
@@ -295,6 +326,9 @@ pub struct AtomicMetrics {
     tiles_quarantined: AtomicU64,
     workers_restarted: AtomicU64,
     jobs_replayed: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetch_wasted: AtomicU64,
+    migrations: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -338,6 +372,9 @@ impl AtomicMetrics {
         self.tiles_quarantined.fetch_add(d.tiles_quarantined, Ordering::Relaxed);
         self.workers_restarted.fetch_add(d.workers_restarted, Ordering::Relaxed);
         self.jobs_replayed.fetch_add(d.jobs_replayed, Ordering::Relaxed);
+        self.prefetch_hits.fetch_add(d.prefetch_hits, Ordering::Relaxed);
+        self.prefetch_wasted.fetch_add(d.prefetch_wasted, Ordering::Relaxed);
+        self.migrations.fetch_add(d.migrations, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -380,6 +417,9 @@ impl AtomicMetrics {
             tiles_quarantined: self.tiles_quarantined.load(Ordering::Relaxed),
             workers_restarted: self.workers_restarted.load(Ordering::Relaxed),
             jobs_replayed: self.jobs_replayed.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_wasted: self.prefetch_wasted.load(Ordering::Relaxed),
+            migrations: self.migrations.load(Ordering::Relaxed),
         }
     }
 }
@@ -418,6 +458,9 @@ mod tests {
             tiles_quarantined: 1,
             workers_restarted: 3,
             jobs_replayed: 4,
+            prefetch_hits: 6,
+            prefetch_wasted: 2,
+            migrations: 7,
             ..Default::default()
         };
         let s = m.summary();
@@ -426,6 +469,9 @@ mod tests {
         assert!(s.contains("quar=1"));
         assert!(s.contains("w_restart=3"));
         assert!(s.contains("replay=4"));
+        assert!(s.contains("pf_hit=6"));
+        assert!(s.contains("pf_waste=2"));
+        assert!(s.contains("migr=7"));
     }
 
     #[test]
@@ -463,6 +509,9 @@ mod tests {
             tiles_quarantined: 1,
             workers_restarted: 2,
             jobs_replayed: 6,
+            prefetch_hits: 3,
+            prefetch_wasted: 2,
+            migrations: 1,
         };
         let mut b = a;
         b.merge(&a);
@@ -491,7 +540,40 @@ mod tests {
         assert_eq!(d.tiles_quarantined, a.tiles_quarantined);
         assert_eq!(d.workers_restarted, a.workers_restarted);
         assert_eq!(d.jobs_replayed, a.jobs_replayed);
+        assert_eq!(d.prefetch_hits, a.prefetch_hits);
+        assert_eq!(d.prefetch_wasted, a.prefetch_wasted);
+        assert_eq!(d.migrations, a.migrations);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
+    }
+
+    /// Regression: a supervised restart can hand `delta_since` an
+    /// out-of-order snapshot pair (the respawned coordinator carries the
+    /// crashed worker's merged totals, so `earlier` may exceed `self`).
+    /// The raw subtraction this replaces underflow-panicked in debug
+    /// builds; saturation must yield zeros instead.
+    #[test]
+    fn delta_since_saturates_on_out_of_order_snapshots() {
+        let before_carry = Metrics { requests: 2, pr_downloads: 1, ..Default::default() };
+        let after_carry = Metrics {
+            requests: 10,
+            pr_downloads: 7,
+            jit_seconds: 0.5,
+            pr_seconds: 0.25,
+            busy_seconds: 1.0,
+            workers_restarted: 1,
+            ..Default::default()
+        };
+        let d = before_carry.delta_since(&after_carry);
+        assert_eq!(d.requests, 0);
+        assert_eq!(d.pr_downloads, 0);
+        assert_eq!(d.workers_restarted, 0);
+        assert_eq!(d.jit_seconds, 0.0);
+        assert_eq!(d.pr_seconds, 0.0);
+        assert_eq!(d.busy_seconds, 0.0);
+        // the in-order direction is unchanged
+        let fwd = after_carry.delta_since(&before_carry);
+        assert_eq!(fwd.requests, 8);
+        assert_eq!(fwd.pr_downloads, 6);
     }
 
     #[test]
@@ -530,6 +612,9 @@ mod tests {
             tiles_quarantined: 1,
             workers_restarted: 1,
             jobs_replayed: 4,
+            prefetch_hits: 2,
+            prefetch_wasted: 1,
+            migrations: 3,
         };
         agg.record(&d);
         agg.record(&d);
@@ -560,6 +645,9 @@ mod tests {
         assert_eq!(s.tiles_quarantined, 2);
         assert_eq!(s.workers_restarted, 2);
         assert_eq!(s.jobs_replayed, 8);
+        assert_eq!(s.prefetch_hits, 4);
+        assert_eq!(s.prefetch_wasted, 2);
+        assert_eq!(s.migrations, 6);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

@@ -48,6 +48,7 @@ use crate::exec::{Engine, RunResult};
 use crate::faults::FaultPlane;
 use crate::jit::{AcceleratorProgram, CompiledAccelerator, Jit, PlacementPlan, FUSED_KEY_SALT};
 use crate::patterns::Composition;
+use crate::predict::NextPredictor;
 use crate::timing::Target;
 
 /// Default placement plans retained per cached composition — one per
@@ -225,6 +226,26 @@ impl AcceleratorCache {
             .unwrap_or(false)
     }
 
+    /// Snapshot every cached composition's plan for one fabric (recency
+    /// neutral, sorted by key for determinism): `(key, spec, plan)`
+    /// triples. The compactor scans these after a migration to republish
+    /// the plans whose placements touched a moved tile.
+    pub fn plans_for_fabric(
+        &self,
+        fabric: u64,
+    ) -> Vec<(u64, Arc<AcceleratorProgram>, Arc<PlacementPlan>)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            shard.for_each_entry(|key, e| {
+                if let Some(plan) = e.plans.peek(fabric, Arc::clone) {
+                    out.push((key, e.spec.clone(), plan));
+                }
+            });
+        }
+        out.sort_by_key(|&(key, _, _)| key);
+        out
+    }
+
     /// Number of cached compositions across all shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(ClockLru::len).sum()
@@ -281,6 +302,22 @@ pub struct Coordinator {
     /// Quarantined-tile count already billed to `metrics.tiles_quarantined`
     /// (the fabric count is a level; the metric is its increments).
     quarantined_seen: usize,
+    /// Predictive reconfiguration: learn the request stream's transitions
+    /// and prefetch the predicted next accelerator in quiet windows. Off
+    /// by default — with it off, no predictor state is touched and the
+    /// serve path is bit-identical to the reactive baseline.
+    predict: bool,
+    /// Online defragmentation in quiet windows. Off by default.
+    compact: bool,
+    /// The Markov chain over this coordinator's effective cache keys.
+    predictor: NextPredictor,
+    /// Key staged by the last completed prefetch, not yet claimed by a
+    /// request: the next submit scores it as a hit or a waste.
+    last_prefetch: Option<u64>,
+    /// Tiles of the most recently served accelerator — the "in use" set a
+    /// prefetch must never clobber (everything else resident is idle and
+    /// fair game for speculation; staleness guards re-place the losers).
+    active: Vec<usize>,
 }
 
 impl Coordinator {
@@ -299,6 +336,11 @@ impl Coordinator {
             metrics: Metrics::default(),
             fuse: false,
             quarantined_seen: 0,
+            predict: false,
+            compact: false,
+            predictor: NextPredictor::default(),
+            last_prefetch: None,
+            active: Vec::new(),
         })
     }
 
@@ -321,6 +363,194 @@ impl Coordinator {
     /// Current fusion policy.
     pub fn fusion(&self) -> bool {
         self.fuse
+    }
+
+    /// Turn predictive reconfiguration on or off (see
+    /// [`Coordinator::maintain`]). Off is the paper's reactive baseline.
+    pub fn set_predict(&mut self, on: bool) {
+        self.predict = on;
+    }
+
+    /// Current prediction policy.
+    pub fn predicting(&self) -> bool {
+        self.predict
+    }
+
+    /// Turn online defragmentation on or off (see
+    /// [`Coordinator::compact_once`]).
+    pub fn set_compact(&mut self, on: bool) {
+        self.compact = on;
+    }
+
+    /// Current compaction policy.
+    pub fn compacting(&self) -> bool {
+        self.compact
+    }
+
+    /// One quiet-window maintenance pass: defragment first (it frees the
+    /// scarce Large tiles), then prefetch the predicted next accelerator
+    /// into whatever is idle. Returns whether any speculative work was
+    /// done — the pool's idle loop re-enters until this settles, then
+    /// parks. A no-op (and bit-identical to not being called) when both
+    /// policies are off.
+    pub fn maintain(&mut self) -> bool {
+        let mut worked = false;
+        if self.compact {
+            worked |= self.compact_once().is_some();
+        }
+        if self.predict {
+            worked |= self.prefetch_predicted().is_some();
+        }
+        worked
+    }
+
+    /// Would realizing `plan` overwrite a resident of the most recently
+    /// served accelerator? Those tiles are "in use": a prefetch must never
+    /// steal them. Idle residents elsewhere are legitimate speculation
+    /// targets — if the speculation is wrong their plans read as stale and
+    /// respecialize, never silently corrupt.
+    fn plan_disturbs_active(&self, plan: &PlacementPlan) -> bool {
+        plan.placement.assignments.iter().any(|a| {
+            self.active.contains(&a.tile) && {
+                let t = &self.engine.fabric.tiles[a.tile];
+                t.resident != Some(a.op) || t.resident_tail != a.tail
+            }
+        })
+    }
+
+    /// Prefetch the predicted next accelerator's bitstreams during a quiet
+    /// window, so the predicted request pays residency hits instead of
+    /// critical-path downloads. Returns the prefetched key, or `None` when
+    /// there is nothing (safe) to do.
+    ///
+    /// The ladder: the predictor must clear its confidence gates; the key
+    /// must still be cached (prediction is over cache keys — a prefetch
+    /// never compiles); the fabric's cached plan is replayed if it touches
+    /// no quarantined tile and no in-use resident, otherwise a fresh
+    /// placement onto free healthy tiles is attempted (the placer cannot
+    /// clobber anyone). The download itself is billed to the PR manager's
+    /// lifetime stats but **not** to `Metrics::pr_downloads` — that
+    /// counter measures the critical path this feature exists to shorten.
+    /// Hits and mispredictions are scored by the next real submit into
+    /// `prefetch_hits` / `prefetch_wasted`.
+    pub fn prefetch_predicted(&mut self) -> Option<u64> {
+        if !self.predict {
+            return None;
+        }
+        let key = self.predictor.predict()?;
+        if self.last_prefetch == Some(key) {
+            return None; // already staged for the next request
+        }
+        let fabric = self.engine.fabric.id;
+        let hit = self.cache.lookup(key, fabric)?;
+        let plan = match hit.plan {
+            Some(p)
+                if !self.engine.plan_touches_quarantine(&p)
+                    && !self.plan_disturbs_active(&p) =>
+            {
+                p
+            }
+            _ => {
+                // no replayable plan: respecialize onto free healthy
+                // tiles. Unbilled (no respecialization or JIT counters):
+                // prefetch is not a request, and the conservation law
+                // (hits + respecs + compiles == requests) must hold.
+                let plan = Arc::new(self.jit.place_onto(&self.engine.fabric, &hit.spec).ok()?);
+                self.metrics.lru_evictions +=
+                    self.cache.insert_plan(key, Arc::clone(&plan)) as u64;
+                plan
+            }
+        };
+        let applied = self.engine.pr.apply_with(
+            &mut self.engine.fabric,
+            &self.engine.lib,
+            &plan.placement,
+            &self.engine.faults,
+            self.engine.download_retries,
+        );
+        match applied {
+            Ok(_) => {
+                self.last_prefetch = Some(key);
+                Some(key)
+            }
+            Err(_) => {
+                // a faulted speculative download costs nothing on the
+                // request path; account any quarantine it surfaced
+                self.note_quarantines();
+                None
+            }
+        }
+    }
+
+    /// One compaction pass: plan migrations against the live occupancy
+    /// ([`crate::place::compact::plan_compaction`]), execute them through
+    /// the PR manager, then **republish** every cached plan of this fabric
+    /// that touched a moved tile — its assignments remapped through the
+    /// move map and re-routed/re-codegenned via
+    /// [`Jit::plan_for_placement`] — so later requests replay onto the
+    /// tiles their residents now occupy instead of re-downloading into the
+    /// vacated ones. A republish that fails (e.g. contiguity broken) keeps
+    /// the old plan: the engine's staleness/clobber guards respecialize it
+    /// on demand, so compaction can reduce efficiency of one plan but
+    /// never its correctness. Returns `(mean_internal before, after)` of
+    /// the live residency, or `None` when there was nothing to do.
+    pub fn compact_once(&mut self) -> Option<(f64, f64)> {
+        if !self.compact {
+            return None;
+        }
+        let plan = crate::place::compact::plan_compaction(&self.engine.fabric);
+        if plan.is_noop() {
+            return None;
+        }
+        let mut moved: HashMap<usize, usize> = HashMap::new();
+        for mv in &plan.moves {
+            let migrated = self.engine.pr.migrate(
+                &mut self.engine.fabric,
+                &self.engine.lib,
+                mv,
+                &self.engine.faults,
+                self.engine.download_retries,
+            );
+            match migrated {
+                Ok(_) => {
+                    self.metrics.migrations += 1;
+                    moved.insert(mv.from, mv.to);
+                }
+                // the source resident survives a faulted migration; skip
+                // this move and account any quarantine
+                Err(_) => self.note_quarantines(),
+            }
+        }
+        if moved.is_empty() {
+            return None;
+        }
+        let fabric_id = self.engine.fabric.id;
+        for (key, spec, old) in self.cache.plans_for_fabric(fabric_id) {
+            if !old.placement.assignments.iter().any(|a| moved.contains_key(&a.tile)) {
+                continue;
+            }
+            let mut placement = old.placement.clone();
+            for a in &mut placement.assignments {
+                if let Some(&to) = moved.get(&a.tile) {
+                    a.tile = to;
+                    a.class = self.engine.fabric.tiles[to].class;
+                }
+            }
+            if let Ok(new_plan) = self.jit.plan_for_placement(&self.engine.fabric, &spec, placement)
+            {
+                self.metrics.lru_evictions +=
+                    self.cache.insert_plan(key, Arc::new(new_plan)) as u64;
+            }
+        }
+        // keep protecting the in-use residents at their new homes
+        for t in self.active.iter_mut() {
+            if let Some(&to) = moved.get(t) {
+                *t = to;
+            }
+        }
+        let live = crate::place::compact::live_placement(&self.engine.fabric);
+        let after = crate::place::frag::fragmentation(&live).mean_internal;
+        Some((plan.before.mean_internal, after))
     }
 
     /// Compile (or fetch) the accelerator for a composition, specialized to
@@ -492,6 +722,20 @@ impl Coordinator {
     /// request degrades to CPU interpretation like any other capacity
     /// exhaustion.
     pub fn submit(&mut self, req: &Request) -> Result<Response> {
+        if self.predict {
+            // score the outstanding prefetch against what actually arrived,
+            // then feed the predictor — once per request, outside the fault
+            // ladder (a retried attempt is not a new observation)
+            let key = req.comp.cache_key() ^ if self.fuse { FUSED_KEY_SALT } else { 0 };
+            if let Some(staged) = self.last_prefetch.take() {
+                if staged == key {
+                    self.metrics.prefetch_hits += 1;
+                } else {
+                    self.metrics.prefetch_wasted += 1;
+                }
+            }
+            self.predictor.observe(key);
+        }
         let max_attempts = self.engine.fabric.tiles.len() + 1;
         let mut attempt = 0;
         loop {
@@ -536,6 +780,10 @@ impl Coordinator {
             Err(e) => return Err(e),
         };
         let run = self.engine.run(&acc, &req.inputs, req.target)?;
+        // these tiles now hold the most recently served accelerator: the
+        // prefetcher must leave them alone until the next request lands
+        self.active.clear();
+        self.active.extend(acc.plan.placement.assignments.iter().map(|a| a.tile));
         self.metrics.requests += 1;
         if let Some(r) = run.reconfig {
             self.metrics.pr_downloads += r.downloads as u64;
@@ -559,6 +807,8 @@ impl Coordinator {
     /// `cpu_fallbacks`; `cached` is false and no JIT time is charged.
     fn submit_cpu_fallback(&mut self, req: &Request) -> Result<Response> {
         let run = self.engine.run_cpu(&req.comp, &req.inputs)?;
+        // a CPU answer leaves no accelerator in use on the fabric
+        self.active.clear();
         self.metrics.requests += 1;
         self.metrics.cpu_fallbacks += 1;
         self.metrics.busy_seconds += run.timing.total();
@@ -1195,5 +1445,156 @@ mod tests {
         assert_eq!(r2.run.output.as_scalar(), Some(2048.0));
         assert!(rxs[1].recv().unwrap().unwrap().run.output.as_vector().is_some());
         assert!(rxs[3].recv().unwrap().unwrap().run.output.as_vector().is_some());
+    }
+
+    /// With both policies off (the default), maintenance is a guaranteed
+    /// no-op: same requests → bit-identical outputs and metrics whether or
+    /// not the idle loop ever calls it.
+    #[test]
+    fn maintain_is_inert_with_flags_off() {
+        let mut plain = coord();
+        let mut maintained = coord();
+        for k in 0..3 {
+            let a = plain.submit(&vmul_req(512, k as f32 + 1.0)).unwrap();
+            assert!(!maintained.maintain());
+            let b = maintained.submit(&vmul_req(512, k as f32 + 1.0)).unwrap();
+            assert!(!maintained.maintain());
+            assert_eq!(
+                a.run.output.as_scalar().unwrap().to_bits(),
+                b.run.output.as_scalar().unwrap().to_bits()
+            );
+        }
+        assert_eq!(plain.metrics.pr_downloads, maintained.metrics.pr_downloads);
+        assert_eq!(plain.metrics.cache_hits, maintained.metrics.cache_hits);
+        assert_eq!(maintained.metrics.prefetch_hits, 0);
+        assert_eq!(maintained.metrics.prefetch_wasted, 0);
+        assert_eq!(maintained.metrics.migrations, 0);
+    }
+
+    /// The predictor warms on an alternating stream, stages the predicted
+    /// next accelerator once per quiet window, and the next submit scores
+    /// it: a correct guess is a `prefetch_hits`, a wrong one
+    /// `prefetch_wasted`. Speculative downloads never touch the
+    /// request-path `pr_downloads` counter.
+    #[test]
+    fn prefetch_stages_the_predicted_accelerator_and_is_scored() {
+        let mut c = coord();
+        c.set_predict(true);
+        // warmup: vmul→map and map→vmul each seen twice (MIN_SAMPLES)
+        for k in 0..2 {
+            c.submit(&vmul_req(256, k as f32 + 1.0)).unwrap();
+            c.submit(&map_req(256)).unwrap();
+        }
+        c.submit(&vmul_req(256, 9.0)).unwrap();
+        let downloads = c.metrics.pr_downloads;
+        assert!(c.prefetch_predicted().is_some(), "map is the confident next");
+        assert!(c.prefetch_predicted().is_none(), "already staged: idle loop settles");
+        assert_eq!(c.metrics.pr_downloads, downloads, "speculation is off the critical path");
+        c.submit(&map_req(256)).unwrap(); // the prediction comes true
+        assert_eq!(c.metrics.prefetch_hits, 1);
+        assert_eq!(c.metrics.prefetch_wasted, 0);
+        // now vmul is predicted; serving map instead scores a waste
+        assert!(c.prefetch_predicted().is_some());
+        c.submit(&map_req(256)).unwrap();
+        assert_eq!(c.metrics.prefetch_hits, 1);
+        assert_eq!(c.metrics.prefetch_wasted, 1);
+        assert_eq!(c.metrics.pr_downloads, downloads, "co-residents replay for free");
+    }
+
+    /// Two 5-stage chains cannot co-reside, so the predicted chain's cached
+    /// plan overlaps the in-use resident set and its fresh placement cannot
+    /// fit the 4 free tiles: the prefetcher must decline rather than evict
+    /// the accelerator just served.
+    #[test]
+    fn prefetch_never_evicts_the_in_use_accelerator() {
+        let mut c = coord();
+        c.set_predict(true);
+        for _ in 0..2 {
+            c.submit(&chain_a_req(256)).unwrap();
+            c.submit(&chain_b_req(256)).unwrap();
+        }
+        c.submit(&chain_a_req(256)).unwrap();
+        let residents: Vec<_> =
+            c.engine.fabric.tiles.iter().map(|t| t.resident).collect();
+        let downloads = c.metrics.pr_downloads;
+        assert!(c.prefetch_predicted().is_none(), "no safe tiles for chain B");
+        let after: Vec<_> = c.engine.fabric.tiles.iter().map(|t| t.resident).collect();
+        assert_eq!(residents, after, "chain A stays resident untouched");
+        assert_eq!(c.metrics.pr_downloads, downloads);
+        // the declined speculation costs nothing at the next submit either
+        c.submit(&chain_a_req(256)).unwrap();
+        assert_eq!(c.metrics.prefetch_hits + c.metrics.prefetch_wasted, 0);
+    }
+
+    /// A cached plan pointing at a quarantined tile is never replayed by
+    /// the prefetcher: it respecializes onto healthy free tiles instead,
+    /// and the staged accelerator then serves with zero downloads.
+    #[test]
+    fn prefetch_respecializes_around_quarantine() {
+        let mut c = coord();
+        c.set_predict(true);
+        for k in 0..2 {
+            c.submit(&vmul_req(256, k as f32 + 1.0)).unwrap();
+            c.submit(&map_req(256)).unwrap();
+        }
+        c.submit(&vmul_req(256, 9.0)).unwrap();
+        // kill the tile holding map's resident (and its cached plan target)
+        let map_tile = c
+            .engine
+            .fabric
+            .tiles
+            .iter()
+            .position(|t| t.resident == Some(OperatorKind::Abs))
+            .unwrap();
+        assert!(c.engine.fabric.quarantine(map_tile));
+        let downloads = c.metrics.pr_downloads;
+        assert!(c.prefetch_predicted().is_some());
+        let new_tile = c
+            .engine
+            .fabric
+            .tiles
+            .iter()
+            .position(|t| t.resident == Some(OperatorKind::Abs))
+            .unwrap();
+        assert_ne!(new_tile, map_tile);
+        assert!(!c.engine.fabric.tiles[new_tile].quarantined);
+        assert_eq!(c.metrics.pr_downloads, downloads);
+        let r = c.submit(&map_req(256)).unwrap();
+        assert!(r.cached);
+        assert_eq!(c.metrics.prefetch_hits, 1);
+        assert_eq!(c.metrics.pr_downloads, downloads, "prefetched bits serve the hit");
+    }
+
+    /// End-to-end compaction: a 6-stage chain's last stage lands on Large
+    /// tile 3 (snake order 0,1,2,5,4,3); compaction migrates it to a free
+    /// Small tile, strictly reduces mean internal fragmentation, and
+    /// republishes the cached plan so the next request replays the migrated
+    /// placement with zero downloads.
+    #[test]
+    fn compact_once_migrates_and_republishes_the_cached_plan() {
+        use OperatorKind::*;
+        let mut c = coord();
+        c.set_compact(true);
+        let req = Request::dynamic(
+            Composition::chain(&[Neg, Abs, Square, Relu, Neg, Abs], 256).unwrap(),
+            vec![vec![1.5; 256]],
+        );
+        let r1 = c.submit(&req).unwrap();
+        assert_eq!(c.metrics.pr_downloads, 6);
+        assert_eq!(c.engine.fabric.tiles[3].resident, Some(Abs));
+        let (before, after) = c.compact_once().unwrap();
+        assert!(after < before, "migration strictly tightens the fit");
+        assert_eq!(c.metrics.migrations, 1);
+        assert!(c.engine.fabric.tiles[3].resident.is_none(), "Large tile vacated");
+        assert_eq!(c.engine.fabric.tiles[6].resident, Some(Abs), "first free Small tile");
+        assert!(c.compact_once().is_none(), "second pass settles");
+        let r2 = c.submit(&req).unwrap();
+        assert!(r2.cached, "republished plan replays as a full hit");
+        assert_eq!(c.metrics.pr_downloads, 6, "no re-download after migration");
+        assert_eq!(c.metrics.placement_respecializations, 0);
+        assert_eq!(
+            r1.run.output.as_vector().unwrap(),
+            r2.run.output.as_vector().unwrap()
+        );
     }
 }

@@ -300,6 +300,8 @@ struct WorkerExit {
 struct RespawnSpec {
     cfg: OverlayConfig,
     fuse: bool,
+    predict: bool,
+    compact: bool,
     plane: Arc<FaultPlane>,
     download_retries: u32,
 }
@@ -310,6 +312,8 @@ impl RespawnSpec {
     fn rebuild(&self, cache: &Arc<AcceleratorCache>) -> Result<Coordinator> {
         let mut c = Coordinator::with_cache(self.cfg.clone(), cache.clone())?;
         c.set_fusion(self.fuse);
+        c.set_predict(self.predict);
+        c.set_compact(self.compact);
         c.set_faults(self.plane.clone(), self.download_retries);
         Ok(c)
     }
@@ -818,6 +822,8 @@ impl WorkerPool {
         for _ in 0..service.workers {
             let mut c = Coordinator::with_cache(cfg.clone(), cache.clone())?;
             c.set_fusion(service.fuse);
+            c.set_predict(service.predict);
+            c.set_compact(service.compact);
             c.set_faults(plane.clone(), service.download_retries);
             coords.push(c);
         }
@@ -838,6 +844,8 @@ impl WorkerPool {
             let respawn = RespawnSpec {
                 cfg: cfg.clone(),
                 fuse: service.fuse,
+                predict: service.predict,
+                compact: service.compact,
                 plane: plane.clone(),
                 download_retries: service.download_retries,
             };
@@ -1219,6 +1227,20 @@ fn worker_loop(
                     // before publishing the route repoint
                     Some(stolen) => (stolen, true),
                     None => {
+                        // quiet window: speculative maintenance (defragment,
+                        // then prefetch the predicted next accelerator) runs
+                        // while the queue is empty, billed per pass so its
+                        // counters reach the pool aggregate. It settles to a
+                        // no-op — staged prefetch, compacted fabric — and
+                        // only then does the worker park as before.
+                        if coord.predicting() || coord.compacting() {
+                            let before = coord.metrics;
+                            let worked = coord.maintain();
+                            agg.record(&coord.metrics.delta_since(&before));
+                            if worked {
+                                continue; // re-check the queue between passes
+                            }
+                        }
                         queue.wait_nonempty(polling.then_some(idle_poll));
                         if polling {
                             idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);

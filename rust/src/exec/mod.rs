@@ -115,7 +115,7 @@ impl Engine {
         if self.plan_is_stale(acc) {
             return Err(Error::StalePlan {
                 fabric: self.fabric.id,
-                free_tiles: self.fabric.free_tiles().len(),
+                free_tiles: self.fabric.free_tile_count(),
             });
         }
         let reconfig = self.pr.apply_with(
@@ -245,7 +245,7 @@ impl Engine {
     /// scheduler is trying to protect.
     pub fn residency(&self) -> (usize, usize) {
         let total = self.fabric.tiles.len();
-        (total - self.fabric.free_tiles().len(), total)
+        (total - self.fabric.free_tile_count(), total)
     }
 
     /// Would replaying `plan` overwrite residents of *other* operators on

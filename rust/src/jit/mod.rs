@@ -237,6 +237,50 @@ impl Jit {
             chunk,
         })
     }
+
+    /// Re-plan `spec` against a **fixed** placement: route and codegen
+    /// only, no placer. This is the compactor's republish path — after a
+    /// migration moved residents, the cached plan's assignments are
+    /// remapped tile-for-tile and the routes/program regenerated here, so
+    /// the next request replays onto the tiles the residents actually
+    /// occupy instead of re-downloading into the vacated ones. Unlike
+    /// [`Jit::place_onto`], the placement's tiles may already host their
+    /// own operators (that is the point); routing still refuses to pass
+    /// through any occupied tile. Fails (e.g. no route between
+    /// non-adjacent stages) without side effects — the caller then keeps
+    /// the old plan and lets the engine's staleness guard respecialize on
+    /// demand.
+    pub fn plan_for_placement(
+        &self,
+        fabric: &Fabric,
+        spec: &AcceleratorProgram,
+        placement: Placement,
+    ) -> Result<PlacementPlan> {
+        if placement.assignments.len() != spec.stages.len() {
+            return Err(Error::Placement(format!(
+                "fixed placement has {} assignments for {} stages",
+                placement.assignments.len(),
+                spec.stages.len()
+            )));
+        }
+        let routes = route_stages(fabric, &spec.stages, &placement)?;
+        let (program, scalar_channels, chunk) = codegen::generate(
+            &fabric.cfg,
+            &spec.composition,
+            &spec.stages,
+            &placement,
+            &routes,
+        )?;
+        program.check_bram_fit(&fabric.cfg)?;
+        Ok(PlacementPlan {
+            fabric: fabric.id,
+            placement,
+            routes,
+            program,
+            scalar_channels,
+            chunk,
+        })
+    }
 }
 
 /// The fusion pass: one left-to-right scan collapsing adjacent (producer,
@@ -669,5 +713,28 @@ mod tests {
         // both plans realize the same program shape (placement-only phase)
         assert_eq!(plan_a.chunk, plan_b.chunk);
         assert_eq!(plan_a.scalar_channels, plan_b.scalar_channels);
+    }
+
+    /// The compactor's republish path: a remapped placement re-routes and
+    /// re-codegens without consulting the placer (which would refuse the
+    /// now-occupied tiles).
+    #[test]
+    fn plan_for_placement_respects_the_given_tiles() {
+        let (f, lib) = setup();
+        let comp = Composition::vmul_reduce(256);
+        let spec = Jit.frontend(&lib, &comp).unwrap();
+        let plan = Jit.place_onto(&f, &spec).unwrap();
+        // remap both stages to a different adjacent pair
+        let mut placement = plan.placement.clone();
+        placement.assignments[0].tile = 4;
+        placement.assignments[1].tile = 5;
+        let replanned = Jit.plan_for_placement(&f, &spec, placement).unwrap();
+        assert_eq!(replanned.placement.assignments[0].tile, 4);
+        assert_eq!(replanned.placement.assignments[1].tile, 5);
+        assert_eq!(replanned.chunk, plan.chunk);
+        assert_eq!(replanned.total_hops(), 0);
+        // stage-count mismatch is refused outright
+        let short = Placement { assignments: plan.placement.assignments[..1].to_vec() };
+        assert!(Jit.plan_for_placement(&f, &spec, short).is_err());
     }
 }

@@ -52,7 +52,12 @@
 //!   schedule-driven PR-download / tile-execution / worker-panic faults)
 //!   behind the self-healing recovery ladder: download retry, tile
 //!   quarantine + re-placement, worker supervision with burst replay
-//!   (`repro serve --faults transient-downloads|chaos`).
+//!   (`repro serve --faults transient-downloads|chaos`);
+//! * [`predict`] / [`place::compact`] — speculative maintenance run in
+//!   quiet drain windows: a per-worker Markov predictor prefetches the
+//!   likely next accelerator's bitstreams into idle healthy tiles, and an
+//!   online defragmenter migrates small-footprint residents off the scarce
+//!   Large regions (`repro serve --predict on --compact on`).
 //!
 //! The crate is dependency-free by design: PRNG ([`workload`]), bench
 //! harness ([`benchkit`]), error type ([`error`]) and CLI parsing are all
@@ -70,6 +75,7 @@ pub mod jit;
 pub mod overlay;
 pub mod patterns;
 pub mod place;
+pub mod predict;
 pub mod reconfig;
 pub mod report;
 pub mod route;

@@ -167,10 +167,15 @@ fn parse_target(s: &str) -> Result<Target> {
 }
 
 fn parse_fuse(s: &str) -> Result<bool> {
+    parse_switch("fuse", s)
+}
+
+/// `on`/`off` toggles (`--fuse`, `--predict`, `--compact`).
+fn parse_switch(flag: &str, s: &str) -> Result<bool> {
     Ok(match s {
         "on" => true,
         "off" => false,
-        other => bail!("--fuse takes `on` or `off`, got `{other}`"),
+        other => bail!("--{flag} takes `on` or `off`, got `{other}`"),
     })
 }
 
@@ -406,6 +411,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         d => d,
     };
     service.fuse = parse_fuse(&args.str("fuse", "off"))?;
+    service.predict = parse_switch("predict", &args.str("predict", "off"))?;
+    service.compact = parse_switch("compact", &args.str("compact", "off"))?;
     parse_faults(args, &mut service)?;
     let frontend = args.str("frontend", "direct");
     let sessions = args.usize("sessions", 8)?.max(1);
@@ -544,6 +551,8 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
     let mut service = ServiceConfig::with_workers(workers);
     service.queue_capacity = args.usize("queue-capacity", service.queue_capacity)?;
     service.fuse = parse_fuse(&args.str("fuse", "off"))?;
+    service.predict = parse_switch("predict", &args.str("predict", "off"))?;
+    service.compact = parse_switch("compact", &args.str("compact", "off"))?;
     parse_faults(args, &mut service)?;
     let defaults = NetConfig::default();
     let net = NetConfig {
@@ -627,6 +636,10 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
             .int("connections", m.connections)
             .int("rejected", m.rejected)
             .int("cpu_fallbacks", m.cpu_fallbacks)
+            .int("pr_downloads", m.pr_downloads)
+            .int("prefetch_hits", m.prefetch_hits)
+            .int("prefetch_wasted", m.prefetch_wasted)
+            .int("migrations", m.migrations)
             .int("download_retries", m.download_retries)
             .int("tiles_quarantined", m.tiles_quarantined)
             .int("workers_restarted", m.workers_restarted)
@@ -965,6 +978,9 @@ const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve|
   run:   --pattern P --n LEN --target dynamic|static|arm --fuse on|off
   serve: --requests K --workers N --n LEN --seed S (multi-fabric pool)
          --fuse on|off (JIT fusion pass + fallback ladder; default off)
+         --predict on|off (speculative prefetch of the predicted next
+           accelerator in idle windows; default off)
+         --compact on|off (online defragmentation in idle windows; default off)
          --drain-window W (burst size; 1 = FIFO)  --queue-capacity C (backpressure)
          --steal-depth D (work-stealing threshold; 0 = off)  --skew S (spill threshold)
          --frontend direct|threads|reactor (session layer; default direct)

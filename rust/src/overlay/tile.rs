@@ -208,12 +208,30 @@ impl Fabric {
         }
     }
 
-    /// Indices of currently-empty, healthy tiles (quarantined regions are
-    /// never free — they can no longer host anything).
+    /// Is tile `idx` empty and healthy (placeable)? Quarantined regions are
+    /// never free — they can no longer host anything. Out-of-range indices
+    /// are not free.
+    pub fn tile_is_free(&self, idx: usize) -> bool {
+        self.tiles
+            .get(idx)
+            .map_or(false, |t| t.resident.is_none() && !t.quarantined)
+    }
+
+    /// Indices of currently-empty, healthy tiles, in index order, without
+    /// allocating — the predictor polls this every idle tick.
+    pub fn free_tiles_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.tiles.len()).filter(move |&i| self.tile_is_free(i))
+    }
+
+    /// Number of currently-empty, healthy tiles (allocation-free).
+    pub fn free_tile_count(&self) -> usize {
+        self.free_tiles_iter().count()
+    }
+
+    /// Indices of currently-empty, healthy tiles as a `Vec` (callers that
+    /// need random access; hot paths use [`Fabric::free_tiles_iter`]).
     pub fn free_tiles(&self) -> Vec<usize> {
-        (0..self.tiles.len())
-            .filter(|&i| self.tiles[i].resident.is_none() && !self.tiles[i].quarantined)
-            .collect()
+        self.free_tiles_iter().collect()
     }
 
     /// Quarantine tile `idx` after a permanent region fault: any resident
@@ -319,6 +337,21 @@ mod tests {
         assert_eq!(f.free_tiles().len(), 8);
         f.clear_region(2).unwrap();
         assert_eq!(f.free_tiles().len(), 9);
+    }
+
+    #[test]
+    fn free_tile_accessors_agree() {
+        let mut f = fabric();
+        let lib = BitstreamLibrary::standard(&f.cfg);
+        let bs = lib.get(OperatorKind::Add, RegionClass::Small).unwrap().clone();
+        f.load_bitstream(2, &bs).unwrap();
+        assert!(f.quarantine(5));
+        assert_eq!(f.free_tile_count(), 7);
+        assert_eq!(f.free_tiles_iter().collect::<Vec<_>>(), f.free_tiles());
+        assert!(!f.tile_is_free(2), "resident tile is not free");
+        assert!(!f.tile_is_free(5), "quarantined tile is not free");
+        assert!(!f.tile_is_free(99), "out of range is not free");
+        assert!(f.tile_is_free(0));
     }
 
     #[test]

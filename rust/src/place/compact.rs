@@ -1,0 +1,222 @@
+//! Online defragmentation: migrate residents to undo internal fragmentation.
+//!
+//! The T-FRAG study ([`super::frag`]) measures the cost of the paper's
+//! non-uniform region sizing: a small-footprint operator parked in one of
+//! the two Large regions wastes most of that region's budget **and**
+//! starves the next large-region stage (`sqrt`, `sin`, fused pairs) of the
+//! only tiles it can use. This module plans the cure: during quiet drain
+//! windows the coordinator migrates such residents onto free healthy Small
+//! tiles. Every planned move strictly reduces that tile's internal
+//! fragmentation (the same footprint in a strictly smaller budget leaves
+//! strictly less slack), so a non-empty plan strictly reduces
+//! [`FragReport::mean_internal`] — and an empty plan is a guaranteed no-op.
+//!
+//! Planning is pure (no fabric mutation) and deterministic: sources and
+//! targets are scanned in tile-index order. Execution lives in the
+//! coordinator, which downloads each resident into its new tile, clears
+//! the old region, and republishes any cached placement plans that touched
+//! the moved tiles (see `Coordinator::compact_once`).
+
+use crate::bitstream::{OperatorKind, RegionClass};
+use crate::overlay::Fabric;
+
+use super::frag::{assignment_footprint, fragmentation, FragReport};
+use super::{Assignment, Placement};
+
+/// One planned migration: the resident of `from` moves to `to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileMove {
+    /// Source tile (currently holds the resident).
+    pub from: usize,
+    /// Destination tile (free and healthy at planning time).
+    pub to: usize,
+    /// The resident being moved.
+    pub op: OperatorKind,
+    /// Its fused tail, when the tile hosts a fused pair.
+    pub tail: Option<OperatorKind>,
+}
+
+/// A compaction plan with its predicted fragmentation improvement.
+#[derive(Debug, Clone, Default)]
+pub struct CompactionPlan {
+    /// Migrations in execution order.
+    pub moves: Vec<TileMove>,
+    /// Fragmentation of the live residency before any move.
+    pub before: FragReport,
+    /// Predicted fragmentation after all moves complete.
+    pub after: FragReport,
+}
+
+impl CompactionPlan {
+    /// True when compaction has nothing to do.
+    pub fn is_noop(&self) -> bool {
+        self.moves.is_empty()
+    }
+}
+
+/// The fabric's live residency as a placement (one assignment per occupied
+/// tile, in tile-index order) — the input the frag report scores.
+pub fn live_placement(fabric: &Fabric) -> Placement {
+    Placement {
+        assignments: fabric
+            .tiles
+            .iter()
+            .enumerate()
+            .filter_map(|(t, tile)| {
+                tile.resident.map(|op| Assignment {
+                    op,
+                    tile: t,
+                    class: tile.class,
+                    tail: tile.resident_tail,
+                })
+            })
+            .collect(),
+    }
+}
+
+/// Plan migrations against `fabric`'s current occupancy.
+///
+/// A tile is a migration source when it is a Large region whose resident's
+/// full footprint (head plus fused tail, per [`assignment_footprint`])
+/// would fit the Small budget — the "oversized" tiles of the frag report.
+/// Targets are free, healthy Small tiles, consumed in index order; each is
+/// used at most once. Residents that genuinely need their Large region are
+/// never touched, and occupied or quarantined tiles are never targets, so
+/// executing the plan can never clobber a resident in use.
+pub fn plan_compaction(fabric: &Fabric) -> CompactionPlan {
+    let live = live_placement(fabric);
+    let before = fragmentation(&live);
+
+    let mut targets = fabric
+        .free_tiles_iter()
+        .filter(|&t| fabric.tiles[t].class == RegionClass::Small);
+    let small_budget = RegionClass::Small.budget();
+
+    let mut moves = Vec::new();
+    let mut relocated = live.assignments.clone();
+    for a in &mut relocated {
+        if a.class != RegionClass::Large || !assignment_footprint(a).fits(&small_budget) {
+            continue;
+        }
+        let Some(to) = targets.next() else { break };
+        moves.push(TileMove { from: a.tile, to, op: a.op, tail: a.tail });
+        a.tile = to;
+        a.class = RegionClass::Small;
+    }
+
+    let after = if moves.is_empty() { before } else { fragmentation(&Placement { assignments: relocated }) };
+    CompactionPlan { moves, before, after }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::BitstreamLibrary;
+    use crate::config::OverlayConfig;
+
+    fn setup() -> (Fabric, BitstreamLibrary) {
+        let cfg = OverlayConfig::default();
+        let lib = BitstreamLibrary::standard(&cfg);
+        (Fabric::new(cfg).unwrap(), lib)
+    }
+
+    fn load(f: &mut Fabric, lib: &BitstreamLibrary, tile: usize, op: OperatorKind) {
+        let bs = lib.get(op, f.tiles[tile].class).unwrap().clone();
+        f.load_bitstream(tile, &bs).unwrap();
+    }
+
+    #[test]
+    fn empty_fabric_is_a_noop() {
+        let (f, _) = setup();
+        let p = plan_compaction(&f);
+        assert!(p.is_noop());
+        assert_eq!(p.before, p.after);
+        assert_eq!(p.before.tiles, 0);
+    }
+
+    #[test]
+    fn small_resident_on_large_tile_is_migrated() {
+        let (mut f, lib) = setup();
+        load(&mut f, &lib, 3, OperatorKind::Add); // Large tile, Small-footprint op
+        let p = plan_compaction(&f);
+        assert_eq!(p.moves.len(), 1);
+        assert_eq!(p.moves[0].from, 3);
+        assert_eq!(p.moves[0].op, OperatorKind::Add);
+        assert_eq!(f.tiles[p.moves[0].to].class, RegionClass::Small);
+        assert!(f.tile_is_free(p.moves[0].to));
+        // the move strictly tightens the budget around the same footprint
+        assert!(p.after.mean_internal < p.before.mean_internal);
+        assert_eq!(p.before.oversized_tiles, 1);
+        assert_eq!(p.after.oversized_tiles, 0);
+    }
+
+    #[test]
+    fn genuinely_large_residents_stay_put() {
+        let (mut f, lib) = setup();
+        load(&mut f, &lib, 3, OperatorKind::Sqrt); // needs the Large budget
+        load(&mut f, &lib, 7, OperatorKind::Sin);
+        let p = plan_compaction(&f);
+        assert!(p.is_noop());
+        assert_eq!(p.before.mean_internal, p.after.mean_internal);
+    }
+
+    #[test]
+    fn no_free_small_tiles_means_noop() {
+        let (mut f, lib) = setup();
+        load(&mut f, &lib, 3, OperatorKind::Add);
+        // occupy every small tile so the planner has nowhere to move it
+        for t in 0..f.tiles.len() {
+            if f.tiles[t].class == RegionClass::Small {
+                load(&mut f, &lib, t, OperatorKind::Mul);
+            }
+        }
+        assert!(plan_compaction(&f).is_noop());
+    }
+
+    #[test]
+    fn quarantined_tiles_are_never_targets() {
+        let (mut f, lib) = setup();
+        load(&mut f, &lib, 3, OperatorKind::Add);
+        // quarantine every small tile except tile 6
+        for t in [0usize, 1, 2, 4, 5, 8] {
+            assert!(f.quarantine(t));
+        }
+        let p = plan_compaction(&f);
+        assert_eq!(p.moves.len(), 1);
+        assert_eq!(p.moves[0].to, 6, "only healthy free small tile");
+    }
+
+    #[test]
+    fn both_large_tiles_compact_in_index_order() {
+        let (mut f, lib) = setup();
+        load(&mut f, &lib, 3, OperatorKind::Add);
+        load(&mut f, &lib, 7, OperatorKind::Mul);
+        let p = plan_compaction(&f);
+        assert_eq!(p.moves.len(), 2);
+        assert_eq!((p.moves[0].from, p.moves[0].to), (3, 0));
+        assert_eq!((p.moves[1].from, p.moves[1].to), (7, 1));
+        assert!(p.after.mean_internal < p.before.mean_internal);
+        // planning is pure: the fabric is untouched and replanning agrees
+        assert_eq!(plan_compaction(&f).moves, p.moves);
+        assert_eq!(f.tiles[3].resident, Some(OperatorKind::Add));
+    }
+
+    #[test]
+    fn live_placement_reflects_fused_residency() {
+        let (mut f, lib) = setup();
+        let fused = crate::bitstream::Bitstream::synthesize_fused(
+            OperatorKind::Mul,
+            OperatorKind::AccSum,
+            RegionClass::Large,
+            &f.cfg,
+        );
+        f.load_bitstream(3, &fused).unwrap();
+        load(&mut f, &lib, 0, OperatorKind::Abs);
+        let live = live_placement(&f);
+        assert_eq!(live.assignments.len(), 2);
+        let a3 = live.assignments.iter().find(|a| a.tile == 3).unwrap();
+        assert_eq!(a3.tail, Some(OperatorKind::AccSum));
+        // mul+acc_sum overflows the Small budget: not a migration source
+        assert!(plan_compaction(&f).is_noop());
+    }
+}

@@ -51,7 +51,7 @@ impl DynamicPlacer {
             .mesh
             .snake_order()
             .into_iter()
-            .filter(|&t| fabric.tiles[t].resident.is_none() && !fabric.tiles[t].quarantined)
+            .filter(|&t| fabric.tile_is_free(t))
             .collect();
         try_window(fabric, &free, needs).is_some()
     }
@@ -74,7 +74,7 @@ impl DynamicPlacer {
         let free: Vec<usize> = snake
             .iter()
             .copied()
-            .filter(|&t| fabric.tiles[t].resident.is_none() && !fabric.tiles[t].quarantined)
+            .filter(|&t| fabric.tile_is_free(t))
             .collect();
         if free.len() < ops.len() {
             return Err(Error::Placement(format!(

@@ -8,7 +8,21 @@
 
 use crate::bitstream::{Footprint, RegionClass};
 
-use super::Placement;
+use super::{Assignment, Placement};
+
+/// Resources an assignment actually consumes in its tile: the head
+/// operator's footprint plus the fused tail's, when one shares the region.
+/// Head-only accounting overstates fused tiles' slack (and can claim a
+/// genuinely Large-requiring fused pair "would have fit Small"). Shared
+/// with the compaction planner so "would fit Small" means the same thing
+/// in the report and in the migration decision.
+pub fn assignment_footprint(a: &Assignment) -> Footprint {
+    let head = Footprint::for_operator(a.op);
+    match a.tail {
+        Some(tail) => head.plus(&Footprint::for_operator(tail)),
+        None => head,
+    }
+}
 
 /// Fragmentation summary of one placement.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -29,7 +43,7 @@ pub fn fragmentation(placement: &Placement) -> FragReport {
     let mut report = FragReport::default();
     let mut total = 0.0;
     for a in &placement.assignments {
-        let fp = Footprint::for_operator(a.op);
+        let fp = assignment_footprint(a);
         let budget = a.class.budget();
         let f = fp.fragmentation_in(&budget);
         total += f;
@@ -56,9 +70,7 @@ pub fn vs_uniform_large(placement: &Placement) -> (f64, f64) {
         placement
             .assignments
             .iter()
-            .map(|a| {
-                Footprint::for_operator(a.op).fragmentation_in(&RegionClass::Large.budget())
-            })
+            .map(|a| assignment_footprint(a).fragmentation_in(&RegionClass::Large.budget()))
             .sum::<f64>()
             / placement.assignments.len() as f64
     };
@@ -110,6 +122,40 @@ mod tests {
         ]);
         let (non_uniform, uniform) = vs_uniform_large(&p);
         assert!(non_uniform < uniform, "{non_uniform} !< {uniform}");
+    }
+
+    /// Regression: fused tiles must fold the tail footprint. Head-only
+    /// accounting claimed a fused mul+acc_sum Large tile was "oversized"
+    /// (mul alone fits Small; the fused pair does not) and overstated its
+    /// slack relative to the unfused two-tile placement.
+    #[test]
+    fn fused_tail_counts_toward_tile_footprint() {
+        let fused = Placement {
+            assignments: vec![Assignment {
+                op: OperatorKind::Mul,
+                tile: 3,
+                class: RegionClass::Large,
+                tail: Some(OperatorKind::AccSum),
+            }],
+        };
+        let unfused_head_only = place(&[(OperatorKind::Mul, RegionClass::Large)]);
+        let fused_r = fragmentation(&fused);
+        let head_r = fragmentation(&unfused_head_only);
+        // mul+acc_sum together overflow the Small budget, so the Large tile
+        // is required, not oversized...
+        assert_eq!(fused_r.oversized_tiles, 0, "fused pair needs the Large region");
+        assert_eq!(head_r.oversized_tiles, 1, "mul alone would have fit Small");
+        // ...and the fused tile wastes strictly less of the region than the
+        // head alone would (the tail consumes real resources).
+        assert!(
+            fused_r.mean_internal < head_r.mean_internal,
+            "fused {} !< head-only {}",
+            fused_r.mean_internal,
+            head_r.mean_internal
+        );
+        // the uniform-large comparison folds tails the same way
+        let (nu, _) = vs_uniform_large(&fused);
+        assert!((nu - fused_r.mean_internal).abs() < 1e-12);
     }
 
     #[test]

@@ -7,12 +7,15 @@
 //! overlay where operator positions are frozen at synthesis time — the
 //! three Fig. 2 scheduling scenarios differ precisely in how many
 //! pass-through tiles separate producer from consumer. [`frag`] measures
-//! the internal fragmentation of a placement (the T-FRAG study).
+//! the internal fragmentation of a placement (the T-FRAG study), and
+//! [`compact`] plans the migrations that undo it online.
 
+pub mod compact;
 pub mod dynamic;
 pub mod frag;
 pub mod static_;
 
+pub use compact::CompactionPlan;
 pub use dynamic::DynamicPlacer;
 pub use static_::{StaticScenario, StaticPlacer};
 

@@ -169,6 +169,34 @@ impl PrManager {
         Ok(())
     }
 
+    /// Execute one compaction move: download the resident (head plus fused
+    /// tail) into the destination tile, then clear the source region. The
+    /// download is priced like any other ICAP transfer — and arbitrated by
+    /// the fault plane, so a compaction in a chaos run retries and
+    /// quarantines exactly like the request path. On fault the source is
+    /// left intact (the resident was never lost; at worst the destination
+    /// holds a redundant copy that eviction reclaims).
+    pub fn migrate(
+        &mut self,
+        fabric: &mut Fabric,
+        lib: &BitstreamLibrary,
+        mv: &crate::place::compact::TileMove,
+        faults: &FaultPlane,
+        retry_budget: u32,
+    ) -> Result<ReconfigStats> {
+        let placement = Placement {
+            assignments: vec![crate::place::Assignment {
+                op: mv.op,
+                tile: mv.to,
+                class: fabric.tiles[mv.to].class,
+                tail: mv.tail,
+            }],
+        };
+        let stats = self.apply_with(fabric, lib, &placement, faults, retry_budget)?;
+        fabric.clear_region(mv.from)?;
+        Ok(stats)
+    }
+
     /// Evict every resident operator not used by `placement` (frees tiles
     /// for the next accelerator; models the paper's "only active operators
     /// resident" density argument).
@@ -407,6 +435,34 @@ mod tests {
         assert!(pr.lifetime.bytes > 0);
         assert!(pr.lifetime.seconds > 0.0);
         assert_eq!(pr.lifetime.downloads, 0, "nothing completed");
+    }
+
+    #[test]
+    fn migrate_moves_the_resident_and_clears_the_source() {
+        let (mut f, lib, mut pr) = setup();
+        // a small-footprint op parked on Large tile 3: the compactor's case
+        let bs = lib.get(OperatorKind::Add, f.tiles[3].class).unwrap().clone();
+        f.load_bitstream(3, &bs).unwrap();
+        let mv = crate::place::compact::TileMove {
+            from: 3,
+            to: 0,
+            op: OperatorKind::Add,
+            tail: None,
+        };
+        let s = pr
+            .migrate(&mut f, &lib, &mv, &FaultPlane::NoFaults, 0)
+            .unwrap();
+        assert_eq!(s.downloads, 1);
+        assert_eq!(f.tiles[3].resident, None, "source cleared");
+        assert_eq!(f.tiles[0].resident, Some(OperatorKind::Add));
+        // a faulted migration must leave the source resident intact
+        let mv_back = crate::place::compact::TileMove { from: 0, to: 2, ..mv };
+        let plane = crate::faults::FaultPlane::from_spec(crate::faults::FaultSpec {
+            transient_downloads: vec![1, 2],
+            ..crate::faults::FaultSpec::default()
+        });
+        pr.migrate(&mut f, &lib, &mv_back, &plane, 1).unwrap_err();
+        assert_eq!(f.tiles[0].resident, Some(OperatorKind::Add), "source survives the fault");
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Predictive reconfiguration + online defragmentation, end to end.
+//!
+//! The contract, proven deterministically where the layer allows it:
+//!
+//! * **flags off is the paper's baseline, bit for bit** — a coordinator
+//!   with `predict`/`compact` off, even one whose idle loop hammers
+//!   `maintain()`, produces byte-identical outputs and identical metrics
+//!   to one that never heard of maintenance;
+//! * **acceptance**: on a seeded repeated-composition stream (a cycle of
+//!   four 3-stage chains that cannot all co-reside), `--predict on` scores
+//!   `prefetch_hits > 0` and pays *strictly fewer* critical-path PR
+//!   downloads than `--predict off`, with bit-identical outputs;
+//! * **compaction** strictly reduces live mean internal fragmentation or
+//!   does nothing, and a compacted fabric still serves full cache hits;
+//! * the pool wires the flags through: a real `WorkerPool` with
+//!   `predict: true` prefetches in its drain-window idle gaps and folds
+//!   the speculative counters into the shutdown aggregate.
+
+use jit_overlay::coordinator::{Coordinator, Request};
+use jit_overlay::patterns::Composition;
+use jit_overlay::testkit::fingerprint;
+use jit_overlay::workload;
+use jit_overlay::{OverlayConfig, ServiceConfig};
+
+/// The seeded acceptance stream: a cycle of four distinct 3-stage
+/// small-operator chains. Three of them fill the 9-tile fabric; the fourth
+/// forces the whole-fabric eviction, so the reactive baseline settles into
+/// a steady state that re-downloads two of the chains every cycle.
+fn cycle_compositions() -> Vec<Composition> {
+    use jit_overlay::bitstream::OperatorKind::*;
+    vec![
+        Composition::chain(&[Neg, Abs, Square], 256).unwrap(),
+        Composition::chain(&[Abs, Neg, Relu], 256).unwrap(),
+        Composition::chain(&[Square, Relu, Neg], 256).unwrap(),
+        Composition::chain(&[Relu, Square, Abs], 256).unwrap(),
+    ]
+}
+
+fn cycle_request(comp: &Composition, seed: u64) -> Request {
+    let inputs = (0..comp.inputs)
+        .map(|c| workload::vector(256, seed + c as u64, -2.0, 2.0))
+        .collect();
+    Request::dynamic(comp.clone(), inputs)
+}
+
+/// Serve `cycles` passes over the cycle stream, running maintenance to
+/// quiescence before every submit — exactly what the pool's idle loop does
+/// between arrivals. Returns the coordinator and every output fingerprint.
+fn run_cycles(predict: bool, cycles: usize) -> (Coordinator, Vec<Vec<u32>>) {
+    let comps = cycle_compositions();
+    let mut c = Coordinator::new(OverlayConfig::default()).unwrap();
+    c.set_predict(predict);
+    let mut outs = Vec::new();
+    for cycle in 0..cycles {
+        for comp in &comps {
+            while c.maintain() {}
+            let resp = c.submit(&cycle_request(comp, cycle as u64)).unwrap();
+            outs.push(fingerprint(&resp.run.output));
+        }
+    }
+    (c, outs)
+}
+
+/// Satellite: with both flags off (the default), a maintenance-hammering
+/// run is bit-identical — outputs and the full metrics record — to a run
+/// that never calls `maintain()` at all, over a seeded mixed stream.
+#[test]
+fn flags_off_maintenance_is_bit_identical_to_baseline() {
+    let comps = workload::mixed_compositions(24, 512, 0xBEEF);
+    let reqs: Vec<Request> = comps
+        .into_iter()
+        .enumerate()
+        .map(|(k, comp)| {
+            let inputs = workload::request_inputs(&comp, k as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect();
+    let mut baseline = Coordinator::new(OverlayConfig::default()).unwrap();
+    let mut hammered = Coordinator::new(OverlayConfig::default()).unwrap();
+    for r in &reqs {
+        let a = baseline.submit(r).unwrap();
+        assert!(!hammered.maintain());
+        let b = hammered.submit(r).unwrap();
+        assert!(!hammered.maintain());
+        assert_eq!(fingerprint(&a.run.output), fingerprint(&b.run.output));
+    }
+    assert_eq!(baseline.metrics, hammered.metrics, "flags off: not one counter moves");
+    assert_eq!(hammered.metrics.prefetch_hits, 0);
+    assert_eq!(hammered.metrics.migrations, 0);
+}
+
+/// Acceptance: on the seeded repeated-composition cycle, prediction scores
+/// hits and strictly cuts critical-path PR downloads — without changing a
+/// single output bit.
+#[test]
+fn predict_on_cuts_critical_path_downloads_on_the_cycle_stream() {
+    let (off, outs_off) = run_cycles(false, 6);
+    let (on, outs_on) = run_cycles(true, 6);
+    assert_eq!(outs_off, outs_on, "speculation never changes results");
+    assert_eq!(off.metrics.requests, on.metrics.requests);
+    assert!(on.metrics.prefetch_hits > 0, "the cycle is learnable");
+    assert!(
+        on.metrics.pr_downloads < off.metrics.pr_downloads,
+        "prefetch must shorten the critical path: on={} off={}",
+        on.metrics.pr_downloads,
+        off.metrics.pr_downloads
+    );
+    assert_eq!(on.metrics.prefetch_wasted, 0, "a deterministic cycle never mispredicts");
+    // the conservation law survives speculation: prefetch bills no
+    // request-path counter
+    for m in [&off.metrics, &on.metrics] {
+        assert_eq!(
+            m.cache_hits + m.placement_respecializations + m.jit_compiles,
+            m.requests
+        );
+    }
+}
+
+/// Compaction on the cycle's warmup state is either a strict improvement
+/// or a no-op — never a lateral move — and always settles.
+#[test]
+fn compaction_strictly_improves_or_does_nothing() {
+    // 6-stage chain: last stage spills onto Large tile 3 → improvement
+    use jit_overlay::bitstream::OperatorKind::*;
+    let mut c = Coordinator::new(OverlayConfig::default()).unwrap();
+    c.set_compact(true);
+    let spill = Composition::chain(&[Neg, Abs, Square, Relu, Neg, Abs], 256).unwrap();
+    c.submit(&cycle_request(&spill, 1)).unwrap();
+    let (before, after) = c.compact_once().expect("oversized resident must migrate");
+    assert!(after < before, "compaction must strictly reduce mean_internal");
+    assert!(c.compact_once().is_none(), "and then settle");
+
+    // 3-stage chain: all residents already on Small tiles → no-op
+    let mut tidy = Coordinator::new(OverlayConfig::default()).unwrap();
+    tidy.set_compact(true);
+    tidy.submit(&cycle_request(&cycle_compositions()[0], 1)).unwrap();
+    assert!(tidy.compact_once().is_none());
+    assert_eq!(tidy.metrics.migrations, 0);
+}
+
+/// The pool plumbing: a 1-worker `WorkerPool` with `predict: true` learns a
+/// strict alternation in its idle windows and folds `prefetch_hits` into
+/// the shutdown aggregate. (Idle windows are wall-clock here, so the test
+/// only asserts that hits happened, not how many.)
+#[test]
+fn pool_prefetches_in_idle_windows_and_aggregates_hits() {
+    use jit_overlay::coordinator::WorkerPool;
+    let service = ServiceConfig {
+        predict: true,
+        ..ServiceConfig::with_workers(1).without_stealing()
+    };
+    let pool = WorkerPool::new(OverlayConfig::default(), service).unwrap();
+    let comps = cycle_compositions();
+    let (a, b) = (&comps[0], &comps[1]);
+    // closed-loop warmup: both transitions seen twice
+    for k in 0..3u64 {
+        for comp in [a, b] {
+            let rx = pool.submit(cycle_request(comp, k)).unwrap();
+            rx.recv().unwrap().unwrap();
+        }
+    }
+    // now every pause is a quiet window with a confident prediction
+    let mut hit_window = false;
+    for k in 0..10u64 {
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        for comp in [a, b] {
+            let rx = pool.submit(cycle_request(comp, 100 + k)).unwrap();
+            rx.recv().unwrap().unwrap();
+        }
+        if pool.metrics.snapshot().prefetch_hits > 0 {
+            hit_window = true;
+            break;
+        }
+    }
+    let report = pool.shutdown();
+    assert!(
+        hit_window || report.aggregate.prefetch_hits > 0,
+        "an idle 1-worker pool with predict on must score prefetch hits"
+    );
+    assert_eq!(report.aggregate.prefetch_wasted + report.aggregate.migrations, 0);
+}
