@@ -1,0 +1,233 @@
+//! Bench: cluster sharding — the `--pools P` tier (ISSUE 10).
+//!
+//! Three dimensions:
+//!
+//! * **churn sweep** — the same seeded churn stream (hot/cold mix with a
+//!   recurring wide cohort) through 1/2/4-pool clusters, each with one
+//!   mid-stream pool join and one pool death, pipelined submits with a
+//!   rebalance probe per request: req/s next to the join / evacuation /
+//!   cross-steal / warm-start counters;
+//! * **join cost** — the identical 2-pool churn run with warm-start on
+//!   vs off: the joining pool's JIT compiles are the price of a cold
+//!   join, and `warm_start_hits` is how much of it shipping the cached
+//!   programs bought back;
+//! * **ring re-homing** — for P→P+1 at each P, the fraction of 128
+//!   distinct composition keys that change owning pool (consistent
+//!   hashing promises ~1/(P+1); acceptance allows 2/(P+1)).
+//!
+//! Acceptance: every P→P+1 re-homing fraction ≤ 2/(P+1), and the warm
+//! joiner pays strictly fewer compiles than the cold one.
+
+use jit_overlay::benchkit::{write_bench_json, JsonArray, JsonObject};
+use jit_overlay::coordinator::{Cluster, HashRing, Metrics, Request};
+use jit_overlay::report::Table;
+use jit_overlay::{workload, ClusterConfig, OverlayConfig, ServiceConfig};
+
+const WORKERS: usize = 2;
+
+fn churn_stream(requests: usize, n: usize) -> Vec<Request> {
+    workload::churn_compositions(requests, n, 0xC7A5)
+        .into_iter()
+        .enumerate()
+        .map(|(k, comp)| {
+            let inputs = workload::request_inputs(&comp, k as u64);
+            Request::dynamic(comp, inputs)
+        })
+        .collect()
+}
+
+struct ChurnOutcome {
+    wall_s: f64,
+    aggregate: Metrics,
+    /// The mid-stream joiner's own counters.
+    joiner: Metrics,
+}
+
+/// Pipelined churn run: submit each request without waiting, join one
+/// pool at the half-way mark, retire the first pool at the 3/4 mark,
+/// probe `rebalance_once` every request, then drain every reply.
+fn run_churn(pools: usize, reqs: &[Request], warm_start: bool) -> ChurnOutcome {
+    let ccfg = ClusterConfig { warm_start, ..ClusterConfig::default() };
+    let service = ServiceConfig {
+        queue_capacity: reqs.len().max(1),
+        ..ServiceConfig::with_workers(WORKERS)
+    };
+    let cluster = Cluster::homogeneous(OverlayConfig::default(), service.clone(), ccfg, pools)
+        .expect("cluster spawn");
+    let first = cluster.pool_ids()[0];
+    let (join_at, retire_at) = (reqs.len() / 2, reqs.len() * 3 / 4);
+    let mut joined = 0;
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(reqs.len());
+    for (i, r) in reqs.iter().enumerate() {
+        if i == join_at {
+            joined = cluster
+                .join(OverlayConfig::default(), service.clone())
+                .expect("pool join");
+        }
+        if i == retire_at {
+            cluster.retire(first).expect("pool retire");
+        }
+        pending.push(cluster.submit(r.clone()).expect("submit"));
+        cluster.rebalance_once();
+    }
+    for rx in pending {
+        rx.recv().expect("pool alive").expect("request served");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = cluster.shutdown();
+    let joiner = report
+        .per_pool
+        .iter()
+        .find(|(id, _)| *id == joined)
+        .map(|(_, m)| *m)
+        .expect("joiner survived");
+    ChurnOutcome { wall_s, aggregate: report.aggregate, joiner }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let requests = if quick { 48 } else { 240 };
+    let n = 1024;
+    let reqs = churn_stream(requests, n);
+
+    // churn sweep: P pools, one join, one death, every P
+    let mut t = Table::new(
+        "cluster churn — P pools, one mid-stream join + one pool death",
+        &["pools", "wall (ms)", "req/s", "joins", "evac", "x-steals", "warm hits", "compiles"],
+    );
+    let mut sweep = Vec::new();
+    for pools in [1usize, 2, 4] {
+        let out = run_churn(pools, &reqs, true);
+        let m = &out.aggregate;
+        assert_eq!(m.requests, requests as u64, "every request must be served once");
+        assert_eq!(
+            m.cache_hits + m.placement_respecializations + m.jit_compiles,
+            m.requests,
+            "cluster-wide conservation"
+        );
+        t.row(&[
+            pools.to_string(),
+            format!("{:.1}", out.wall_s * 1e3),
+            format!("{:.0}", requests as f64 / out.wall_s),
+            m.pool_joins.to_string(),
+            m.pool_evacuations.to_string(),
+            m.cross_pool_steals.to_string(),
+            m.warm_start_hits.to_string(),
+            m.jit_compiles.to_string(),
+        ]);
+        sweep.push((pools, out));
+    }
+    print!("{}", t.render());
+
+    // join cost: identical 2-pool churn, warm-start on vs off
+    let warm = &sweep.iter().find(|(p, _)| *p == 2).expect("2-pool cell").1;
+    let cold = run_churn(2, &reqs, false);
+    let mut t = Table::new(
+        "join cost — the mid-stream joiner, warm-start on vs off (2 pools)",
+        &["warm-start", "joiner compiles", "joiner respecs", "warm hits (cluster)"],
+    );
+    for (label, out) in [("on", warm), ("off", &cold)] {
+        t.row(&[
+            label.into(),
+            out.joiner.jit_compiles.to_string(),
+            out.joiner.placement_respecializations.to_string(),
+            out.aggregate.warm_start_hits.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let ok_join = warm.joiner.jit_compiles < cold.joiner.jit_compiles;
+    println!(
+        "join acceptance: warm joiner {} compiles vs cold {} (strictly fewer: {}), {} warm-start hits",
+        warm.joiner.jit_compiles,
+        cold.joiner.jit_compiles,
+        if ok_join { "PASS" } else { "MISS" },
+        warm.aggregate.warm_start_hits,
+    );
+
+    // ring re-homing: P→P+1 over 128 distinct composition keys
+    let keys: Vec<u64> = workload::wide_cohort(128).iter().map(|c| c.cache_key()).collect();
+    let vnodes = ClusterConfig::default().vnodes;
+    let mut t = Table::new(
+        "ring re-homing — keys moved on a P→P+1 pool join (128 keys)",
+        &["P", "moved", "fraction", "ideal 1/(P+1)", "bound 2/(P+1)"],
+    );
+    let mut ring_cells = Vec::new();
+    let mut ok_ring = true;
+    for p in 1usize..=8 {
+        let seeds: Vec<u64> = (0..p as u64).collect();
+        let mut grown = seeds.clone();
+        grown.push(p as u64);
+        let before = HashRing::new(&seeds, vnodes);
+        let after = HashRing::new(&grown, vnodes);
+        let moved = keys.iter().filter(|&&k| before.owner(k) != after.owner(k)).count();
+        let frac = moved as f64 / keys.len() as f64;
+        let bound = 2.0 / (p as f64 + 1.0);
+        ok_ring &= frac <= bound;
+        t.row(&[
+            p.to_string(),
+            moved.to_string(),
+            format!("{frac:.3}"),
+            format!("{:.3}", 1.0 / (p as f64 + 1.0)),
+            format!("{bound:.3}"),
+        ]);
+        ring_cells.push((p, moved, frac, bound));
+    }
+    print!("{}", t.render());
+    println!(
+        "ring acceptance: every P→P+1 re-homing within 2/(P+1): {}",
+        if ok_ring { "PASS" } else { "MISS" }
+    );
+
+    // BENCH_cluster.json — machine-readable companion
+    let mut churn = JsonArray::new();
+    for (pools, out) in &sweep {
+        let m = &out.aggregate;
+        let mut o = JsonObject::new();
+        o.int("pools", *pools as u64)
+            .num("wall_s", out.wall_s)
+            .num("req_per_s", requests as f64 / out.wall_s)
+            .int("pool_joins", m.pool_joins)
+            .int("pool_evacuations", m.pool_evacuations)
+            .int("cross_pool_steals", m.cross_pool_steals)
+            .int("warm_start_hits", m.warm_start_hits)
+            .int("jit_compiles", m.jit_compiles)
+            .int("cache_hits", m.cache_hits)
+            .int("placement_respecializations", m.placement_respecializations);
+        churn.raw(&o.finish());
+    }
+    let mut join = JsonArray::new();
+    for (label, out) in [("on", warm), ("off", &cold)] {
+        let mut o = JsonObject::new();
+        o.str("warm_start", label)
+            .int("joiner_jit_compiles", out.joiner.jit_compiles)
+            .int("joiner_respecializations", out.joiner.placement_respecializations)
+            .int("warm_start_hits", out.aggregate.warm_start_hits);
+        join.raw(&o.finish());
+    }
+    let mut ring = JsonArray::new();
+    for (p, moved, frac, bound) in &ring_cells {
+        let mut o = JsonObject::new();
+        o.int("pools_before", *p as u64)
+            .int("moved", *moved as u64)
+            .num("fraction", *frac)
+            .num("bound", *bound);
+        ring.raw(&o.finish());
+    }
+    let mut accept = JsonObject::new();
+    accept
+        .str("ring_rehoming", if ok_ring { "PASS" } else { "MISS" })
+        .str("warm_join", if ok_join { "PASS" } else { "MISS" });
+    let mut root = JsonObject::new();
+    root.str("group", "cluster")
+        .int("requests", requests as u64)
+        .int("workers_per_pool", WORKERS as u64)
+        .raw("churn", &churn.finish())
+        .raw("join", &join.finish())
+        .raw("ring", &ring.finish())
+        .raw("acceptance", &accept.finish());
+    match write_bench_json("cluster", &root.finish()) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH json not written: {e}"),
+    }
+}

@@ -224,6 +224,59 @@ impl FrontendConfig {
     }
 }
 
+/// Cluster-layer configuration (see [`crate::coordinator::cluster`]).
+///
+/// Separate from [`ServiceConfig`] because it describes the tier *above*
+/// the pools — how composition keys shard across pools on the consistent
+/// ring, whether joining pools are warm-started, when whole queued groups
+/// migrate between pools — not any single pool's internals.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Virtual nodes per pool on the consistent-hash ring (≥ 1). More
+    /// vnodes smooth each pool's arc share toward 1/N at the cost of a
+    /// larger (still tiny) sorted ring; 64 keeps per-pool load within a
+    /// few percent of fair for single-digit pool counts.
+    pub vnodes: usize,
+    /// Warm-start joining pools: ship every cached fabric-independent
+    /// `AcceleratorProgram` (with a donor placement) into the joiner's
+    /// cache so its first request per shipped key pays a placement-only
+    /// respecialization instead of a JIT compile. Counted in
+    /// `Metrics::warm_start_hits` when a shipped key is first claimed.
+    pub warm_start: bool,
+    /// Cross-pool steal threshold: `Cluster::rebalance_once` migrates the
+    /// tail composition group of the deepest pool to an idle pool only
+    /// when the victim's total backlog is at least this deep (≥ 1). The
+    /// last-resort tier above in-pool stealing; [`usize::MAX`] disables
+    /// cross-pool migration entirely.
+    pub cross_steal_depth: usize,
+    /// Fusion policy mirrored from the member pools' [`ServiceConfig`]:
+    /// the cluster salts routing keys for fused compositions so a fused
+    /// and an unfused build of the same composition shard independently,
+    /// matching the pool cache's keying.
+    pub fuse: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { vnodes: 64, warm_start: true, cross_steal_depth: 2, fuse: false }
+    }
+}
+
+impl ClusterConfig {
+    /// Validate invariants. Call after deserializing user-supplied configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.vnodes == 0 {
+            return Err(Error::Config("ring needs at least one vnode per pool".into()));
+        }
+        if self.cross_steal_depth == 0 {
+            return Err(Error::Config(
+                "cross-pool stealing needs a victim depth of at least one job".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Socket serving-tier configuration (see [`crate::coordinator::net`]).
 ///
 /// Separate from [`FrontendConfig`] because it describes the *network
@@ -493,6 +546,24 @@ mod tests {
             .is_err());
         // idle_timeout_ms = 0 (never shed) is a valid operator choice
         NetConfig { idle_timeout_ms: 0, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn cluster_config_defaults_validate_and_zeroes_reject() {
+        let c = ClusterConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.vnodes, 64);
+        assert!(c.warm_start);
+        assert_eq!(c.cross_steal_depth, 2);
+        assert!(!c.fuse);
+        assert!(ClusterConfig { vnodes: 0, ..Default::default() }.validate().is_err());
+        assert!(ClusterConfig { cross_steal_depth: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        // usize::MAX disables cross-pool stealing but stays valid
+        ClusterConfig { cross_steal_depth: usize::MAX, ..Default::default() }
+            .validate()
+            .unwrap();
     }
 
     #[test]

@@ -1,0 +1,755 @@
+//! Cluster sharding: consistent-hash routing of composition families
+//! across multiple [`WorkerPool`]s — the scale unit above one pool.
+//!
+//! One pool is one node (N workers, one shared accelerator cache); a
+//! [`Cluster`] is several, with composition keys routed to pools by a
+//! consistent-hash **ring** ([`HashRing`]): every pool contributes
+//! `ClusterConfig::vnodes` splitmix64-mixed virtual points, and a key is
+//! owned by the first point clockwise of its own mixed hash. A pool join
+//! or leave therefore moves only the keys falling on the arcs the new
+//! (or departed) points carve out — ~1/N of the key space — instead of
+//! the near-total remap a `key % n` scheme suffers on any membership
+//! change. The same ring (same mix, same discipline) backs the pool's
+//! own worker home hash, so both routing levels survive growth.
+//!
+//! Three cluster behaviors ride on top of the ring:
+//!
+//! * **Warm-start on join** — a joining pool receives every cached
+//!   `AcceleratorProgram` (+ one donor [`crate::jit::PlacementPlan`])
+//!   from the existing pools' shared caches. Programs are
+//!   fabric-independent (the PR 4 split), so the first request for a
+//!   shipped key pays only a placement-only respecialization on the new
+//!   pool's fabric — never a JIT recompile. Scored in
+//!   `Metrics::warm_start_hits`.
+//! * **Evacuation on leave/death** — [`Cluster::retire`] removes the
+//!   pool from the ring, drains its queued (not in-flight) backlog and
+//!   re-routes every job through the shrunken ring, then quiesces the
+//!   pool so in-flight bursts still reply. Counted in
+//!   `Metrics::pool_evacuations`.
+//! * **Cross-pool stealing** — [`Cluster::rebalance_once`] is the
+//!   last-resort rung of the steal ladder (in-pool steal → cross-pool
+//!   steal → CPU floor): an idle pool takes the whole tail composition
+//!   group of the deepest backlogged pool. The ring still owns the key —
+//!   the migration is transient load shedding, not a route repoint.
+//!   Counted in `Metrics::cross_pool_steals`.
+//!
+//! The router is **fabric-shape-aware**: pools may host differently
+//! shaped fabrics (e.g. `TileSizing { large_every: 0 }` builds a pool
+//! with no Large PR regions), and a key whose composition needs a region
+//! class a pool lacks skips that pool's arc ([`HashRing::owner_where`]).
+//! The exclusion is an optimization, not a correctness requirement: if
+//! no pool fits, the key routes normally and the pool's resource ladder
+//! degrades to the bit-identical CPU floor (PR 7).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+
+use super::frontend::{Dispatch, Rejected};
+use super::pool::{CompletionQueue, Ticket, WorkerPool};
+use super::{AtomicMetrics, Metrics, Request, Response};
+use crate::bitstream::{Footprint, RegionClass};
+use crate::config::{ClusterConfig, OverlayConfig, ServiceConfig};
+use crate::error::{Error, Result};
+use crate::jit::FUSED_KEY_SALT;
+use crate::patterns::Composition;
+
+/// The splitmix64 finalizer (same constants as [`crate::workload::Rng`]):
+/// a cheap, stateless, full-avalanche u64 mix. Both routing levels hash
+/// through it — raw composition keys are structured (`DefaultHasher`
+/// output XOR a fusion salt), and ring arithmetic needs them uniform.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A consistent-hash ring over `slots` (pool or worker indices).
+///
+/// Each slot seed contributes `vnodes` points at
+/// `splitmix64(splitmix64(seed) ^ v)`; a key is owned by the first point
+/// at or clockwise of `splitmix64(key)`. Adding a slot moves exactly the
+/// keys landing on the new points' arcs — every moved key lands **on the
+/// added slot** — and removing one moves exactly the departed slot's
+/// keys, redistributed to the clockwise survivors.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(point, slot)` sorted by point — binary-searchable.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build a ring where slot `i` is seeded by `slot_seeds[i]`. Seeds
+    /// must be distinct per slot (pool ids, worker indices); vnode
+    /// points of different slots colliding is theoretically possible and
+    /// resolved deterministically by the `(point, slot)` sort.
+    pub fn new(slot_seeds: &[u64], vnodes: usize) -> HashRing {
+        let mut points = Vec::with_capacity(slot_seeds.len() * vnodes);
+        for (slot, &seed) in slot_seeds.iter().enumerate() {
+            let base = splitmix64(seed);
+            for v in 0..vnodes as u64 {
+                points.push((splitmix64(base ^ v), slot));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// The slot owning `key`. Panics on an empty ring.
+    pub fn owner(&self, key: u64) -> usize {
+        self.owner_where(key, |_| true).expect("owner() on an empty ring")
+    }
+
+    /// The first slot at or clockwise of `key`'s point for which
+    /// `eligible` holds — the fabric-shape-aware lookup: an ineligible
+    /// slot's arc is walked past as if its points were absent, so the
+    /// keys it would own spill deterministically to the next eligible
+    /// slot. `None` when no slot is eligible (or the ring is empty).
+    pub fn owner_where(&self, key: u64, eligible: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = splitmix64(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for i in 0..self.points.len() {
+            let (_, slot) = self.points[(start + i) % self.points.len()];
+            if eligible(slot) {
+                return Some(slot);
+            }
+        }
+        None
+    }
+
+    /// Total virtual points on the ring.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no slot contributed any point.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// One member pool and its cluster-side bookkeeping.
+struct Slot {
+    /// Stable member id (monotonic per cluster) — the ring seed, so a
+    /// pool's arcs never depend on its position in the member list.
+    id: u64,
+    pool: Arc<WorkerPool>,
+    /// Whether this pool's fabrics host any Large PR region (shape-aware
+    /// routing excludes Large-needing keys from small-only pools).
+    has_large: bool,
+    /// Keys whose programs were shipped to this pool at join and not yet
+    /// claimed by a routed request — each first claim is one
+    /// `warm_start_hits`.
+    shipped: HashSet<u64>,
+}
+
+struct ClusterState {
+    slots: Vec<Slot>,
+    ring: HashRing,
+    /// Retired pools, kept so their served work still counts in
+    /// [`Cluster::snapshot`] / [`Cluster::shutdown`] aggregates.
+    graveyard: Vec<Arc<WorkerPool>>,
+}
+
+/// Final cluster accounting returned by [`Cluster::shutdown`].
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Cluster-level counters merged with every member and retired
+    /// pool's final aggregate.
+    pub aggregate: Metrics,
+    /// `(member id, final metrics)` for each pool still in the ring.
+    pub per_pool: Vec<(u64, Metrics)>,
+    /// Final metrics of each retired pool, in retirement order.
+    pub retired: Vec<Metrics>,
+    /// Compiled accelerators across the live pools' caches at shutdown.
+    pub cached_accelerators: usize,
+}
+
+/// N worker pools behind one consistent-hash router (see module docs).
+///
+/// Thread-safe: membership is a single mutex taken per routed request
+/// (the per-request work — JIT, PR download, execution — dwarfs one
+/// uncontended lock), and implements [`Dispatch`], so the reactor front
+/// end and the socket tier serve through a cluster exactly as they serve
+/// through one pool.
+pub struct Cluster {
+    state: Mutex<ClusterState>,
+    /// Cluster-level counters (`pool_joins`, `pool_evacuations`,
+    /// `cross_pool_steals`, `warm_start_hits`). Pool-served counters
+    /// live in each member's own aggregate; [`Cluster::snapshot`] merges
+    /// both views.
+    pub metrics: Arc<AtomicMetrics>,
+    cfg: ClusterConfig,
+    next_id: AtomicU64,
+}
+
+impl Cluster {
+    /// An empty cluster. Add members with [`Cluster::join`]; routing
+    /// fails until at least one pool joined.
+    pub fn new(cfg: ClusterConfig) -> Result<Cluster> {
+        cfg.validate()?;
+        Ok(Cluster {
+            state: Mutex::new(ClusterState {
+                slots: Vec::new(),
+                ring: HashRing::new(&[], 0),
+                graveyard: Vec::new(),
+            }),
+            metrics: Arc::new(AtomicMetrics::default()),
+            cfg,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// A cluster of `pools` identically configured members.
+    pub fn homogeneous(
+        cfg: OverlayConfig,
+        service: ServiceConfig,
+        ccfg: ClusterConfig,
+        pools: usize,
+    ) -> Result<Cluster> {
+        if pools == 0 {
+            return Err(Error::Config("a cluster needs at least one pool".into()));
+        }
+        let cluster = Cluster::new(ccfg)?;
+        for _ in 0..pools {
+            cluster.join(cfg.clone(), service.clone())?;
+        }
+        Ok(cluster)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ClusterState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn ring_of(slots: &[Slot], vnodes: usize) -> HashRing {
+        let seeds: Vec<u64> = slots.iter().map(|s| s.id).collect();
+        HashRing::new(&seeds, vnodes)
+    }
+
+    /// The fusion-salted cluster routing key — the same key the pools'
+    /// caches index, so warm-start bookkeeping and routing agree.
+    fn salted_key(&self, comp: &Composition) -> u64 {
+        comp.cache_key() ^ if self.cfg.fuse { FUSED_KEY_SALT } else { 0 }
+    }
+
+    /// Whether any stage of `comp` only fits a Large PR region (its
+    /// per-operator footprint overflows the Small budget). Fused tails
+    /// are not modeled here: fusion may widen a footprint past Small,
+    /// but a small-only pool then degrades fused → unfused → CPU
+    /// bit-identically, so under-exclusion is safe.
+    fn needs_large(comp: &Composition) -> bool {
+        comp.stages().iter().any(|s| {
+            matches!(
+                RegionClass::smallest_fitting(&Footprint::for_operator(s.op)),
+                Some(RegionClass::Large)
+            )
+        })
+    }
+
+    /// Ring lookup + warm-start scoring for one key. Caller holds the
+    /// state lock and has checked the member list is non-empty.
+    fn route_slot(&self, st: &mut ClusterState, key: u64, needs_large: bool) -> usize {
+        let idx = if needs_large {
+            // skip small-only pools' arcs; if *no* pool hosts Large
+            // regions, route normally — the CPU floor serves anywhere
+            st.ring
+                .owner_where(key, |s| st.slots[s].has_large)
+                .unwrap_or_else(|| st.ring.owner(key))
+        } else {
+            st.ring.owner(key)
+        };
+        if st.slots[idx].shipped.remove(&key) {
+            self.metrics.record(&Metrics { warm_start_hits: 1, ..Metrics::default() });
+        }
+        idx
+    }
+
+    /// The pool that owns `comp` right now.
+    fn route(&self, comp: &Composition) -> Result<Arc<WorkerPool>> {
+        let key = self.salted_key(comp);
+        let needs_large = Self::needs_large(comp);
+        let mut st = self.lock();
+        if st.slots.is_empty() {
+            return Err(Error::Runtime("cluster has no member pools".into()));
+        }
+        let idx = self.route_slot(&mut st, key, needs_large);
+        Ok(st.slots[idx].pool.clone())
+    }
+
+    /// Add a member pool built from `cfg`/`service` and return its id.
+    ///
+    /// With `ClusterConfig::warm_start` on, every accelerator program
+    /// cached by the existing members is shipped into the new pool's
+    /// cache first (deduplicated by key, paired with one donor placement
+    /// plan). The donor plan is keyed by the *donor's* fabric, so the
+    /// joining pool's first request for a shipped key finds the program
+    /// but no local plan — a placement-only respecialization, never a
+    /// recompile.
+    pub fn join(&self, cfg: OverlayConfig, service: ServiceConfig) -> Result<u64> {
+        let pool = Arc::new(WorkerPool::new(cfg.clone(), service)?);
+        let has_large = cfg.large_tiles() > 0;
+        let mut st = self.lock();
+        let mut shipped = HashSet::new();
+        if self.cfg.warm_start {
+            for donor in &st.slots {
+                for &fid in donor.pool.fabric_ids() {
+                    for (key, spec, plan) in donor.pool.cache().plans_for_fabric(fid) {
+                        if shipped.insert(key) {
+                            pool.cache().insert(key, spec, plan);
+                        }
+                    }
+                }
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        st.slots.push(Slot { id, pool, has_large, shipped });
+        st.ring = Self::ring_of(&st.slots, self.cfg.vnodes);
+        drop(st);
+        self.metrics.record(&Metrics { pool_joins: 1, ..Metrics::default() });
+        Ok(id)
+    }
+
+    /// Remove member `id` from the ring — graceful leave and detected
+    /// death share this path — evacuating its queued backlog through the
+    /// shrunken ring, then quiescing the pool (workers finish in-flight
+    /// bursts, reply, and exit). Returns the number of evacuated jobs.
+    /// The last member cannot retire.
+    pub fn retire(&self, id: u64) -> Result<usize> {
+        let mut st = self.lock();
+        if st.slots.len() <= 1 {
+            return Err(Error::Config("cannot retire the cluster's last pool".into()));
+        }
+        let pos = st
+            .slots
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or_else(|| Error::Runtime(format!("no pool {id} in the cluster")))?;
+        let slot = st.slots.remove(pos);
+        st.ring = Self::ring_of(&st.slots, self.cfg.vnodes);
+        // nothing new can route here (the lock is held and the ring no
+        // longer lists the pool); what's queued moves, what's in flight
+        // finishes on the departing workers
+        let orphans = slot.pool.extract_backlog();
+        slot.pool.quiesce();
+        let mut moved = 0;
+        for job in orphans {
+            let key = job.request.comp.cache_key()
+                ^ if self.cfg.fuse { FUSED_KEY_SALT } else { 0 };
+            let needs_large = Self::needs_large(&job.request.comp);
+            let idx = self.route_slot(&mut st, key, needs_large);
+            // blocking re-injection: evacuation must not shed load. A
+            // failure hands the job back and its reply sink fails safe.
+            if st.slots[idx].pool.route_and_enqueue(job, true).is_ok() {
+                moved += 1;
+            }
+        }
+        st.graveyard.push(slot.pool);
+        drop(st);
+        self.metrics.record(&Metrics { pool_evacuations: 1, ..Metrics::default() });
+        Ok(moved)
+    }
+
+    /// One cross-pool steal attempt — the rung between in-pool stealing
+    /// and the CPU floor. An idle member (zero queued jobs) takes the
+    /// whole tail composition group of the deepest member holding at
+    /// least `ClusterConfig::cross_steal_depth` jobs. Returns how many
+    /// jobs moved (0: no idle thief, no deep victim, or nothing
+    /// stealable). The ring still owns the moved key: this is transient
+    /// load shedding, and the next submit routes by ring as before.
+    pub fn rebalance_once(&self) -> usize {
+        let st = self.lock();
+        if st.slots.len() < 2 {
+            return 0;
+        }
+        let Some(thief) =
+            st.slots.iter().position(|s| s.pool.total_queue_depth() == 0)
+        else {
+            return 0;
+        };
+        let victim = st
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != thief)
+            .map(|(i, s)| (s.pool.total_queue_depth(), i))
+            .max()
+            .filter(|&(d, _)| d >= self.cfg.cross_steal_depth);
+        let Some((_, victim)) = victim else {
+            return 0;
+        };
+        let group = st.slots[victim].pool.export_tail_group(self.cfg.cross_steal_depth);
+        let thief_pool = st.slots[thief].pool.clone();
+        drop(st);
+        let mut moved = 0;
+        for job in group {
+            // the thief was idle: blocking enqueue cannot wait long
+            if thief_pool.route_and_enqueue(job, true).is_ok() {
+                moved += 1;
+            }
+        }
+        if moved > 0 {
+            self.metrics
+                .record(&Metrics { cross_pool_steals: moved as u64, ..Metrics::default() });
+        }
+        moved
+    }
+
+    /// Route and enqueue a request; the reply channel is returned
+    /// immediately (blocking backpressure, like [`WorkerPool::submit`]).
+    pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.route(&request.comp)?.submit(request)
+    }
+
+    /// Route a request and block for its response.
+    pub fn submit_wait(&self, request: Request) -> Result<Response> {
+        self.route(&request.comp)?.submit_wait(request)
+    }
+
+    /// Current member count.
+    pub fn pools(&self) -> usize {
+        self.lock().slots.len()
+    }
+
+    /// Current member ids, in join order.
+    pub fn pool_ids(&self) -> Vec<u64> {
+        self.lock().slots.iter().map(|s| s.id).collect()
+    }
+
+    /// Live metrics of member `id`, if it is still in the ring.
+    pub fn pool_snapshot(&self, id: u64) -> Option<Metrics> {
+        self.lock().slots.iter().find(|s| s.id == id).map(|s| s.pool.snapshot())
+    }
+
+    /// Compiled accelerators across the live members' caches. Shipped
+    /// programs count once per pool holding them (caches are per pool).
+    pub fn cached_accelerators(&self) -> usize {
+        self.lock().slots.iter().map(|s| s.pool.cached_accelerators()).sum()
+    }
+
+    /// Cluster-wide live aggregate: cluster-level counters merged with
+    /// every member's and every retired pool's snapshot.
+    pub fn snapshot(&self) -> Metrics {
+        let st = self.lock();
+        let mut m = self.metrics.snapshot();
+        for s in &st.slots {
+            m.merge(&s.pool.snapshot());
+        }
+        for p in &st.graveyard {
+            m.merge(&p.snapshot());
+        }
+        m
+    }
+
+    /// Drain every member, stop all workers, and return the final
+    /// report. Members still shared elsewhere (an undropped `Arc`) are
+    /// quiesced and snapshotted instead of joined.
+    pub fn shutdown(self) -> ClusterReport {
+        let st = self.state.into_inner().unwrap_or_else(|p| p.into_inner());
+        let cached_accelerators =
+            st.slots.iter().map(|s| s.pool.cached_accelerators()).sum();
+        let mut aggregate = self.metrics.snapshot();
+        let mut per_pool = Vec::new();
+        for slot in st.slots {
+            let m = match Arc::try_unwrap(slot.pool) {
+                Ok(pool) => pool.shutdown().aggregate,
+                Err(shared) => {
+                    shared.quiesce();
+                    shared.snapshot()
+                }
+            };
+            aggregate.merge(&m);
+            per_pool.push((slot.id, m));
+        }
+        let mut retired = Vec::new();
+        for pool in st.graveyard {
+            let m = match Arc::try_unwrap(pool) {
+                Ok(pool) => pool.shutdown().aggregate,
+                Err(shared) => shared.snapshot(),
+            };
+            aggregate.merge(&m);
+            retired.push(m);
+        }
+        ClusterReport { aggregate, per_pool, retired, cached_accelerators }
+    }
+}
+
+impl Dispatch for Cluster {
+    /// The cluster half of the reactor front end: route by ring, then
+    /// delegate to the owning pool's async submission. A routing failure
+    /// (empty cluster) consumes the request — its error is the one
+    /// reply — while pool backpressure hands it back for retry, exactly
+    /// like dispatching into a single pool.
+    fn submit_async(
+        &self,
+        request: Request,
+        completions: &Arc<CompletionQueue>,
+    ) -> std::result::Result<Ticket, Rejected> {
+        let pool = match self.route(&request.comp) {
+            Ok(pool) => pool,
+            Err(e) => return Err(Rejected::Failed(e)),
+        };
+        pool.submit_async_reclaim(request, completions).map_err(|(request, e)| match e {
+            Error::PoolBusy { .. } => Rejected::Busy(request),
+            other => Rejected::Failed(other),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::OperatorKind;
+    use crate::workload;
+
+    fn service() -> ServiceConfig {
+        ServiceConfig::with_workers(2)
+    }
+
+    fn req(comp: &Composition, k: u64) -> Request {
+        Request::dynamic(comp.clone(), workload::request_inputs(comp, k))
+    }
+
+    #[test]
+    fn ring_growth_moves_only_arcs_of_the_new_slot() {
+        for p in [2usize, 3, 4, 7] {
+            let seeds: Vec<u64> = (0..p as u64).map(|i| i * 11 + 3).collect();
+            let mut grown = seeds.clone();
+            grown.push(997);
+            let before = HashRing::new(&seeds, 64);
+            let after = HashRing::new(&grown, 64);
+            let total = 512u64;
+            let mut moved = 0usize;
+            for k in 0..total {
+                let key = k.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                let (a, b) = (before.owner(key), after.owner(key));
+                if a != b {
+                    assert_eq!(b, p, "a moved key must land on the added slot");
+                    moved += 1;
+                }
+            }
+            let frac = moved as f64 / total as f64;
+            assert!(
+                frac <= 2.0 / (p as f64 + 1.0),
+                "{p}→{} pools moved {frac:.3} of keys",
+                p + 1
+            );
+            assert!(moved > 0, "the new slot must own something");
+        }
+    }
+
+    #[test]
+    fn ring_removal_moves_only_the_departed_slots_keys() {
+        let seeds = [3u64, 14, 25, 36];
+        let full = HashRing::new(&seeds, 64);
+        let survivors = [3u64, 14, 36]; // slot 2 departs
+        let shrunk = HashRing::new(&survivors, 64);
+        for k in 0..512u64 {
+            let key = k.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let before = full.owner(key);
+            let after = shrunk.owner(key);
+            if before != 2 {
+                // survivors keep their keys (index shifts down past the
+                // removed slot)
+                let expect = if before < 2 { before } else { before - 1 };
+                assert_eq!(after, expect, "a surviving slot's key must not move");
+            }
+        }
+    }
+
+    #[test]
+    fn owner_where_skips_ineligible_slots_deterministically() {
+        let ring = HashRing::new(&[1, 2, 3], 16);
+        for k in 0..256u64 {
+            let unrestricted = ring.owner(k);
+            let only_zero = ring.owner_where(k, |s| s == 0).unwrap();
+            assert_eq!(only_zero, 0);
+            let not_owner = ring.owner_where(k, |s| s != unrestricted).unwrap();
+            assert_ne!(not_owner, unrestricted);
+            // repeatable
+            assert_eq!(not_owner, ring.owner_where(k, |s| s != unrestricted).unwrap());
+        }
+        assert!(ring.owner_where(7, |_| false).is_none());
+        assert!(HashRing::new(&[], 8).is_empty());
+        assert!(HashRing::new(&[], 8).owner_where(7, |_| true).is_none());
+    }
+
+    #[test]
+    fn cluster_round_trips_and_conserves() {
+        let cluster = Cluster::homogeneous(
+            OverlayConfig::default(),
+            service(),
+            ClusterConfig::default(),
+            2,
+        )
+        .unwrap();
+        assert_eq!(cluster.pools(), 2);
+        let stream = workload::mixed_compositions(24, 128, 5);
+        for (k, comp) in stream.iter().enumerate() {
+            cluster.submit_wait(req(comp, k as u64)).unwrap();
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.requests, 24);
+        assert_eq!(snap.pool_joins, 2);
+        let report = cluster.shutdown();
+        assert_eq!(report.aggregate.requests, 24);
+        assert_eq!(report.per_pool.len(), 2);
+        assert!(report.retired.is_empty());
+        // every request is a full hit, a placement respec, or a compile
+        assert_eq!(
+            report.aggregate.cache_hits
+                + report.aggregate.placement_respecializations
+                + report.aggregate.jit_compiles,
+            24
+        );
+    }
+
+    #[test]
+    fn empty_cluster_rejects_and_last_pool_cannot_retire() {
+        let cluster = Cluster::new(ClusterConfig::default()).unwrap();
+        let comp = Composition::map(OperatorKind::Abs, 64);
+        assert!(cluster.submit_wait(req(&comp, 0)).is_err());
+        let id = cluster.join(OverlayConfig::default(), service()).unwrap();
+        assert!(cluster.retire(id).is_err(), "last member must not retire");
+        assert!(cluster.retire(id + 99).is_err(), "unknown id is an error");
+        cluster.submit_wait(req(&comp, 0)).unwrap();
+        let report = cluster.shutdown();
+        assert_eq!(report.aggregate.requests, 1);
+        assert_eq!(report.aggregate.pool_joins, 1);
+    }
+
+    #[test]
+    fn shape_aware_routing_excludes_small_only_pools() {
+        // pool 0: full-shape fabric; pool 1: no Large regions at all
+        let cluster = Cluster::new(ClusterConfig::default()).unwrap();
+        let full = cluster.join(OverlayConfig::default(), service()).unwrap();
+        let mut small_only = OverlayConfig::default();
+        small_only.sizing.large_every = 0;
+        let small = cluster.join(small_only, service()).unwrap();
+        // Sin only fits a Large region: every such key must route to the
+        // full-shape pool no matter where its hash lands
+        for i in 0..12usize {
+            let comp = Composition::map(OperatorKind::Sin, 64 + i);
+            cluster.submit_wait(req(&comp, i as u64)).unwrap();
+        }
+        let full_m = cluster.pool_snapshot(full).unwrap();
+        let small_m = cluster.pool_snapshot(small).unwrap();
+        assert_eq!(full_m.requests, 12, "Large-needing keys all go to the full pool");
+        assert_eq!(small_m.requests, 0);
+        assert_eq!(full_m.cpu_fallbacks, 0, "no ladder degradation needed");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn warm_start_ships_programs_and_scores_first_claims() {
+        let cfg = OverlayConfig::default();
+        let cluster =
+            Cluster::homogeneous(cfg.clone(), service(), ClusterConfig::default(), 2).unwrap();
+        // compile a wide cohort across the two members
+        let cohort = workload::wide_cohort(32);
+        for (k, comp) in cohort.iter().enumerate() {
+            cluster.submit_wait(req(comp, k as u64)).unwrap();
+        }
+        let compiled_before = cluster.snapshot().jit_compiles;
+        assert_eq!(compiled_before, 32, "every distinct-key cohort member compiles once");
+        let joined = cluster.join(cfg, service()).unwrap();
+        // replay the cohort: keys now owned by the joiner find their
+        // shipped program — placement-only respecialization, no compile
+        for (k, comp) in cohort.iter().enumerate() {
+            cluster.submit_wait(req(comp, 100 + k as u64)).unwrap();
+        }
+        let report = cluster.shutdown();
+        assert_eq!(
+            report.aggregate.jit_compiles, compiled_before,
+            "warm-started members must never recompile shipped programs"
+        );
+        assert!(report.aggregate.warm_start_hits > 0, "the joiner must claim shipped keys");
+        let (_, joined_m) =
+            report.per_pool.iter().find(|(id, _)| *id == joined).unwrap();
+        assert_eq!(joined_m.jit_compiles, 0);
+        assert_eq!(
+            joined_m.requests, joined_m.cache_hits + joined_m.placement_respecializations,
+            "every joiner-served request rode a shipped program"
+        );
+    }
+
+    #[test]
+    fn retire_evacuates_the_backlog_and_keeps_every_reply() {
+        // paused members so a backlog actually accumulates
+        let ccfg = ClusterConfig::default();
+        let cluster = Cluster::new(ccfg).unwrap();
+        let cfg = OverlayConfig::default();
+        let svc = ServiceConfig { queue_capacity: 64, ..ServiceConfig::with_workers(1) };
+        let a = cluster.join(cfg.clone(), svc.clone()).unwrap();
+        let b = cluster.join(cfg, svc).unwrap();
+        let cohort = workload::wide_cohort(8);
+        let mut pending = Vec::new();
+        for (k, comp) in cohort.iter().enumerate() {
+            pending.push(cluster.submit(req(comp, k as u64)).unwrap());
+        }
+        // retire a live member: its in-flight jobs finish there, its
+        // queued ones move to the survivor (possibly 0 moved — the
+        // workers race the retire and may have drained everything)
+        cluster.retire(a).unwrap();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = cluster.snapshot();
+        assert_eq!(snap.requests, 8, "no request may be lost by an evacuation");
+        assert_eq!(snap.pool_evacuations, 1);
+        assert_eq!(cluster.pool_ids(), vec![b]);
+        let report = cluster.shutdown();
+        assert_eq!(report.aggregate.requests, 8);
+        assert_eq!(report.retired.len(), 1);
+    }
+
+    #[test]
+    fn cross_pool_steal_moves_a_whole_group_to_an_idle_pool() {
+        let ccfg = ClusterConfig { cross_steal_depth: 2, ..ClusterConfig::default() };
+        let cluster = Cluster::new(ccfg).unwrap();
+        let cfg = OverlayConfig::default();
+        let svc = ServiceConfig { queue_capacity: 64, ..ServiceConfig::with_workers(1) };
+        // a deep same-key backlog on the only member, then an idle joiner
+        let _a = cluster.join(cfg.clone(), svc.clone()).unwrap();
+        let comp = Composition::vmul_reduce(128);
+        let mut pending = Vec::new();
+        for k in 0..6 {
+            pending.push(cluster.submit(req(&comp, k)).unwrap());
+        }
+        let _b = cluster.join(cfg, svc).unwrap();
+        // rebalance while the victim still holds queued jobs; the loop
+        // tolerates the race where the victim drains everything first
+        let mut moved = 0;
+        for _ in 0..50 {
+            moved = cluster.rebalance_once();
+            if moved > 0 {
+                break;
+            }
+            let all_done = cluster.snapshot().requests >= 6;
+            if all_done {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = cluster.shutdown();
+        assert_eq!(report.aggregate.requests, 6);
+        // when a steal happened it moved whole jobs and was counted
+        assert_eq!(report.aggregate.cross_pool_steals, moved as u64);
+        assert_eq!(report.aggregate.requests, 6, "stolen jobs still reply exactly once");
+        assert_eq!(report.aggregate.pool_joins, 2);
+        // moved jobs (if any) were served by the thief; either way the
+        // conservation law holds cluster-wide
+        assert_eq!(
+            report.aggregate.cache_hits
+                + report.aggregate.placement_respecializations
+                + report.aggregate.jit_compiles,
+            6
+        );
+    }
+}

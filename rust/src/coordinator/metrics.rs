@@ -123,6 +123,19 @@ pub struct Metrics {
     /// Residents relocated by the background compactor (each migration is
     /// one PR download into the destination tile plus a source clear).
     pub migrations: u64,
+    /// Pools that joined a cluster's consistent-hash ring (initial
+    /// members included).
+    pub pool_joins: u64,
+    /// Cluster evacuation events: one per retired/dead pool whose queued
+    /// backlog was re-routed through the shrunken ring.
+    pub pool_evacuations: u64,
+    /// Queued jobs migrated between pools by the cluster's last-resort
+    /// steal tier (above in-pool stealing, below the CPU floor).
+    pub cross_pool_steals: u64,
+    /// First claims of warm-started keys: a request routed to a joined
+    /// pool whose program was shipped at join, paying a placement-only
+    /// respecialization instead of a JIT recompile.
+    pub warm_start_hits: u64,
 }
 
 impl Metrics {
@@ -188,6 +201,10 @@ impl Metrics {
         self.prefetch_hits += other.prefetch_hits;
         self.prefetch_wasted += other.prefetch_wasted;
         self.migrations += other.migrations;
+        self.pool_joins += other.pool_joins;
+        self.pool_evacuations += other.pool_evacuations;
+        self.cross_pool_steals += other.cross_pool_steals;
+        self.warm_start_hits += other.warm_start_hits;
     }
 
     /// Field-wise difference vs an earlier snapshot of the same record
@@ -244,13 +261,17 @@ impl Metrics {
             prefetch_hits: self.prefetch_hits.saturating_sub(earlier.prefetch_hits),
             prefetch_wasted: self.prefetch_wasted.saturating_sub(earlier.prefetch_wasted),
             migrations: self.migrations.saturating_sub(earlier.migrations),
+            pool_joins: self.pool_joins.saturating_sub(earlier.pool_joins),
+            pool_evacuations: self.pool_evacuations.saturating_sub(earlier.pool_evacuations),
+            cross_pool_steals: self.cross_pool_steals.saturating_sub(earlier.cross_pool_steals),
+            warm_start_hits: self.warm_start_hits.saturating_sub(earlier.warm_start_hits),
         }
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={} dl_retry={} quar={} w_restart={} replay={} pf_hit={} pf_waste={} migr={}",
+            "requests={} jit={} hits={} ({:.0}%) respec={} clob_avoid={} pr_downloads={} pr_hits={} ({:.0}%) replaced={} pr={:.3}ms busy={:.3}ms bursts={} switches={} steals={} rejected={} lru_evict={} sessions={} completions={} polls={} adm_rej={} conns={} shed={} net_rej={} fused={} dl_avoided={} fuse_fb={} cpu_fb={} dl_retry={} quar={} w_restart={} replay={} pf_hit={} pf_waste={} migr={} pjoin={} pevac={} xsteal={} warm={}",
             self.requests,
             self.jit_compiles,
             self.cache_hits,
@@ -286,6 +307,10 @@ impl Metrics {
             self.prefetch_hits,
             self.prefetch_wasted,
             self.migrations,
+            self.pool_joins,
+            self.pool_evacuations,
+            self.cross_pool_steals,
+            self.warm_start_hits,
         )
     }
 }
@@ -329,6 +354,10 @@ pub struct AtomicMetrics {
     prefetch_hits: AtomicU64,
     prefetch_wasted: AtomicU64,
     migrations: AtomicU64,
+    pool_joins: AtomicU64,
+    pool_evacuations: AtomicU64,
+    cross_pool_steals: AtomicU64,
+    warm_start_hits: AtomicU64,
     jit_nanos: AtomicU64,
     pr_nanos: AtomicU64,
     busy_nanos: AtomicU64,
@@ -375,6 +404,10 @@ impl AtomicMetrics {
         self.prefetch_hits.fetch_add(d.prefetch_hits, Ordering::Relaxed);
         self.prefetch_wasted.fetch_add(d.prefetch_wasted, Ordering::Relaxed);
         self.migrations.fetch_add(d.migrations, Ordering::Relaxed);
+        self.pool_joins.fetch_add(d.pool_joins, Ordering::Relaxed);
+        self.pool_evacuations.fetch_add(d.pool_evacuations, Ordering::Relaxed);
+        self.cross_pool_steals.fetch_add(d.cross_pool_steals, Ordering::Relaxed);
+        self.warm_start_hits.fetch_add(d.warm_start_hits, Ordering::Relaxed);
         self.jit_nanos.fetch_add(to_nanos(d.jit_seconds), Ordering::Relaxed);
         self.pr_nanos.fetch_add(to_nanos(d.pr_seconds), Ordering::Relaxed);
         self.busy_nanos.fetch_add(to_nanos(d.busy_seconds), Ordering::Relaxed);
@@ -420,6 +453,10 @@ impl AtomicMetrics {
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             prefetch_wasted: self.prefetch_wasted.load(Ordering::Relaxed),
             migrations: self.migrations.load(Ordering::Relaxed),
+            pool_joins: self.pool_joins.load(Ordering::Relaxed),
+            pool_evacuations: self.pool_evacuations.load(Ordering::Relaxed),
+            cross_pool_steals: self.cross_pool_steals.load(Ordering::Relaxed),
+            warm_start_hits: self.warm_start_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -461,6 +498,10 @@ mod tests {
             prefetch_hits: 6,
             prefetch_wasted: 2,
             migrations: 7,
+            pool_joins: 1,
+            pool_evacuations: 2,
+            cross_pool_steals: 3,
+            warm_start_hits: 8,
             ..Default::default()
         };
         let s = m.summary();
@@ -472,6 +513,10 @@ mod tests {
         assert!(s.contains("pf_hit=6"));
         assert!(s.contains("pf_waste=2"));
         assert!(s.contains("migr=7"));
+        assert!(s.contains("pjoin=1"));
+        assert!(s.contains("pevac=2"));
+        assert!(s.contains("xsteal=3"));
+        assert!(s.contains("warm=8"));
     }
 
     #[test]
@@ -512,6 +557,10 @@ mod tests {
             prefetch_hits: 3,
             prefetch_wasted: 2,
             migrations: 1,
+            pool_joins: 2,
+            pool_evacuations: 3,
+            cross_pool_steals: 4,
+            warm_start_hits: 5,
         };
         let mut b = a;
         b.merge(&a);
@@ -543,6 +592,10 @@ mod tests {
         assert_eq!(d.prefetch_hits, a.prefetch_hits);
         assert_eq!(d.prefetch_wasted, a.prefetch_wasted);
         assert_eq!(d.migrations, a.migrations);
+        assert_eq!(d.pool_joins, a.pool_joins);
+        assert_eq!(d.pool_evacuations, a.pool_evacuations);
+        assert_eq!(d.cross_pool_steals, a.cross_pool_steals);
+        assert_eq!(d.warm_start_hits, a.warm_start_hits);
         assert!((d.jit_seconds - a.jit_seconds).abs() < 1e-12);
     }
 
@@ -615,6 +668,10 @@ mod tests {
             prefetch_hits: 2,
             prefetch_wasted: 1,
             migrations: 3,
+            pool_joins: 1,
+            pool_evacuations: 2,
+            cross_pool_steals: 3,
+            warm_start_hits: 4,
         };
         agg.record(&d);
         agg.record(&d);
@@ -648,6 +705,10 @@ mod tests {
         assert_eq!(s.prefetch_hits, 4);
         assert_eq!(s.prefetch_wasted, 2);
         assert_eq!(s.migrations, 6);
+        assert_eq!(s.pool_joins, 2);
+        assert_eq!(s.pool_evacuations, 4);
+        assert_eq!(s.cross_pool_steals, 6);
+        assert_eq!(s.warm_start_hits, 8);
         assert!((s.jit_seconds - 0.002).abs() < 1e-9);
         assert!((s.busy_seconds - 0.006).abs() < 1e-9);
     }

@@ -21,6 +21,7 @@
 //! many client sessions over a shared completion queue with admission
 //! control and fairness rotation (`repro serve --frontend reactor`).
 
+pub mod cluster;
 pub mod frontend;
 pub mod lru;
 pub mod metrics;
@@ -28,6 +29,7 @@ pub mod net;
 pub mod pool;
 pub mod wire;
 
+pub use cluster::{Cluster, ClusterReport, HashRing};
 pub use frontend::{
     Dispatch, Frontend, FrontendThreads, Reactor, Rejected, SessionHandle, SessionRecv,
     SessionReplies, SessionState, SessionSubmitter,
@@ -374,6 +376,35 @@ impl Coordinator {
     /// Current prediction policy.
     pub fn predicting(&self) -> bool {
         self.predict
+    }
+
+    /// Mark a stream discontinuity — a stolen composition group arriving
+    /// on this worker, a supervised-restart replay — so the next
+    /// observed key starts a fresh chain instead of learning a false
+    /// successor edge across the boundary (see
+    /// [`NextPredictor::break_chain`]). No-op with prediction off: the
+    /// reactive baseline stays bit-identical.
+    pub fn note_stream_break(&mut self) {
+        if self.predict {
+            self.predictor.break_chain();
+        }
+    }
+
+    /// Hand the learned next-composition table to a successor
+    /// coordinator — worker supervision rebuilds the `Coordinator` in
+    /// place, and the prediction learned across restarts must not
+    /// cold-start with it. Leaves a fresh default predictor behind.
+    pub(crate) fn take_predictor(&mut self) -> NextPredictor {
+        std::mem::take(&mut self.predictor)
+    }
+
+    /// Adopt a predecessor's learned table. The hand-off boundary is a
+    /// stream discontinuity (the successor starts on a replayed burst),
+    /// so the chain is broken on install: the edge counts survive, the
+    /// dangling `last` state does not.
+    pub(crate) fn install_predictor(&mut self, mut predictor: NextPredictor) {
+        predictor.break_chain();
+        self.predictor = predictor;
     }
 
     /// Turn online defragmentation on or off (see

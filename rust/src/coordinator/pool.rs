@@ -7,10 +7,14 @@
 //! through **bounded per-worker job queues** by an affinity scheduler:
 //!
 //! * **home routing** — each [`Request`]'s composition hashes to a home
-//!   worker (`cache_key % workers`), so repeated compositions land where
-//!   their accelerator is already compiled *and* its operators are already
+//!   worker through the same splitmix64-mixed consistent-hash ring the
+//!   cluster tier uses ([`crate::coordinator::cluster::HashRing`] over
+//!   worker indices), so repeated compositions land where their
+//!   accelerator is already compiled *and* its operators are already
 //!   resident in the PR regions — skipping both the JIT and the ICAP
-//!   download (the Fig. 3 amortization, multiplied across fabrics);
+//!   download (the Fig. 3 amortization, multiplied across fabrics) — and
+//!   growing the worker count moves only ~1/N of homes instead of the
+//!   near-total remap the old `cache_key % workers` hash suffered;
 //! * **sticky spill** — when the home queue runs deeper than the
 //!   least-loaded worker by more than `max_queue_skew`, the request spills
 //!   to the least-loaded worker and the routing table is updated so future
@@ -76,6 +80,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::cluster::HashRing;
 use super::{
     AcceleratorCache, AtomicMetrics, ClockLru, Coordinator, Job, Metrics, Request, Response,
 };
@@ -285,6 +290,12 @@ impl Drop for ReplySink {
 
 /// Idle-poll backoff ceiling (worst-case added steal latency).
 const IDLE_POLL_MAX: Duration = Duration::from_millis(20);
+
+/// Virtual nodes per worker on the in-pool home-hash ring. Pools are
+/// narrow (a handful of workers), so fewer points than the cluster
+/// default still spread homes well, and the ring is built once at pool
+/// construction — lookup cost is a binary search either way.
+const WORKER_VNODES: usize = 32;
 
 /// What a worker thread leaves behind when the pool shuts down.
 struct WorkerExit {
@@ -617,6 +628,10 @@ struct PoolShared {
     cache: Arc<AcceleratorCache>,
     /// Worker index → its fabric's id (plan-cache key).
     fabric_ids: Vec<u64>,
+    /// Consistent-hash ring over worker indices: the home hash. Shares
+    /// the cluster tier's splitmix64 mix, so key→worker homes are stable
+    /// under worker-count changes (only ~1/N of keys re-home on growth).
+    ring: HashRing,
 }
 
 impl PoolShared {
@@ -835,6 +850,10 @@ impl WorkerPool {
             max_queue_skew: service.max_queue_skew,
             cache: cache.clone(),
             fabric_ids: coords.iter().map(|c| c.engine.fabric.id).collect(),
+            ring: HashRing::new(
+                &(0..service.workers as u64).collect::<Vec<u64>>(),
+                WORKER_VNODES,
+            ),
         });
         let mut handles = Vec::with_capacity(service.workers);
         for (w, coord) in coords.into_iter().enumerate() {
@@ -931,15 +950,23 @@ impl WorkerPool {
     /// One route-table read: returns the chosen worker and whether the
     /// sticky entry must be updated to match it.
     fn route_decision(&self, key: u64) -> (usize, bool) {
-        let n = self.shared.queues.len();
         let sticky = self.shared.route.get(key);
-        let home = sticky.unwrap_or((key % n as u64) as usize);
+        // home = ring owner, not `key % n`: the ring's splitmix64-mixed
+        // virtual nodes keep homes stable when the worker count changes
+        // (a grown pool re-homes only the new worker's arcs, ~1/N of
+        // keys), and share one hash discipline with the cluster router
+        let home = sticky.unwrap_or_else(|| self.shared.ring.owner(key));
         // single allocation-free pass over the load counters
         let mut home_load = 0;
         let mut least = home;
         let mut least_load = usize::MAX;
         for (i, q) in self.shared.queues.iter().enumerate() {
-            let l = q.load.load(Ordering::SeqCst);
+            // Relaxed: like the steal-victim tail mirror, the load
+            // counters are scoring hints mirrored beside the queue lock —
+            // routing tolerates a stale read (at worst one extra spill or
+            // one deferred one), and the enqueue that follows synchronizes
+            // on the chosen queue's own lock, which stays authoritative
+            let l = q.load.load(Ordering::Relaxed);
             if i == home {
                 home_load = l;
             }
@@ -1122,6 +1149,107 @@ impl WorkerPool {
         }
     }
 
+    /// The pool-wide shared accelerator cache — the cluster tier's
+    /// warm-start donor/recipient handle.
+    pub(crate) fn cache(&self) -> &Arc<AcceleratorCache> {
+        &self.cache
+    }
+
+    /// Each worker's fabric id, in worker order (plan-cache keys: the
+    /// cluster ships one cached plan per donor fabric at warm-start).
+    pub(crate) fn fabric_ids(&self) -> &[u64] {
+        &self.shared.fabric_ids
+    }
+
+    /// Jobs currently queued (not in-flight) across every worker.
+    pub(crate) fn total_queue_depth(&self) -> usize {
+        self.shared.queues.iter().map(|q| q.depth.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Graceful quiesce for a pool leaving a cluster: close every queue
+    /// and open every gate, so workers drain what is already queued,
+    /// reply, and exit on their own. Idempotent; never blocks. The
+    /// handles are joined later by [`WorkerPool::shutdown`] (or the
+    /// pool's drop).
+    pub(crate) fn quiesce(&self) {
+        self.release_workers();
+    }
+
+    /// Pull every queued (not yet in-flight) job out of the pool — the
+    /// evacuation half of a cluster retire/death. Queue bookkeeping
+    /// (depth, load, tail mirrors) is restored under each queue's lock,
+    /// so workers still serving their in-flight bursts keep consistent
+    /// counters for the jobs they already hold.
+    pub(crate) fn extract_backlog(&self) -> Vec<Job> {
+        let mut out = Vec::new();
+        for q in &self.shared.queues {
+            let mut g = q.lock();
+            let taken: Vec<Job> = g.jobs.drain(..).collect();
+            if taken.is_empty() {
+                continue;
+            }
+            q.load.fetch_sub(taken.len(), Ordering::SeqCst);
+            q.depth.store(0, Ordering::Relaxed);
+            q.sync_tail(&g);
+            drop(g);
+            q.not_full.notify_all();
+            out.extend(taken);
+        }
+        out
+    }
+
+    /// Export the whole tail composition group of the deepest queue
+    /// holding at least `min_depth` jobs — the cross-pool rung of the
+    /// steal ladder. Mirrors the in-pool steal (whole groups only; a
+    /// tail key continuing into the victim's in-flight burst is
+    /// refused), except the group leaves the pool entirely: no thief
+    /// queue is credited here and no route is repointed — the cluster
+    /// ring still owns the key, so the migration is transient load
+    /// shedding, not an affinity change. Empty when nothing qualifies.
+    pub(crate) fn export_tail_group(&self, min_depth: usize) -> Vec<Job> {
+        let mut candidates: Vec<(usize, usize)> = self
+            .shared
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(i, q)| {
+                let d = q.depth.load(Ordering::Relaxed);
+                (d >= min_depth.max(1)).then_some((d, i))
+            })
+            .collect();
+        candidates.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (_, v) in candidates {
+            let vq = &self.shared.queues[v];
+            let mut g = vq.lock();
+            let key = match g.jobs.back() {
+                Some(job) => job.request.comp.cache_key(),
+                None => continue, // drained since scoring
+            };
+            if vq.inflight_valid.load(Ordering::Acquire)
+                && vq.inflight_tail_key.load(Ordering::Relaxed) == key
+            {
+                continue;
+            }
+            let mut stolen = Vec::new();
+            let mut kept = VecDeque::with_capacity(g.jobs.len());
+            while let Some(job) = g.jobs.pop_front() {
+                if job.request.comp.cache_key() == key {
+                    stolen.push(job);
+                } else {
+                    kept.push_back(job);
+                }
+            }
+            g.jobs = kept;
+            vq.load.fetch_sub(stolen.len(), Ordering::SeqCst);
+            vq.depth.store(g.jobs.len(), Ordering::Relaxed);
+            vq.sync_tail(&g);
+            drop(g);
+            vq.not_full.notify_all();
+            return stolen;
+        }
+        Vec::new()
+    }
+
     /// Drain all queues, stop every worker, and return the final report.
     pub fn shutdown(mut self) -> PoolReport {
         // closing ends each worker's loop after it drains everything
@@ -1265,6 +1393,10 @@ fn worker_loop(
             let burst = slot.take().expect("burst staged for serving");
             if stole {
                 coord.metrics.steals += 1;
+                // a stolen group is adjacent in time but not in any
+                // client's request order: break the predictor's chain so
+                // the boundary never becomes a false successor edge
+                coord.note_stream_break();
             }
             coord.serve_burst(burst)
         }));
@@ -1302,6 +1434,11 @@ fn worker_loop(
                         // the record travels with the worker, not the fabric:
                         // worker_sum == aggregate still holds after a restart
                         fresh.metrics = coord.metrics;
+                        // ... and so does the learned next-composition
+                        // table: a supervised restart must not cold-start
+                        // prefetch. The replay boundary is a stream
+                        // discontinuity, so the chain breaks on install.
+                        fresh.install_predictor(coord.take_predictor());
                         coord = fresh;
                         carry = replay.map(|jobs| (jobs, stole));
                     }
@@ -1401,7 +1538,8 @@ mod tests {
     fn scheduler_spills_to_least_loaded_when_home_is_deep() {
         let pool = pool(2);
         let key = Composition::vmul_reduce(128).cache_key();
-        let home = (key % 2) as usize;
+        // neutral loads, no sticky entry: the plan is the ring home
+        let home = pool.planned_worker(key);
         let other = 1 - home;
         // same loads: stay home
         assert_eq!(pool.planned_worker(key), home);
@@ -1415,11 +1553,43 @@ mod tests {
     }
 
     #[test]
+    fn home_hash_survives_worker_growth() {
+        // the satellite-1 regression: growing an N-worker pool to N+1
+        // must re-home only the new worker's ring arcs (~1/N of keys),
+        // not remap nearly everything the way `key % n` did. Asserted on
+        // the pool's own planned_worker under neutral loads and no
+        // sticky routes, over ≥64 distinct keys.
+        for n in [2usize, 4] {
+            let small = pool(n);
+            let big = pool(n + 1);
+            let total = 128u64;
+            let mut moved = 0usize;
+            for k in 0..total {
+                // well-spread distinct keys (the ring mixes again anyway)
+                let key = k.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0x5eed;
+                let (a, b) = (small.planned_worker(key), big.planned_worker(key));
+                if a != b {
+                    assert_eq!(b, n, "a re-homed key must land on the new worker");
+                    moved += 1;
+                }
+            }
+            let frac = moved as f64 / total as f64;
+            assert!(
+                frac <= 2.0 / (n as f64 + 1.0),
+                "{n}→{} workers re-homed {frac:.3} of keys",
+                n + 1
+            );
+            small.shutdown();
+            big.shutdown();
+        }
+    }
+
+    #[test]
     fn sticky_routing_follows_a_spill() {
         let pool = pool(2);
         let req = vmul_req(128, 1);
         let key = req.comp.cache_key();
-        let home = (key % 2) as usize;
+        let home = pool.planned_worker(key);
         let other = 1 - home;
         pool.force_load(home, ServiceConfig::default().max_queue_skew + 1);
         pool.submit_wait(req).unwrap();

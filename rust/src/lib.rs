@@ -44,7 +44,12 @@
 //!   serving tier speaking the length-prefixed [`coordinator::wire`]
 //!   protocol with per-connection backpressure and idle shedding
 //!   (`repro serve --listen ADDR --reactors N`, load-driven by
-//!   `repro loadgen`);
+//!   `repro loadgen`), and sharded across many pools by
+//!   [`coordinator::cluster`], a consistent-hash ring router (splitmix64
+//!   virtual nodes, so a pool join/leave re-homes only ~1/N of keys) with
+//!   warm-start program shipping to joining pools, backlog evacuation on
+//!   retire, and cross-pool group migration as the last steal tier
+//!   (`repro serve --pools P`);
 //! * [`testkit`] — deterministic service-layer test harness: a virtual
 //!   clock plus a scripted-latency engine shim, so ordering, fairness and
 //!   starvation properties are proven without sleeps;
@@ -84,6 +89,6 @@ pub mod testkit;
 pub mod timing;
 pub mod workload;
 
-pub use config::{FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
+pub use config::{ClusterConfig, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
 pub use error::{Error, Result};
 pub use faults::{DownloadFault, ExecFault, FaultPlane, FaultSpec};

@@ -12,6 +12,7 @@
 //!   repro isa                   print the 42-instruction opcode table
 //!   repro inspect --pattern P   show placement + disassembled program
 //!   repro serve --requests K --workers N   multi-fabric pool service demo
+//!   repro serve --pools P ...              cluster sharding across P pools
 //!   repro serve --listen ADDR --reactors N socket serving tier (wire protocol)
 //!   repro loadgen --addr ADDR --conns C    closed/open-loop load + BENCH JSON
 //! ```
@@ -25,7 +26,10 @@ use std::time::{Duration, Instant};
 
 use jit_overlay::benchkit::{write_bench_json, JsonObject};
 use jit_overlay::coordinator::wire::{read_frame, write_frame, ClientMsg, ServerMsg};
-use jit_overlay::coordinator::{Coordinator, Frontend, NetServer, Request, WorkerPool};
+use jit_overlay::coordinator::{
+    AtomicMetrics, Cluster, Coordinator, Dispatch, Frontend, Metrics, NetServer, Request,
+    WorkerPool,
+};
 use jit_overlay::exec::Engine;
 use jit_overlay::isa::{asm, Category, Opcode};
 use jit_overlay::jit::Jit;
@@ -34,7 +38,9 @@ use jit_overlay::place::StaticScenario;
 use jit_overlay::report::{ms, speedup, Table};
 use jit_overlay::runtime::{default_artifacts_dir, Runtime};
 use jit_overlay::timing::Target;
-use jit_overlay::{workload, FaultSpec, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig};
+use jit_overlay::{
+    workload, ClusterConfig, FaultSpec, FrontendConfig, NetConfig, OverlayConfig, ServiceConfig,
+};
 
 /// CLI-local result over a boxed error (the anyhow stand-in).
 type Result<T, E = Box<dyn std::error::Error>> = std::result::Result<T, E>;
@@ -195,6 +201,23 @@ fn parse_faults(args: &Args, service: &mut ServiceConfig) -> Result<()> {
     service.download_retries =
         args.usize("download-retries", service.download_retries as usize)? as u32;
     Ok(())
+}
+
+/// Parse the cluster-tier flags shared by both serve modes:
+/// `--vnodes V`, `--warm-start on|off`, `--cross-steal-depth D` (0 = off).
+/// The fusion salt mirrors the pools' own `--fuse` so routing keys and
+/// cache keys agree.
+fn parse_cluster(args: &Args, fuse: bool) -> Result<ClusterConfig> {
+    let defaults = ClusterConfig::default();
+    Ok(ClusterConfig {
+        vnodes: args.usize("vnodes", defaults.vnodes)?.max(1),
+        warm_start: parse_switch("warm-start", &args.str("warm-start", "on"))?,
+        cross_steal_depth: match args.usize("cross-steal-depth", defaults.cross_steal_depth)? {
+            0 => usize::MAX,
+            d => d,
+        },
+        fuse,
+    })
 }
 
 fn cmd_fig2(n: usize) -> Result<()> {
@@ -414,6 +437,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     service.predict = parse_switch("predict", &args.str("predict", "off"))?;
     service.compact = parse_switch("compact", &args.str("compact", "off"))?;
     parse_faults(args, &mut service)?;
+    let pools = args.usize("pools", 1)?;
+    if pools > 1 {
+        return cmd_serve_cluster(args, pools, service, requests, n, seed);
+    }
     let frontend = args.str("frontend", "direct");
     let sessions = args.usize("sessions", 8)?.max(1);
     let inflight =
@@ -535,6 +562,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro serve --pools P` (P > 1): the cluster demo. P identically
+/// configured pools behind the consistent-hash router serve the
+/// pool-churn stream; with `--churn on` (the default) one extra pool
+/// joins warm mid-stream and the first member retires shortly after, so
+/// every cluster counter — joins, evacuations, cross-pool steals,
+/// warm-start hits — moves in a single run.
+fn cmd_serve_cluster(
+    args: &Args,
+    pools: usize,
+    service: ServiceConfig,
+    requests: usize,
+    n: usize,
+    seed: u64,
+) -> Result<()> {
+    let ccfg = parse_cluster(args, service.fuse)?;
+    let churn = parse_switch("churn", &args.str("churn", "on"))?;
+    let workers = service.workers;
+    let cluster = Cluster::homogeneous(OverlayConfig::default(), service.clone(), ccfg, pools)?;
+    let first = cluster.pool_ids()[0];
+    let comps = workload::churn_compositions(requests, n, seed);
+    let (join_at, retire_at) = (requests / 2, (requests * 3) / 4);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for (k, comp) in comps.iter().enumerate() {
+        if churn && k == join_at {
+            cluster.join(OverlayConfig::default(), service.clone())?;
+        }
+        if churn && k == retire_at {
+            cluster.retire(first)?;
+        }
+        let inputs = workload::request_inputs(comp, k as u64);
+        pending.push(cluster.submit(Request::dynamic(comp.clone(), inputs))?);
+        // opportunistic last-resort rebalance: moves whole tail groups
+        // from a deep member to an idle one (usually a no-op)
+        cluster.rebalance_once();
+    }
+    for rx in pending {
+        rx.recv().context("cluster pool dropped a reply")??;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let report = cluster.shutdown();
+    for (id, m) in &report.per_pool {
+        println!("pool {id}: {}", m.summary());
+    }
+    for (i, m) in report.retired.iter().enumerate() {
+        println!("retired pool #{i}: {}", m.summary());
+    }
+    let m = &report.aggregate;
+    println!("cluster ({pools} pools x {workers} workers): {}", m.summary());
+    println!(
+        "served {requests} requests in {:.1} ms ({:.0} req/s wall), {} cached accelerators; \
+         joins={} evacuations={} cross-steals={} warm-start-hits={}",
+        dt * 1e3,
+        requests as f64 / dt,
+        report.cached_accelerators,
+        m.pool_joins,
+        m.pool_evacuations,
+        m.cross_pool_steals,
+        m.warm_start_hits,
+    );
+    Ok(())
+}
+
 /// `repro serve --listen ADDR`: the socket serving tier. Runs until an
 /// authorized remote `SHUTDOWN` frame arrives (`--allow-remote-shutdown 1`
 /// — which `repro loadgen --stop-server 1` sends when it is done) or
@@ -563,73 +653,98 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
         ..defaults
     };
 
-    let service_faults_off = service.faults.is_off();
-    let pool = std::sync::Arc::new(WorkerPool::new(OverlayConfig::default(), service)?);
-    let fcfg = FrontendConfig { reactors, inflight_per_session: inflight, max_inflight };
-    let front = std::sync::Arc::new(
-        Frontend::new(pool.clone(), fcfg, pool.metrics.clone()).map_err(|e| anyhow!("{e}"))?,
-    );
-    let threads = front.spawn().map_err(|e| anyhow!("{e}"))?;
-    let server = NetServer::bind(addr, front.clone(), net.clone(), pool.metrics.clone())
-        .map_err(|e| anyhow!("{e}"))?;
-    println!(
-        "listening on {} ({reactors} reactors, {workers} workers, max {} pending/conn)",
-        server.local_addr(),
-        net.max_pending_per_conn
-    );
-    if !net.allow_remote_shutdown {
-        println!("remote shutdown disabled; stop with Ctrl-C (--allow-remote-shutdown 1 to enable)");
-    }
-    if !service_faults_off {
+    if !service.faults.is_off() {
         println!("fault injection ACTIVE: {}", args.str("faults", "off"));
     }
+    let fcfg = FrontendConfig { reactors, inflight_per_session: inflight, max_inflight };
+    let pools = args.usize("pools", 1)?;
 
-    // run until a stop arrives: an authorized remote SHUTDOWN frame flips
-    // the server's stop flag, SIGINT/SIGTERM flips the process-local latch
-    sig::install();
-    while !sig::requested() && !server.stop_requested() {
-        std::thread::sleep(Duration::from_millis(50));
-    }
-    server.request_stop();
-    println!("stop requested; draining (up to {drain_ms} ms) ...");
-
-    // bounded drain: join the server and shut the pool down on a helper
-    // thread so one wedged connection cannot hang the process past the
-    // drain window. On timeout the live aggregate is still reported.
-    let live = pool.metrics.clone();
-    let (tx, rx) = std::sync::mpsc::channel();
-    let drainer = std::thread::spawn(move || {
-        server.join();
-        threads.shutdown();
-        drop(front);
-        let report = std::sync::Arc::try_unwrap(pool)
-            .map(WorkerPool::shutdown)
-            .map_err(|_| "serving tier leaked the pool");
-        let _ = tx.send(report);
-    });
-    let aggregate = match rx.recv_timeout(Duration::from_millis(drain_ms)) {
-        Ok(report) => {
-            let _ = drainer.join();
-            let report = report.map_err(|e| anyhow!("{e}"))?;
-            if !report.panicked_workers.is_empty() {
-                println!("workers lost to panics: {:?}", report.panicked_workers);
+    let (aggregate, banner) = if pools > 1 {
+        // cluster tier: sessions dispatch through the consistent-hash
+        // router instead of a single pool — same Dispatch seam
+        let ccfg = parse_cluster(args, service.fuse)?;
+        let cluster = std::sync::Arc::new(Cluster::homogeneous(
+            OverlayConfig::default(),
+            service,
+            ccfg,
+            pools,
+        )?);
+        let metrics = cluster.metrics.clone();
+        let live = {
+            let weak = std::sync::Arc::downgrade(&cluster);
+            let fallback = metrics.clone();
+            move || {
+                weak.upgrade().map(|c| c.snapshot()).unwrap_or_else(|| fallback.snapshot())
             }
-            report.aggregate
-        }
-        Err(_) => {
-            println!("drain window elapsed with connections still open; reporting live counters");
-            live.snapshot()
-        }
+        };
+        let banner = format!("{pools} pools x {workers} workers");
+        let agg = run_listen_tier(
+            addr,
+            cluster,
+            fcfg,
+            net,
+            metrics,
+            &banner,
+            drain_ms,
+            live,
+            |cluster| {
+                std::sync::Arc::try_unwrap(cluster)
+                    .map(|c| {
+                        let report = c.shutdown();
+                        for (id, m) in &report.per_pool {
+                            println!("pool {id}: {}", m.summary());
+                        }
+                        for (i, m) in report.retired.iter().enumerate() {
+                            println!("retired pool #{i}: {}", m.summary());
+                        }
+                        report.aggregate
+                    })
+                    .map_err(|_| "serving tier leaked the cluster".to_string())
+            },
+        )?;
+        (agg, banner)
+    } else {
+        let pool = std::sync::Arc::new(WorkerPool::new(OverlayConfig::default(), service)?);
+        let metrics = pool.metrics.clone();
+        let live = {
+            let m = metrics.clone();
+            move || m.snapshot()
+        };
+        let banner = format!("{workers} workers");
+        let agg = run_listen_tier(
+            addr,
+            pool,
+            fcfg,
+            net,
+            metrics,
+            &banner,
+            drain_ms,
+            live,
+            |pool| {
+                std::sync::Arc::try_unwrap(pool)
+                    .map(|p| {
+                        let report = p.shutdown();
+                        if !report.panicked_workers.is_empty() {
+                            println!("workers lost to panics: {:?}", report.panicked_workers);
+                        }
+                        report.aggregate
+                    })
+                    .map_err(|_| "serving tier leaked the pool".to_string())
+            },
+        )?;
+        (agg, banner)
     };
+
     let m = &aggregate;
     println!(
         "served {} connections ({} shed, {} wire rejections)",
         m.connections, m.conns_shed, m.net_rejections
     );
-    println!("pool ({workers} workers): {}", m.summary());
+    println!("pool ({banner}): {}", m.summary());
     if let Some(name) = bench {
         let mut o = JsonObject::new();
         o.str("group", "serve")
+            .int("pools", pools as u64)
             .int("workers", workers as u64)
             .int("reactors", reactors as u64)
             .int("requests", m.requests)
@@ -643,11 +758,79 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
             .int("download_retries", m.download_retries)
             .int("tiles_quarantined", m.tiles_quarantined)
             .int("workers_restarted", m.workers_restarted)
-            .int("jobs_replayed", m.jobs_replayed);
+            .int("jobs_replayed", m.jobs_replayed)
+            .int("pool_joins", m.pool_joins)
+            .int("pool_evacuations", m.pool_evacuations)
+            .int("cross_pool_steals", m.cross_pool_steals)
+            .int("warm_start_hits", m.warm_start_hits);
         let path = write_bench_json(&name, &o.finish()).context("writing bench json")?;
         println!("wrote {}", path.display());
     }
     Ok(())
+}
+
+/// Shared tail of `serve --listen`, generic over the dispatch backend
+/// (one pool, or a cluster of pools): spawn the reactors, bind the
+/// socket tier, run until a stop arrives, then drain within the window
+/// and hand the backend to `finish` for its final aggregate. On a drain
+/// timeout, `live` supplies the best available counters instead.
+#[allow(clippy::too_many_arguments)]
+fn run_listen_tier<B: Dispatch + Send + Sync + 'static>(
+    addr: &str,
+    backend: std::sync::Arc<B>,
+    fcfg: FrontendConfig,
+    net: NetConfig,
+    metrics: std::sync::Arc<AtomicMetrics>,
+    banner: &str,
+    drain_ms: u64,
+    live: impl Fn() -> Metrics,
+    finish: impl FnOnce(std::sync::Arc<B>) -> Result<Metrics, String> + Send + 'static,
+) -> Result<Metrics> {
+    let reactors = fcfg.reactors;
+    let front = std::sync::Arc::new(
+        Frontend::new(backend.clone(), fcfg, metrics.clone()).map_err(|e| anyhow!("{e}"))?,
+    );
+    let threads = front.spawn().map_err(|e| anyhow!("{e}"))?;
+    let server =
+        NetServer::bind(addr, front.clone(), net.clone(), metrics).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "listening on {} ({reactors} reactors, {banner}, max {} pending/conn)",
+        server.local_addr(),
+        net.max_pending_per_conn
+    );
+    if !net.allow_remote_shutdown {
+        println!("remote shutdown disabled; stop with Ctrl-C (--allow-remote-shutdown 1 to enable)");
+    }
+
+    // run until a stop arrives: an authorized remote SHUTDOWN frame flips
+    // the server's stop flag, SIGINT/SIGTERM flips the process-local latch
+    sig::install();
+    while !sig::requested() && !server.stop_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.request_stop();
+    println!("stop requested; draining (up to {drain_ms} ms) ...");
+
+    // bounded drain: join the server and shut the backend down on a helper
+    // thread so one wedged connection cannot hang the process past the
+    // drain window. On timeout the live aggregate is still reported.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let drainer = std::thread::spawn(move || {
+        server.join();
+        threads.shutdown();
+        drop(front);
+        let _ = tx.send(finish(backend));
+    });
+    match rx.recv_timeout(Duration::from_millis(drain_ms)) {
+        Ok(report) => {
+            let _ = drainer.join();
+            report.map_err(|e| anyhow!("{e}"))
+        }
+        Err(_) => {
+            println!("drain window elapsed with connections still open; reporting live counters");
+            Ok(live())
+        }
+    }
 }
 
 /// A loadgen client connection: TCP, or a Unix socket via `unix:<path>`.
@@ -987,6 +1170,10 @@ const USAGE: &str = "usage: repro <fig2|fig3|sweep|run|verify|isa|inspect|serve|
          --sessions S --inflight I --reactors R (threads/reactor front ends)
          --faults off|transient-downloads|chaos (fault injection; default off)
            with --fault-seed S --fault-permille M --download-retries R
+         --pools P (P > 1: cluster of P pools behind a consistent-hash ring)
+           with --vnodes V (ring points per pool) --warm-start on|off
+           --cross-steal-depth D (cross-pool steal threshold; 0 = off)
+           --churn on|off (mid-stream pool join + retire; blocking mode only)
          --listen ADDR (socket tier; ADDR is ip:port or unix:/path)
            with --reactors R --workers N --max-pending P --idle-timeout-ms T
            --max-n N --allow-remote-shutdown 0|1

@@ -98,6 +98,18 @@ impl NextPredictor {
         Some(best)
     }
 
+    /// Break the observation chain: the next [`NextPredictor::observe`]
+    /// starts a new run instead of recording an edge from the previous
+    /// key. Called at stream discontinuities — a stolen composition
+    /// group arriving on a worker, a supervised-restart replay — where
+    /// neighboring keys are adjacent in time but not in any client's
+    /// request order, so learning the edge would dilute the real
+    /// successors' confidence below the prediction gate. The learned
+    /// table is untouched.
+    pub fn break_chain(&mut self) {
+        self.last = None;
+    }
+
     /// Distinct chain states currently tracked.
     pub fn states(&self) -> usize {
         self.table.len()
@@ -199,6 +211,29 @@ mod tests {
             p.observe(k);
         }
         assert!(p.states() <= TABLE_CAP);
+    }
+
+    #[test]
+    fn break_chain_cuts_false_edges_but_keeps_the_table() {
+        // low gates so a single false edge would flip an outcome below
+        let mut p = NextPredictor::new(1, 0.5);
+        p.observe(1);
+        p.observe(2);
+        p.observe(1);
+        p.observe(2);
+        // chain ends at 2; a steal boundary delivers key 9 adjacent in
+        // time only — break, then observe the stolen key
+        p.break_chain();
+        p.observe(9);
+        assert_eq!(p.predict(), None, "fresh chain state has no successors");
+        // the learned 1→2 edge survived the break
+        p.observe(1);
+        assert_eq!(p.predict(), Some(2));
+        // and state 2 still predicts its real successor: had the
+        // boundary edge 2→9 been learned, 2's successors would tie
+        // 50/50 and the strict >50% confidence gate would go silent
+        p.observe(2);
+        assert_eq!(p.predict(), Some(1), "the 2→9 boundary edge must not exist");
     }
 
     #[test]

@@ -175,6 +175,52 @@ pub fn spill_heavy_compositions(count: usize, distinct: usize, seed: u64) -> Vec
     (0..count).map(|_| pool[rng.below(pool.len())].clone()).collect()
 }
 
+/// `distinct` small compositions with *guaranteed* pairwise-distinct cache
+/// keys, in a fixed order (no RNG — the cohort is the same in every
+/// process). Unlike [`spill_heavy_compositions`]'s pool, which only makes
+/// distinctness likely, candidates here are filtered on their actual
+/// `cache_key`, so tests may assert exact compile counts: serving the
+/// cohort once on a cold service costs exactly `distinct` JIT compiles.
+/// Every member fits Small regions (1–2 tiles), so the cohort routes
+/// freely on shape-aware clusters.
+pub fn wide_cohort(distinct: usize) -> Vec<Composition> {
+    use OperatorKind::*;
+    let unary = [Abs, Neg, Square, Relu];
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(distinct);
+    let mut i = 0usize;
+    while out.len() < distinct {
+        let n = 64 + 8 * i; // strictly increasing n ⇒ unbounded key space
+        let comp = match i % 3 {
+            0 => Composition::map(unary[i / 3 % unary.len()], n),
+            1 => Composition::vmul_reduce(n),
+            _ => Composition::chain(&[unary[i % unary.len()], unary[(i + 1) % unary.len()]], n)
+                .expect("static chain"),
+        };
+        if seen.insert(comp.cache_key()) {
+            out.push(comp);
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Pool-churn stream: the cluster-lifecycle workload. The 80/20 hot/cold
+/// mix of [`mixed_compositions`] with every fifth request replaced by a
+/// key from a 16-member [`wide_cohort`], cycling — so a cluster serving
+/// it exercises both sticky arcs (hot keys keep their owners across
+/// membership changes) and warm-start (by mid-stream the cohort keys are
+/// cached cluster-wide, ready to ship to a joiner). Deterministic in
+/// `seed`.
+pub fn churn_compositions(count: usize, n: usize, seed: u64) -> Vec<Composition> {
+    let cohort = wide_cohort(16);
+    mixed_compositions(count, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| if i % 5 == 4 { cohort[(i / 5) % cohort.len()].clone() } else { c })
+        .collect()
+}
+
 /// Three distinct 5-stage chains. On the default 9-tile fabric any two of
 /// them cannot co-reside (5 + 5 > 9 tiles), so switching between them
 /// forces whole-fabric eviction + re-download — the adversarial case the
@@ -316,6 +362,38 @@ mod tests {
             again.iter().map(|c| c.cache_key()).collect::<Vec<_>>(),
             "stream must be reproducible"
         );
+    }
+
+    #[test]
+    fn wide_cohort_keys_are_distinct_and_deterministic() {
+        let a = wide_cohort(64);
+        assert_eq!(a.len(), 64);
+        let keys: std::collections::HashSet<u64> = a.iter().map(|c| c.cache_key()).collect();
+        assert_eq!(keys.len(), 64, "cache keys must be pairwise distinct — guaranteed");
+        let again: Vec<u64> = wide_cohort(64).iter().map(|c| c.cache_key()).collect();
+        assert_eq!(a.iter().map(|c| c.cache_key()).collect::<Vec<_>>(), again);
+        // a smaller cohort is a strict prefix: tests of different sizes
+        // share keys, so caches warmed by one cover the other
+        let small: Vec<u64> = wide_cohort(8).iter().map(|c| c.cache_key()).collect();
+        assert_eq!(small, again[..8]);
+    }
+
+    #[test]
+    fn churn_stream_is_deterministic_and_mixes_cohort_keys() {
+        let a = churn_compositions(100, 256, 9);
+        assert_eq!(a.len(), 100);
+        let ka: Vec<u64> = a.iter().map(|c| c.cache_key()).collect();
+        let kb: Vec<u64> = churn_compositions(100, 256, 9).iter().map(|c| c.cache_key()).collect();
+        assert_eq!(ka, kb, "stream must be reproducible");
+        let cohort: std::collections::HashSet<u64> =
+            wide_cohort(16).iter().map(|c| c.cache_key()).collect();
+        // every fifth slot carries a cohort key; the rest is the hot mix
+        for (i, k) in ka.iter().enumerate() {
+            if i % 5 == 4 {
+                assert!(cohort.contains(k), "slot {i} must be a cohort key");
+            }
+        }
+        assert!(ka.iter().any(|k| !cohort.contains(k)), "the hot mix must survive");
     }
 
     #[test]

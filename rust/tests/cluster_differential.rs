@@ -1,0 +1,209 @@
+//! Cluster sharding, end to end: the seeded differential proof.
+//!
+//! The contract: a P-pool cluster is an *invisible* scale-out of one
+//! coordinator. Concretely, over a seeded churn stream that includes one
+//! mid-stream pool join and one pool death (retire and detected death
+//! share the evacuation path):
+//!
+//! * **bit-identical outputs** — every response fingerprint equals the
+//!   1-pool reference coordinator's, whichever pool served it, through
+//!   the join and through the death;
+//! * **conservation** — cluster-wide (members + the retired pool),
+//!   `cache_hits + placement_respecializations + jit_compiles ==
+//!   requests`: no request is lost, duplicated, or double-billed by
+//!   evacuation or warm-start;
+//! * **warm-start** — the joining pool receives the cached
+//!   fabric-independent programs, scores `warm_start_hits > 0`, and
+//!   pays *strictly fewer* JIT compiles than the same join with
+//!   warm-start off (the cold control);
+//! * **ring stability** — growing P→P+1 pools re-homes at most
+//!   2/(P+1) of ≥64 distinct composition keys, every moved key landing
+//!   on the new pool.
+
+use jit_overlay::coordinator::{Cluster, ClusterReport, Coordinator, HashRing, Request};
+use jit_overlay::patterns::Composition;
+use jit_overlay::testkit::fingerprint;
+use jit_overlay::workload;
+use jit_overlay::{ClusterConfig, OverlayConfig, ServiceConfig};
+
+fn request(comp: &Composition, k: u64) -> Request {
+    Request::dynamic(comp.clone(), workload::request_inputs(comp, k))
+}
+
+/// Phase boundaries of the churn scenario, as indices into [`stream`]:
+/// the extra pool joins before request `JOIN_AT`, the first pool dies
+/// before request `RETIRE_AT`.
+const JOIN_AT: usize = 112;
+const RETIRE_AT: usize = 184;
+
+/// The seeded churn stream: a mixed prefix, then a 48-key wide cohort
+/// (all compiled — and so all shipped at the join), the same cohort
+/// replayed *after* the join (the joiner's owned share claims its
+/// shipped programs), more churn across the pool death, and a tail.
+/// The cohort and the hot mix are seed-independent, so the warm-start
+/// assertions hold for every `$JIT_OVERLAY_SEED`; only the cold tail of
+/// the churn segments varies.
+fn stream() -> Vec<(Composition, u64)> {
+    let seed = workload::env_seed(0xD1FF);
+    let mut comps = Vec::new();
+    comps.extend(workload::churn_compositions(64, 256, seed));
+    comps.extend(workload::wide_cohort(48));
+    debug_assert_eq!(comps.len(), JOIN_AT);
+    comps.extend(workload::wide_cohort(48));
+    comps.extend(workload::churn_compositions(24, 256, seed ^ 0x5EED));
+    debug_assert_eq!(comps.len(), RETIRE_AT);
+    comps.extend(workload::churn_compositions(16, 256, seed ^ 0xFEED));
+    comps.into_iter().enumerate().map(|(k, c)| (c, k as u64)).collect()
+}
+
+/// Drive the full churn scenario through a 2-pool cluster: join a third
+/// pool before `JOIN_AT`, retire the first pool before `RETIRE_AT`.
+/// Returns every output fingerprint, the final report, and the joined
+/// pool's id.
+fn drive(reqs: &[(Composition, u64)], warm_start: bool) -> (Vec<Vec<u32>>, ClusterReport, u64) {
+    let ccfg = ClusterConfig { warm_start, ..ClusterConfig::default() };
+    let service = ServiceConfig::with_workers(2);
+    let cluster =
+        Cluster::homogeneous(OverlayConfig::default(), service.clone(), ccfg, 2).unwrap();
+    let first = cluster.pool_ids()[0];
+    let mut joined = 0;
+    let mut outs = Vec::with_capacity(reqs.len());
+    for (i, (comp, k)) in reqs.iter().enumerate() {
+        if i == JOIN_AT {
+            joined = cluster.join(OverlayConfig::default(), service.clone()).unwrap();
+        }
+        if i == RETIRE_AT {
+            cluster.retire(first).unwrap();
+        }
+        let resp = cluster.submit_wait(request(comp, *k)).unwrap();
+        outs.push(fingerprint(&resp.run.output));
+    }
+    (outs, cluster.shutdown(), joined)
+}
+
+#[test]
+fn cluster_with_join_and_death_is_bit_identical_to_one_coordinator() {
+    let reqs = stream();
+    let total = reqs.len() as u64;
+
+    // the 1-pool reference: one coordinator, strictly sequential
+    let mut coord = Coordinator::new(OverlayConfig::default()).unwrap();
+    let reference: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|(comp, k)| fingerprint(&coord.submit(&request(comp, *k)).unwrap().run.output))
+        .collect();
+
+    let (outs_warm, warm, joined_warm) = drive(&reqs, true);
+    let (outs_cold, cold, joined_cold) = drive(&reqs, false);
+
+    assert_eq!(outs_warm, reference, "warm cluster must match the reference bit for bit");
+    assert_eq!(outs_cold, reference, "cold cluster must match the reference bit for bit");
+
+    for (name, report) in [("warm", &warm), ("cold", &cold)] {
+        let m = &report.aggregate;
+        assert_eq!(m.requests, total, "{name}: every request served exactly once");
+        assert_eq!(
+            m.cache_hits + m.placement_respecializations + m.jit_compiles,
+            total,
+            "{name}: conservation across join, death, and warm-start"
+        );
+        assert_eq!(m.pool_joins, 3, "{name}: two founders + one mid-stream join");
+        assert_eq!(m.pool_evacuations, 1, "{name}: one pool death");
+        assert_eq!(report.retired.len(), 1);
+        assert_eq!(report.per_pool.len(), 2, "{name}: the survivor and the joiner remain");
+    }
+
+    assert!(warm.aggregate.warm_start_hits > 0, "the joiner must claim shipped programs");
+    assert_eq!(cold.aggregate.warm_start_hits, 0, "nothing is shipped with warm-start off");
+
+    // the joined pool itself: warm-start converts its compiles into
+    // placement-only respecializations. Ring geometry is identical in
+    // both runs (same member ids, same vnodes), so the cold joiner's
+    // extra compiles are exactly the claims the warm joiner got shipped.
+    let joined_metrics = |report: &ClusterReport, id: u64| {
+        report.per_pool.iter().find(|(pid, _)| *pid == id).map(|(_, m)| *m).unwrap()
+    };
+    let jw = joined_metrics(&warm, joined_warm);
+    let jc = joined_metrics(&cold, joined_cold);
+    assert!(jc.jit_compiles > 0, "the cold joiner must compile its owned keys");
+    assert!(
+        jw.jit_compiles < jc.jit_compiles,
+        "warm-start must strictly cut the joiner's compiles: warm={} cold={}",
+        jw.jit_compiles,
+        jc.jit_compiles
+    );
+}
+
+#[test]
+fn pool_join_rehomes_at_most_two_over_p_plus_one_of_composition_keys() {
+    // ≥64 distinct real composition keys; the ring sees them exactly as
+    // the cluster router does (fusion off ⇒ unsalted cache keys)
+    let keys: Vec<u64> = workload::wide_cohort(96).iter().map(|c| c.cache_key()).collect();
+    let vnodes = ClusterConfig::default().vnodes;
+    for p in [2usize, 3, 4] {
+        // member ids are join-ordered, exactly as Cluster assigns them
+        let seeds: Vec<u64> = (0..p as u64).collect();
+        let mut grown = seeds.clone();
+        grown.push(p as u64);
+        let before = HashRing::new(&seeds, vnodes);
+        let after = HashRing::new(&grown, vnodes);
+        let mut moved = 0usize;
+        for &key in &keys {
+            let (a, b) = (before.owner(key), after.owner(key));
+            if a != b {
+                assert_eq!(b, p, "a re-homed key must land on the joined pool");
+                moved += 1;
+            }
+        }
+        let bound = 2.0 / (p as f64 + 1.0);
+        let frac = moved as f64 / keys.len() as f64;
+        assert!(frac <= bound, "{p}→{} pools re-homed {frac:.3} > {bound:.3}", p + 1);
+        assert!(moved > 0, "the joined pool must take some arc");
+    }
+}
+
+/// The reactor front end serves through a cluster exactly as through a
+/// pool — the `Dispatch` seam the socket tier rides on.
+#[test]
+fn reactor_frontend_dispatches_through_the_cluster() {
+    use jit_overlay::coordinator::Frontend;
+    use jit_overlay::FrontendConfig;
+    use std::sync::Arc;
+
+    let cluster = Arc::new(
+        Cluster::homogeneous(
+            OverlayConfig::default(),
+            ServiceConfig::with_workers(1),
+            ClusterConfig::default(),
+            2,
+        )
+        .unwrap(),
+    );
+    let front =
+        Frontend::new(cluster.clone(), FrontendConfig::default(), cluster.metrics.clone())
+            .unwrap();
+    let threads = front.spawn().unwrap();
+    let handle = front.open_session();
+    let cohort = workload::wide_cohort(8);
+    for (k, comp) in cohort.iter().enumerate() {
+        handle.submit(request(comp, k as u64)).unwrap();
+    }
+    for _ in 0..cohort.len() {
+        handle.recv().unwrap();
+    }
+    handle.close();
+    drop(handle);
+    threads.shutdown();
+    drop(front);
+    let Ok(cluster) = Arc::try_unwrap(cluster) else {
+        panic!("front end leaked the cluster");
+    };
+    let report = cluster.shutdown();
+    assert_eq!(report.aggregate.requests, 8);
+    assert_eq!(
+        report.aggregate.cache_hits
+            + report.aggregate.placement_respecializations
+            + report.aggregate.jit_compiles,
+        8
+    );
+}
